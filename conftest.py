@@ -1,0 +1,12 @@
+"""Repo-root pytest shim: make `pytest python/tests/` work from the root
+by putting `python/` (the `compile` package parent) on sys.path and
+enabling x64 before any jax-importing test module loads."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

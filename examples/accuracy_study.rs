@@ -1,0 +1,124 @@
+//! Estimation-accuracy study — regenerates **Fig 4** (boxplots of
+//! parameter estimates) and the iteration counts of **Table V** for the
+//! paper's nine scenarios: beta in {0.03, 0.1, 0.3} x nu in {0.5, 1, 2},
+//! sigma_sq = 1, comparing:
+//!
+//! * ExaGeoStatR (`exact_mle`, BOBYQA, estimates all three parameters)
+//! * GeoR-like   (`likfit` analogue: Nelder–Mead, estimates mean + theta)
+//! * fields-like (`MLESpatialProcess` analogue: BFGS, nu fixed at truth)
+//!
+//! The paper uses n = 1600 and 100 replicates; defaults here are scaled
+//! for the testbed (`--n`, `--reps` to change).  Output: per-scenario
+//! quartiles of each estimated parameter per package — the series the
+//! boxplots plot.
+//!
+//! Run: `cargo run --release --example accuracy_study -- [--n 400] [--reps 10]`
+
+use exageostat::api::{ExaGeoStat, Hardware, MleOptions};
+use exageostat::baselines::{fieldslike_mle, georlike_mle};
+use exageostat::cli::Args;
+use exageostat::covariance::DistanceMetric;
+use exageostat::data::sst::quantile;
+use exageostat::scheduler::pool::Policy;
+
+struct Scenario {
+    beta: f64,
+    nu: f64,
+}
+
+fn summarize(name: &str, param: &str, vals: &mut Vec<f64>, truth: f64) {
+    vals.sort_by(|a, b| a.total_cmp(b));
+    println!(
+        "  {name:<12} {param:<9} q25={:>7.3} med={:>7.3} q75={:>7.3}   (truth {truth})",
+        quantile(vals, 0.25),
+        quantile(vals, 0.5),
+        quantile(vals, 0.75),
+    );
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_from(std::env::args().skip(1));
+    let n = args.get_usize("n", 400)?;
+    let reps = args.get_usize("reps", 10)?;
+    let tol = args.get_f64("tol", 1e-5)?;
+
+    let exa = ExaGeoStat::init(Hardware {
+        ncores: 2,
+        ngpus: 0,
+        ts: 100,
+        pgrid: 1,
+        qgrid: 1,
+        policy: Policy::Prio,
+    });
+
+    let scenarios: Vec<Scenario> = [0.03, 0.1, 0.3]
+        .iter()
+        .flat_map(|&beta| [0.5, 1.0, 2.0].iter().map(move |&nu| Scenario { beta, nu }))
+        .collect();
+
+    println!("accuracy study: n={n}, reps={reps}, tol={tol} (paper: n=1600, reps=100)");
+    println!("{}", "=".repeat(76));
+    for sc in &scenarios {
+        let theta_true = [1.0, sc.beta, sc.nu];
+        println!("\nscenario beta={} nu={}", sc.beta, sc.nu);
+        let mut est: Vec<Vec<Vec<f64>>> = vec![vec![Vec::new(); 3]; 3]; // pkg x param
+        let mut iters = [0usize; 3];
+        let mut tpi = [0.0f64; 3];
+        for rep in 0..reps {
+            let data =
+                exa.simulate_data_exact("ugsm-s", &theta_true, "euclidean", n, 1 + rep as u64)?;
+            // ExaGeoStatR
+            let opt = MleOptions::new(vec![0.001; 3], vec![5.0; 3], tol, 0);
+            let r = exa.exact_mle(&data, "ugsm-s", "euclidean", &opt)?;
+            for p in 0..3 {
+                est[0][p].push(r.theta[p]);
+            }
+            iters[0] += r.iters;
+            tpi[0] += r.time_per_iter;
+            // GeoR-like
+            let g = georlike_mle(
+                &data,
+                DistanceMetric::Euclidean,
+                &[0.001; 3],
+                &[5.0; 3],
+                tol,
+                500,
+            )?;
+            for p in 0..3 {
+                est[1][p].push(g.theta[p]);
+            }
+            iters[1] += g.iters;
+            tpi[1] += g.time_per_iter;
+            // fields-like (nu fixed at the truth — the paper's favour)
+            let f = fieldslike_mle(
+                &data,
+                DistanceMetric::Euclidean,
+                sc.nu,
+                &[0.001; 2],
+                &[5.0; 2],
+                tol,
+                500,
+            )?;
+            for p in 0..2 {
+                est[2][p].push(f.theta[p]);
+            }
+            iters[2] += f.iters;
+            tpi[2] += f.time_per_iter;
+        }
+        let pkgs = ["exageostat", "geor-like", "fields-like"];
+        let params = ["sigma_sq", "beta", "nu"];
+        for (k, pkg) in pkgs.iter().enumerate() {
+            let nparams = if k == 2 { 2 } else { 3 };
+            for p in 0..nparams {
+                summarize(pkg, params[p], &mut est[k][p], theta_true[p]);
+            }
+            println!(
+                "  {pkg:<12} avg iters = {:.0}, avg time/iter = {:.4} s",
+                iters[k] as f64 / reps as f64,
+                tpi[k] / reps as f64
+            );
+        }
+    }
+    exa.finalize();
+    Ok(())
+}

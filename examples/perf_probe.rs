@@ -1,0 +1,59 @@
+//! Perf probe: micro-benchmarks of the hot paths for the EXPERIMENTS.md
+//! §Perf iteration log.  Not a paper figure; a tuning instrument.
+use exageostat::covariance::{kernel_by_name, DistanceMetric};
+use exageostat::likelihood::{ExecCtx, Problem, Variant};
+use exageostat::linalg::blas::{dgemm_raw, dpotrf_raw, Trans};
+use exageostat::rng::Pcg64;
+use exageostat::scheduler::pool::Policy;
+use std::time::Instant;
+
+fn timeit(name: &str, flops: f64, reps: usize, mut f: impl FnMut()) {
+    f();
+    let t0 = Instant::now();
+    for _ in 0..reps { f(); }
+    let dt = t0.elapsed().as_secs_f64() / reps as f64;
+    println!("{name:<28} {:>9.3} ms  {:>7.2} GF/s", dt * 1e3, flops / dt / 1e9);
+}
+
+fn main() {
+    let mut rng = Pcg64::seed_from_u64(1);
+    for n in [256usize, 512] {
+        let a: Vec<f64> = (0..n*n).map(|_| rng.normal()).collect();
+        let b: Vec<f64> = (0..n*n).map(|_| rng.normal()).collect();
+        let mut c = vec![0.0; n*n];
+        timeit(&format!("dgemm {n}"), 2.0*(n as f64).powi(3), 5, || {
+            dgemm_raw(Trans::N, Trans::T, n, n, n, 1.0, &a, n, &b, n, 0.0, &mut c, n);
+        });
+    }
+    // potrf 1024
+    let n = 1024;
+    let b: Vec<f64> = (0..n*n).map(|_| rng.normal()).collect();
+    let mut spd = vec![0.0; n*n];
+    dgemm_raw(Trans::N, Trans::T, n, n, n, 1.0, &b, n, &b, n, 0.0, &mut spd, n);
+    for i in 0..n { spd[i+i*n] += n as f64; }
+    timeit("dpotrf 1024", (n as f64).powi(3)/3.0, 3, || {
+        let mut m = spd.clone();
+        dpotrf_raw(n, &mut m, n).unwrap();
+    });
+    // covariance generation cost, half-integer and general nu
+    let kernel = kernel_by_name("ugsm-s").unwrap();
+    let locs: Vec<_> = (0..1600).map(|_| exageostat::covariance::Location::new(rng.next_f64(), rng.next_f64())).collect();
+    for (name, nu) in [("covgen nu=0.5 (closed)", 0.5), ("covgen nu=0.9 (bessel)", 0.9)] {
+        let theta = [1.0, 0.1, nu];
+        timeit(name, 0.0, 3, || {
+            let mut out = vec![0.0; 1600*1600];
+            exageostat::covariance::fill_cov_tile(kernel.as_ref(), &theta, &locs, DistanceMetric::Euclidean, 0, 0, 1600, 1600, &mut out);
+            std::hint::black_box(&out);
+        });
+    }
+    // full loglik n=1600
+    let z: Vec<f64> = (0..1600).map(|_| rng.normal()).collect();
+    let p = Problem { kernel: kernel_by_name("ugsm-s").unwrap().into(), locs: std::sync::Arc::new(locs), z: std::sync::Arc::new(z), metric: DistanceMetric::Euclidean };
+    for ts in [100usize, 160, 320, 560] {
+        let ctx = ExecCtx { ncores: 1, ts, policy: Policy::Prio };
+        timeit(&format!("loglik n=1600 ts={ts}"), 0.0, 2, || {
+            let _ = exageostat::likelihood::loglik(&p, &[1.0, 0.1, 0.9], Variant::Exact, &ctx).unwrap();
+        });
+    }
+}
+// appended: half-integer loglik ts sweep (perf pass round 2)

@@ -1,0 +1,95 @@
+"""AOT recipe: lower the L2/L1 computations to HLO *text* artifacts the
+Rust runtime loads through PJRT.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids which the image's xla_extension
+0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (all float64; shapes static per PJRT requirements):
+  matern_tile_ts<TS>.hlo.txt   (x1 (TS,2), x2 (TS,2), theta (3,)) -> (TS,TS)
+  loglik_n<N>.hlo.txt          (locs (N,2), z (N,), theta (3,))
+                               -> (loglik, logdet, sse) scalars
+  manifest.txt                 one line per artifact: name shape-signature
+
+Usage: python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+TILE_SIZES = (32, 64)
+LOGLIK_SIZES = (256,)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_matern_tile(ts: int) -> str:
+    spec2 = jax.ShapeDtypeStruct((ts, 2), jnp.float64)
+    spec_theta = jax.ShapeDtypeStruct((3,), jnp.float64)
+    lowered = jax.jit(lambda x1, x2, t: (model.matern_tile_entry(x1, x2, t),)).lower(
+        spec2, spec2, spec_theta
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_loglik(n: int, ts: int = 64) -> str:
+    locs = jax.ShapeDtypeStruct((n, 2), jnp.float64)
+    z = jax.ShapeDtypeStruct((n,), jnp.float64)
+    theta = jax.ShapeDtypeStruct((3,), jnp.float64)
+    lowered = jax.jit(lambda l, zz, t: model.loglik_parts(l, zz, t, ts=ts)).lower(
+        locs, z, theta
+    )
+    return to_hlo_text(lowered)
+
+
+def build_all(out_dir: str) -> list[tuple[str, str]]:
+    """Lower every artifact; returns (filename, signature) pairs."""
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+    for ts in TILE_SIZES:
+        name = f"matern_tile_ts{ts}.hlo.txt"
+        text = lower_matern_tile(ts)
+        with open(os.path.join(out_dir, name), "w") as f:
+            f.write(text)
+        entries.append((name, f"(f64[{ts},2], f64[{ts},2], f64[3]) -> f64[{ts},{ts}]"))
+        print(f"wrote {name} ({len(text)} chars)")
+    for n in LOGLIK_SIZES:
+        name = f"loglik_n{n}.hlo.txt"
+        ts = max(t for t in (16, 32, 64) if n % t == 0)
+        text = lower_loglik(n, ts=ts)
+        with open(os.path.join(out_dir, name), "w") as f:
+            f.write(text)
+        entries.append((name, f"(f64[{n},2], f64[{n}], f64[3]) -> (f64, f64, f64)"))
+        print(f"wrote {name} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        for name, sig in entries:
+            f.write(f"{name}\t{sig}\n")
+    return entries
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    args = ap.parse_args()
+    build_all(args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Pure-jnp oracle for the Pallas Matérn kernel (the correctness contract
+of the L1 layer — pytest asserts `matern.*` against these).
+
+Deliberately written in the most direct form possible (explicit pairwise
+distances, no MXU decomposition) so a bug in the kernel's algebra cannot
+be mirrored here.
+"""
+
+import jax.numpy as jnp
+
+
+def matern_correlation(t, nu):
+    """Half-integer Matérn correlation from scaled distance t = d / beta.
+
+    Matches the paper's parametrization (Eq. 3 with sigma_sq = 1):
+    nu = 0.5 -> exp(-t); 1.5 -> (1+t)exp(-t); 2.5 -> (1+t+t^2/3)exp(-t).
+    """
+    e = jnp.exp(-t)
+    if nu < 1.0:
+        return e
+    if nu < 2.0:
+        return (1.0 + t) * e
+    return (1.0 + t + t * t / 3.0) * e
+
+
+def matern_tile_ref(x1, x2, theta):
+    """(ts, ts) covariance tile: direct O(ts^2) evaluation."""
+    sigma_sq, beta, nu = float(theta[0]), float(theta[1]), float(theta[2])
+    diff = x1[:, None, :] - x2[None, :, :]  # (ts, ts, 2)
+    d = jnp.sqrt(jnp.sum(diff * diff, axis=-1))
+    return sigma_sq * matern_correlation(d / beta, nu)
+
+
+def cov_matrix_ref(locs, theta):
+    """Full (n, n) covariance."""
+    return matern_tile_ref(locs, locs, theta)
+
+
+def loglik_ref(locs, z, theta, jitter=0.0):
+    """Dense Gaussian log-likelihood oracle (Eq. 2, zero mean):
+    -1/2 z' Sigma^{-1} z - 1/2 log|Sigma| - n/2 log(2 pi).
+    """
+    n = locs.shape[0]
+    sigma = cov_matrix_ref(locs, theta) + jitter * jnp.eye(n, dtype=locs.dtype)
+    chol = jnp.linalg.cholesky(sigma)
+    y = jnp.linalg.solve(chol, z)
+    sse = jnp.sum(y * y)
+    logdet = 2.0 * jnp.sum(jnp.log(jnp.diag(chol)))
+    return -0.5 * sse - 0.5 * logdet - 0.5 * n * jnp.log(2.0 * jnp.pi)

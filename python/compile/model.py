@@ -1,0 +1,111 @@
+"""L2 — the JAX compute graph of the exact Gaussian log-likelihood (Eq. 2),
+built on the L1 Pallas covariance kernel.
+
+`loglik(locs, z, theta)` is the function the paper's MLE evaluates at each
+BOBYQA iteration: covariance generation (Pallas tiles) -> Cholesky ->
+triangular solve -> log-determinant + quadratic form.  `aot.py` lowers it
+once per problem size to HLO text; the Rust coordinator then executes the
+artifact through PJRT with Python entirely off the request path.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.linalg import solve_triangular
+
+from .kernels.matern import matern_cov_matrix, matern_tile
+
+__all__ = ["loglik", "loglik_parts", "matern_tile_entry"]
+
+
+def cholesky_hlo(a):
+    """Lower Cholesky written in plain jnp ops (fori_loop + matvec).
+
+    `jnp.linalg.cholesky` lowers to a typed-FFI LAPACK custom-call that the
+    runtime's xla_extension 0.5.1 cannot execute; this column-by-column
+    formulation lowers to a plain HLO while-loop, which round-trips through
+    HLO text cleanly.  O(n^3) total with O(n^2) work per loop step.
+    """
+    n = a.shape[0]
+    idx = jnp.arange(n)
+
+    def body(j, chol):
+        # v = a[:, j] - sum_{k<j} chol[:, k] * chol[j, k]
+        lj_row = jnp.where(idx < j, chol[j, :], 0.0)
+        v = a[:, j] - chol @ lj_row
+        d = jnp.sqrt(v[j])
+        col = jnp.where(idx >= j, v / d, 0.0)
+        return chol.at[:, j].set(col)
+
+    return jax.lax.fori_loop(0, n, body, jnp.zeros_like(a))
+
+
+def forward_solve_hlo(chol, z):
+    """`y = L^{-1} z` by forward substitution in plain jnp ops."""
+    n = z.shape[0]
+    idx = jnp.arange(n)
+
+    def body(j, y):
+        lj_row = jnp.where(idx < j, chol[j, :], 0.0)
+        yj = (z[j] - jnp.dot(lj_row, y)) / chol[j, j]
+        return y.at[j].set(yj)
+
+    return jax.lax.fori_loop(0, n, body, jnp.zeros_like(z))
+
+# A hair of diagonal jitter keeps AOT artifacts usable across the whole
+# bound box the optimizer explores (near-duplicate locations at tiny beta
+# would otherwise make Cholesky produce NaNs).
+JITTER = 1e-10
+
+
+def loglik_parts(locs, z, theta, *, ts=64):
+    """Return (loglik, logdet, sse) — the three scalars the Rust side logs.
+
+    locs: (n, 2); z: (n,); theta: (3,) = (sigma_sq, beta, nu).
+    """
+    n = locs.shape[0]
+    sigma = matern_cov_matrix(locs, theta, ts=ts)
+    sigma = sigma + JITTER * jnp.eye(n, dtype=sigma.dtype)
+    chol = cholesky_hlo(sigma)
+    y = forward_solve_hlo(chol, z)
+    sse = jnp.sum(y * y)
+    logdet = 2.0 * jnp.sum(jnp.log(jnp.diag(chol)))
+    ll = -0.5 * sse - 0.5 * logdet - 0.5 * n * jnp.log(2.0 * jnp.pi)
+    return ll, logdet, sse
+
+
+def loglik(locs, z, theta, *, ts=64):
+    """Scalar log-likelihood (the optimizer objective)."""
+    return loglik_parts(locs, z, theta, ts=ts)[0]
+
+
+def matern_tile_entry(x1, x2, theta):
+    """Standalone tile entry point (the `dcmg` task body) for AOT export."""
+    return matern_tile(x1, x2, theta)
+
+
+def loglik_differentiable(locs, z, theta):
+    """Gradient-capable log-likelihood (fwd + bwd).
+
+    Pallas `interpret=True` kernels do not define a VJP, so the
+    differentiable variant builds the covariance with plain jnp (the same
+    math as `kernels/ref.py`).  The BOBYQA MLE is derivative-free and uses
+    the Pallas path; this entry exists for gradient-based workflows and
+    for the Fisher-information cross-checks.
+    """
+    n = locs.shape[0]
+    sigma_sq, beta, nu = theta[0], theta[1], theta[2]
+    diff = locs[:, None, :] - locs[None, :, :]
+    d = jnp.sqrt(jnp.sum(diff * diff, axis=-1) + 1e-300)
+    t = d / beta
+    e = jnp.exp(-t)
+    corr = jnp.where(
+        nu < 1.0, e, jnp.where(nu < 2.0, (1.0 + t) * e, (1.0 + t + t * t / 3.0) * e)
+    )
+    sigma = sigma_sq * corr + (JITTER + sigma_sq * 0.0) * jnp.eye(n, dtype=locs.dtype)
+    # restore exact diagonal (distance hack above perturbs it by ~1e-150)
+    sigma = sigma.at[jnp.diag_indices(n)].set(sigma_sq + JITTER)
+    chol = jnp.linalg.cholesky(sigma)
+    y = solve_triangular(chol, z, lower=True)
+    sse = jnp.sum(y * y)
+    logdet = 2.0 * jnp.sum(jnp.log(jnp.diag(chol)))
+    return -0.5 * sse - 0.5 * logdet - 0.5 * n * jnp.log(2.0 * jnp.pi)

@@ -1,0 +1,6 @@
+"""Enable x64 before any test imports jax-dependent modules: the AOT
+artifacts are float64 (Rust's linalg substrate is f64 throughout)."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,151 @@
+//! Ablations the paper motivates but does not tabulate:
+//!
+//! 1. **Computation variants** (Fig 1): exact vs DST(band) vs TLR(tol) vs
+//!    MP(band) — evaluation time, likelihood error vs exact, and (TLR)
+//!    storage footprint.
+//! 2. **Scheduler policies** (§III-B, STARPU_SCHED): eager / prio / lws /
+//!    random on the tiled Cholesky DAG.
+//! 3. **Morton ordering** on/off for TLR compressibility (the design
+//!    choice DESIGN.md §4 calls out).
+
+#[path = "bench_util.rs"]
+mod bench_util;
+use bench_util::*;
+
+use exageostat::covariance::{kernel_by_name, morton_perm, DistanceMetric};
+use exageostat::likelihood::{self, tlr, ExecCtx, Problem, Variant};
+use exageostat::linalg::cholesky::{new_fail_flag, submit_tiled_potrf, TileHandles};
+use exageostat::linalg::lowrank::LrOpts;
+use exageostat::linalg::tile::TileMatrix;
+use exageostat::scheduler::pool::{self, Policy};
+use exageostat::scheduler::TaskGraph;
+use exageostat::simulation::simulate_data_exact;
+use std::sync::Arc;
+
+fn main() {
+    let quick = quick();
+    let n = if quick { 400 } else { 1024 };
+    let ts = 64;
+    let theta = [1.0, 0.1, 0.5];
+    let kernel: Arc<dyn exageostat::covariance::CovKernel> =
+        Arc::from(kernel_by_name("ugsm-s").unwrap());
+    let ctx = ExecCtx {
+        ncores: 2,
+        ts,
+        policy: Policy::Prio,
+    };
+    let data =
+        simulate_data_exact(kernel.clone(), &theta, n, DistanceMetric::Euclidean, 0, &ctx).unwrap();
+    let problem = Problem {
+        kernel: kernel.clone(),
+        locs: Arc::new(data.locs.clone()),
+        z: Arc::new(data.z.clone()),
+        metric: DistanceMetric::Euclidean,
+    };
+
+    // ---- 1. variants -----------------------------------------------------
+    println!("ablation 1 — computation variants (n={n}, ts={ts})");
+    header(&["variant", "time (s)", "|ll err|"]);
+    let exact = likelihood::loglik(&problem, &theta, Variant::Exact, &ctx).unwrap();
+    let variants: Vec<(String, Variant)> = vec![
+        ("exact".into(), Variant::Exact),
+        ("dst b=1".into(), Variant::Dst { band: 1 }),
+        ("dst b=2".into(), Variant::Dst { band: 2 }),
+        ("dst b=4".into(), Variant::Dst { band: 4 }),
+        ("mp b=0".into(), Variant::Mp { band: 0 }),
+        ("mp b=2".into(), Variant::Mp { band: 2 }),
+        (
+            "tlr 1e-3".into(),
+            Variant::Tlr {
+                tol: 1e-3,
+                max_rank: usize::MAX,
+            },
+        ),
+        (
+            "tlr 1e-7".into(),
+            Variant::Tlr {
+                tol: 1e-7,
+                max_rank: usize::MAX,
+            },
+        ),
+    ];
+    for (name, v) in variants {
+        // An over-aggressive DST band can lose positive definiteness —
+        // a real failure mode of the approximation (the paper: "the user
+        // should expect losing some accuracy with more zero tiles").
+        match likelihood::loglik(&problem, &theta, v, &ctx) {
+            Ok(r) => {
+                let t = time_median(if quick { 1 } else { 3 }, || {
+                    let _ = likelihood::loglik(&problem, &theta, v, &ctx);
+                });
+                row(&[
+                    name,
+                    s(t),
+                    format!("{:.3e}", (r.loglik - exact.loglik).abs()),
+                ]);
+            }
+            Err(_) => row(&[name, "—".into(), "not SPD".into()]),
+        }
+    }
+
+    // ---- 2. scheduler policies -------------------------------------------
+    println!("\nablation 2 — scheduler policy on the tiled Cholesky DAG (n={n}, ts={ts})");
+    header(&["policy", "wall (s)", "tasks", "eff %"]);
+    for policy in [Policy::Eager, Policy::Prio, Policy::Lws, Policy::Random] {
+        let t = time_median(if quick { 1 } else { 3 }, || {
+            let a = TileMatrix::zeros(n, ts);
+            let mut g = TaskGraph::new();
+            let hs = TileHandles::register(&mut g, a.nt());
+            likelihood::exact::submit_generation(&mut g, &a, &hs, &problem, &theta, None);
+            let fail = new_fail_flag();
+            submit_tiled_potrf(&mut g, &a, &hs, None, &fail);
+            pool::run(&mut g, 4, policy);
+        });
+        // one instrumented run for task count / efficiency
+        let a = TileMatrix::zeros(n, ts);
+        let mut g = TaskGraph::new();
+        let hs = TileHandles::register(&mut g, a.nt());
+        likelihood::exact::submit_generation(&mut g, &a, &hs, &problem, &theta, None);
+        let fail = new_fail_flag();
+        submit_tiled_potrf(&mut g, &a, &hs, None, &fail);
+        let prof = pool::run(&mut g, 4, policy);
+        row(&[
+            format!("{policy:?}"),
+            s(t),
+            format!("{}", prof.total_tasks()),
+            s2(100.0 * prof.efficiency()),
+        ]);
+    }
+
+    // ---- 3. Morton ordering for TLR ---------------------------------------
+    println!("\nablation 3 — Morton ordering and TLR storage (n={n}, ts={ts}, tol=1e-7)");
+    header(&["ordering", "storage", "dense", "pct"]);
+    let opts = LrOpts {
+        tol: 1e-7,
+        max_rank: usize::MAX,
+    };
+    for (name, order) in [("original", false), ("morton", true)] {
+        let locs: Vec<_> = if order {
+            morton_perm(&problem.locs)
+                .iter()
+                .map(|&i| problem.locs[i])
+                .collect()
+        } else {
+            problem.locs.to_vec()
+        };
+        let p2 = Problem {
+            kernel: kernel.clone(),
+            locs: Arc::new(locs),
+            z: problem.z.clone(),
+            metric: problem.metric,
+        };
+        let a = tlr::generate(&p2, &theta, opts, ts);
+        row(&[
+            name.to_string(),
+            format!("{}", a.storage_len()),
+            format!("{}", a.dense_storage_len()),
+            s2(100.0 * a.storage_len() as f64 / a.dense_storage_len() as f64),
+        ]);
+    }
+    println!("\nshape check: morton < original storage; prio ~ lws <= eager <= random wall.");
+}

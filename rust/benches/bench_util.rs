@@ -1,0 +1,46 @@
+#![allow(dead_code)]
+//! Shared mini bench harness (the offline substitute for criterion — see
+//! DESIGN.md substitution table): warmup + median-of-k wall-clock timing
+//! and aligned table output.
+
+use std::time::Instant;
+
+/// Median of `k` timed runs (after one warmup) in seconds.
+pub fn time_median(k: usize, mut f: impl FnMut()) -> f64 {
+    f(); // warmup
+    let mut samples: Vec<f64> = (0..k.max(1))
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    samples.sort_by(|a, b| a.total_cmp(b));
+    samples[samples.len() / 2]
+}
+
+/// Print a header line for a table.
+pub fn header(cols: &[&str]) {
+    let row: Vec<String> = cols.iter().map(|c| format!("{c:>12}")).collect();
+    println!("{}", row.join(" "));
+    println!("{}", "-".repeat(13 * cols.len()));
+}
+
+/// Print one row of formatted cells.
+pub fn row(cells: &[String]) {
+    let row: Vec<String> = cells.iter().map(|c| format!("{c:>12}")).collect();
+    println!("{}", row.join(" "));
+}
+
+/// `--quick` flag: benches honor it to shrink problem sizes under CI.
+pub fn quick() -> bool {
+    std::env::args().any(|a| a == "--quick") || std::env::var("BENCH_QUICK").is_ok()
+}
+
+/// Fixed-format helpers.
+pub fn s(v: f64) -> String {
+    format!("{v:.4}")
+}
+pub fn s2(v: f64) -> String {
+    format!("{v:.2}")
+}

@@ -1,0 +1,98 @@
+//! **Fig 7** — strong scaling on a distributed-memory system: time per
+//! iteration on 2x2, 4x4, 8x8 and 16x16 node grids (paper: Shaheen II
+//! Cray XC40, 31 cores/node, ts=960, n up to 250k, STARPU_SCHED=eager).
+//!
+//! No cluster on this testbed, so per DESIGN.md the node grid is modeled
+//! in the DES: 2-D block-cyclic tile ownership (the placement constraint
+//! the paper's runtime uses), measured per-task cost models, and an
+//! Aries-like network model (1.5 us latency, 10 GB/s per node).
+
+#[path = "bench_util.rs"]
+mod bench_util;
+use bench_util::*;
+
+use exageostat::covariance::{kernel_by_name, DistanceMetric};
+use exageostat::likelihood::{exact, ExecCtx, Problem};
+use exageostat::linalg::cholesky::{new_fail_flag, submit_tiled_potrf, TileHandles};
+use exageostat::linalg::tile::TileMatrix;
+use exageostat::scheduler::des::{cluster_machine, simulate, CommModel};
+use exageostat::scheduler::pool::Policy;
+use exageostat::scheduler::{Handle, TaskGraph};
+use exageostat::simulation::simulate_data_exact;
+use std::sync::Arc;
+
+fn main() {
+    let quick = quick();
+    let sizes: &[usize] = if quick {
+        &[3600, 6400]
+    } else {
+        &[3600, 10000, 22500]
+    };
+    let grids: &[(usize, usize)] = &[(2, 2), (4, 4), (8, 8), (16, 16)];
+    let cores_per_node = 8; // scaled from the paper's 31 to keep the DES fast
+    let theta = [1.0, 0.1, 0.5];
+    let kernel: Arc<dyn exageostat::covariance::CovKernel> =
+        Arc::from(kernel_by_name("ugsm-s").unwrap());
+    let ctx = ExecCtx {
+        ncores: 1,
+        ts: 320,
+        policy: Policy::Eager, // paper: STARPU_SCHED=eager
+    };
+    let comm = CommModel {
+        latency: 1.5e-6,
+        bandwidth: 10e9,
+    };
+
+    println!("Fig 7 — DES-projected time per iteration (s) on p x q node grids");
+    header(&["n", "2x2", "4x4", "8x8", "16x16"]);
+    for &n in sizes {
+        let ts = (n / 16).clamp(160, 640);
+        let data =
+            simulate_data_exact(kernel.clone(), &theta, n, DistanceMetric::Euclidean, 0, &ctx)
+                .unwrap();
+        let problem = Problem {
+            kernel: kernel.clone(),
+            locs: Arc::new(data.locs),
+            z: Arc::new(data.z),
+            metric: DistanceMetric::Euclidean,
+        };
+        let nt = problem.dim().div_ceil(ts);
+        let build = || -> (TileMatrix, TaskGraph, Vec<(usize, usize)>) {
+            let a = TileMatrix::zeros(problem.dim(), ts);
+            let mut g = TaskGraph::new();
+            let hs = TileHandles::register(&mut g, a.nt());
+            exact::submit_generation(&mut g, &a, &hs, &problem, &theta, None);
+            let fail = new_fail_flag();
+            submit_tiled_potrf(&mut g, &a, &hs, None, &fail);
+            // handle id -> (tile_i, tile_j): TileHandles registers the
+            // lower triangle in row-major tri order starting at handle 0.
+            let mut coords = Vec::new();
+            for i in 0..nt {
+                for j in 0..=i {
+                    coords.push((i, j));
+                }
+            }
+            (a, g, coords)
+        };
+        let (_a, mut gserial, _) = build();
+        let cm = gserial.run_serial().cost_model();
+
+        let mut cells = vec![format!("{n}")];
+        for &(p, q) in grids {
+            let (_a2, g2, coords) = build();
+            let machine = cluster_machine(p, q, cores_per_node);
+            // 2-D block-cyclic ownership, exactly the paper's distribution
+            let owner = move |h: Handle| -> usize {
+                let (i, j) = coords.get(h.0).copied().unwrap_or((0, 0));
+                (i % p) * q + (j % q)
+            };
+            let r = simulate(&g2, &cm, &machine, &comm, Some(&owner));
+            cells.push(s(r.makespan));
+        }
+        row(&cells);
+    }
+    println!(
+        "\nshape check (paper): strong scaling up to 64 nodes; small n stops scaling\n\
+         early (communication + too few tiles per node), large n keeps scaling."
+    );
+}

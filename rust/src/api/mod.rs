@@ -1,0 +1,442 @@
+//! The ExaGeoStatR user-facing API (Table II): one Rust method per R
+//! function, with the same argument structure (`hardware = list(...)`,
+//! `optimization = list(clb, cub, tol, max_iters)`).
+
+use crate::covariance::{kernel_by_name, CovKernel, DistanceMetric, Location};
+use crate::likelihood::{self, ExecCtx, Problem, Variant};
+use crate::optimizer::{self, Bounds, Method, OptOptions};
+use crate::prediction::{self, FisherResult, MloeMmom, Prediction};
+use crate::scheduler::pool::Policy;
+use crate::simulation::{self, GeoData};
+use std::sync::Arc;
+
+/// `hardware = list(ncores, ngpus, ts, pgrid, qgrid)` of `exageostat_init`.
+/// `ngpus`, `pgrid`, `qgrid` configure the *simulated* accelerator /
+/// cluster studies (Figs 6–7); execution on this machine uses `ncores`
+/// threads with the chosen scheduling policy.
+#[derive(Clone, Debug)]
+pub struct Hardware {
+    pub ncores: usize,
+    pub ngpus: usize,
+    pub ts: usize,
+    pub pgrid: usize,
+    pub qgrid: usize,
+    pub policy: Policy,
+}
+
+impl Default for Hardware {
+    fn default() -> Self {
+        Hardware {
+            ncores: 1,
+            ngpus: 0,
+            ts: 320,
+            pgrid: 1,
+            qgrid: 1,
+            policy: Policy::Lws,
+        }
+    }
+}
+
+/// `optimization = list(clb, cub, tol, max_iters)` of the MLE functions.
+#[derive(Clone, Debug)]
+pub struct MleOptions {
+    pub clb: Vec<f64>,
+    pub cub: Vec<f64>,
+    pub tol: f64,
+    /// `0` = run to convergence (the paper's `max_iters = 0`).
+    pub max_iters: usize,
+    pub method: Method,
+}
+
+impl MleOptions {
+    pub fn new(clb: Vec<f64>, cub: Vec<f64>, tol: f64, max_iters: usize) -> Self {
+        MleOptions {
+            clb,
+            cub,
+            tol,
+            max_iters,
+            method: Method::Bobyqa,
+        }
+    }
+}
+
+/// Result of an MLE run (`result$...` of the R API).
+#[derive(Clone, Debug)]
+pub struct MleResult {
+    pub theta: Vec<f64>,
+    pub loglik: f64,
+    pub iters: usize,
+    pub time_per_iter: f64,
+    pub total_time: f64,
+    pub history: Vec<f64>,
+}
+
+/// An initialized ExaGeoStat instance (`exageostat_init` ...
+/// `exageostat_finalize`).
+pub struct ExaGeoStat {
+    pub hw: Hardware,
+}
+
+impl ExaGeoStat {
+    /// `exageostat_init(hardware)`.
+    pub fn init(hw: Hardware) -> Self {
+        ExaGeoStat { hw }
+    }
+
+    /// `exageostat_finalize()`.
+    pub fn finalize(self) {}
+
+    pub fn ctx(&self) -> ExecCtx {
+        ExecCtx {
+            ncores: self.hw.ncores.max(1),
+            ts: self.hw.ts,
+            policy: self.hw.policy,
+        }
+    }
+
+    fn problem(
+        &self,
+        data: &GeoData,
+        kernel: &str,
+        dmetric: &str,
+    ) -> anyhow::Result<(Problem, Arc<dyn CovKernel>)> {
+        let kernel: Arc<dyn CovKernel> = Arc::from(kernel_by_name(kernel)?);
+        let metric = DistanceMetric::parse(dmetric)?;
+        let p = Problem {
+            kernel: kernel.clone(),
+            locs: Arc::new(data.locs.clone()),
+            z: Arc::new(data.z.clone()),
+            metric,
+        };
+        Ok((p, kernel))
+    }
+
+    /// `simulate_data_exact(kernel, theta, dmetric, n, seed)`.
+    pub fn simulate_data_exact(
+        &self,
+        kernel: &str,
+        theta: &[f64],
+        dmetric: &str,
+        n: usize,
+        seed: u64,
+    ) -> anyhow::Result<GeoData> {
+        let kernel: Arc<dyn CovKernel> = Arc::from(kernel_by_name(kernel)?);
+        let metric = DistanceMetric::parse(dmetric)?;
+        simulation::simulate_data_exact(kernel, theta, n, metric, seed, &self.ctx())
+    }
+
+    /// `simulate_obs_exact(x, y, kernel, theta, dmetric)`.
+    pub fn simulate_obs_exact(
+        &self,
+        x: &[f64],
+        y: &[f64],
+        kernel: &str,
+        theta: &[f64],
+        dmetric: &str,
+        seed: u64,
+    ) -> anyhow::Result<GeoData> {
+        anyhow::ensure!(x.len() == y.len(), "x/y length mismatch");
+        let kernel: Arc<dyn CovKernel> = Arc::from(kernel_by_name(kernel)?);
+        let metric = DistanceMetric::parse(dmetric)?;
+        let locs: Vec<Location> = x
+            .iter()
+            .zip(y)
+            .map(|(&xi, &yi)| Location::new(xi, yi))
+            .collect();
+        simulation::simulate_obs_exact(kernel, theta, locs, metric, seed, &self.ctx())
+    }
+
+    /// Shared MLE driver over a likelihood variant.
+    pub fn mle(
+        &self,
+        data: &GeoData,
+        kernel: &str,
+        dmetric: &str,
+        opt: &MleOptions,
+        variant: Variant,
+    ) -> anyhow::Result<MleResult> {
+        let (problem, k) = self.problem(data, kernel, dmetric)?;
+        anyhow::ensure!(
+            opt.clb.len() == k.nparams() && opt.cub.len() == k.nparams(),
+            "{} expects {} parameters in clb/cub",
+            k.name(),
+            k.nparams()
+        );
+        let ctx = self.ctx();
+        // Optimize in log-parameter space: Matérn parameters are positive
+        // and the (sigma_sq, beta) profile is banana-shaped in linear
+        // scale; the log transform conditions it (standard practice, and
+        // what makes BOBYQA's quadratic models accurate here).
+        let log_ok = opt.clb.iter().all(|&v| v > 0.0);
+        let (lo, hi, init): (Vec<f64>, Vec<f64>, Vec<f64>) = if log_ok {
+            (
+                opt.clb.iter().map(|v| v.ln()).collect(),
+                opt.cub.iter().map(|v| v.ln()).collect(),
+                // The R package starts the search at the lower bounds.
+                opt.clb.iter().map(|v| v.ln()).collect(),
+            )
+        } else {
+            (opt.clb.clone(), opt.cub.clone(), opt.clb.clone())
+        };
+        let bounds = Bounds::new(lo, hi)?;
+        let opts = OptOptions {
+            tol: opt.tol,
+            max_iters: opt.max_iters,
+            init,
+        };
+        let back = |x: &[f64]| -> Vec<f64> {
+            if log_ok {
+                x.iter().map(|v| v.exp()).collect()
+            } else {
+                x.to_vec()
+            }
+        };
+        let r = optimizer::minimize(
+            opt.method,
+            |x| {
+                let theta = back(x);
+                match likelihood::loglik(&problem, &theta, variant, &ctx) {
+                    Ok(l) => -l.loglik,
+                    Err(_) => f64::INFINITY,
+                }
+            },
+            bounds,
+            &opts,
+        );
+        anyhow::ensure!(
+            r.fx.is_finite(),
+            "MLE failed: no positive-definite covariance found within bounds"
+        );
+        Ok(MleResult {
+            theta: back(&r.x),
+            loglik: -r.fx,
+            iters: r.iters,
+            time_per_iter: r.time_per_iter,
+            total_time: r.total_time,
+            history: r.history,
+        })
+    }
+
+    /// `exact_mle(data, kernel, dmetric, optimization)`.
+    pub fn exact_mle(
+        &self,
+        data: &GeoData,
+        kernel: &str,
+        dmetric: &str,
+        opt: &MleOptions,
+    ) -> anyhow::Result<MleResult> {
+        self.mle(data, kernel, dmetric, opt, Variant::Exact)
+    }
+
+    /// `dst_mle(...)` — Diagonal Super Tile approximation.
+    pub fn dst_mle(
+        &self,
+        data: &GeoData,
+        kernel: &str,
+        dmetric: &str,
+        opt: &MleOptions,
+        band: usize,
+    ) -> anyhow::Result<MleResult> {
+        self.mle(data, kernel, dmetric, opt, Variant::Dst { band })
+    }
+
+    /// `tlr_mle(...)` — Tile Low-Rank approximation.
+    pub fn tlr_mle(
+        &self,
+        data: &GeoData,
+        kernel: &str,
+        dmetric: &str,
+        opt: &MleOptions,
+        tol: f64,
+        max_rank: usize,
+    ) -> anyhow::Result<MleResult> {
+        self.mle(data, kernel, dmetric, opt, Variant::Tlr { tol, max_rank })
+    }
+
+    /// `mp_mle(...)` — mixed-precision approximation.
+    pub fn mp_mle(
+        &self,
+        data: &GeoData,
+        kernel: &str,
+        dmetric: &str,
+        opt: &MleOptions,
+        band: usize,
+    ) -> anyhow::Result<MleResult> {
+        self.mle(data, kernel, dmetric, opt, Variant::Mp { band })
+    }
+
+    /// `exact_predict(train, new, kernel, dmetric, est_theta)`.
+    pub fn exact_predict(
+        &self,
+        train: &GeoData,
+        new_locs: &[Location],
+        kernel: &str,
+        dmetric: &str,
+        theta: &[f64],
+        with_variance: bool,
+    ) -> anyhow::Result<Prediction> {
+        let k = kernel_by_name(kernel)?;
+        let metric = DistanceMetric::parse(dmetric)?;
+        prediction::exact_predict(
+            k.as_ref(),
+            theta,
+            &train.locs,
+            &train.z,
+            new_locs,
+            metric,
+            with_variance,
+        )
+    }
+
+    /// `exact_fisher(...)`.
+    pub fn exact_fisher(
+        &self,
+        locs: &[Location],
+        kernel: &str,
+        dmetric: &str,
+        theta: &[f64],
+    ) -> anyhow::Result<FisherResult> {
+        let k = kernel_by_name(kernel)?;
+        let metric = DistanceMetric::parse(dmetric)?;
+        prediction::exact_fisher(k.as_ref(), theta, locs, metric)
+    }
+
+    /// `exact_mloe_mmom(...)`.
+    pub fn exact_mloe_mmom(
+        &self,
+        obs_locs: &[Location],
+        new_locs: &[Location],
+        kernel: &str,
+        dmetric: &str,
+        theta_true: &[f64],
+        theta_approx: &[f64],
+    ) -> anyhow::Result<MloeMmom> {
+        let k = kernel_by_name(kernel)?;
+        let metric = DistanceMetric::parse(dmetric)?;
+        prediction::exact_mloe_mmom(k.as_ref(), theta_true, theta_approx, obs_locs, new_locs, metric)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_hw(ts: usize) -> Hardware {
+        Hardware {
+            ncores: 2,
+            ngpus: 0,
+            ts,
+            pgrid: 1,
+            qgrid: 1,
+            policy: Policy::Prio,
+        }
+    }
+
+    #[test]
+    fn end_to_end_mle_recovers_parameters() {
+        // Example-2 style: simulate at theta = (1, 0.1, 0.5), refit.
+        let exa = ExaGeoStat::init(small_hw(64));
+        let theta_true = [1.0, 0.1, 0.5];
+        let data = exa
+            .simulate_data_exact("ugsm-s", &theta_true, "euclidean", 400, 0)
+            .unwrap();
+        let opt = MleOptions::new(vec![0.001; 3], vec![5.0; 3], 1e-5, 0);
+        let r = exa.exact_mle(&data, "ugsm-s", "euclidean", &opt).unwrap();
+        // MLE invariant: fitted loglik >= loglik at truth.
+        let (problem, _) = exa.problem(&data, "ugsm-s", "euclidean").unwrap();
+        let at_truth =
+            likelihood::loglik(&problem, &theta_true, Variant::Exact, &exa.ctx()).unwrap();
+        assert!(
+            r.loglik >= at_truth.loglik - 1e-3,
+            "fit {} < truth {}",
+            r.loglik,
+            at_truth.loglik
+        );
+        // Parameter sanity (n=400: generous statistical tolerances).
+        assert!((r.theta[0] - 1.0).abs() < 0.8, "sigma_sq {}", r.theta[0]);
+        assert!(r.theta[1] > 0.02 && r.theta[1] < 0.5, "beta {}", r.theta[1]);
+        assert!(r.theta[2] > 0.2 && r.theta[2] < 1.5, "nu {}", r.theta[2]);
+        assert!(r.iters > 10);
+        assert!(r.time_per_iter > 0.0);
+    }
+
+    #[test]
+    fn variant_mles_run_and_agree_roughly() {
+        let exa = ExaGeoStat::init(small_hw(32));
+        let data = exa
+            .simulate_data_exact("ugsm-s", &[1.0, 0.1, 0.5], "euclidean", 128, 1)
+            .unwrap();
+        let opt = MleOptions::new(vec![0.01; 3], vec![5.0; 3], 1e-4, 60);
+        let exact = exa.exact_mle(&data, "ugsm-s", "euclidean", &opt).unwrap();
+        let dst = exa.dst_mle(&data, "ugsm-s", "euclidean", &opt, 2).unwrap();
+        let tlr = exa
+            .tlr_mle(&data, "ugsm-s", "euclidean", &opt, 1e-9, usize::MAX)
+            .unwrap();
+        let mp = exa.mp_mle(&data, "ugsm-s", "euclidean", &opt, 1).unwrap();
+        for (name, r) in [("dst", &dst), ("tlr", &tlr), ("mp", &mp)] {
+            for i in 0..3 {
+                assert!(
+                    (r.theta[i] - exact.theta[i]).abs() < 1.0,
+                    "{name} theta[{i}]: {} vs {}",
+                    r.theta[i],
+                    exact.theta[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn predict_round_trip_through_api() {
+        let exa = ExaGeoStat::init(small_hw(32));
+        let data = exa
+            .simulate_data_exact("ugsm-s", &[1.0, 0.2, 1.0], "euclidean", 100, 2)
+            .unwrap();
+        let train = GeoData {
+            locs: data.locs[..90].to_vec(),
+            z: data.z[..90].to_vec(),
+        };
+        let target = &data.locs[90..];
+        let pred = exa
+            .exact_predict(&train, target, "ugsm-s", "euclidean", &[1.0, 0.2, 1.0], true)
+            .unwrap();
+        // kriging should beat predicting the mean (0)
+        let mse_krig: f64 = pred
+            .mean
+            .iter()
+            .zip(&data.z[90..])
+            .map(|(p, t)| (p - t) * (p - t))
+            .sum::<f64>()
+            / 10.0;
+        let mse_zero: f64 = data.z[90..].iter().map(|t| t * t).sum::<f64>() / 10.0;
+        assert!(mse_krig < mse_zero, "kriging {mse_krig} vs zero {mse_zero}");
+        let v = pred.variance.unwrap();
+        assert!(v.iter().all(|&x| x >= 0.0 && x <= 1.0 + 1e-9));
+    }
+
+    #[test]
+    fn api_surface_matches_table_ii() {
+        // Compile-time presence check of every Table II function.
+        let exa = ExaGeoStat::init(Hardware::default());
+        let _: fn(&ExaGeoStat, &GeoData, &str, &str, &MleOptions) -> anyhow::Result<MleResult> =
+            ExaGeoStat::exact_mle;
+        let _ = ExaGeoStat::dst_mle;
+        let _ = ExaGeoStat::tlr_mle;
+        let _ = ExaGeoStat::mp_mle;
+        let _ = ExaGeoStat::exact_predict;
+        let _ = ExaGeoStat::exact_fisher;
+        let _ = ExaGeoStat::exact_mloe_mmom;
+        let _ = ExaGeoStat::simulate_data_exact;
+        let _ = ExaGeoStat::simulate_obs_exact;
+        exa.finalize();
+    }
+
+    #[test]
+    fn wrong_param_count_rejected() {
+        let exa = ExaGeoStat::init(small_hw(32));
+        let data = exa
+            .simulate_data_exact("ugsm-s", &[1.0, 0.1, 0.5], "euclidean", 30, 3)
+            .unwrap();
+        let opt = MleOptions::new(vec![0.01; 2], vec![5.0; 2], 1e-4, 10);
+        assert!(exa.exact_mle(&data, "ugsm-s", "euclidean", &opt).is_err());
+    }
+}

@@ -1,0 +1,218 @@
+//! Baseline MLE implementations mirroring the two R packages the paper
+//! compares against (Table IV):
+//!
+//! * [`georlike_mle`] — GeoR's `likfit`: sequential dense Cholesky,
+//!   Nelder–Mead, estimates a constant mean (as the data mean, which the
+//!   paper notes is how GeoR effectively treats it) plus
+//!   `(sigma_sq, beta, nu)`.
+//! * [`fieldslike_mle`] — fields' `MLESpatialProcess`: sequential dense
+//!   Cholesky, BFGS, smoothness `nu` held fixed, estimates
+//!   `(sigma_sq, beta)`.
+//!
+//! Both deliberately use the *plain* (non-tiled, single-thread) dense path:
+//! the Table V / Fig 5 comparisons measure exactly this
+//! sequential-vs-task-parallel gap.
+
+use crate::covariance::{build_cov_dense, kernel_by_name, DistanceMetric};
+use crate::optimizer::{self, Bounds, Method, OptOptions};
+use crate::simulation::GeoData;
+
+/// Result of a baseline fit.
+#[derive(Clone, Debug)]
+pub struct BaselineResult {
+    /// Estimated `(sigma_sq, beta, nu)` (nu echoed back if fixed).
+    pub theta: Vec<f64>,
+    /// Estimated constant mean (GeoR-like only).
+    pub mean: f64,
+    pub loglik: f64,
+    pub iters: usize,
+    pub time_per_iter: f64,
+    pub total_time: f64,
+}
+
+/// Dense sequential negative log-likelihood for ugsm-s at `theta`,
+/// `z` assumed centred.  Returns +inf on non-SPD.
+///
+/// Fidelity note: this path uses the *unblocked* reference factorization
+/// (`dpotrf_unblocked`), standing in for the reference-BLAS builds the R
+/// packages typically run on.  The cache-blocked tiled kernels are
+/// ExaGeoStat's (Chameleon's) advantage and belong only to the
+/// `exact_mle` side of the comparison — that is precisely the sequential
+/// part of the Table V / Fig 5 gap; the parallel part is projected by the
+/// fig3 DES on this single-core testbed.
+pub fn dense_negloglik(
+    locs: &[crate::covariance::Location],
+    z: &[f64],
+    theta: &[f64],
+    metric: DistanceMetric,
+) -> f64 {
+    let kernel = kernel_by_name("ugsm-s").expect("ugsm-s");
+    if kernel.validate(theta).is_err() {
+        return f64::INFINITY;
+    }
+    let mut sigma = build_cov_dense(kernel.as_ref(), theta, locs, metric);
+    let n = z.len();
+    if crate::linalg::blas::dpotrf_unblocked(n, sigma.as_mut_slice(), n).is_err() {
+        return f64::INFINITY;
+    }
+    let mut y = z.to_vec();
+    crate::linalg::blas::dtrsv_ln(n, sigma.as_slice(), n, &mut y);
+    let sse: f64 = y.iter().map(|v| v * v).sum();
+    let logdet: f64 = 2.0 * (0..n).map(|i| sigma[(i, i)].ln()).sum::<f64>();
+    0.5 * sse + 0.5 * logdet + 0.5 * n as f64 * (2.0 * std::f64::consts::PI).ln()
+}
+
+/// GeoR-like fit: centre by the sample mean, Nelder–Mead over
+/// `(sigma_sq, beta, nu)` starting from `clb` (paper protocol).
+pub fn georlike_mle(
+    data: &GeoData,
+    metric: DistanceMetric,
+    clb: &[f64],
+    cub: &[f64],
+    tol: f64,
+    max_iters: usize,
+) -> anyhow::Result<BaselineResult> {
+    anyhow::ensure!(clb.len() == 3 && cub.len() == 3, "ugsm-s has 3 parameters");
+    let mean = data.z.iter().sum::<f64>() / data.z.len() as f64;
+    let zc: Vec<f64> = data.z.iter().map(|v| v - mean).collect();
+    let locs = data.locs.clone();
+    let bounds = Bounds::new(clb.to_vec(), cub.to_vec())?;
+    let opts = OptOptions {
+        tol,
+        max_iters,
+        init: clb.to_vec(),
+    };
+    let r = optimizer::minimize(
+        Method::NelderMead,
+        |theta| dense_negloglik(&locs, &zc, theta, metric),
+        bounds,
+        &opts,
+    );
+    Ok(BaselineResult {
+        theta: r.x.clone(),
+        mean,
+        loglik: -r.fx,
+        iters: r.iters,
+        time_per_iter: r.time_per_iter,
+        total_time: r.total_time,
+    })
+}
+
+/// fields-like fit: BFGS over `(sigma_sq, beta)` with `nu` fixed (the
+/// paper fixes it at the true value — "an advantageous favor for fields").
+pub fn fieldslike_mle(
+    data: &GeoData,
+    metric: DistanceMetric,
+    fixed_nu: f64,
+    clb: &[f64],
+    cub: &[f64],
+    tol: f64,
+    max_iters: usize,
+) -> anyhow::Result<BaselineResult> {
+    anyhow::ensure!(clb.len() >= 2 && cub.len() >= 2, "need sigma_sq/beta bounds");
+    let locs = data.locs.clone();
+    let z = data.z.clone();
+    let bounds = Bounds::new(clb[..2].to_vec(), cub[..2].to_vec())?;
+    let opts = OptOptions {
+        tol,
+        max_iters,
+        init: clb[..2].to_vec(),
+    };
+    let r = optimizer::minimize(
+        Method::Bfgs,
+        |t2| dense_negloglik(&locs, &z, &[t2[0], t2[1], fixed_nu], metric),
+        bounds,
+        &opts,
+    );
+    Ok(BaselineResult {
+        theta: vec![r.x[0], r.x[1], fixed_nu],
+        mean: 0.0,
+        loglik: -r.fx,
+        iters: r.iters,
+        time_per_iter: r.time_per_iter,
+        total_time: r.total_time,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::covariance::kernel_by_name;
+    use crate::likelihood::ExecCtx;
+    use crate::simulation::simulate_data_exact;
+    use std::sync::Arc;
+
+    fn sim(n: usize, seed: u64) -> GeoData {
+        let k: Arc<dyn crate::covariance::CovKernel> =
+            Arc::from(kernel_by_name("ugsm-s").unwrap());
+        simulate_data_exact(
+            k,
+            &[1.0, 0.1, 0.5],
+            n,
+            DistanceMetric::Euclidean,
+            seed,
+            &ExecCtx {
+                ncores: 1,
+                ts: 64,
+                policy: crate::scheduler::pool::Policy::Eager,
+            },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn georlike_improves_on_start_and_stays_in_bounds() {
+        let data = sim(150, 5);
+        let clb = [0.01, 0.01, 0.01];
+        let cub = [5.0, 5.0, 5.0];
+        let r = georlike_mle(&data, DistanceMetric::Euclidean, &clb, &cub, 1e-5, 400).unwrap();
+        let f_start = dense_negloglik(&data.locs, &data.z, &clb, DistanceMetric::Euclidean);
+        assert!(-r.loglik < f_start, "no improvement");
+        for i in 0..3 {
+            assert!(r.theta[i] >= clb[i] && r.theta[i] <= cub[i]);
+        }
+        assert!(r.iters > 0 && r.time_per_iter > 0.0);
+    }
+
+    #[test]
+    fn fieldslike_fixes_nu() {
+        let data = sim(120, 6);
+        let r = fieldslike_mle(
+            &data,
+            DistanceMetric::Euclidean,
+            0.5,
+            &[0.01, 0.01],
+            &[5.0, 5.0],
+            1e-5,
+            300,
+        )
+        .unwrap();
+        assert_eq!(r.theta[2], 0.5);
+        assert!(r.theta[0] > 0.0 && r.theta[1] > 0.0);
+    }
+
+    #[test]
+    fn loglik_at_estimate_beats_truth_neighbourhood() {
+        // MLE property: fitted loglik >= loglik at the generating theta
+        // (up to optimizer tolerance).
+        let data = sim(150, 7);
+        let r = georlike_mle(
+            &data,
+            DistanceMetric::Euclidean,
+            &[0.01, 0.01, 0.01],
+            &[5.0, 5.0, 5.0],
+            1e-6,
+            600,
+        )
+        .unwrap();
+        let mean = data.z.iter().sum::<f64>() / data.z.len() as f64;
+        let zc: Vec<f64> = data.z.iter().map(|v| v - mean).collect();
+        let f_truth = dense_negloglik(&data.locs, &zc, &[1.0, 0.1, 0.5], DistanceMetric::Euclidean);
+        assert!(
+            -r.loglik <= f_truth + 1e-3,
+            "fit {} vs truth {}",
+            -r.loglik,
+            f_truth
+        );
+    }
+}

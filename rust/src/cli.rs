@@ -1,0 +1,120 @@
+//! Tiny command-line argument parser (the offline substitute for `clap`).
+//!
+//! Grammar: `exageostat <subcommand> [--key value | --key=value | --flag]...`
+
+use std::collections::HashMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (without argv[0]).
+    pub fn parse_from<I: IntoIterator<Item = String>>(items: I) -> Args {
+        let mut args = Args::default();
+        let mut it = items.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    args.flags.insert(stripped.to_string(), v);
+                } else {
+                    args.flags.insert(stripped.to_string(), "true".to_string());
+                }
+            } else if args.subcommand.is_none() {
+                args.subcommand = Some(a);
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    /// Parse from the process environment.
+    pub fn parse() -> Args {
+        Args::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects a number, got {v:?}")),
+        }
+    }
+
+    /// Parse a comma-separated f64 list, e.g. `--theta 1,0.1,0.5`.
+    pub fn get_f64_list(&self, key: &str, default: &[f64]) -> anyhow::Result<Vec<f64>> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    p.trim()
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("--{key}: bad number {p:?}"))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("mle --n 1600 --theta=1,0.1,0.5 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("mle"));
+        assert_eq!(a.get_usize("n", 0).unwrap(), 1600);
+        assert_eq!(a.get_f64_list("theta", &[]).unwrap(), vec![1.0, 0.1, 0.5]);
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = parse("simulate --n abc");
+        assert!(a.get_usize("n", 5).is_err());
+        assert_eq!(a.get_usize("m", 7).unwrap(), 7);
+        assert_eq!(a.get_or("kernel", "ugsm-s"), "ugsm-s");
+    }
+
+    #[test]
+    fn negative_numbers_as_values() {
+        let a = parse("mle --clb -1.5");
+        assert_eq!(a.get_f64("clb", 0.0).unwrap(), -1.5);
+    }
+}

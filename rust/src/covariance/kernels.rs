@@ -1,0 +1,573 @@
+//! The seven covariance kernels of Table III.
+//!
+//! All kernels use the paper's Matérn parametrization (Eq. 3): correlation
+//! `M_nu(d / beta)` with `M` from [`super::bessel::matern_correlation`].
+//! Multivariate kernels follow the parsimonious / flexible multivariate
+//! Matérn of Gneiting, Kleiber & Schlather (2010); the space-time kernels
+//! use the Gneiting (2002) non-separable class, which is what ExaGeoStat's
+//! space-time kernels implement.
+
+use super::bessel::{gamma, matern_correlation};
+use super::CovKernel;
+use anyhow::{bail, ensure, Result};
+
+fn ensure_pos(theta: &[f64], names: &[&str], idx: &[usize]) -> Result<()> {
+    for &i in idx {
+        ensure!(
+            theta[i] > 0.0 && theta[i].is_finite(),
+            "parameter {} = {} must be positive and finite",
+            names[i],
+            theta[i]
+        );
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// ugsm-s: univariate Gaussian stationary Matérn — space
+// ---------------------------------------------------------------------------
+
+/// `theta = (sigma_sq, beta, nu)`:
+/// `C(d) = sigma_sq * M_nu(d / beta)`.
+pub struct UgsmS;
+
+impl CovKernel for UgsmS {
+    fn name(&self) -> &'static str {
+        "ugsm-s"
+    }
+    fn nparams(&self) -> usize {
+        3
+    }
+    fn param_names(&self) -> &'static [&'static str] {
+        &["sigma_sq", "beta", "nu"]
+    }
+    fn validate(&self, theta: &[f64]) -> Result<()> {
+        ensure!(theta.len() == 3, "ugsm-s expects 3 parameters");
+        ensure_pos(theta, self.param_names(), &[0, 1, 2])
+    }
+    fn cov(&self, theta: &[f64], d: f64, _u: f64, _a: usize, _b: usize, _same: bool) -> f64 {
+        theta[0] * matern_correlation(d / theta[1], theta[2])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ugsmn-s: univariate Matérn with nugget — space
+// ---------------------------------------------------------------------------
+
+/// `theta = (sigma_sq, beta, nu, tau_sq)`:
+/// `C(d) = sigma_sq * M_nu(d / beta) + tau_sq * 1{same site}`.
+pub struct UgsmnS;
+
+impl CovKernel for UgsmnS {
+    fn name(&self) -> &'static str {
+        "ugsmn-s"
+    }
+    fn nparams(&self) -> usize {
+        4
+    }
+    fn param_names(&self) -> &'static [&'static str] {
+        &["sigma_sq", "beta", "nu", "tau_sq"]
+    }
+    fn validate(&self, theta: &[f64]) -> Result<()> {
+        ensure!(theta.len() == 4, "ugsmn-s expects 4 parameters");
+        ensure_pos(theta, self.param_names(), &[0, 1, 2])?;
+        ensure!(theta[3] >= 0.0, "tau_sq must be non-negative");
+        Ok(())
+    }
+    fn cov(&self, theta: &[f64], d: f64, _u: f64, _a: usize, _b: usize, same: bool) -> f64 {
+        let c = theta[0] * matern_correlation(d / theta[1], theta[2]);
+        if same {
+            c + theta[3]
+        } else {
+            c
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// bgspm-s: bivariate parsimonious Matérn — space
+// ---------------------------------------------------------------------------
+
+/// Maximum admissible cross-correlation for the parsimonious Matérn in
+/// d = 2 dimensions (Gneiting, Kleiber & Schlather 2010, Thm 3):
+/// `rho^2 <= Γ(nu1 + 1) Γ(nu2 + 1) / (Γ(nu1) Γ(nu2)) * Γ(nu12)^2 / Γ(nu12 + 1)^2`
+/// with `nu12 = (nu1 + nu2) / 2`.
+pub fn parsimonious_rho_max(nu1: f64, nu2: f64) -> f64 {
+    let nu12 = 0.5 * (nu1 + nu2);
+    let num = gamma(nu1 + 1.0) * gamma(nu2 + 1.0) / (gamma(nu1) * gamma(nu2));
+    let den = (gamma(nu12 + 1.0) / gamma(nu12)).powi(2);
+    (num / den).sqrt()
+}
+
+/// `theta = (sigma1_sq, sigma2_sq, beta, nu1, nu2, rho)`:
+/// `C_aa(d) = sigma_a^2 M_{nu_a}(d/beta)`,
+/// `C_12(d) = rho sigma_1 sigma_2 M_{(nu1+nu2)/2}(d/beta)`.
+pub struct BgspmS;
+
+impl CovKernel for BgspmS {
+    fn name(&self) -> &'static str {
+        "bgspm-s"
+    }
+    fn nparams(&self) -> usize {
+        6
+    }
+    fn param_names(&self) -> &'static [&'static str] {
+        &["sigma1_sq", "sigma2_sq", "beta", "nu1", "nu2", "rho"]
+    }
+    fn nvariates(&self) -> usize {
+        2
+    }
+    fn validate(&self, theta: &[f64]) -> Result<()> {
+        ensure!(theta.len() == 6, "bgspm-s expects 6 parameters");
+        ensure_pos(theta, self.param_names(), &[0, 1, 2, 3, 4])?;
+        let rho_max = parsimonious_rho_max(theta[3], theta[4]);
+        ensure!(
+            theta[5].abs() <= rho_max,
+            "rho = {} violates parsimonious validity bound {rho_max:.4}",
+            theta[5]
+        );
+        Ok(())
+    }
+    fn cov(&self, theta: &[f64], d: f64, _u: f64, a: usize, b: usize, _same: bool) -> f64 {
+        let (s1, s2, beta, nu1, nu2, rho) =
+            (theta[0], theta[1], theta[2], theta[3], theta[4], theta[5]);
+        let t = d / beta;
+        match (a, b) {
+            (0, 0) => s1 * matern_correlation(t, nu1),
+            (1, 1) => s2 * matern_correlation(t, nu2),
+            _ => rho * (s1 * s2).sqrt() * matern_correlation(t, 0.5 * (nu1 + nu2)),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// bgsfm-s: bivariate flexible Matérn — space
+// ---------------------------------------------------------------------------
+
+/// `theta = (sigma1_sq, sigma2_sq, beta1, beta2, beta12, nu1, nu2, nu12, rho)`:
+/// each marginal / cross component has its own range and smoothness.
+/// Validity: we enforce the sufficient conditions of Gneiting et al. (2010,
+/// Thm 3 full model): `nu12 >= (nu1 + nu2)/2`, `1/beta12^2 >= (1/beta1^2 +
+/// 1/beta2^2)/2` and a rho bound computed from the parameters.
+pub struct BgsfmS;
+
+/// Sufficient rho bound for the flexible bivariate Matérn (d = 2).
+pub fn flexible_rho_max(
+    beta1: f64,
+    beta2: f64,
+    beta12: f64,
+    nu1: f64,
+    nu2: f64,
+    nu12: f64,
+) -> f64 {
+    // Gneiting-Kleiber-Schlather (2010) eq. (9) specialised to d=2, with
+    // a_i = 1/beta_i (their scale convention):
+    let a1 = 1.0 / beta1;
+    let a2 = 1.0 / beta2;
+    let a12 = 1.0 / beta12;
+    let d_half = 1.0; // d/2 with d = 2
+    let num = gamma(nu1 + d_half).sqrt() * gamma(nu2 + d_half).sqrt() * gamma(nu12)
+        / (gamma(nu1).sqrt() * gamma(nu2).sqrt() * gamma(nu12 + d_half));
+    let scale = a1.powf(nu1) * a2.powf(nu2) / a12.powf(2.0 * nu12)
+        * a12.powf(2.0 * nu12)
+        / (a1.powf(nu1) * a2.powf(nu2));
+    // The infimum term over t >= 0 equals 1 under the enforced
+    // beta/nu ordering constraints, so the bound reduces to `num`.
+    num * scale
+}
+
+impl CovKernel for BgsfmS {
+    fn name(&self) -> &'static str {
+        "bgsfm-s"
+    }
+    fn nparams(&self) -> usize {
+        9
+    }
+    fn param_names(&self) -> &'static [&'static str] {
+        &[
+            "sigma1_sq",
+            "sigma2_sq",
+            "beta1",
+            "beta2",
+            "beta12",
+            "nu1",
+            "nu2",
+            "nu12",
+            "rho",
+        ]
+    }
+    fn nvariates(&self) -> usize {
+        2
+    }
+    fn validate(&self, theta: &[f64]) -> Result<()> {
+        ensure!(theta.len() == 9, "bgsfm-s expects 9 parameters");
+        ensure_pos(theta, self.param_names(), &[0, 1, 2, 3, 4, 5, 6, 7])?;
+        let (b1, b2, b12) = (theta[2], theta[3], theta[4]);
+        let (nu1, nu2, nu12) = (theta[5], theta[6], theta[7]);
+        ensure!(
+            nu12 >= 0.5 * (nu1 + nu2) - 1e-12,
+            "validity requires nu12 >= (nu1 + nu2)/2"
+        );
+        ensure!(
+            1.0 / (b12 * b12) >= 0.5 * (1.0 / (b1 * b1) + 1.0 / (b2 * b2)) - 1e-12,
+            "validity requires 1/beta12^2 >= (1/beta1^2 + 1/beta2^2)/2"
+        );
+        let rho_max = flexible_rho_max(b1, b2, b12, nu1, nu2, nu12);
+        ensure!(
+            theta[8].abs() <= rho_max,
+            "rho = {} violates flexible validity bound {rho_max:.4}",
+            theta[8]
+        );
+        Ok(())
+    }
+    fn cov(&self, theta: &[f64], d: f64, _u: f64, a: usize, b: usize, _same: bool) -> f64 {
+        let (s1, s2) = (theta[0], theta[1]);
+        let (b1, b2, b12) = (theta[2], theta[3], theta[4]);
+        let (nu1, nu2, nu12) = (theta[5], theta[6], theta[7]);
+        let rho = theta[8];
+        match (a, b) {
+            (0, 0) => s1 * matern_correlation(d / b1, nu1),
+            (1, 1) => s2 * matern_correlation(d / b2, nu2),
+            _ => rho * (s1 * s2).sqrt() * matern_correlation(d / b12, nu12),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// tgspm-s: trivariate parsimonious Matérn — space
+// ---------------------------------------------------------------------------
+
+/// `theta = (s1, s2, s3, beta, nu1, nu2, nu3, rho12, rho13, rho23)`:
+/// parsimonious trivariate Matérn; cross smoothness `(nu_a + nu_b)/2`,
+/// common range `beta`.  Validity: each pairwise rho within the
+/// parsimonious bound and the 3x3 correlation matrix positive definite.
+pub struct TgspmS;
+
+impl CovKernel for TgspmS {
+    fn name(&self) -> &'static str {
+        "tgspm-s"
+    }
+    fn nparams(&self) -> usize {
+        10
+    }
+    fn param_names(&self) -> &'static [&'static str] {
+        &[
+            "sigma1_sq",
+            "sigma2_sq",
+            "sigma3_sq",
+            "beta",
+            "nu1",
+            "nu2",
+            "nu3",
+            "rho12",
+            "rho13",
+            "rho23",
+        ]
+    }
+    fn nvariates(&self) -> usize {
+        3
+    }
+    fn validate(&self, theta: &[f64]) -> Result<()> {
+        ensure!(theta.len() == 10, "tgspm-s expects 10 parameters");
+        ensure_pos(theta, self.param_names(), &[0, 1, 2, 3, 4, 5, 6])?;
+        let nus = [theta[4], theta[5], theta[6]];
+        let rhos = [(0, 1, theta[7]), (0, 2, theta[8]), (1, 2, theta[9])];
+        for &(a, b, rho) in &rhos {
+            let bound = parsimonious_rho_max(nus[a], nus[b]);
+            ensure!(
+                rho.abs() <= bound,
+                "rho{}{} = {rho} violates bound {bound:.4}",
+                a + 1,
+                b + 1
+            );
+        }
+        // 3x3 colocated correlation matrix must be PD.
+        let (r12, r13, r23) = (theta[7], theta[8], theta[9]);
+        let det = 1.0 + 2.0 * r12 * r13 * r23 - r12 * r12 - r13 * r13 - r23 * r23;
+        ensure!(det > 0.0, "correlation matrix not positive definite");
+        Ok(())
+    }
+    fn cov(&self, theta: &[f64], d: f64, _u: f64, a: usize, b: usize, _same: bool) -> f64 {
+        let s = [theta[0], theta[1], theta[2]];
+        let beta = theta[3];
+        let nus = [theta[4], theta[5], theta[6]];
+        let t = d / beta;
+        if a == b {
+            return s[a] * matern_correlation(t, nus[a]);
+        }
+        let (lo, hi) = if a < b { (a, b) } else { (b, a) };
+        let rho = match (lo, hi) {
+            (0, 1) => theta[7],
+            (0, 2) => theta[8],
+            _ => theta[9],
+        };
+        rho * (s[a] * s[b]).sqrt() * matern_correlation(t, 0.5 * (nus[a] + nus[b]))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ugsm-st: univariate Matérn — space-time (Gneiting non-separable class)
+// ---------------------------------------------------------------------------
+
+/// `theta = (sigma_sq, beta_s, beta_t, nu, alpha, gamma_ns)` with
+/// `psi(u) = (1 + (u/beta_t)^{2 alpha})` and
+/// `C(d, u) = sigma_sq / psi(u) * M_nu( (d/beta_s) / psi(u)^{gamma_ns/2} )`.
+/// `alpha` in (0, 1] is the temporal smoothness; `gamma_ns` in [0, 1] the
+/// space-time interaction (0 = separable).
+pub struct UgsmSt;
+
+impl CovKernel for UgsmSt {
+    fn name(&self) -> &'static str {
+        "ugsm-st"
+    }
+    fn nparams(&self) -> usize {
+        6
+    }
+    fn param_names(&self) -> &'static [&'static str] {
+        &["sigma_sq", "beta_s", "beta_t", "nu", "alpha", "gamma_ns"]
+    }
+    fn validate(&self, theta: &[f64]) -> Result<()> {
+        ensure!(theta.len() == 6, "ugsm-st expects 6 parameters");
+        ensure_pos(theta, self.param_names(), &[0, 1, 2, 3])?;
+        ensure!(
+            theta[4] > 0.0 && theta[4] <= 1.0,
+            "alpha must be in (0, 1], got {}",
+            theta[4]
+        );
+        ensure!(
+            (0.0..=1.0).contains(&theta[5]),
+            "gamma_ns must be in [0, 1], got {}",
+            theta[5]
+        );
+        Ok(())
+    }
+    fn cov(&self, theta: &[f64], d: f64, u: f64, _a: usize, _b: usize, _same: bool) -> f64 {
+        let (s, bs, bt, nu, alpha, g) =
+            (theta[0], theta[1], theta[2], theta[3], theta[4], theta[5]);
+        let psi = 1.0 + (u / bt).powf(2.0 * alpha);
+        s / psi * matern_correlation((d / bs) / psi.powf(0.5 * g), nu)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// bgsm-st: bivariate Matérn — space-time
+// ---------------------------------------------------------------------------
+
+/// Parsimonious bivariate version of the Gneiting space-time kernel:
+/// `theta = (s1, s2, beta_s, beta_t, nu1, nu2, alpha, gamma_ns, rho)`;
+/// marginals use `nu_a`, the cross term uses `(nu1+nu2)/2`, all share the
+/// same space-time geometry.
+pub struct BgsmSt;
+
+impl CovKernel for BgsmSt {
+    fn name(&self) -> &'static str {
+        "bgsm-st"
+    }
+    fn nparams(&self) -> usize {
+        9
+    }
+    fn param_names(&self) -> &'static [&'static str] {
+        &[
+            "sigma1_sq",
+            "sigma2_sq",
+            "beta_s",
+            "beta_t",
+            "nu1",
+            "nu2",
+            "alpha",
+            "gamma_ns",
+            "rho",
+        ]
+    }
+    fn nvariates(&self) -> usize {
+        2
+    }
+    fn validate(&self, theta: &[f64]) -> Result<()> {
+        ensure!(theta.len() == 9, "bgsm-st expects 9 parameters");
+        ensure_pos(theta, self.param_names(), &[0, 1, 2, 3, 4, 5])?;
+        ensure!(theta[6] > 0.0 && theta[6] <= 1.0, "alpha in (0,1]");
+        ensure!((0.0..=1.0).contains(&theta[7]), "gamma_ns in [0,1]");
+        let rho_max = parsimonious_rho_max(theta[4], theta[5]);
+        ensure!(
+            theta[8].abs() <= rho_max,
+            "rho = {} violates bound {rho_max:.4}",
+            theta[8]
+        );
+        Ok(())
+    }
+    fn cov(&self, theta: &[f64], d: f64, u: f64, a: usize, b: usize, _same: bool) -> f64 {
+        let (s1, s2, bs, bt) = (theta[0], theta[1], theta[2], theta[3]);
+        let (nu1, nu2, alpha, g, rho) = (theta[4], theta[5], theta[6], theta[7], theta[8]);
+        let psi = 1.0 + (u / bt).powf(2.0 * alpha);
+        let t = (d / bs) / psi.powf(0.5 * g);
+        let corr = |nu: f64| matern_correlation(t, nu) / psi;
+        match (a, b) {
+            (0, 0) => s1 * corr(nu1),
+            (1, 1) => s2 * corr(nu2),
+            _ => rho * (s1 * s2).sqrt() * corr(0.5 * (nu1 + nu2)),
+        }
+    }
+}
+
+/// Registry lookup by Table III name.
+pub fn by_name(name: &str) -> Result<Box<dyn CovKernel>> {
+    Ok(match name {
+        "ugsm-s" => Box::new(UgsmS),
+        "ugsmn-s" => Box::new(UgsmnS),
+        "bgsfm-s" => Box::new(BgsfmS),
+        "bgspm-s" => Box::new(BgspmS),
+        "tgspm-s" => Box::new(TgspmS),
+        "ugsm-st" => Box::new(UgsmSt),
+        "bgsm-st" => Box::new(BgsmSt),
+        other => bail!("unknown kernel {other:?}; see Table III for supported names"),
+    })
+}
+
+/// All registry names (Table III).
+pub const ALL_KERNELS: &[&str] = &[
+    "ugsm-s", "ugsmn-s", "bgsfm-s", "bgspm-s", "tgspm-s", "ugsm-st", "bgsm-st",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::covariance::{build_cov_dense, DistanceMetric, Location};
+    use crate::linalg::blas::dpotrf;
+    use crate::rng::Pcg64;
+
+    fn rand_locs(rng: &mut Pcg64, n: usize, st: bool) -> Vec<Location> {
+        (0..n)
+            .map(|i| {
+                Location::new_st(
+                    rng.next_f64(),
+                    rng.next_f64(),
+                    if st { (i % 5) as f64 * 0.3 } else { 0.0 },
+                )
+            })
+            .collect()
+    }
+
+    /// Valid example parameters for each kernel.
+    fn example_theta(name: &str) -> Vec<f64> {
+        match name {
+            "ugsm-s" => vec![1.0, 0.1, 0.5],
+            "ugsmn-s" => vec![1.0, 0.1, 0.5, 0.2],
+            "bgspm-s" => vec![1.0, 1.5, 0.1, 0.5, 1.0, 0.4],
+            "bgsfm-s" => vec![1.0, 1.2, 0.12, 0.1, 0.08, 0.5, 1.0, 0.9, 0.3],
+            "tgspm-s" => vec![1.0, 1.2, 0.8, 0.1, 0.5, 1.0, 1.5, 0.3, 0.2, 0.25],
+            "ugsm-st" => vec![1.0, 0.1, 1.0, 0.5, 0.8, 0.5],
+            "bgsm-st" => vec![1.0, 1.3, 0.1, 1.0, 0.5, 1.0, 0.8, 0.5, 0.4],
+            other => panic!("no example for {other}"),
+        }
+    }
+
+    #[test]
+    fn registry_covers_table_iii() {
+        for &name in ALL_KERNELS {
+            let k = by_name(name).unwrap();
+            assert_eq!(k.name(), name);
+            assert_eq!(k.param_names().len(), k.nparams());
+            let theta = example_theta(name);
+            assert_eq!(theta.len(), k.nparams(), "{name}");
+            k.validate(&theta).unwrap();
+        }
+        assert!(by_name("nope").is_err());
+    }
+
+    #[test]
+    fn all_kernels_yield_spd_covariance() {
+        // The acid test for kernel validity: the covariance of random
+        // locations must admit a Cholesky factorization.
+        let mut rng = Pcg64::seed_from_u64(77);
+        for &name in ALL_KERNELS {
+            let k = by_name(name).unwrap();
+            let st = name.ends_with("-st");
+            let locs = rand_locs(&mut rng, 24, st);
+            let theta = example_theta(name);
+            let mut m = build_cov_dense(k.as_ref(), &theta, &locs, DistanceMetric::Euclidean);
+            // tiny jitter for numerical safety at colocated variates
+            for i in 0..m.rows() {
+                m[(i, i)] += 1e-10;
+            }
+            dpotrf(&mut m).unwrap_or_else(|e| panic!("{name}: covariance not SPD: {e}"));
+        }
+    }
+
+    #[test]
+    fn nugget_only_on_same_site() {
+        let k = by_name("ugsmn-s").unwrap();
+        let theta = [1.0, 0.1, 0.5, 0.3];
+        assert!((k.cov(&theta, 0.0, 0.0, 0, 0, true) - 1.3).abs() < 1e-15);
+        // same distance but physically different site: no nugget
+        assert!((k.cov(&theta, 0.0, 0.0, 0, 0, false) - 1.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn parsimonious_bound_sane() {
+        // equal smoothness => bound is 1
+        assert!((parsimonious_rho_max(1.0, 1.0) - 1.0).abs() < 1e-12);
+        // different smoothness => bound < 1
+        let b = parsimonious_rho_max(0.5, 2.5);
+        assert!(b < 1.0 && b > 0.0, "{b}");
+        // invalid rho rejected
+        let k = by_name("bgspm-s").unwrap();
+        let theta = [1.0, 1.0, 0.1, 0.5, 2.5, 0.99];
+        assert!(k.validate(&theta).is_err());
+    }
+
+    #[test]
+    fn space_time_separable_when_gamma_zero() {
+        let k = by_name("ugsm-st").unwrap();
+        let theta = [2.0, 0.1, 1.0, 0.5, 1.0, 0.0];
+        // separable: C(d,u) = sigma^2 * M(d/beta_s) * 1/psi(u)
+        let d = 0.15;
+        let u = 0.7;
+        let c = k.cov(&theta, d, u, 0, 0, false);
+        let psi = 1.0 + (u / 1.0f64).powf(2.0);
+        let want = 2.0 / psi * matern_correlation(d / 0.1, 0.5);
+        assert!((c - want).abs() < 1e-14);
+        // purely spatial slice reduces to ugsm-s
+        let c0 = k.cov(&theta, d, 0.0, 0, 0, false);
+        let ks = by_name("ugsm-s").unwrap();
+        assert!((c0 - ks.cov(&[2.0, 0.1, 0.5], d, 0.0, 0, 0, false)).abs() < 1e-14);
+    }
+
+    #[test]
+    fn space_time_decays_in_time() {
+        let k = by_name("ugsm-st").unwrap();
+        let theta = example_theta("ugsm-st");
+        let mut prev = f64::INFINITY;
+        for i in 0..10 {
+            let c = k.cov(&theta, 0.1, i as f64 * 0.5, 0, 0, false);
+            assert!(c < prev);
+            prev = c;
+        }
+    }
+
+    #[test]
+    fn bivariate_cross_symmetry() {
+        for name in ["bgspm-s", "bgsfm-s", "bgsm-st"] {
+            let k = by_name(name).unwrap();
+            let theta = example_theta(name);
+            let c12 = k.cov(&theta, 0.2, 0.1, 0, 1, false);
+            let c21 = k.cov(&theta, 0.2, 0.1, 1, 0, false);
+            assert_eq!(c12, c21, "{name}");
+        }
+    }
+
+    #[test]
+    fn flexible_rejects_invalid_geometry() {
+        let k = by_name("bgsfm-s").unwrap();
+        // nu12 < (nu1+nu2)/2 must be rejected
+        let theta = [1.0, 1.0, 0.1, 0.1, 0.1, 1.0, 1.0, 0.5, 0.1];
+        assert!(k.validate(&theta).is_err());
+    }
+
+    #[test]
+    fn trivariate_pd_check() {
+        let k = by_name("tgspm-s").unwrap();
+        // rho triple that makes the correlation matrix indefinite
+        let theta = [1.0, 1.0, 1.0, 0.1, 1.0, 1.0, 1.0, 0.9, 0.9, -0.9];
+        assert!(k.validate(&theta).is_err());
+    }
+}

@@ -1,0 +1,350 @@
+//! Covariance kernels (Table III of the paper), distance metrics, and
+//! covariance-matrix assembly.
+//!
+//! The kernel registry mirrors the `kernel = "..."` strings of the R API:
+//! `ugsm-s`, `ugsmn-s`, `bgsfm-s`, `bgspm-s`, `tgspm-s`, `ugsm-st`,
+//! `bgsm-st`.  Multivariate kernels produce a `p*n x p*n` covariance with
+//! variate-major ordering (variate 0 block first), matching ExaGeoStat.
+
+pub mod bessel;
+pub mod kernels;
+
+use crate::linalg::matrix::Matrix;
+
+/// Mean Earth radius in km, used by the great-circle metric.
+pub const EARTH_RADIUS_KM: f64 = 6371.0;
+
+/// Distance metric between 2-D coordinates (paper: `dmetric` argument).
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum DistanceMetric {
+    /// Euclidean distance in the plane.
+    Euclidean,
+    /// Great-circle (haversine) distance; coordinates are (longitude,
+    /// latitude) in degrees, result in km.
+    GreatCircle,
+}
+
+impl DistanceMetric {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "euclidean" => Ok(DistanceMetric::Euclidean),
+            "great_circle" => Ok(DistanceMetric::GreatCircle),
+            other => anyhow::bail!("unknown dmetric {other:?} (euclidean|great_circle)"),
+        }
+    }
+}
+
+/// A spatio-temporal observation site.  `t` is 0 for purely spatial models.
+#[derive(Copy, Clone, Debug, PartialEq)]
+pub struct Location {
+    pub x: f64,
+    pub y: f64,
+    pub t: f64,
+}
+
+impl Location {
+    pub fn new(x: f64, y: f64) -> Self {
+        Location { x, y, t: 0.0 }
+    }
+    pub fn new_st(x: f64, y: f64, t: f64) -> Self {
+        Location { x, y, t }
+    }
+}
+
+/// Spatial distance between two sites under `metric`.
+#[inline]
+pub fn distance(metric: DistanceMetric, a: &Location, b: &Location) -> f64 {
+    match metric {
+        DistanceMetric::Euclidean => {
+            let dx = a.x - b.x;
+            let dy = a.y - b.y;
+            (dx * dx + dy * dy).sqrt()
+        }
+        DistanceMetric::GreatCircle => haversine_km(a.x, a.y, b.x, b.y),
+    }
+}
+
+/// Haversine great-circle distance; inputs are (lon, lat) in degrees.
+pub fn haversine_km(lon1: f64, lat1: f64, lon2: f64, lat2: f64) -> f64 {
+    let to_rad = std::f64::consts::PI / 180.0;
+    let phi1 = lat1 * to_rad;
+    let phi2 = lat2 * to_rad;
+    let dphi = (lat2 - lat1) * to_rad;
+    let dlmb = (lon2 - lon1) * to_rad;
+    let a = (dphi / 2.0).sin().powi(2) + phi1.cos() * phi2.cos() * (dlmb / 2.0).sin().powi(2);
+    2.0 * EARTH_RADIUS_KM * a.sqrt().min(1.0).asin()
+}
+
+/// Morton (Z-order) permutation of 2-D locations.
+///
+/// ExaGeoStat sorts locations along a space-filling curve before tiling so
+/// that each tile covers a spatially contiguous cluster — that is what
+/// makes off-diagonal tiles low-rank (TLR) and far tiles negligible (DST).
+/// The permutation leaves the likelihood invariant (simultaneous row/col
+/// permutation of `Sigma` and `z`).
+pub fn morton_perm(locs: &[Location]) -> Vec<usize> {
+    let (mut xmin, mut xmax) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut ymin, mut ymax) = (f64::INFINITY, f64::NEG_INFINITY);
+    for l in locs {
+        xmin = xmin.min(l.x);
+        xmax = xmax.max(l.x);
+        ymin = ymin.min(l.y);
+        ymax = ymax.max(l.y);
+    }
+    let xs = if xmax > xmin { xmax - xmin } else { 1.0 };
+    let ys = if ymax > ymin { ymax - ymin } else { 1.0 };
+    let code = |l: &Location| -> u64 {
+        let xi = (((l.x - xmin) / xs) * 65535.0) as u64;
+        let yi = (((l.y - ymin) / ys) * 65535.0) as u64;
+        interleave16(xi) | (interleave16(yi) << 1)
+    };
+    let mut idx: Vec<usize> = (0..locs.len()).collect();
+    idx.sort_by_key(|&i| code(&locs[i]));
+    idx
+}
+
+/// Spread the low 16 bits of `v` into even bit positions.
+fn interleave16(mut v: u64) -> u64 {
+    v &= 0xFFFF;
+    v = (v | (v << 16)) & 0x0000_FFFF_0000_FFFF;
+    v = (v | (v << 8)) & 0x00FF_00FF_00FF_00FF;
+    v = (v | (v << 4)) & 0x0F0F_0F0F_0F0F_0F0F;
+    v = (v | (v << 2)) & 0x3333_3333_3333_3333;
+    v = (v | (v << 1)) & 0x5555_5555_5555_5555;
+    v
+}
+
+/// A stationary (cross-)covariance kernel.
+///
+/// `cov` evaluates the covariance between variate `a` at site `si` and
+/// variate `b` at site `sj`, given the spatial distance `d`, the temporal
+/// lag `u`, and whether the two sites are the same physical location
+/// (`same_site`, used for nugget terms — floating-point distance alone
+/// cannot distinguish a true replicate from a near-duplicate).
+pub trait CovKernel: Send + Sync {
+    /// Registry name (matches the R API string).
+    fn name(&self) -> &'static str;
+    /// Number of parameters in `theta`.
+    fn nparams(&self) -> usize;
+    /// Parameter names, for CLI/report output.
+    fn param_names(&self) -> &'static [&'static str];
+    /// Number of variates `p` (1 for univariate kernels).
+    fn nvariates(&self) -> usize {
+        1
+    }
+    /// Check that `theta` is in the kernel's valid parameter set.
+    fn validate(&self, theta: &[f64]) -> anyhow::Result<()>;
+    /// Evaluate the (cross-)covariance.
+    fn cov(&self, theta: &[f64], d: f64, u: f64, a: usize, b: usize, same_site: bool) -> f64;
+}
+
+/// Look up a kernel by its registry name (Table III).
+pub fn kernel_by_name(name: &str) -> anyhow::Result<Box<dyn CovKernel>> {
+    kernels::by_name(name)
+}
+
+/// Assemble the full (variate-major) covariance matrix for `locs` under
+/// `kernel(theta)`.  Output dimension is `p*n x p*n`.
+pub fn build_cov_dense(
+    kernel: &dyn CovKernel,
+    theta: &[f64],
+    locs: &[Location],
+    metric: DistanceMetric,
+) -> Matrix {
+    let n = locs.len();
+    let p = kernel.nvariates();
+    let dim = p * n;
+    let mut m = Matrix::zeros(dim, dim);
+    for a in 0..p {
+        for b in 0..=a {
+            for j in 0..n {
+                let start_i = if a == b { j } else { 0 };
+                for i in start_i..n {
+                    let d = distance(metric, &locs[i], &locs[j]);
+                    let u = (locs[i].t - locs[j].t).abs();
+                    let v = kernel.cov(theta, d, u, a, b, i == j);
+                    m[(a * n + i, b * n + j)] = v;
+                }
+            }
+        }
+    }
+    m.symmetrize_from_lower();
+    m
+}
+
+/// Assemble a rectangular cross-covariance block between `rows` and `cols`
+/// site lists (used by kriging: Sigma_{*,obs}); univariate only.
+pub fn build_cross_cov(
+    kernel: &dyn CovKernel,
+    theta: &[f64],
+    rows: &[Location],
+    cols: &[Location],
+    metric: DistanceMetric,
+) -> Matrix {
+    assert_eq!(kernel.nvariates(), 1, "cross-cov helper is univariate");
+    let mut m = Matrix::zeros(rows.len(), cols.len());
+    for j in 0..cols.len() {
+        for i in 0..rows.len() {
+            let d = distance(metric, &rows[i], &cols[j]);
+            let u = (rows[i].t - cols[j].t).abs();
+            m[(i, j)] = kernel.cov(theta, d, u, 0, 0, false);
+        }
+    }
+    m
+}
+
+/// Fill one `ts x ts` (or edge-sized) tile of the covariance matrix into a
+/// raw column-major buffer.  This is the unit of work the task scheduler
+/// dispatches ("dcmg" task in ExaGeoStat), and the computation the L1
+/// Pallas kernel implements for the PJRT backend.
+#[allow(clippy::too_many_arguments)]
+pub fn fill_cov_tile(
+    kernel: &dyn CovKernel,
+    theta: &[f64],
+    locs: &[Location],
+    metric: DistanceMetric,
+    row0: usize,
+    col0: usize,
+    h: usize,
+    w: usize,
+    out: &mut [f64],
+) {
+    let n = locs.len();
+    let p = kernel.nvariates();
+    debug_assert!(out.len() >= h * w);
+    for j in 0..w {
+        let gj = col0 + j;
+        let (b, sj) = (gj / n, gj % n);
+        for i in 0..h {
+            let gi = row0 + i;
+            let (a, si) = (gi / n, gi % n);
+            debug_assert!(a < p && b < p);
+            let d = distance(metric, &locs[si], &locs[sj]);
+            let u = (locs[si].t - locs[sj].t).abs();
+            out[i + j * h] = kernel.cov(theta, d, u, a, b, si == sj);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn euclidean_distance() {
+        let a = Location::new(0.0, 0.0);
+        let b = Location::new(3.0, 4.0);
+        assert!((distance(DistanceMetric::Euclidean, &a, &b) - 5.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn great_circle_known_values() {
+        // Equator quarter-circumference: (0,0) to (90E,0).
+        let d = haversine_km(0.0, 0.0, 90.0, 0.0);
+        let want = std::f64::consts::PI / 2.0 * EARTH_RADIUS_KM;
+        assert!((d - want).abs() < 1e-6, "{d} vs {want}");
+        // Pole to pole through lat.
+        let d = haversine_km(10.0, -90.0, 10.0, 90.0);
+        assert!((d - std::f64::consts::PI * EARTH_RADIUS_KM).abs() < 1e-6);
+        // Symmetry + identity.
+        assert_eq!(haversine_km(20.0, 30.0, 20.0, 30.0), 0.0);
+        let ab = haversine_km(12.0, 45.0, 13.0, 46.0);
+        let ba = haversine_km(13.0, 46.0, 12.0, 45.0);
+        assert!((ab - ba).abs() < 1e-12);
+    }
+
+    #[test]
+    fn metric_parse() {
+        assert_eq!(
+            DistanceMetric::parse("euclidean").unwrap(),
+            DistanceMetric::Euclidean
+        );
+        assert_eq!(
+            DistanceMetric::parse("great_circle").unwrap(),
+            DistanceMetric::GreatCircle
+        );
+        assert!(DistanceMetric::parse("manhattan").is_err());
+    }
+
+    #[test]
+    fn dense_cov_is_symmetric_with_sigma2_diag() {
+        let k = kernel_by_name("ugsm-s").unwrap();
+        let theta = [1.7, 0.1, 0.5];
+        let locs: Vec<Location> = (0..20)
+            .map(|i| Location::new((i % 5) as f64 * 0.2, (i / 5) as f64 * 0.25))
+            .collect();
+        let m = build_cov_dense(k.as_ref(), &theta, &locs, DistanceMetric::Euclidean);
+        for i in 0..20 {
+            assert!((m[(i, i)] - 1.7).abs() < 1e-14);
+            for j in 0..20 {
+                assert_eq!(m[(i, j)], m[(j, i)]);
+                assert!(m[(i, j)] > 0.0 && m[(i, j)] <= 1.7 + 1e-14);
+            }
+        }
+    }
+
+    #[test]
+    fn tile_fill_matches_dense() {
+        let k = kernel_by_name("ugsm-s").unwrap();
+        let theta = [1.0, 0.2, 1.5];
+        let locs: Vec<Location> = (0..13)
+            .map(|i| {
+                let f = i as f64;
+                Location::new((f * 0.37).fract(), (f * 0.71).fract())
+            })
+            .collect();
+        let dense = build_cov_dense(k.as_ref(), &theta, &locs, DistanceMetric::Euclidean);
+        let (row0, col0, h, w) = (3, 7, 6, 5);
+        let mut tile = vec![0.0; h * w];
+        fill_cov_tile(
+            k.as_ref(),
+            &theta,
+            &locs,
+            DistanceMetric::Euclidean,
+            row0,
+            col0,
+            h,
+            w,
+            &mut tile,
+        );
+        for j in 0..w {
+            for i in 0..h {
+                assert_eq!(tile[i + j * h], dense[(row0 + i, col0 + j)]);
+            }
+        }
+    }
+
+    #[test]
+    fn morton_perm_is_permutation_and_clusters() {
+        let mut locs = Vec::new();
+        // two well-separated clusters interleaved in index order
+        for i in 0..20 {
+            let f = i as f64 / 20.0;
+            locs.push(Location::new(0.05 + 0.1 * f, 0.05 + 0.1 * f));
+            locs.push(Location::new(0.9 + 0.05 * f, 0.9 + 0.05 * f));
+        }
+        let perm = morton_perm(&locs);
+        let mut sorted = perm.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..40).collect::<Vec<_>>());
+        // after sorting, the first half must be one spatial cluster
+        let first_cluster_low = perm[..20].iter().all(|&i| locs[i].x < 0.5);
+        let first_cluster_high = perm[..20].iter().all(|&i| locs[i].x > 0.5);
+        assert!(
+            first_cluster_low || first_cluster_high,
+            "morton order should separate the clusters"
+        );
+    }
+
+    #[test]
+    fn cross_cov_shape_and_values() {
+        let k = kernel_by_name("ugsm-s").unwrap();
+        let theta = [2.0, 0.3, 0.5];
+        let rows = vec![Location::new(0.0, 0.0), Location::new(1.0, 1.0)];
+        let cols = vec![Location::new(0.0, 0.0)];
+        let m = build_cross_cov(k.as_ref(), &theta, &rows, &cols, DistanceMetric::Euclidean);
+        assert_eq!((m.rows(), m.cols()), (2, 1));
+        assert!((m[(0, 0)] - 2.0).abs() < 1e-14); // zero distance
+        assert!(m[(1, 0)] < 2.0);
+    }
+}

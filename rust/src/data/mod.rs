@@ -1,0 +1,5 @@
+//! Dataset I/O and the synthetic sea-surface-temperature system used by
+//! the Section-IV tutorial (Figs 8–9, Table VI).
+
+pub mod csv;
+pub mod sst;

@@ -1,0 +1,388 @@
+//! Synthetic Agulhas-current sea-surface-temperature system — the
+//! substitute for the satellite dataset of Section IV (see DESIGN.md §5).
+//!
+//! The paper's data: 331 days over a 72 x 240 grid (~25 km) off South
+//! Africa, with gaps from (1) land, (2) satellite orbital clipping and
+//! (3) cloud cover; days with more than 50% missing are dropped; a linear
+//! mean in (lon, lat) is removed by OLS, and the residual field is fitted
+//! with a Matérn GRF.  Table VI reports per-day estimates centred near
+//! `(sigma_sq, beta, nu) ~ (6.3, 3.0, 0.91)`.
+//!
+//! We generate days with *known* ground truth: a linear-gradient mean
+//! field plus an exactly-sampled Matérn GRF, masked by procedural land /
+//! orbital-wedge / cloud processes.  The default grid is scaled down from
+//! 72 x 240 so the exact `O(n^3)` fits of the tutorial run in seconds on
+//! this testbed (documented in EXPERIMENTS.md); the full paper shape is a
+//! config change.
+
+use crate::covariance::{DistanceMetric, Location};
+use crate::likelihood::ExecCtx;
+use crate::rng::Pcg64;
+use crate::simulation::simulate_obs_exact;
+use std::sync::Arc;
+
+/// Generator configuration.
+#[derive(Clone, Debug)]
+pub struct SstConfig {
+    /// Grid height (latitude cells); paper: 72.
+    pub ny: usize,
+    /// Grid width (longitude cells); paper: 240.
+    pub nx: usize,
+    /// Number of days; paper: 331.
+    pub days: usize,
+    pub seed: u64,
+    /// Longitude range (degrees E).
+    pub lon0: f64,
+    pub lon1: f64,
+    /// Latitude range (degrees N, southern hemisphere = negative).
+    pub lat0: f64,
+    pub lat1: f64,
+}
+
+impl Default for SstConfig {
+    fn default() -> Self {
+        SstConfig {
+            ny: 24,
+            nx: 80,
+            days: 331,
+            seed: 2004, // the dataset year
+            lon0: 10.0,
+            lon1: 40.0,
+            lat0: -46.0,
+            lat1: -28.0,
+        }
+    }
+}
+
+/// One generated day.
+#[derive(Clone, Debug)]
+pub struct SstDay {
+    pub day: usize,
+    /// Full truth field (ny*nx, row-major by latitude row).
+    pub truth: Vec<f64>,
+    /// Observed field: `NaN` where masked.
+    pub observed: Vec<f64>,
+    /// Mask reason per cell: 0 = valid, 1 = land, 2 = orbit, 3 = cloud.
+    pub mask: Vec<u8>,
+    /// Grid cell coordinates (lon, lat), aligned with `truth`.
+    pub locs: Vec<Location>,
+    /// True GRF parameters for this day `(sigma_sq, beta, nu)`.
+    pub theta_true: [f64; 3],
+    /// True mean coefficients `(c, a_lon, b_lat)`.
+    pub mean_coef: [f64; 3],
+}
+
+impl SstDay {
+    pub fn valid_fraction(&self) -> f64 {
+        self.mask.iter().filter(|&&m| m == 0).count() as f64 / self.mask.len() as f64
+    }
+
+    /// Valid observations as (locations, values).
+    pub fn valid_observations(&self) -> (Vec<Location>, Vec<f64>) {
+        let mut locs = Vec::new();
+        let mut z = Vec::new();
+        for i in 0..self.mask.len() {
+            if self.mask[i] == 0 {
+                locs.push(self.locs[i]);
+                z.push(self.observed[i]);
+            }
+        }
+        (locs, z)
+    }
+
+    /// Gap cells that should be predicted (orbit/cloud, not land).
+    pub fn predictable_gaps(&self) -> (Vec<Location>, Vec<f64>) {
+        let mut locs = Vec::new();
+        let mut truth = Vec::new();
+        for i in 0..self.mask.len() {
+            if self.mask[i] == 2 || self.mask[i] == 3 {
+                locs.push(self.locs[i]);
+                truth.push(self.truth[i]);
+            }
+        }
+        (locs, truth)
+    }
+}
+
+/// Smooth value noise on the grid (bilinear interpolation of a coarse
+/// random lattice) — drives the cloud mask.
+fn value_noise(ny: usize, nx: usize, cells: usize, rng: &mut Pcg64) -> Vec<f64> {
+    let gy = cells + 1;
+    let gx = cells * 3 + 1;
+    let lattice: Vec<f64> = (0..gy * gx).map(|_| rng.next_f64()).collect();
+    let mut out = vec![0.0; ny * nx];
+    for r in 0..ny {
+        for c in 0..nx {
+            let fy = r as f64 / ny as f64 * (gy - 1) as f64;
+            let fx = c as f64 / nx as f64 * (gx - 1) as f64;
+            let (y0, x0) = (fy.floor() as usize, fx.floor() as usize);
+            let (y1, x1) = ((y0 + 1).min(gy - 1), (x0 + 1).min(gx - 1));
+            let (ty, tx) = (fy - y0 as f64, fx - x0 as f64);
+            let v00 = lattice[y0 * gx + x0];
+            let v01 = lattice[y0 * gx + x1];
+            let v10 = lattice[y1 * gx + x0];
+            let v11 = lattice[y1 * gx + x1];
+            out[r * nx + c] =
+                v00 * (1.0 - ty) * (1.0 - tx) + v01 * (1.0 - ty) * tx + v10 * ty * (1.0 - tx)
+                    + v11 * ty * tx;
+        }
+    }
+    out
+}
+
+/// Generate day `day` (0-based).  Deterministic in `(cfg.seed, day)`.
+pub fn generate_day(cfg: &SstConfig, day: usize, ctx: &ExecCtx) -> anyhow::Result<SstDay> {
+    let mut rng = Pcg64::seed_stream(cfg.seed, day as u64);
+    let (ny, nx) = (cfg.ny, cfg.nx);
+    let n = ny * nx;
+
+    // Grid locations (lon, lat in degrees; row-major latitude-first).
+    let mut locs = Vec::with_capacity(n);
+    for r in 0..ny {
+        let lat = cfg.lat0 + (cfg.lat1 - cfg.lat0) * (r as f64 + 0.5) / ny as f64;
+        for c in 0..nx {
+            let lon = cfg.lon0 + (cfg.lon1 - cfg.lon0) * (c as f64 + 0.5) / nx as f64;
+            locs.push(Location::new(lon, lat));
+        }
+    }
+
+    // Day-specific true parameters: Table VI-centred, with seasonal drift.
+    let season = (2.0 * std::f64::consts::PI * day as f64 / 365.0).sin();
+    let sigma_sq = (6.3 + 1.2 * season + rng.normal() * 0.8).clamp(3.0, 14.5);
+    let beta = (3.0 + 0.3 * season + rng.normal() * 0.35).clamp(1.8, 4.8);
+    let nu = (0.91 + rng.normal() * 0.035).clamp(0.78, 1.05);
+    let theta_true = [sigma_sq, beta, nu];
+
+    // Mean field: strong latitudinal gradient (3.5..25.5 C, as in Fig 8),
+    // a weak longitudinal term, seasonal offset.
+    let a_lon = 0.05 + 0.02 * season;
+    let b_lat = 22.0 / (cfg.lat1 - cfg.lat0); // ~1.2 C per degree
+    let c0 = 20.0 + 1.5 * season - b_lat * (cfg.lat1 + cfg.lat0) / 2.0 - a_lon * (cfg.lon0 + cfg.lon1) / 2.0;
+    let mean_coef = [c0, a_lon, b_lat];
+
+    // Exact GRF sample on the grid (tiled Cholesky path).
+    let kernel: Arc<dyn crate::covariance::CovKernel> =
+        Arc::from(crate::covariance::kernel_by_name("ugsm-s")?);
+    let eps = simulate_obs_exact(
+        kernel,
+        &theta_true,
+        locs.clone(),
+        DistanceMetric::Euclidean,
+        cfg.seed ^ (day as u64).wrapping_mul(0x9E37_79B9),
+        ctx,
+    )?;
+
+    let mut truth = vec![0.0; n];
+    for i in 0..n {
+        truth[i] = c0 + a_lon * locs[i].x + b_lat * locs[i].y + eps.z[i];
+    }
+
+    // --- masks ---
+    let mut mask = vec![0u8; n];
+    // (1) Land: procedural coastline in the north-west (South Africa),
+    // plus two small islands to the south (as in Fig 8).
+    for r in 0..ny {
+        for c in 0..nx {
+            let i = r * nx + c;
+            let lon = locs[i].x;
+            let lat = locs[i].y;
+            let coast = cfg.lat1 - 4.5 - 0.22 * (lon - cfg.lon0) + 1.3 * ((lon - cfg.lon0) * 0.45).sin();
+            if lat > coast && lon < cfg.lon0 + 0.6 * (cfg.lon1 - cfg.lon0) {
+                mask[i] = 1;
+            }
+            // islands
+            for (ilon, ilat) in [(37.8, -46.6), (37.9, -46.4)] {
+                let d2 = (lon - ilon).powi(2) + (lat - ilat).powi(2);
+                if d2 < 0.35 {
+                    mask[i] = 1;
+                }
+            }
+        }
+    }
+    // (2) Orbital wedges: diagonal bands whose phase shifts per day.
+    let phase = rng.next_f64() * 30.0;
+    let orbit_width = rng.uniform(0.04, 0.11);
+    for r in 0..ny {
+        for c in 0..nx {
+            let i = r * nx + c;
+            if mask[i] != 0 {
+                continue;
+            }
+            let s = (locs[i].x + 0.55 * locs[i].y + phase) / 14.0;
+            if s.fract().abs() < orbit_width {
+                mask[i] = 2;
+            }
+        }
+    }
+    // (3) Clouds: thresholded smooth noise; threshold drawn per day so the
+    // missing fraction varies from day to day (paper: some days >50%).
+    let noise = value_noise(ny, nx, 4, &mut rng);
+    let cloudiness = rng.uniform(0.25, 0.75);
+    for i in 0..n {
+        if mask[i] == 0 && noise[i] > 1.0 - cloudiness * 0.55 {
+            mask[i] = 3;
+        }
+    }
+
+    let observed: Vec<f64> = (0..n)
+        .map(|i| if mask[i] == 0 { truth[i] } else { f64::NAN })
+        .collect();
+
+    Ok(SstDay {
+        day,
+        truth,
+        observed,
+        mask,
+        locs,
+        theta_true,
+        mean_coef,
+    })
+}
+
+/// OLS fit of `z ~ 1 + lon + lat` (the tutorial's first stage).
+/// Returns `(coef = [c, a, b], residuals)`.
+pub fn ols_linear_mean(locs: &[Location], z: &[f64]) -> ([f64; 3], Vec<f64>) {
+    assert_eq!(locs.len(), z.len());
+    // normal equations X'X beta = X'z for X = [1, lon, lat]
+    let n = locs.len() as f64;
+    let (mut sx, mut sy, mut sxx, mut sxy, mut syy, mut sz, mut sxz, mut syz) =
+        (0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0);
+    for (l, &zi) in locs.iter().zip(z) {
+        sx += l.x;
+        sy += l.y;
+        sxx += l.x * l.x;
+        sxy += l.x * l.y;
+        syy += l.y * l.y;
+        sz += zi;
+        sxz += l.x * zi;
+        syz += l.y * zi;
+    }
+    let mut ata = [n, sx, sy, sx, sxx, sxy, sy, sxy, syy];
+    let mut atz = [sz, sxz, syz];
+    // 3x3 Cholesky solve
+    crate::linalg::blas::dpotrf_raw(3, &mut ata, 3).expect("OLS normal equations SPD");
+    crate::linalg::blas::dtrsv_ln(3, &ata, 3, &mut atz);
+    crate::linalg::blas::dtrsv_lt(3, &ata, 3, &mut atz);
+    let coef = [atz[0], atz[1], atz[2]];
+    let resid: Vec<f64> = locs
+        .iter()
+        .zip(z)
+        .map(|(l, &zi)| zi - coef[0] - coef[1] * l.x - coef[2] * l.y)
+        .collect();
+    (coef, resid)
+}
+
+/// Simple quantile (linear interpolation) for Table VI style summaries.
+pub fn quantile(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx() -> ExecCtx {
+        ExecCtx {
+            ncores: 1,
+            ts: 128,
+            policy: crate::scheduler::pool::Policy::Eager,
+        }
+    }
+
+    fn tiny_cfg() -> SstConfig {
+        SstConfig {
+            ny: 12,
+            nx: 40,
+            days: 4,
+            ..SstConfig::default()
+        }
+    }
+
+    #[test]
+    fn day_generation_shapes_and_determinism() {
+        let cfg = tiny_cfg();
+        let d1 = generate_day(&cfg, 0, &ctx()).unwrap();
+        assert_eq!(d1.truth.len(), 480);
+        assert_eq!(d1.locs.len(), 480);
+        let d2 = generate_day(&cfg, 0, &ctx()).unwrap();
+        // NaN != NaN, so compare bit patterns for determinism.
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&d1.observed), bits(&d2.observed));
+        assert_eq!(d1.mask, d2.mask);
+        let d3 = generate_day(&cfg, 1, &ctx()).unwrap();
+        assert_ne!(bits(&d1.truth), bits(&d3.truth));
+    }
+
+    #[test]
+    fn masks_have_all_three_causes() {
+        let cfg = tiny_cfg();
+        let mut seen = [false; 4];
+        for day in 0..4 {
+            let d = generate_day(&cfg, day, &ctx()).unwrap();
+            for &m in &d.mask {
+                seen[m as usize] = true;
+            }
+        }
+        assert!(seen[0], "some valid cells");
+        assert!(seen[1], "land");
+        assert!(seen[2], "orbit wedges");
+        assert!(seen[3], "clouds");
+    }
+
+    #[test]
+    fn observed_nan_iff_masked() {
+        let d = generate_day(&tiny_cfg(), 2, &ctx()).unwrap();
+        for i in 0..d.mask.len() {
+            assert_eq!(d.mask[i] != 0, d.observed[i].is_nan());
+        }
+        let (locs, z) = d.valid_observations();
+        assert_eq!(locs.len(), z.len());
+        assert!(z.iter().all(|v| v.is_finite()));
+        assert!((d.valid_fraction() - locs.len() as f64 / 480.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn temperature_gradient_matches_agulhas() {
+        // northern rows warmer than southern rows (southern hemisphere)
+        let d = generate_day(&tiny_cfg(), 0, &ctx()).unwrap();
+        let cfg = tiny_cfg();
+        let north: f64 = d.truth[(cfg.ny - 1) * cfg.nx..].iter().sum::<f64>() / cfg.nx as f64;
+        let south: f64 = d.truth[..cfg.nx].iter().sum::<f64>() / cfg.nx as f64;
+        assert!(
+            north > south + 5.0,
+            "north {north} vs south {south} (gradient missing)"
+        );
+    }
+
+    #[test]
+    fn ols_recovers_linear_mean() {
+        let cfg = tiny_cfg();
+        let d = generate_day(&cfg, 3, &ctx()).unwrap();
+        let (locs, z) = d.valid_observations();
+        let (coef, resid) = ols_linear_mean(&locs, &z);
+        // lat coefficient dominates and is estimated within a loose band
+        assert!(
+            (coef[2] - d.mean_coef[2]).abs() < 0.5 * d.mean_coef[2].abs(),
+            "lat coef {} vs truth {}",
+            coef[2],
+            d.mean_coef[2]
+        );
+        // residuals are centred
+        let mean_r: f64 = resid.iter().sum::<f64>() / resid.len() as f64;
+        assert!(mean_r.abs() < 1e-8);
+    }
+
+    #[test]
+    fn quantile_interpolation() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 1.0), 5.0);
+        assert_eq!(quantile(&xs, 0.5), 3.0);
+        assert!((quantile(&xs, 0.25) - 2.0).abs() < 1e-12);
+    }
+}

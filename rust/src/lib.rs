@@ -1,0 +1,35 @@
+//! # exageostat
+//!
+//! A from-scratch reproduction of **ExaGeoStatR** (Abdulah et al., 2019):
+//! large-scale Gaussian-process maximum-likelihood estimation, simulation
+//! and prediction for environmental data science, built as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — task-based tiled linear algebra (StarPU +
+//!   Chameleon/HiCMA analogues), the MLE driver with a BOBYQA-style
+//!   optimizer, kriging / Fisher / MLOE-MMOM tools, the synthetic data
+//!   generator, and the GeoR/fields baseline analogues.
+//! * **L2/L1 (python/, build-time only)** — the Matérn covariance tile as
+//!   a Pallas kernel inside a JAX log-likelihood graph, AOT-lowered to HLO
+//!   text and executed from Rust through PJRT (`runtime` module).
+//!
+//! See `DESIGN.md` for the full system inventory and the experiment index,
+//! and `EXPERIMENTS.md` for reproduced paper results.
+
+pub mod api;
+pub mod baselines;
+pub mod cli;
+pub mod covariance;
+pub mod data;
+pub mod likelihood;
+pub mod linalg;
+pub mod optimizer;
+pub mod prediction;
+pub mod rng;
+pub mod runtime;
+pub mod scheduler;
+pub mod simulation;
+pub mod testkit;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,169 @@
+//! Mixed-precision (MP) log-likelihood (Fig 1(d); Abdulah et al. 2019).
+//!
+//! Like DST, tiles far from the diagonal are treated specially — but
+//! instead of being annihilated they are *demoted to single precision*:
+//! their entries are rounded through f32 at generation time and their GEMM
+//! updates execute through an f32 accumulate path.  Near-diagonal tiles
+//! (within `band`) stay fully double precision.  This reproduces the
+//! accuracy behaviour (f32 rounding of weak interactions) and the
+//! performance model (half-width arithmetic on the off-band bulk) of the
+//! paper's MP variant.
+
+use super::{ExecCtx, LogLik, Problem};
+use crate::covariance::fill_cov_tile;
+use crate::linalg::cholesky::{
+    check_fail, new_fail_flag, submit_tiled_forward_solve_banded, submit_tiled_potrf, TileHandles,
+};
+use crate::linalg::tile::{TileMatrix, TileVector};
+use crate::scheduler::pool;
+use crate::scheduler::{Access, TaskGraph, TaskKind};
+use std::sync::Arc;
+
+/// Is tile (i, j) kept in full precision?
+#[inline]
+pub fn is_f64_tile(band: usize, i: usize, j: usize) -> bool {
+    i - j <= band
+}
+
+/// Round a buffer through f32 (the MP storage demotion).
+pub fn demote_f32(buf: &mut [f64]) {
+    for v in buf.iter_mut() {
+        *v = *v as f32 as f64;
+    }
+}
+
+/// Submit MP generation tasks: every lower tile is generated; off-band
+/// tiles are rounded through f32.
+fn submit_generation_mp(
+    g: &mut TaskGraph,
+    a: &TileMatrix,
+    hs: &TileHandles,
+    problem: &Problem,
+    theta: &[f64],
+    band: usize,
+) {
+    let nt = a.nt();
+    let ts = a.ts();
+    let bytes = a.tile_bytes();
+    let theta: Arc<Vec<f64>> = Arc::new(theta.to_vec());
+    for i in 0..nt {
+        for j in 0..=i {
+            let h = a.tile_rows(i);
+            let w = a.tile_cols(j);
+            let ptr = a.tile_ptr(i, j);
+            let kernel = problem.kernel.clone();
+            let locs = problem.locs.clone();
+            let metric = problem.metric;
+            let theta = theta.clone();
+            let (row0, col0) = (i * ts, j * ts);
+            let demote = !is_f64_tile(band, i, j);
+            g.submit(TaskKind::DCMG, &[(hs.at(i, j), Access::W)], bytes, move || {
+                // SAFETY: STF ordering gives exclusive access to the tile.
+                let out = unsafe { ptr.as_mut() };
+                fill_cov_tile(
+                    kernel.as_ref(),
+                    &theta,
+                    &locs,
+                    metric,
+                    row0,
+                    col0,
+                    h,
+                    w,
+                    out,
+                );
+                if demote {
+                    demote_f32(out);
+                }
+            });
+        }
+    }
+}
+
+/// Evaluate the mixed-precision log-likelihood.  `band` counts the tile
+/// diagonals kept in f64 (`band = 0`: only diagonal tiles full precision).
+pub fn loglik(
+    problem: &Problem,
+    theta: &[f64],
+    band: usize,
+    ctx: &ExecCtx,
+) -> anyhow::Result<LogLik> {
+    let dim = problem.dim();
+    let a = TileMatrix::zeros(dim, ctx.ts);
+    let mut g = TaskGraph::new();
+    let hs = TileHandles::register(&mut g, a.nt());
+    submit_generation_mp(&mut g, &a, &hs, problem, theta, band);
+    let fail = new_fail_flag();
+    // Factorization is structurally dense (band = None): MP rounds values,
+    // it does not drop tiles.
+    submit_tiled_potrf(&mut g, &a, &hs, None, &fail);
+    let y = TileVector::from_slice(&problem.z, ctx.ts);
+    let yh = g.register_many(y.nt());
+    submit_tiled_forward_solve_banded(&mut g, &a, &hs, &y, &yh, None);
+    pool::run(&mut g, ctx.ncores, ctx.policy);
+    check_fail(&fail).map_err(|e| {
+        anyhow::anyhow!(
+            "MP covariance not positive definite at pivot {} (theta = {theta:?})",
+            e.pivot
+        )
+    })?;
+    let logdet = 2.0 * a.diag_sum(f64::ln);
+    let sse = y.dot_self();
+    Ok(LogLik::assemble(logdet, sse, dim))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::likelihood::testutil::{dense_oracle, small_problem};
+    use crate::scheduler::pool::Policy;
+
+    #[test]
+    fn demote_rounds_to_f32() {
+        let mut v = vec![1.0 + 1e-12, std::f64::consts::PI];
+        demote_f32(&mut v);
+        assert_eq!(v[0], 1.0);
+        assert_eq!(v[1], std::f64::consts::PI as f32 as f64);
+    }
+
+    #[test]
+    fn mp_error_is_f32_scale() {
+        let p = small_problem(64, 30);
+        let theta = [1.0, 0.1, 0.5];
+        let ctx = ExecCtx {
+            ncores: 2,
+            ts: 16,
+            policy: Policy::Lws,
+        };
+        let oracle = dense_oracle(&p, &theta);
+        let mp = loglik(&p, &theta, 0, &ctx).unwrap();
+        let rel = (mp.loglik - oracle.loglik).abs() / oracle.loglik.abs();
+        // f32 rounding of off-diagonal tiles: relative error well below
+        // 1e-3 but (generically) nonzero.
+        assert!(rel < 1e-3, "rel {rel}");
+        assert!(rel > 0.0, "suspiciously exact");
+    }
+
+    #[test]
+    fn wider_band_is_more_accurate() {
+        let p = small_problem(80, 31);
+        let theta = [1.0, 0.2, 1.0];
+        let ctx = ExecCtx {
+            ncores: 1,
+            ts: 16,
+            policy: Policy::Eager,
+        };
+        let oracle = dense_oracle(&p, &theta);
+        let e0 = (loglik(&p, &theta, 0, &ctx).unwrap().loglik - oracle.loglik).abs();
+        let e_full = (loglik(&p, &theta, 4, &ctx).unwrap().loglik - oracle.loglik).abs();
+        assert!(e_full <= e0, "band 4 err {e_full} vs band 0 err {e0}");
+        assert!(e_full < 1e-9, "full band must be exact, err {e_full}");
+    }
+
+    #[test]
+    fn is_f64_tile_band_logic() {
+        assert!(is_f64_tile(0, 3, 3));
+        assert!(!is_f64_tile(0, 4, 3));
+        assert!(is_f64_tile(2, 5, 3));
+        assert!(!is_f64_tile(1, 5, 3));
+    }
+}

@@ -1,0 +1,426 @@
+//! Tiled Cholesky factorization and triangular solves, expressed as
+//! sequential task flows over a [`TileMatrix`] — the computational core of
+//! ExaGeoStat's exact MLE (Abdulah et al. 2018a, Alg. 1).
+//!
+//! The right-looking tiled algorithm emits the classic POTRF/TRSM/SYRK/GEMM
+//! DAG; an optional tile bandwidth restricts updates to a band of tiles,
+//! which is exactly the Diagonal-Super-Tile (DST) approximation of Fig 1(b).
+
+use super::blas::{
+    dgemm_raw, dgemv_raw, dpotrf_raw, dsyrk_ln_raw, dtrsm_rltn_raw, dtrsv_ln, Trans,
+};
+use super::tile::{TileMatrix, TileVector};
+use crate::scheduler::{Access, Handle, TaskGraph, TaskKind};
+use std::sync::atomic::{AtomicI64, Ordering};
+use std::sync::Arc;
+
+/// Scheduler handles for the lower tiles of a [`TileMatrix`].
+pub struct TileHandles {
+    nt: usize,
+    h: Vec<Handle>,
+}
+
+impl TileHandles {
+    pub fn register(g: &mut TaskGraph, nt: usize) -> Self {
+        TileHandles {
+            nt,
+            h: g.register_many(nt * (nt + 1) / 2),
+        }
+    }
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> Handle {
+        debug_assert!(i >= j && i < self.nt);
+        self.h[i * (i + 1) / 2 + j]
+    }
+    pub fn nt(&self) -> usize {
+        self.nt
+    }
+}
+
+/// Shared failure slot: holds `pivot + 1` of the first non-SPD pivot, or 0.
+pub type FailFlag = Arc<AtomicI64>;
+
+pub fn new_fail_flag() -> FailFlag {
+    Arc::new(AtomicI64::new(0))
+}
+
+/// Check a fail flag after graph execution.
+pub fn check_fail(flag: &FailFlag) -> Result<(), crate::linalg::blas::NotSpd> {
+    let v = flag.load(Ordering::Acquire);
+    if v == 0 {
+        Ok(())
+    } else {
+        Err(crate::linalg::blas::NotSpd {
+            pivot: (v - 1) as usize,
+        })
+    }
+}
+
+/// Is tile (i, j) inside the retained band? `band = None` means dense
+/// (exact); `band = Some(b)` keeps tiles with `i - j <= b` (DST: `b = 0` is
+/// diagonal-only, `b = 1` matches Fig 1(b)'s "two-diagonal tiles").
+#[inline]
+pub fn in_band(band: Option<usize>, i: usize, j: usize) -> bool {
+    match band {
+        None => true,
+        Some(b) => i - j <= b, // callers guarantee i >= j
+    }
+}
+
+/// Submit the tiled (optionally band-restricted) lower Cholesky of `a`
+/// in place.  On a non-SPD pivot the fail flag records the global pivot
+/// index; downstream tasks still run (NaNs propagate harmlessly) and the
+/// caller checks the flag after execution.
+pub fn submit_tiled_potrf(
+    g: &mut TaskGraph,
+    a: &TileMatrix,
+    hs: &TileHandles,
+    band: Option<usize>,
+    fail: &FailFlag,
+) {
+    let nt = a.nt();
+    let ts = a.ts();
+    let bytes = a.tile_bytes();
+    for k in 0..nt {
+        let hk = a.tile_rows(k);
+        // POTRF on diagonal tile (k, k)
+        {
+            let p = a.tile_ptr(k, k);
+            let fail = fail.clone();
+            let pivot_base = (k * ts) as i64;
+            g.submit(
+                TaskKind::POTRF,
+                &[(hs.at(k, k), Access::RW)],
+                bytes,
+                move || {
+                    // SAFETY: STF ordering gives exclusive access.
+                    let t = unsafe { p.as_mut() };
+                    if let Err(e) = dpotrf_raw(hk, t, hk) {
+                        let _ = fail.compare_exchange(
+                            0,
+                            pivot_base + e.pivot as i64 + 1,
+                            Ordering::AcqRel,
+                            Ordering::Relaxed,
+                        );
+                    }
+                },
+            );
+        }
+        // Panel TRSMs
+        for i in k + 1..nt {
+            if !in_band(band, i, k) {
+                continue;
+            }
+            let hi = a.tile_rows(i);
+            let l = a.tile_ptr(k, k);
+            let b = a.tile_ptr(i, k);
+            g.submit(
+                TaskKind::TRSM,
+                &[(hs.at(k, k), Access::R), (hs.at(i, k), Access::RW)],
+                2 * bytes,
+                move || {
+                    // SAFETY: STF ordering.
+                    let lt = unsafe { l.as_ref() };
+                    let bt = unsafe { b.as_mut() };
+                    dtrsm_rltn_raw(hi, hk, lt, hk, bt, hi);
+                },
+            );
+        }
+        // Trailing updates
+        for i in k + 1..nt {
+            if !in_band(band, i, k) {
+                continue;
+            }
+            let hi = a.tile_rows(i);
+            // SYRK on diagonal (i, i)
+            {
+                let src = a.tile_ptr(i, k);
+                let dst = a.tile_ptr(i, i);
+                g.submit(
+                    TaskKind::SYRK,
+                    &[(hs.at(i, k), Access::R), (hs.at(i, i), Access::RW)],
+                    2 * bytes,
+                    move || {
+                        // SAFETY: STF ordering.
+                        let s = unsafe { src.as_ref() };
+                        let d = unsafe { dst.as_mut() };
+                        dsyrk_ln_raw(hi, hk, -1.0, s, hi, 1.0, d, hi);
+                    },
+                );
+            }
+            // GEMMs on (i, j), k < j < i
+            for j in k + 1..i {
+                if !in_band(band, i, j) || !in_band(band, j, k) {
+                    continue;
+                }
+                let hj = a.tile_rows(j);
+                let ai = a.tile_ptr(i, k);
+                let aj = a.tile_ptr(j, k);
+                let c = a.tile_ptr(i, j);
+                g.submit(
+                    TaskKind::GEMM,
+                    &[
+                        (hs.at(i, k), Access::R),
+                        (hs.at(j, k), Access::R),
+                        (hs.at(i, j), Access::RW),
+                    ],
+                    3 * bytes,
+                    move || {
+                        // SAFETY: STF ordering.
+                        let a_ = unsafe { ai.as_ref() };
+                        let b_ = unsafe { aj.as_ref() };
+                        let c_ = unsafe { c.as_mut() };
+                        dgemm_raw(
+                            Trans::N,
+                            Trans::T,
+                            hi,
+                            hj,
+                            hk,
+                            -1.0,
+                            a_,
+                            hi,
+                            b_,
+                            hj,
+                            1.0,
+                            c_,
+                            hi,
+                        );
+                    },
+                );
+            }
+        }
+    }
+}
+
+/// Submit the tiled forward substitution `y <- L^{-1} y` against the factor
+/// produced by [`submit_tiled_potrf`] (same band).
+pub fn submit_tiled_forward_solve(
+    g: &mut TaskGraph,
+    l: &TileMatrix,
+    hs: &TileHandles,
+    y: &TileVector,
+    yh: &[Handle],
+) {
+    submit_tiled_forward_solve_banded(g, l, hs, y, yh, None)
+}
+
+/// Band-aware forward substitution (zero tiles outside the band are
+/// skipped — they contribute nothing).
+pub fn submit_tiled_forward_solve_banded(
+    g: &mut TaskGraph,
+    l: &TileMatrix,
+    hs: &TileHandles,
+    y: &TileVector,
+    yh: &[Handle],
+    band: Option<usize>,
+) {
+    let nt = l.nt();
+    let bytes = l.tile_bytes();
+    for i in 0..nt {
+        let hi = l.tile_rows(i);
+        for j in 0..i {
+            if !in_band(band, i, j) {
+                continue;
+            }
+            let wj = l.tile_cols(j);
+            let lij = l.tile_ptr(i, j);
+            let yj = y.seg_ptr(j);
+            let yi = y.seg_ptr(i);
+            g.submit(
+                TaskKind::GEMM,
+                &[
+                    (hs.at(i, j), Access::R),
+                    (yh[j], Access::R),
+                    (yh[i], Access::RW),
+                ],
+                bytes,
+                move || {
+                    // SAFETY: STF ordering.
+                    let lt = unsafe { lij.as_ref() };
+                    let yjs = unsafe { yj.as_ref() };
+                    let yis = unsafe { yi.as_mut() };
+                    dgemv_raw(Trans::N, hi, wj, -1.0, lt, hi, yjs, 1.0, yis);
+                },
+            );
+        }
+        let lii = l.tile_ptr(i, i);
+        let yi = y.seg_ptr(i);
+        g.submit(
+            TaskKind::TRSM,
+            &[(hs.at(i, i), Access::R), (yh[i], Access::RW)],
+            bytes,
+            move || {
+                // SAFETY: STF ordering.
+                let lt = unsafe { lii.as_ref() };
+                let ys = unsafe { yi.as_mut() };
+                dtrsv_ln(hi, lt, hi, ys);
+            },
+        );
+    }
+}
+
+/// Dense-path convenience: factor, forward-solve and return
+/// `(logdet, L^{-1} z)` — used by the baselines and small-problem paths.
+pub fn dense_chol_solve(
+    sigma: &mut crate::linalg::matrix::Matrix,
+    z: &[f64],
+) -> Result<(f64, Vec<f64>), crate::linalg::blas::NotSpd> {
+    let logdet = crate::linalg::blas::dpotrf(sigma)?;
+    let n = sigma.rows();
+    let mut y = z.to_vec();
+    dtrsv_ln(n, sigma.as_slice(), n, &mut y);
+    Ok((logdet, y))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matrix::Matrix;
+    use crate::rng::Pcg64;
+    use crate::scheduler::pool::{self, Policy};
+
+    fn rand_spd(rng: &mut Pcg64, n: usize) -> Matrix {
+        let b = Matrix::from_fn(n, n, |_, _| rng.normal());
+        let mut a = Matrix::zeros(n, n);
+        crate::linalg::blas::dgemm(false, true, 1.0, &b, &b, 0.0, &mut a);
+        for i in 0..n {
+            a[(i, i)] += n as f64;
+        }
+        a
+    }
+
+    fn tiled_factor(a: &Matrix, ts: usize, workers: usize, policy: Policy) -> TileMatrix {
+        let tm = TileMatrix::from_dense_lower(a, ts);
+        let mut g = TaskGraph::new();
+        let hs = TileHandles::register(&mut g, tm.nt());
+        let fail = new_fail_flag();
+        submit_tiled_potrf(&mut g, &tm, &hs, None, &fail);
+        pool::run(&mut g, workers, policy);
+        check_fail(&fail).unwrap();
+        tm
+    }
+
+    #[test]
+    fn tiled_potrf_matches_dense_over_shapes() {
+        let mut rng = Pcg64::seed_from_u64(31);
+        for &(n, ts) in &[(8usize, 4usize), (16, 4), (30, 7), (64, 16), (100, 32), (33, 40)] {
+            let a = rand_spd(&mut rng, n);
+            let mut dense = a.clone();
+            crate::linalg::blas::dpotrf(&mut dense).unwrap();
+            dense.zero_upper();
+            let tm = tiled_factor(&a, ts, 4, Policy::Lws);
+            let lt = tm.to_dense_lower();
+            let err = lt.max_abs_diff(&dense);
+            assert!(err < 1e-10, "n={n} ts={ts}: err {err}");
+        }
+    }
+
+    #[test]
+    fn tiled_potrf_all_policies_agree() {
+        let mut rng = Pcg64::seed_from_u64(32);
+        let a = rand_spd(&mut rng, 48);
+        let reference = tiled_factor(&a, 16, 1, Policy::Eager).to_dense_lower();
+        for policy in [Policy::Eager, Policy::Prio, Policy::Lws, Policy::Random] {
+            for workers in [2usize, 4, 8] {
+                let tm = tiled_factor(&a, 16, workers, policy);
+                let err = tm.to_dense_lower().max_abs_diff(&reference);
+                assert!(err < 1e-12, "{policy:?} {workers}w: {err}");
+            }
+        }
+    }
+
+    #[test]
+    fn tiled_potrf_detects_non_spd() {
+        // indefinite matrix: flag must trip with a sensible pivot
+        let n = 12;
+        let mut a = Matrix::eye(n);
+        a[(6, 6)] = -1.0;
+        let tm = TileMatrix::from_dense_lower(&a, 4);
+        let mut g = TaskGraph::new();
+        let hs = TileHandles::register(&mut g, tm.nt());
+        let fail = new_fail_flag();
+        submit_tiled_potrf(&mut g, &tm, &hs, None, &fail);
+        pool::run(&mut g, 2, Policy::Lws);
+        let err = check_fail(&fail).unwrap_err();
+        assert_eq!(err.pivot, 6);
+    }
+
+    #[test]
+    fn forward_solve_matches_dense() {
+        let mut rng = Pcg64::seed_from_u64(33);
+        let n = 50;
+        let ts = 16;
+        let a = rand_spd(&mut rng, n);
+        let z: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+
+        // dense reference
+        let mut dense = a.clone();
+        let (_ld, yref) = dense_chol_solve(&mut dense, &z).unwrap();
+
+        // tiled
+        let tm = TileMatrix::from_dense_lower(&a, ts);
+        let mut g = TaskGraph::new();
+        let hs = TileHandles::register(&mut g, tm.nt());
+        let fail = new_fail_flag();
+        submit_tiled_potrf(&mut g, &tm, &hs, None, &fail);
+        let tv = TileVector::from_slice(&z, ts);
+        let yh = g.register_many(tv.nt());
+        submit_tiled_forward_solve(&mut g, &tm, &hs, &tv, &yh);
+        pool::run(&mut g, 4, Policy::Prio);
+        check_fail(&fail).unwrap();
+
+        let y = tv.to_vec();
+        let err = y
+            .iter()
+            .zip(&yref)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max);
+        assert!(err < 1e-10, "err {err}");
+    }
+
+    #[test]
+    fn band_restriction_skips_far_tiles() {
+        // With band = Some(0) only diagonal tiles factor; far tiles remain
+        // whatever they were (they are ignored by the banded solve).
+        let mut rng = Pcg64::seed_from_u64(34);
+        let n = 32;
+        let ts = 8;
+        let a = rand_spd(&mut rng, n);
+        let tm = TileMatrix::from_dense_lower(&a, ts);
+        let before_far = tm.tile(3, 0).to_vec();
+        let mut g = TaskGraph::new();
+        let hs = TileHandles::register(&mut g, tm.nt());
+        let fail = new_fail_flag();
+        submit_tiled_potrf(&mut g, &tm, &hs, Some(0), &fail);
+        pool::run(&mut g, 2, Policy::Lws);
+        check_fail(&fail).unwrap();
+        assert_eq!(tm.tile(3, 0).to_vec(), before_far, "far tile untouched");
+        // diagonal blocks factored: each equals dense potrf of the block
+        for t in 0..tm.nt() {
+            let h = tm.tile_rows(t);
+            let mut blk = Matrix::from_fn(h, h, |i, j| {
+                let (gi, gj) = (t * ts + i, t * ts + j);
+                if gi >= gj {
+                    a[(gi, gj)]
+                } else {
+                    a[(gj, gi)]
+                }
+            });
+            crate::linalg::blas::dpotrf(&mut blk).unwrap();
+            for lj in 0..h {
+                for li in lj..h {
+                    let got = tm.tile(t, t)[li + lj * h];
+                    assert!((got - blk[(li, lj)]).abs() < 1e-12);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn in_band_predicate() {
+        assert!(in_band(None, 10, 0));
+        assert!(in_band(Some(2), 5, 3));
+        assert!(!in_band(Some(1), 5, 3));
+        assert!(in_band(Some(0), 4, 4));
+    }
+}

@@ -1,0 +1,297 @@
+//! Column-major dense matrix type used throughout the linear-algebra
+//! substrate (the "Chameleon analogue" — see DESIGN.md §4).
+//!
+//! Storage is column-major (`a[i + j*ld]`) to match LAPACK conventions and
+//! the tile layout used by the tiled Cholesky.
+
+use std::fmt;
+
+/// Dense column-major matrix of `f64`.
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    data: Vec<f64>,
+    rows: usize,
+    cols: usize,
+}
+
+impl Matrix {
+    /// Zero-filled `rows x cols` matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix {
+            data: vec![0.0; rows * cols],
+            rows,
+            cols,
+        }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Build from a column-major slice.
+    pub fn from_col_major(rows: usize, cols: usize, data: &[f64]) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Matrix {
+            data: data.to_vec(),
+            rows,
+            cols,
+        }
+    }
+
+    /// Build from a row-major slice (convenience for tests / literals).
+    pub fn from_row_major(rows: usize, cols: usize, data: &[f64]) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        let mut m = Matrix::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m[(i, j)] = data[i * cols + j];
+            }
+        }
+        m
+    }
+
+    /// Build element-wise from a function.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut m = Matrix::zeros(rows, cols);
+        for j in 0..cols {
+            for i in 0..rows {
+                m[(i, j)] = f(i, j);
+            }
+        }
+        m
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+    #[inline]
+    pub fn is_square(&self) -> bool {
+        self.rows == self.cols
+    }
+
+    /// Column-major backing slice.
+    #[inline]
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Column `j` as a slice.
+    #[inline]
+    pub fn col(&self, j: usize) -> &[f64] {
+        &self.data[j * self.rows..(j + 1) * self.rows]
+    }
+    #[inline]
+    pub fn col_mut(&mut self, j: usize) -> &mut [f64] {
+        &mut self.data[j * self.rows..(j + 1) * self.rows]
+    }
+
+    /// Transpose (out of place).
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        for j in 0..self.cols {
+            for i in 0..self.rows {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    /// `self * other` using the optimized gemm kernel.
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let mut c = Matrix::zeros(self.rows, other.cols);
+        super::blas::dgemm(
+            false,
+            false,
+            1.0,
+            self,
+            other,
+            0.0,
+            &mut c,
+        );
+        c
+    }
+
+    /// Matrix-vector product `self * x`.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, x.len(), "matvec shape mismatch");
+        let mut y = vec![0.0; self.rows];
+        for j in 0..self.cols {
+            let xj = x[j];
+            if xj != 0.0 {
+                let col = self.col(j);
+                for i in 0..self.rows {
+                    y[i] += col[i] * xj;
+                }
+            }
+        }
+        y
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|v| v * v).sum::<f64>().sqrt()
+    }
+
+    /// Max |a_ij - b_ij|.
+    pub fn max_abs_diff(&self, other: &Matrix) -> f64 {
+        assert_eq!(self.rows, other.rows);
+        assert_eq!(self.cols, other.cols);
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// Copy a rectangular block `src[si.., sj..]` of shape `(h, w)` into
+    /// `self` at `(di, dj)`.
+    pub fn copy_block(
+        &mut self,
+        di: usize,
+        dj: usize,
+        src: &Matrix,
+        si: usize,
+        sj: usize,
+        h: usize,
+        w: usize,
+    ) {
+        for j in 0..w {
+            for i in 0..h {
+                self[(di + i, dj + j)] = src[(si + i, sj + j)];
+            }
+        }
+    }
+
+    /// Symmetrize in place from the lower triangle (used after generating
+    /// only the lower half of a covariance matrix).
+    pub fn symmetrize_from_lower(&mut self) {
+        assert!(self.is_square());
+        for j in 0..self.cols {
+            for i in 0..j {
+                self.data[i + j * self.rows] = self.data[j + i * self.rows];
+            }
+        }
+    }
+
+    /// Zero the strict upper triangle (used to produce an L factor view).
+    pub fn zero_upper(&mut self) {
+        assert!(self.is_square());
+        for j in 1..self.cols {
+            for i in 0..j.min(self.rows) {
+                self.data[i + j * self.rows] = 0.0;
+            }
+        }
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Matrix {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i + j * self.rows]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Matrix {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i + j * self.rows]
+    }
+}
+
+impl fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Matrix {}x{} [", self.rows, self.cols)?;
+        let rmax = self.rows.min(8);
+        let cmax = self.cols.min(8);
+        for i in 0..rmax {
+            write!(f, "  ")?;
+            for j in 0..cmax {
+                write!(f, "{:>12.5e} ", self[(i, j)])?;
+            }
+            writeln!(f, "{}", if self.cols > cmax { "..." } else { "" })?;
+        }
+        if self.rows > rmax {
+            writeln!(f, "  ...")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_round_trip() {
+        let mut m = Matrix::zeros(3, 4);
+        m[(2, 3)] = 7.5;
+        assert_eq!(m[(2, 3)], 7.5);
+        assert_eq!(m.as_slice()[2 + 3 * 3], 7.5);
+    }
+
+    #[test]
+    fn from_row_major_matches_index() {
+        let m = Matrix::from_row_major(2, 3, &[1., 2., 3., 4., 5., 6.]);
+        assert_eq!(m[(0, 0)], 1.0);
+        assert_eq!(m[(0, 2)], 3.0);
+        assert_eq!(m[(1, 0)], 4.0);
+        assert_eq!(m[(1, 2)], 6.0);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let m = Matrix::from_fn(5, 3, |i, j| (i * 10 + j) as f64);
+        assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    fn matvec_identity() {
+        let m = Matrix::eye(4);
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        assert_eq!(m.matvec(&x), x);
+    }
+
+    #[test]
+    fn matmul_small_oracle() {
+        let a = Matrix::from_row_major(2, 2, &[1., 2., 3., 4.]);
+        let b = Matrix::from_row_major(2, 2, &[5., 6., 7., 8.]);
+        let c = a.matmul(&b);
+        let expect = Matrix::from_row_major(2, 2, &[19., 22., 43., 50.]);
+        assert!(c.max_abs_diff(&expect) < 1e-12);
+    }
+
+    #[test]
+    fn symmetrize() {
+        let mut m = Matrix::from_fn(3, 3, |i, j| if i >= j { (i + j) as f64 } else { -99.0 });
+        m.symmetrize_from_lower();
+        for i in 0..3 {
+            for j in 0..3 {
+                assert_eq!(m[(i, j)], m[(j, i)]);
+            }
+        }
+    }
+
+    #[test]
+    fn fro_norm() {
+        let m = Matrix::from_row_major(2, 2, &[3., 0., 0., 4.]);
+        assert!((m.fro_norm() - 5.0).abs() < 1e-14);
+    }
+}

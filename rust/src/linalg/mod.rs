@@ -1,0 +1,12 @@
+//! Dense and tiled linear algebra substrate (the Chameleon / HiCMA
+//! analogue — DESIGN.md §4.1–4.2).
+
+pub mod blas;
+pub mod cholesky;
+pub mod lowrank;
+pub mod matrix;
+pub mod svd;
+pub mod tile;
+
+pub use blas::NotSpd;
+pub use matrix::Matrix;

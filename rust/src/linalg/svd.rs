@@ -1,0 +1,255 @@
+//! Small dense factorizations used by the Tile Low-Rank (TLR) path:
+//! one-sided Jacobi SVD and thin Householder QR.
+//!
+//! ExaGeoStat compresses off-diagonal tiles with SVD (paper §II-A); tiles
+//! are at most a few hundred square, where Jacobi is simple, accurate, and
+//! fast enough (compression happens once per tile per MLE iteration).
+
+use super::matrix::Matrix;
+
+/// Thin SVD `A = U diag(s) V^T` with `A` of shape `m x n`, `m >= n`.
+/// Returns `(U (m x n), s (n), V (n x n))`, singular values descending.
+pub fn jacobi_svd(a: &Matrix) -> (Matrix, Vec<f64>, Matrix) {
+    let m = a.rows();
+    let n = a.cols();
+    assert!(m >= n, "jacobi_svd requires m >= n (got {m} x {n})");
+    let mut u = a.clone();
+    let mut v = Matrix::eye(n);
+    let eps = 1e-14;
+    let max_sweeps = 60;
+    for _ in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in p + 1..n {
+                // Gram entries for columns p, q.
+                let (mut app, mut aqq, mut apq) = (0.0, 0.0, 0.0);
+                {
+                    let cp = u.col(p);
+                    let cq = u.col(q);
+                    for i in 0..m {
+                        app += cp[i] * cp[i];
+                        aqq += cq[i] * cq[i];
+                        apq += cp[i] * cq[i];
+                    }
+                }
+                if apq.abs() <= eps * (app * aqq).sqrt() {
+                    continue;
+                }
+                off = off.max(apq.abs() / (app * aqq).sqrt().max(1e-300));
+                // Jacobi rotation.
+                let zeta = (aqq - app) / (2.0 * apq);
+                let t = zeta.signum() / (zeta.abs() + (1.0 + zeta * zeta).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                // rotate columns p, q of U and V
+                for i in 0..m {
+                    let up = u[(i, p)];
+                    let uq = u[(i, q)];
+                    u[(i, p)] = c * up - s * uq;
+                    u[(i, q)] = s * up + c * uq;
+                }
+                for i in 0..n {
+                    let vp = v[(i, p)];
+                    let vq = v[(i, q)];
+                    v[(i, p)] = c * vp - s * vq;
+                    v[(i, q)] = s * vp + c * vq;
+                }
+            }
+        }
+        if off < eps {
+            break;
+        }
+    }
+    // Extract singular values, normalize U columns, sort descending.
+    let mut s: Vec<f64> = (0..n)
+        .map(|j| u.col(j).iter().map(|x| x * x).sum::<f64>().sqrt())
+        .collect();
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&i, &j| s[j].total_cmp(&s[i]));
+    let mut us = Matrix::zeros(m, n);
+    let mut vs = Matrix::zeros(n, n);
+    let mut ss = vec![0.0; n];
+    for (newj, &oldj) in order.iter().enumerate() {
+        ss[newj] = s[oldj];
+        let scale = if s[oldj] > 0.0 { 1.0 / s[oldj] } else { 0.0 };
+        for i in 0..m {
+            us[(i, newj)] = u[(i, oldj)] * scale;
+        }
+        for i in 0..n {
+            vs[(i, newj)] = v[(i, oldj)];
+        }
+    }
+    s = ss;
+    (us, s, vs)
+}
+
+/// Thin Householder QR: `A = Q R` with `A (m x k)`, `m >= k`; returns
+/// `(Q (m x k) with orthonormal columns, R (k x k) upper triangular)`.
+pub fn qr_thin(a: &Matrix) -> (Matrix, Matrix) {
+    let m = a.rows();
+    let k = a.cols();
+    assert!(m >= k, "qr_thin requires m >= k (got {m} x {k})");
+    let mut r = a.clone();
+    // Store Householder vectors in-place below the diagonal; taus separate.
+    let mut taus = vec![0.0f64; k];
+    for j in 0..k {
+        // Compute Householder vector for column j, rows j..m.
+        let mut normx = 0.0;
+        for i in j..m {
+            normx += r[(i, j)] * r[(i, j)];
+        }
+        normx = normx.sqrt();
+        if normx == 0.0 {
+            taus[j] = 0.0;
+            continue;
+        }
+        let alpha = r[(j, j)];
+        let beta = -alpha.signum() * normx;
+        let tau = (beta - alpha) / beta;
+        taus[j] = tau;
+        let scale = 1.0 / (alpha - beta);
+        for i in j + 1..m {
+            r[(i, j)] *= scale;
+        }
+        r[(j, j)] = beta;
+        // Apply reflector to trailing columns.
+        for jj in j + 1..k {
+            let mut dot = r[(j, jj)];
+            for i in j + 1..m {
+                dot += r[(i, j)] * r[(i, jj)];
+            }
+            dot *= tau;
+            r[(j, jj)] -= dot;
+            for i in j + 1..m {
+                let vij = r[(i, j)];
+                r[(i, jj)] -= dot * vij;
+            }
+        }
+    }
+    // Form Q by applying reflectors to identity columns (back to front).
+    let mut q = Matrix::zeros(m, k);
+    for j in 0..k {
+        q[(j, j)] = 1.0;
+    }
+    for j in (0..k).rev() {
+        let tau = taus[j];
+        if tau == 0.0 {
+            continue;
+        }
+        for jj in j..k {
+            let mut dot = q[(j, jj)];
+            for i in j + 1..m {
+                dot += r[(i, j)] * q[(i, jj)];
+            }
+            dot *= tau;
+            q[(j, jj)] -= dot;
+            for i in j + 1..m {
+                let vij = r[(i, j)];
+                q[(i, jj)] -= dot * vij;
+            }
+        }
+    }
+    // Zero the sub-diagonal of R.
+    let mut rr = Matrix::zeros(k, k);
+    for j in 0..k {
+        for i in 0..=j {
+            rr[(i, j)] = r[(i, j)];
+        }
+    }
+    (q, rr)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn rand_mat(rng: &mut Pcg64, m: usize, n: usize) -> Matrix {
+        Matrix::from_fn(m, n, |_, _| rng.normal())
+    }
+
+    fn reconstruct_svd(u: &Matrix, s: &[f64], v: &Matrix) -> Matrix {
+        let mut usv = Matrix::zeros(u.rows(), v.rows());
+        let mut us = u.clone();
+        for j in 0..s.len() {
+            for i in 0..u.rows() {
+                us[(i, j)] *= s[j];
+            }
+        }
+        crate::linalg::blas::dgemm(false, true, 1.0, &us, v, 0.0, &mut usv);
+        usv
+    }
+
+    #[test]
+    fn svd_reconstructs_random() {
+        let mut rng = Pcg64::seed_from_u64(41);
+        for &(m, n) in &[(4usize, 4usize), (10, 6), (32, 32), (50, 12)] {
+            let a = rand_mat(&mut rng, m, n);
+            let (u, s, v) = jacobi_svd(&a);
+            let rec = reconstruct_svd(&u, &s, &v);
+            let err = a.max_abs_diff(&rec);
+            assert!(err < 1e-10, "({m},{n}): err {err}");
+            // descending singular values
+            for w in s.windows(2) {
+                assert!(w[0] >= w[1] - 1e-12);
+            }
+            // orthonormal U columns
+            for p in 0..n {
+                for q in 0..n {
+                    let dot: f64 = (0..m).map(|i| u[(i, p)] * u[(i, q)]).sum();
+                    let want = if p == q { 1.0 } else { 0.0 };
+                    assert!((dot - want).abs() < 1e-10, "U^T U ({p},{q}) = {dot}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn svd_rank_deficient() {
+        // rank-2 matrix: outer products
+        let mut rng = Pcg64::seed_from_u64(42);
+        let (m, n, r) = (20, 10, 2);
+        let b = rand_mat(&mut rng, m, r);
+        let c = rand_mat(&mut rng, n, r);
+        let mut a = Matrix::zeros(m, n);
+        crate::linalg::blas::dgemm(false, true, 1.0, &b, &c, 0.0, &mut a);
+        let (_u, s, _v) = jacobi_svd(&a);
+        assert!(s[0] > 1.0e-8);
+        assert!(s[1] > 1.0e-8);
+        for &sv in &s[2..] {
+            assert!(sv < 1e-9 * s[0], "trailing sv {sv}");
+        }
+    }
+
+    #[test]
+    fn svd_matches_known_diagonal() {
+        let a = Matrix::from_row_major(2, 2, &[3.0, 0.0, 0.0, -2.0]);
+        let (_u, s, _v) = jacobi_svd(&a);
+        assert!((s[0] - 3.0).abs() < 1e-12);
+        assert!((s[1] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn qr_reconstructs_and_orthonormal() {
+        let mut rng = Pcg64::seed_from_u64(43);
+        for &(m, k) in &[(5usize, 5usize), (12, 4), (40, 17)] {
+            let a = rand_mat(&mut rng, m, k);
+            let (q, r) = qr_thin(&a);
+            let rec = q.matmul(&r);
+            assert!(a.max_abs_diff(&rec) < 1e-10, "({m},{k})");
+            for p in 0..k {
+                for s in 0..k {
+                    let dot: f64 = (0..m).map(|i| q[(i, p)] * q[(i, s)]).sum();
+                    let want = if p == s { 1.0 } else { 0.0 };
+                    assert!((dot - want).abs() < 1e-10);
+                }
+            }
+            // R upper triangular
+            for j in 0..k {
+                for i in j + 1..k {
+                    assert_eq!(r[(i, j)], 0.0);
+                }
+            }
+        }
+    }
+}

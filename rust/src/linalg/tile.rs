@@ -1,0 +1,332 @@
+//! Tile storage: the data layout ExaGeoStat's task-based algorithms operate
+//! on (Fig 1 of the paper).  A symmetric `n x n` matrix is split into
+//! `nt x nt` tiles of size `ts` (edge tiles are smaller); only the lower
+//! triangle of tiles is stored.  Each tile is a contiguous column-major
+//! buffer — one scheduler data handle per tile.
+
+use crate::linalg::matrix::Matrix;
+
+/// Raw pointer to a tile buffer that tasks capture.
+///
+/// SAFETY: the scheduler's STF dependency inference guarantees that a
+/// writer has exclusive access and readers never overlap a writer, so
+/// aliased `&mut` access cannot occur at runtime.  The pointee (the
+/// `TileMatrix`) outlives graph execution because `pool::run` borrows the
+/// graph for the duration of the scoped threads.
+#[derive(Copy, Clone)]
+pub struct TilePtr {
+    ptr: *mut f64,
+    len: usize,
+}
+
+unsafe impl Send for TilePtr {}
+unsafe impl Sync for TilePtr {}
+
+impl TilePtr {
+    /// # Safety
+    /// Caller must guarantee exclusive access for the duration of the
+    /// borrow (the scheduler provides this via dependency ordering).
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn as_mut(&self) -> &mut [f64] {
+        std::slice::from_raw_parts_mut(self.ptr, self.len)
+    }
+    /// # Safety
+    /// Caller must guarantee no concurrent writer (scheduler-provided).
+    pub unsafe fn as_ref(&self) -> &[f64] {
+        std::slice::from_raw_parts(self.ptr, self.len)
+    }
+    pub fn len(&self) -> usize {
+        self.len
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+/// Lower-triangular tile storage for a symmetric matrix.
+pub struct TileMatrix {
+    n: usize,
+    ts: usize,
+    nt: usize,
+    /// Lower tiles, indexed by `tri_index(i, j)` for `i >= j`.
+    tiles: Vec<Box<[f64]>>,
+}
+
+impl TileMatrix {
+    /// Allocate a zeroed tile matrix for an `n x n` symmetric matrix with
+    /// tile size `ts`.
+    pub fn zeros(n: usize, ts: usize) -> Self {
+        assert!(n > 0 && ts > 0);
+        let nt = n.div_ceil(ts);
+        let mut tiles = Vec::with_capacity(nt * (nt + 1) / 2);
+        for i in 0..nt {
+            for j in 0..=i {
+                let h = Self::dim_at(n, ts, i);
+                let w = Self::dim_at(n, ts, j);
+                tiles.push(vec![0.0; h * w].into_boxed_slice());
+            }
+        }
+        TileMatrix { n, ts, nt, tiles }
+    }
+
+    #[inline]
+    fn dim_at(n: usize, ts: usize, i: usize) -> usize {
+        ts.min(n - i * ts)
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+    #[inline]
+    pub fn ts(&self) -> usize {
+        self.ts
+    }
+    /// Number of tile rows/cols.
+    #[inline]
+    pub fn nt(&self) -> usize {
+        self.nt
+    }
+    /// Height (= local leading dimension) of tile row `i`.
+    #[inline]
+    pub fn tile_rows(&self, i: usize) -> usize {
+        Self::dim_at(self.n, self.ts, i)
+    }
+    /// Width of tile column `j`.
+    #[inline]
+    pub fn tile_cols(&self, j: usize) -> usize {
+        Self::dim_at(self.n, self.ts, j)
+    }
+
+    /// Linear index of lower tile (i, j), i >= j.
+    #[inline]
+    fn tri_index(&self, i: usize, j: usize) -> usize {
+        debug_assert!(i >= j && i < self.nt, "lower tile ({i},{j})");
+        i * (i + 1) / 2 + j
+    }
+
+    /// Borrow tile (i, j), i >= j.
+    pub fn tile(&self, i: usize, j: usize) -> &[f64] {
+        &self.tiles[self.tri_index(i, j)]
+    }
+
+    /// Mutably borrow tile (i, j), i >= j.
+    pub fn tile_mut(&mut self, i: usize, j: usize) -> &mut [f64] {
+        let idx = self.tri_index(i, j);
+        &mut self.tiles[idx]
+    }
+
+    /// Raw pointer for task capture.
+    pub fn tile_ptr(&self, i: usize, j: usize) -> TilePtr {
+        let idx = self.tri_index(i, j);
+        let t = &self.tiles[idx];
+        TilePtr {
+            ptr: t.as_ptr() as *mut f64,
+            len: t.len(),
+        }
+    }
+
+    /// Element access (symmetric: (i, j) with i < j reads the mirrored
+    /// lower entry).  For tests and small-scale assembly only.
+    pub fn get(&self, gi: usize, gj: usize) -> f64 {
+        let (gi, gj) = if gi >= gj { (gi, gj) } else { (gj, gi) };
+        let (ti, li) = (gi / self.ts, gi % self.ts);
+        let (tj, lj) = (gj / self.ts, gj % self.ts);
+        let h = self.tile_rows(ti);
+        self.tile(ti, tj)[li + lj * h]
+    }
+
+    pub fn set(&mut self, gi: usize, gj: usize, v: f64) {
+        let (gi, gj) = if gi >= gj { (gi, gj) } else { (gj, gi) };
+        let (ti, li) = (gi / self.ts, gi % self.ts);
+        let (tj, lj) = (gj / self.ts, gj % self.ts);
+        let h = self.tile_rows(ti);
+        self.tile_mut(ti, tj)[li + lj * h] = v;
+    }
+
+    /// Import the lower triangle of a dense symmetric matrix.
+    pub fn from_dense_lower(m: &Matrix, ts: usize) -> Self {
+        assert!(m.is_square());
+        let n = m.rows();
+        let mut tm = TileMatrix::zeros(n, ts);
+        for ti in 0..tm.nt {
+            for tj in 0..=ti {
+                let h = tm.tile_rows(ti);
+                let w = tm.tile_cols(tj);
+                let idx = tm.tri_index(ti, tj);
+                let tile = &mut tm.tiles[idx];
+                for lj in 0..w {
+                    for li in 0..h {
+                        let gi = ti * ts + li;
+                        let gj = tj * ts + lj;
+                        // lower access (gi >= gj guaranteed except inside
+                        // diagonal tiles where we mirror)
+                        tile[li + lj * h] = if gi >= gj { m[(gi, gj)] } else { m[(gj, gi)] };
+                    }
+                }
+            }
+        }
+        tm
+    }
+
+    /// Export to a dense matrix (symmetrized).  Tests / small scale only.
+    pub fn to_dense(&self) -> Matrix {
+        let mut m = Matrix::zeros(self.n, self.n);
+        for gi in 0..self.n {
+            for gj in 0..=gi {
+                let v = self.get(gi, gj);
+                m[(gi, gj)] = v;
+                m[(gj, gi)] = v;
+            }
+        }
+        m
+    }
+
+    /// Export the lower-triangular factor (upper forced to zero), as after
+    /// an in-place tiled Cholesky.
+    pub fn to_dense_lower(&self) -> Matrix {
+        let mut m = Matrix::zeros(self.n, self.n);
+        for gi in 0..self.n {
+            for gj in 0..=gi {
+                m[(gi, gj)] = self.get(gi, gj);
+            }
+        }
+        m
+    }
+
+    /// Sum of `f` over diagonal elements (e.g. log-determinant terms).
+    pub fn diag_sum(&self, f: impl Fn(f64) -> f64) -> f64 {
+        (0..self.n).map(|i| f(self.get(i, i))).sum()
+    }
+
+    /// Total bytes of one tile (for the DES transfer model).
+    pub fn tile_bytes(&self) -> usize {
+        self.ts * self.ts * std::mem::size_of::<f64>()
+    }
+}
+
+/// A vector split into `ts`-sized segments aligned with a [`TileMatrix`].
+pub struct TileVector {
+    pub n: usize,
+    pub ts: usize,
+    segs: Vec<Box<[f64]>>,
+}
+
+impl TileVector {
+    pub fn from_slice(x: &[f64], ts: usize) -> Self {
+        let n = x.len();
+        let nt = n.div_ceil(ts);
+        let segs = (0..nt)
+            .map(|i| {
+                let lo = i * ts;
+                let hi = n.min(lo + ts);
+                x[lo..hi].to_vec().into_boxed_slice()
+            })
+            .collect();
+        TileVector { n, ts, segs }
+    }
+
+    pub fn nt(&self) -> usize {
+        self.segs.len()
+    }
+    pub fn seg(&self, i: usize) -> &[f64] {
+        &self.segs[i]
+    }
+    pub fn seg_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.segs[i]
+    }
+    pub fn seg_ptr(&self, i: usize) -> TilePtr {
+        TilePtr {
+            ptr: self.segs[i].as_ptr() as *mut f64,
+            len: self.segs[i].len(),
+        }
+    }
+    pub fn to_vec(&self) -> Vec<f64> {
+        let mut out = Vec::with_capacity(self.n);
+        for s in &self.segs {
+            out.extend_from_slice(s);
+        }
+        out
+    }
+    pub fn dot_self(&self) -> f64 {
+        self.segs
+            .iter()
+            .flat_map(|s| s.iter())
+            .map(|v| v * v)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn tile_dims_with_edges() {
+        let tm = TileMatrix::zeros(10, 4); // tiles: 4,4,2
+        assert_eq!(tm.nt(), 3);
+        assert_eq!(tm.tile_rows(0), 4);
+        assert_eq!(tm.tile_rows(2), 2);
+        assert_eq!(tm.tile(2, 1).len(), 2 * 4);
+        assert_eq!(tm.tile(2, 2).len(), 4);
+    }
+
+    #[test]
+    fn dense_round_trip() {
+        let mut rng = Pcg64::seed_from_u64(21);
+        let n = 23;
+        let mut m = Matrix::from_fn(n, n, |_, _| rng.normal());
+        // make symmetric
+        let mt = m.transpose();
+        for i in 0..n {
+            for j in 0..n {
+                m[(i, j)] = 0.5 * (m[(i, j)] + mt[(i, j)]);
+            }
+        }
+        let tm = TileMatrix::from_dense_lower(&m, 5);
+        let back = tm.to_dense();
+        assert!(m.max_abs_diff(&back) < 1e-15);
+    }
+
+    #[test]
+    fn get_set_symmetric() {
+        let mut tm = TileMatrix::zeros(7, 3);
+        tm.set(1, 5, 4.25); // upper -> stored mirrored
+        assert_eq!(tm.get(1, 5), 4.25);
+        assert_eq!(tm.get(5, 1), 4.25);
+    }
+
+    #[test]
+    fn diag_sum_logdet_form() {
+        let mut tm = TileMatrix::zeros(4, 2);
+        for i in 0..4 {
+            tm.set(i, i, (i + 1) as f64);
+        }
+        let want: f64 = (1..=4).map(|v| (v as f64).ln()).sum();
+        assert!((tm.diag_sum(f64::ln) - want).abs() < 1e-14);
+    }
+
+    #[test]
+    fn tile_vector_segments() {
+        let x: Vec<f64> = (0..11).map(|v| v as f64).collect();
+        let tv = TileVector::from_slice(&x, 4);
+        assert_eq!(tv.nt(), 3);
+        assert_eq!(tv.seg(0), &[0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(tv.seg(2), &[8.0, 9.0, 10.0]);
+        assert_eq!(tv.to_vec(), x);
+        let ds: f64 = x.iter().map(|v| v * v).sum();
+        assert!((tv.dot_self() - ds).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tile_ptr_round_trip() {
+        let tm = TileMatrix::zeros(4, 2);
+        let p = tm.tile_ptr(1, 0);
+        unsafe {
+            p.as_mut()[0] = 3.5;
+        }
+        assert_eq!(tm.tile(1, 0)[0], 3.5);
+        assert_eq!(tm.get(2, 0), 3.5);
+    }
+}

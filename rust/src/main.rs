@@ -1,0 +1,277 @@
+//! `exageostat` CLI — the launcher for the reproduction: simulation, MLE
+//! (all four variants), prediction, Fisher, MLOE/MMOM, the SST tutorial
+//! and the structure dump.
+//!
+//! Examples:
+//! ```text
+//! exageostat simulate --n 1600 --theta 1,0.1,0.5 --seed 0 --out data.csv
+//! exageostat mle --data data.csv --variant exact --ncores 4 --ts 160
+//! exageostat mle --n 1600 --theta 1,0.1,0.5 --variant tlr --tlr-tol 1e-7
+//! exageostat predict --data data.csv --theta 1,0.1,0.5 --grid 40
+//! exageostat fisher --n 400 --theta 1,0.1,0.5
+//! exageostat sst --days 4
+//! exageostat structures --n 1024 --ts 128
+//! ```
+
+use anyhow::Context;
+use exageostat::api::{ExaGeoStat, Hardware, MleOptions};
+use exageostat::cli::Args;
+use exageostat::covariance::Location;
+use exageostat::data::{csv, sst};
+use exageostat::likelihood::Variant;
+use exageostat::scheduler::pool::Policy;
+use std::path::PathBuf;
+
+fn hardware(args: &Args) -> anyhow::Result<Hardware> {
+    Ok(Hardware {
+        ncores: args.get_usize("ncores", 1)?,
+        ngpus: args.get_usize("ngpus", 0)?,
+        ts: args.get_usize("ts", 320)?,
+        pgrid: args.get_usize("pgrid", 1)?,
+        qgrid: args.get_usize("qgrid", 1)?,
+        policy: Policy::parse(&args.get_or("sched", "lws"))?,
+    })
+}
+
+fn variant(args: &Args) -> anyhow::Result<Variant> {
+    Ok(match args.get_or("variant", "exact").as_str() {
+        "exact" => Variant::Exact,
+        "dst" => Variant::Dst {
+            band: args.get_usize("band", 1)?,
+        },
+        "tlr" => Variant::Tlr {
+            tol: args.get_f64("tlr-tol", 1e-7)?,
+            max_rank: args.get_usize("max-rank", usize::MAX)?,
+        },
+        "mp" => Variant::Mp {
+            band: args.get_usize("band", 1)?,
+        },
+        other => anyhow::bail!("unknown variant {other:?} (exact|dst|tlr|mp)"),
+    })
+}
+
+fn load_or_simulate(
+    args: &Args,
+    exa: &ExaGeoStat,
+) -> anyhow::Result<exageostat::simulation::GeoData> {
+    if let Some(path) = args.get("data") {
+        csv::read_geodata(&PathBuf::from(path)).with_context(|| format!("reading {path}"))
+    } else {
+        let n = args.get_usize("n", 1600)?;
+        let theta = args.get_f64_list("theta", &[1.0, 0.1, 0.5])?;
+        let seed = args.get_usize("seed", 0)? as u64;
+        exa.simulate_data_exact(
+            &args.get_or("kernel", "ugsm-s"),
+            &theta,
+            &args.get_or("dmetric", "euclidean"),
+            n,
+            seed,
+        )
+    }
+}
+
+fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    let exa = ExaGeoStat::init(hardware(args)?);
+    let data = load_or_simulate(args, &exa)?;
+    let out = args.get_or("out", "data.csv");
+    csv::write_geodata(&PathBuf::from(&out), &data)?;
+    println!(
+        "wrote {} locations to {out} (z mean {:.4}, sd {:.4})",
+        data.n(),
+        mean(&data.z),
+        sd(&data.z)
+    );
+    Ok(())
+}
+
+fn cmd_mle(args: &Args) -> anyhow::Result<()> {
+    let exa = ExaGeoStat::init(hardware(args)?);
+    let data = load_or_simulate(args, &exa)?;
+    let kernel = args.get_or("kernel", "ugsm-s");
+    let nparams = exageostat::covariance::kernel_by_name(&kernel)?.nparams();
+    let opt = MleOptions {
+        clb: args.get_f64_list("clb", &vec![0.001; nparams])?,
+        cub: args.get_f64_list("cub", &vec![5.0; nparams])?,
+        tol: args.get_f64("tol", 1e-4)?,
+        max_iters: args.get_usize("max-iters", 0)?,
+        method: exageostat::optimizer::Method::parse(&args.get_or("method", "bobyqa"))?,
+    };
+    let v = variant(args)?;
+    let r = exa.mle(&data, &kernel, &args.get_or("dmetric", "euclidean"), &opt, v)?;
+    println!("variant         : {v:?}");
+    println!("theta_hat       : {:?}", r.theta);
+    println!("loglik          : {:.6}", r.loglik);
+    println!("iterations      : {}", r.iters);
+    println!("time_per_iter   : {:.4} s", r.time_per_iter);
+    println!("total_time      : {:.4} s", r.total_time);
+    Ok(())
+}
+
+fn cmd_predict(args: &Args) -> anyhow::Result<()> {
+    let exa = ExaGeoStat::init(hardware(args)?);
+    let data = load_or_simulate(args, &exa)?;
+    let theta = args.get_f64_list("theta", &[1.0, 0.1, 0.5])?;
+    let g = args.get_usize("grid", 20)?;
+    let new_locs: Vec<Location> = (0..g * g)
+        .map(|k| {
+            Location::new(
+                (k % g) as f64 / (g - 1).max(1) as f64,
+                (k / g) as f64 / (g - 1).max(1) as f64,
+            )
+        })
+        .collect();
+    let pred = exa.exact_predict(
+        &data,
+        &new_locs,
+        &args.get_or("kernel", "ugsm-s"),
+        &args.get_or("dmetric", "euclidean"),
+        &theta,
+        true,
+    )?;
+    let var = pred.variance.unwrap();
+    println!(
+        "predicted {} grid points: mean in [{:.3}, {:.3}], kriging sd in [{:.3}, {:.3}]",
+        new_locs.len(),
+        pred.mean.iter().cloned().fold(f64::INFINITY, f64::min),
+        pred.mean.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+        var.iter().cloned().fold(f64::INFINITY, f64::min).sqrt(),
+        var.iter().cloned().fold(f64::NEG_INFINITY, f64::max).sqrt(),
+    );
+    if let Some(out) = args.get("out") {
+        let gd = exageostat::simulation::GeoData {
+            locs: new_locs,
+            z: pred.mean,
+        };
+        csv::write_geodata(&PathBuf::from(out), &gd)?;
+        println!("wrote predictions to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_fisher(args: &Args) -> anyhow::Result<()> {
+    let exa = ExaGeoStat::init(hardware(args)?);
+    let data = load_or_simulate(args, &exa)?;
+    let theta = args.get_f64_list("theta", &[1.0, 0.1, 0.5])?;
+    let r = exa.exact_fisher(
+        &data.locs,
+        &args.get_or("kernel", "ugsm-s"),
+        &args.get_or("dmetric", "euclidean"),
+        &theta,
+    )?;
+    println!("Fisher information at theta = {theta:?}:");
+    for i in 0..theta.len() {
+        let row: Vec<String> = (0..theta.len())
+            .map(|j| format!("{:>12.4}", r.fisher[(i, j)]))
+            .collect();
+        println!("  [{}]", row.join(", "));
+    }
+    println!("asymptotic std errs: {:?}", r.std_errs);
+    Ok(())
+}
+
+fn cmd_mloe_mmom(args: &Args) -> anyhow::Result<()> {
+    let exa = ExaGeoStat::init(hardware(args)?);
+    let data = load_or_simulate(args, &exa)?;
+    let theta_true = args.get_f64_list("theta", &[1.0, 0.1, 0.5])?;
+    let theta_approx = args.get_f64_list("theta-approx", &[1.0, 0.2, 1.0])?;
+    let g = args.get_usize("grid", 8)?;
+    let new_locs: Vec<Location> = (0..g * g)
+        .map(|k| {
+            Location::new(
+                (k % g) as f64 / (g - 1).max(1) as f64,
+                (k / g) as f64 / (g - 1).max(1) as f64,
+            )
+        })
+        .collect();
+    let r = exa.exact_mloe_mmom(
+        &data.locs,
+        &new_locs,
+        &args.get_or("kernel", "ugsm-s"),
+        &args.get_or("dmetric", "euclidean"),
+        &theta_true,
+        &theta_approx,
+    )?;
+    println!("MLOE = {:.6}, MMOM = {:.6}", r.mloe, r.mmom);
+    Ok(())
+}
+
+fn cmd_structures(args: &Args) -> anyhow::Result<()> {
+    let n = args.get_usize("n", 1024)?;
+    let ts = args.get_usize("ts", 128)?;
+    for (name, band) in [("exact", None), ("dst band=1", Some(1))] {
+        println!("{name}: lower tile map (D = dense, . = annihilated)");
+        for row in exageostat::likelihood::exact::structure_map(n, ts, band) {
+            println!("  {row}");
+        }
+    }
+    println!("mp band=1: as dst map but '.' tiles stored in f32 instead of zeroed");
+    println!("tlr: per-tile ranks — see `cargo bench --bench ablation_variants`");
+    Ok(())
+}
+
+fn cmd_sst(args: &Args) -> anyhow::Result<()> {
+    // Thin wrapper over the tutorial driver (examples/sst_tutorial.rs has
+    // the full annotated version with kriging + Table VI summary).
+    let days = args.get_usize("days", 4)?;
+    let cfg = sst::SstConfig {
+        days,
+        ..sst::SstConfig::default()
+    };
+    let exa = ExaGeoStat::init(hardware(args)?);
+    for day in 0..days {
+        let d = sst::generate_day(&cfg, day, &exa.ctx())?;
+        let (locs, z) = d.valid_observations();
+        if d.valid_fraction() < 0.5 {
+            println!(
+                "day {day}: {:.0}% missing — skipped",
+                100.0 * (1.0 - d.valid_fraction())
+            );
+            continue;
+        }
+        let (coef, resid) = sst::ols_linear_mean(&locs, &z);
+        let train = exageostat::simulation::GeoData { locs, z: resid };
+        let opt = MleOptions::new(vec![0.01, 0.01, 0.01], vec![20.0, 20.0, 5.0], 1e-4, 20);
+        let r = exa.exact_mle(&train, "ugsm-s", "euclidean", &opt)?;
+        println!(
+            "day {day}: mean=({:.2},{:.3},{:.3}) theta_hat=({:.2},{:.2},{:.2}) truth=({:.2},{:.2},{:.2}) [{} iters, {:.2}s/iter]",
+            coef[0], coef[1], coef[2],
+            r.theta[0], r.theta[1], r.theta[2],
+            d.theta_true[0], d.theta_true[1], d.theta_true[2],
+            r.iters, r.time_per_iter
+        );
+    }
+    Ok(())
+}
+
+fn mean(v: &[f64]) -> f64 {
+    v.iter().sum::<f64>() / v.len() as f64
+}
+fn sd(v: &[f64]) -> f64 {
+    let m = mean(v);
+    (v.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / v.len() as f64).sqrt()
+}
+
+fn main() {
+    let args = Args::parse();
+    let result = match args.subcommand.as_deref() {
+        Some("simulate") => cmd_simulate(&args),
+        Some("mle") => cmd_mle(&args),
+        Some("predict") => cmd_predict(&args),
+        Some("fisher") => cmd_fisher(&args),
+        Some("mloe-mmom") => cmd_mloe_mmom(&args),
+        Some("structures") => cmd_structures(&args),
+        Some("sst") => cmd_sst(&args),
+        _ => {
+            eprintln!(
+                "usage: exageostat <simulate|mle|predict|fisher|mloe-mmom|structures|sst> [--flags]\n\
+                 common flags: --ncores N --ts N --sched eager|prio|lws|random\n\
+                 see rust/src/main.rs header for examples"
+            );
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

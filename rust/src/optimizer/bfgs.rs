@@ -1,0 +1,156 @@
+//! Projected BFGS with finite-difference gradients — the `optim`
+//! `method = "BFGS"` analogue that fields' `MLESpatialProcess` defaults to
+//! (Table IV).  The paper notes this method "is fast but not stable in many
+//! cases"; our Table V / Fig 4 benches reproduce exactly that behaviour, so
+//! the implementation deliberately follows the plain `optim` recipe
+//! (forward-difference gradients, Armijo backtracking, bound projection)
+//! rather than a hardened L-BFGS-B.
+
+use super::{Bounds, Instrumented, OptOptions, OptResult};
+
+pub fn minimize(
+    f: impl FnMut(&[f64]) -> f64,
+    bounds: Bounds,
+    opts: &OptOptions,
+) -> OptResult {
+    let d = bounds.dim();
+    assert_eq!(opts.init.len(), d, "init dimension mismatch");
+    let max_evals = opts.effective_max();
+    let mut obj = Instrumented::new(f, bounds);
+
+    let mut x = opts.init.clone();
+    obj.bounds.clamp(&mut x);
+    let mut fx = obj.eval(&x);
+
+    // inverse Hessian approximation
+    let mut h = vec![0.0; d * d];
+    for i in 0..d {
+        h[i + i * d] = 1.0;
+    }
+
+    let fd_grad = |obj: &mut Instrumented, x: &[f64], fx: f64| -> Vec<f64> {
+        let mut g = vec![0.0; d];
+        for i in 0..d {
+            let hstep = 1e-7 * (1.0 + x[i].abs());
+            let mut xp = x.to_vec();
+            // step inward at the upper bound
+            let (step, sign) = if xp[i] + hstep <= obj.bounds.hi[i] {
+                (hstep, 1.0)
+            } else {
+                (-hstep, -1.0)
+            };
+            xp[i] += step;
+            let fp = obj.eval(&xp);
+            g[i] = sign * (fp - fx) / hstep;
+        }
+        g
+    };
+
+    let mut g = fd_grad(&mut obj, &x, fx);
+    while obj.evals < max_evals {
+        // direction p = -H g
+        let mut p = vec![0.0; d];
+        for i in 0..d {
+            for j in 0..d {
+                p[i] -= h[i + j * d] * g[j];
+            }
+        }
+        // backtracking line search with projection
+        let mut alpha = 1.0;
+        let gp: f64 = g.iter().zip(&p).map(|(a, b)| a * b).sum();
+        let descent = if gp < 0.0 { gp } else { -g.iter().map(|v| v * v).sum::<f64>() };
+        let dir: Vec<f64> = if gp < 0.0 { p } else { g.iter().map(|v| -v).collect() };
+        let mut accepted = false;
+        let mut xn = x.clone();
+        let mut fn_ = fx;
+        for _ in 0..30 {
+            let mut cand: Vec<f64> = x.iter().zip(&dir).map(|(a, b)| a + alpha * b).collect();
+            obj.bounds.clamp(&mut cand);
+            let fc = obj.eval(&cand);
+            if fc <= fx + 1e-4 * alpha * descent || fc < fx {
+                xn = cand;
+                fn_ = fc;
+                accepted = true;
+                break;
+            }
+            alpha *= 0.5;
+            if obj.evals >= max_evals {
+                break;
+            }
+        }
+        if !accepted || (fx - fn_).abs() < opts.tol {
+            break;
+        }
+        let gn = fd_grad(&mut obj, &xn, fn_);
+        // BFGS update on the projected step
+        let s: Vec<f64> = xn.iter().zip(&x).map(|(a, b)| a - b).collect();
+        let y: Vec<f64> = gn.iter().zip(&g).map(|(a, b)| a - b).collect();
+        let sy: f64 = s.iter().zip(&y).map(|(a, b)| a * b).sum();
+        if sy > 1e-12 {
+            // H <- (I - s y^T / sy) H (I - y s^T / sy) + s s^T / sy
+            let rho = 1.0 / sy;
+            // t = H y
+            let mut t = vec![0.0; d];
+            for i in 0..d {
+                for j in 0..d {
+                    t[i] += h[i + j * d] * y[j];
+                }
+            }
+            let yty_h: f64 = y.iter().zip(&t).map(|(a, b)| a * b).sum();
+            for i in 0..d {
+                for j in 0..d {
+                    h[i + j * d] += rho * rho * yty_h * s[i] * s[j]
+                        - rho * (s[i] * t[j] + t[i] * s[j])
+                        + rho * s[i] * s[j];
+                }
+            }
+        }
+        x = xn;
+        fx = fn_;
+        g = gn;
+        let gnorm: f64 = g.iter().map(|v| v * v).sum::<f64>().sqrt();
+        if gnorm < opts.tol.max(1e-12) {
+            break;
+        }
+    }
+    obj.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimizer::testfns::sphere;
+
+    #[test]
+    fn converges_on_ill_conditioned_quadratic() {
+        // f = x^2 + 100 y^2
+        let f = |x: &[f64]| x[0] * x[0] + 100.0 * x[1] * x[1];
+        let b = Bounds::new(vec![-10.0, -10.0], vec![10.0, 10.0]).unwrap();
+        let r = minimize(
+            f,
+            b,
+            &OptOptions {
+                tol: 1e-14,
+                max_iters: 0,
+                init: vec![5.0, 5.0],
+            },
+        );
+        assert!(r.fx < 1e-6, "fx {}", r.fx);
+    }
+
+    #[test]
+    fn boundary_start_makes_progress() {
+        // paper-style: start exactly at the lower bounds
+        let b = Bounds::new(vec![0.001, 0.001], vec![5.0, 5.0]).unwrap();
+        let r = minimize(
+            sphere(&[2.0, 3.0]),
+            b,
+            &OptOptions {
+                tol: 1e-12,
+                max_iters: 0,
+                init: vec![0.001, 0.001],
+            },
+        );
+        assert!((r.x[0] - 2.0).abs() < 1e-3 && (r.x[1] - 3.0).abs() < 1e-3, "{:?}", r.x);
+    }
+}

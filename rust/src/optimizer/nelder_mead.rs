@@ -1,0 +1,149 @@
+//! Nelder–Mead simplex with box projection — the default `optim` method
+//! GeoR's `likfit` uses (Table IV).  Standard coefficients
+//! (reflection 1, expansion 2, contraction 1/2, shrink 1/2).
+
+use super::{Bounds, Instrumented, OptOptions, OptResult};
+
+pub fn minimize(
+    f: impl FnMut(&[f64]) -> f64,
+    bounds: Bounds,
+    opts: &OptOptions,
+) -> OptResult {
+    let d = bounds.dim();
+    assert_eq!(opts.init.len(), d, "init dimension mismatch");
+    let max_evals = opts.effective_max();
+    let mut obj = Instrumented::new(f, bounds);
+
+    // Initial simplex: init + per-coordinate offsets (5% of box width).
+    let mut x0 = opts.init.clone();
+    obj.bounds.clamp(&mut x0);
+    let mut simplex: Vec<(Vec<f64>, f64)> = Vec::with_capacity(d + 1);
+    let fx0 = obj.eval(&x0);
+    simplex.push((x0.clone(), fx0));
+    for i in 0..d {
+        let mut xi = x0.clone();
+        let step = 0.05 * obj.bounds.width(i);
+        // step inward if at the upper bound
+        xi[i] = if xi[i] + step <= obj.bounds.hi[i] {
+            xi[i] + step
+        } else {
+            xi[i] - step
+        };
+        let v = obj.eval(&xi);
+        simplex.push((xi, v));
+    }
+
+    while obj.evals < max_evals {
+        simplex.sort_by(|a, b| a.1.total_cmp(&b.1));
+        let fbest = simplex[0].1;
+        let fworst = simplex[d].1;
+        // convergence: value spread and simplex diameter
+        let spread = (fworst - fbest).abs();
+        let diam = (0..d)
+            .map(|i| {
+                let mn = simplex.iter().map(|(x, _)| x[i]).fold(f64::INFINITY, f64::min);
+                let mx = simplex
+                    .iter()
+                    .map(|(x, _)| x[i])
+                    .fold(f64::NEG_INFINITY, f64::max);
+                mx - mn
+            })
+            .fold(0.0, f64::max);
+        if spread < opts.tol && diam < opts.tol.sqrt() * 1e-2 {
+            break;
+        }
+
+        // centroid of all but worst
+        let mut c = vec![0.0; d];
+        for (x, _) in simplex.iter().take(d) {
+            for i in 0..d {
+                c[i] += x[i] / d as f64;
+            }
+        }
+        let worst = simplex[d].0.clone();
+        // Candidates are clamped into the box *before* entering the
+        // simplex: otherwise reflections drift outside where the clamped
+        // objective is flat and the simplex degenerates.
+        let bounds = obj.bounds.clone();
+        let reflect = move |alpha: f64| -> Vec<f64> {
+            let mut x: Vec<f64> =
+                (0..d).map(|i| c[i] + alpha * (c[i] - worst[i])).collect();
+            bounds.clamp(&mut x);
+            x
+        };
+
+        let xr = reflect(1.0);
+        let fr = obj.eval(&xr);
+        if fr < simplex[0].1 {
+            // try expansion
+            let xe = reflect(2.0);
+            let fe = obj.eval(&xe);
+            simplex[d] = if fe < fr { (xe, fe) } else { (xr, fr) };
+        } else if fr < simplex[d - 1].1 {
+            simplex[d] = (xr, fr);
+        } else {
+            // contraction (outside if fr better than worst, else inside)
+            let xc = if fr < simplex[d].1 {
+                reflect(0.5)
+            } else {
+                reflect(-0.5)
+            };
+            let fc = obj.eval(&xc);
+            if fc < simplex[d].1.min(fr) {
+                simplex[d] = (xc, fc);
+            } else {
+                // shrink toward best
+                let best = simplex[0].0.clone();
+                for k in 1..=d {
+                    let xs: Vec<f64> = (0..d)
+                        .map(|i| best[i] + 0.5 * (simplex[k].0[i] - best[i]))
+                        .collect();
+                    let fs = obj.eval(&xs);
+                    simplex[k] = (xs, fs);
+                    if obj.evals >= max_evals {
+                        break;
+                    }
+                }
+            }
+        }
+    }
+    obj.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimizer::testfns::sphere;
+
+    #[test]
+    fn quadratic_1d_exact_boundary_start() {
+        let b = Bounds::new(vec![0.0], vec![10.0]).unwrap();
+        let r = minimize(
+            sphere(&[3.0]),
+            b,
+            &OptOptions {
+                tol: 1e-12,
+                max_iters: 0,
+                init: vec![0.0], // starts at the lower bound like the R API
+            },
+        );
+        assert!((r.x[0] - 3.0).abs() < 1e-5, "{:?}", r.x);
+    }
+
+    #[test]
+    fn telemetry_populated() {
+        let b = Bounds::new(vec![-1.0, -1.0], vec![1.0, 1.0]).unwrap();
+        let r = minimize(
+            sphere(&[0.2, -0.3]),
+            b,
+            &OptOptions {
+                tol: 1e-10,
+                max_iters: 0,
+                init: vec![0.9, 0.9],
+            },
+        );
+        assert!(r.iters > 5);
+        assert!(r.total_time >= 0.0);
+        assert!(r.time_per_iter * r.iters as f64 <= r.total_time * 1.01 + 1e-9);
+    }
+}

@@ -1,0 +1,382 @@
+//! Prediction-stage tools of Table II: kriging (`exact_predict`), the
+//! Fisher information matrix (`exact_fisher`) and the MLOE/MMOM prediction-
+//! efficiency metrics (`exact_mloe_mmom`, Hong et al. 2021).
+
+use crate::covariance::{build_cov_dense, build_cross_cov, CovKernel, DistanceMetric, Location};
+use crate::linalg::blas::{dpotrf, dtrsm_llnn_raw, dtrsv_ln, dtrsv_lt};
+use crate::linalg::matrix::Matrix;
+
+/// Kriging output.
+#[derive(Clone, Debug)]
+pub struct Prediction {
+    pub mean: Vec<f64>,
+    /// Kriging variance per predicted location (`None` if not requested).
+    pub variance: Option<Vec<f64>>,
+}
+
+/// Exact simple kriging with a global neighbourhood (univariate kernels):
+/// `mean = C_no Sigma^{-1} z`, `var_i = C(0) - || L^{-1} c_i ||^2`.
+pub fn exact_predict(
+    kernel: &dyn CovKernel,
+    theta: &[f64],
+    obs_locs: &[Location],
+    obs_z: &[f64],
+    new_locs: &[Location],
+    metric: DistanceMetric,
+    with_variance: bool,
+) -> anyhow::Result<Prediction> {
+    anyhow::ensure!(kernel.nvariates() == 1, "exact_predict is univariate");
+    anyhow::ensure!(obs_locs.len() == obs_z.len(), "obs shape mismatch");
+    kernel.validate(theta)?;
+    let n = obs_locs.len();
+    let m = new_locs.len();
+
+    let mut l = build_cov_dense(kernel, theta, obs_locs, metric);
+    dpotrf(&mut l).map_err(|e| anyhow::anyhow!("kriging covariance not SPD: {e}"))?;
+
+    // a = Sigma^{-1} z
+    let mut a = obs_z.to_vec();
+    dtrsv_ln(n, l.as_slice(), n, &mut a);
+    dtrsv_lt(n, l.as_slice(), n, &mut a);
+
+    // C_on: obs x new cross-covariance (column per new location)
+    let c_on = build_cross_cov(kernel, theta, obs_locs, new_locs, metric);
+    let mut mean = vec![0.0; m];
+    for j in 0..m {
+        mean[j] = c_on
+            .col(j)
+            .iter()
+            .zip(&a)
+            .map(|(c, av)| c * av)
+            .sum::<f64>();
+    }
+
+    let variance = if with_variance {
+        // W = L^{-1} C_on; var_j = C(0) - ||W_:,j||^2
+        let mut w = c_on.clone();
+        dtrsm_llnn_raw(n, m, l.as_slice(), n, w.as_mut_slice(), n);
+        let c0 = kernel.cov(theta, 0.0, 0.0, 0, 0, true);
+        Some(
+            (0..m)
+                .map(|j| {
+                    let s: f64 = w.col(j).iter().map(|v| v * v).sum();
+                    (c0 - s).max(0.0)
+                })
+                .collect(),
+        )
+    } else {
+        None
+    };
+
+    Ok(Prediction { mean, variance })
+}
+
+/// Fisher information of the covariance parameters at `theta`:
+/// `F_ij = 1/2 tr(Sigma^{-1} dSigma_i Sigma^{-1} dSigma_j)`, with the
+/// covariance derivatives taken by central finite differences (the
+/// smoothness derivative has no tractable closed form — d/dnu hits
+/// dK_nu/dnu).  Also returns asymptotic standard errors
+/// `sqrt(diag(F^{-1}))`.
+pub struct FisherResult {
+    pub fisher: Matrix,
+    pub std_errs: Vec<f64>,
+}
+
+pub fn exact_fisher(
+    kernel: &dyn CovKernel,
+    theta: &[f64],
+    locs: &[Location],
+    metric: DistanceMetric,
+) -> anyhow::Result<FisherResult> {
+    kernel.validate(theta)?;
+    let p = theta.len();
+    let dim = kernel.nvariates() * locs.len();
+
+    let mut l = build_cov_dense(kernel, theta, locs, metric);
+    dpotrf(&mut l).map_err(|e| anyhow::anyhow!("fisher covariance not SPD: {e}"))?;
+
+    // W_i = Sigma^{-1} dSigma_i  (solve for each parameter)
+    let mut ws: Vec<Matrix> = Vec::with_capacity(p);
+    for i in 0..p {
+        let h = 1e-5 * (1.0 + theta[i].abs());
+        let mut tp = theta.to_vec();
+        tp[i] += h;
+        let mut tm = theta.to_vec();
+        tm[i] -= h;
+        // keep within validity (e.g. rho bounds): fall back to forward diff
+        let (sp, sm, denom) = if kernel.validate(&tm).is_ok() {
+            (
+                build_cov_dense(kernel, &tp, locs, metric),
+                build_cov_dense(kernel, &tm, locs, metric),
+                2.0 * h,
+            )
+        } else {
+            (
+                build_cov_dense(kernel, &tp, locs, metric),
+                build_cov_dense(kernel, theta, locs, metric),
+                h,
+            )
+        };
+        let mut d = Matrix::zeros(dim, dim);
+        for c in 0..dim {
+            for r in 0..dim {
+                d[(r, c)] = (sp[(r, c)] - sm[(r, c)]) / denom;
+            }
+        }
+        // Solve Sigma W = dSigma: W = L^{-T} (L^{-1} dSigma)
+        dtrsm_llnn_raw(dim, dim, l.as_slice(), dim, d.as_mut_slice(), dim);
+        crate::linalg::blas::dtrsm_lltn_raw(dim, dim, l.as_slice(), dim, d.as_mut_slice(), dim);
+        ws.push(d);
+    }
+
+    let mut f = Matrix::zeros(p, p);
+    for i in 0..p {
+        for j in 0..=i {
+            // tr(W_i W_j) = sum_{r,c} W_i[r,c] * W_j[c,r]
+            let mut tr = 0.0;
+            for c in 0..dim {
+                for r in 0..dim {
+                    tr += ws[i][(r, c)] * ws[j][(c, r)];
+                }
+            }
+            f[(i, j)] = 0.5 * tr;
+            f[(j, i)] = 0.5 * tr;
+        }
+    }
+
+    // std errs from F^{-1} diagonal
+    let mut lf = f.clone();
+    let std_errs = match dpotrf(&mut lf) {
+        Ok(_) => {
+            let mut errs = Vec::with_capacity(p);
+            for i in 0..p {
+                let mut e = vec![0.0; p];
+                e[i] = 1.0;
+                dtrsv_ln(p, lf.as_slice(), p, &mut e);
+                dtrsv_lt(p, lf.as_slice(), p, &mut e);
+                errs.push(e[i].max(0.0).sqrt());
+            }
+            errs
+        }
+        Err(_) => vec![f64::NAN; p],
+    };
+
+    Ok(FisherResult {
+        fisher: f,
+        std_errs,
+    })
+}
+
+/// MLOE / MMOM prediction-efficiency metrics (Hong et al. 2021):
+/// compares kriging under an approximate parameter vector `theta_a`
+/// against the truth `theta_t`.
+///
+/// * MLOE — mean loss of efficiency: `mean(E_t(y_a)/E_t(y_t) - 1) >= 0`.
+/// * MMOM — mean misspecification of the mean square error:
+///   `mean(E_a(y_a)/E_t(y_a) - 1)`.
+#[derive(Copy, Clone, Debug)]
+pub struct MloeMmom {
+    pub mloe: f64,
+    pub mmom: f64,
+}
+
+pub fn exact_mloe_mmom(
+    kernel: &dyn CovKernel,
+    theta_true: &[f64],
+    theta_approx: &[f64],
+    obs_locs: &[Location],
+    new_locs: &[Location],
+    metric: DistanceMetric,
+) -> anyhow::Result<MloeMmom> {
+    anyhow::ensure!(kernel.nvariates() == 1, "mloe/mmom is univariate");
+    kernel.validate(theta_true)?;
+    kernel.validate(theta_approx)?;
+    let n = obs_locs.len();
+
+    let mut lt = build_cov_dense(kernel, theta_true, obs_locs, metric);
+    let sigma_t = lt.clone();
+    dpotrf(&mut lt).map_err(|e| anyhow::anyhow!("true covariance not SPD: {e}"))?;
+    let mut la = build_cov_dense(kernel, theta_approx, obs_locs, metric);
+    dpotrf(&mut la).map_err(|e| anyhow::anyhow!("approx covariance not SPD: {e}"))?;
+
+    let c0_t = kernel.cov(theta_true, 0.0, 0.0, 0, 0, true);
+    let c0_a = kernel.cov(theta_approx, 0.0, 0.0, 0, 0, true);
+
+    let mut sum_loe = 0.0;
+    let mut sum_mom = 0.0;
+    for s0 in new_locs {
+        let ct: Vec<f64> = obs_locs
+            .iter()
+            .map(|s| {
+                let d = crate::covariance::distance(metric, s, s0);
+                kernel.cov(theta_true, d, (s.t - s0.t).abs(), 0, 0, false)
+            })
+            .collect();
+        let ca: Vec<f64> = obs_locs
+            .iter()
+            .map(|s| {
+                let d = crate::covariance::distance(metric, s, s0);
+                kernel.cov(theta_approx, d, (s.t - s0.t).abs(), 0, 0, false)
+            })
+            .collect();
+        // w_t = Sigma_t^{-1} c_t ; w_a = Sigma_a^{-1} c_a
+        let solve = |l: &Matrix, c: &[f64]| -> Vec<f64> {
+            let mut w = c.to_vec();
+            dtrsv_ln(n, l.as_slice(), n, &mut w);
+            dtrsv_lt(n, l.as_slice(), n, &mut w);
+            w
+        };
+        let wt = solve(&lt, &ct);
+        let wa = solve(&la, &ca);
+        // E_t(y_t) = c0 - c_t' w_t
+        let et_t = c0_t - dot(&ct, &wt);
+        // E_t(y_a) = c0 - 2 w_a' c_t + w_a' Sigma_t w_a
+        let sw = sigma_t.matvec(&wa);
+        let et_a = c0_t - 2.0 * dot(&wa, &ct) + dot(&wa, &sw);
+        // E_a(y_a) = c0_a - c_a' w_a
+        let ea_a = c0_a - dot(&ca, &wa);
+        if et_t > 1e-14 && et_a > 1e-14 {
+            sum_loe += et_a / et_t - 1.0;
+            sum_mom += ea_a / et_a - 1.0;
+        }
+    }
+    let m = new_locs.len() as f64;
+    Ok(MloeMmom {
+        mloe: sum_loe / m,
+        mmom: sum_mom / m,
+    })
+}
+
+fn dot(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::covariance::kernel_by_name;
+    use crate::rng::Pcg64;
+
+    fn setup(n: usize, seed: u64) -> (Vec<Location>, Vec<f64>) {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let locs: Vec<Location> = (0..n)
+            .map(|_| Location::new(rng.next_f64(), rng.next_f64()))
+            .collect();
+        let z: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        (locs, z)
+    }
+
+    #[test]
+    fn kriging_interpolates_observations() {
+        let k = kernel_by_name("ugsm-s").unwrap();
+        let theta = [1.0, 0.2, 1.5];
+        let (locs, z) = setup(30, 71);
+        let pred = exact_predict(
+            k.as_ref(),
+            &theta,
+            &locs,
+            &z,
+            &locs[..5],
+            DistanceMetric::Euclidean,
+            true,
+        )
+        .unwrap();
+        for i in 0..5 {
+            assert!(
+                (pred.mean[i] - z[i]).abs() < 1e-7,
+                "pred {} vs obs {}",
+                pred.mean[i],
+                z[i]
+            );
+            assert!(pred.variance.as_ref().unwrap()[i] < 1e-7);
+        }
+    }
+
+    #[test]
+    fn kriging_variance_grows_with_distance() {
+        let k = kernel_by_name("ugsm-s").unwrap();
+        let theta = [1.0, 0.1, 0.5];
+        let (locs, z) = setup(40, 72);
+        let new_locs = vec![
+            Location::new(locs[0].x + 0.01, locs[0].y), // near an obs
+            Location::new(5.0, 5.0),                    // far away
+        ];
+        let pred = exact_predict(
+            k.as_ref(),
+            &theta,
+            &locs,
+            &z,
+            &new_locs,
+            DistanceMetric::Euclidean,
+            true,
+        )
+        .unwrap();
+        let v = pred.variance.unwrap();
+        assert!(v[0] < v[1], "{} !< {}", v[0], v[1]);
+        // far away: variance ~ sigma^2, mean ~ 0 (prior)
+        assert!((v[1] - 1.0).abs() < 1e-6);
+        assert!(pred.mean[1].abs() < 1e-6);
+    }
+
+    #[test]
+    fn fisher_is_symmetric_pd_and_scales_with_n() {
+        let k = kernel_by_name("ugsm-s").unwrap();
+        let theta = [1.0, 0.1, 0.5];
+        let (locs, _) = setup(36, 73);
+        let f1 = exact_fisher(k.as_ref(), &theta, &locs[..18], DistanceMetric::Euclidean).unwrap();
+        let f2 = exact_fisher(k.as_ref(), &theta, &locs, DistanceMetric::Euclidean).unwrap();
+        for i in 0..3 {
+            for j in 0..3 {
+                assert!((f2.fisher[(i, j)] - f2.fisher[(j, i)]).abs() < 1e-9);
+            }
+            // more data => more information => smaller std errs
+            assert!(
+                f2.std_errs[i] < f1.std_errs[i] * 1.2,
+                "param {i}: {} vs {}",
+                f2.std_errs[i],
+                f1.std_errs[i]
+            );
+            assert!(f2.fisher[(i, i)] > 0.0);
+        }
+    }
+
+    #[test]
+    fn mloe_mmom_zero_at_truth() {
+        let k = kernel_by_name("ugsm-s").unwrap();
+        let theta = [1.0, 0.1, 0.5];
+        let (locs, _) = setup(25, 74);
+        let new_locs = vec![Location::new(0.5, 0.5), Location::new(0.2, 0.8)];
+        let r = exact_mloe_mmom(
+            k.as_ref(),
+            &theta,
+            &theta,
+            &locs,
+            &new_locs,
+            DistanceMetric::Euclidean,
+        )
+        .unwrap();
+        assert!(r.mloe.abs() < 1e-10, "mloe {}", r.mloe);
+        assert!(r.mmom.abs() < 1e-10, "mmom {}", r.mmom);
+    }
+
+    #[test]
+    fn mloe_positive_under_misspecification() {
+        let k = kernel_by_name("ugsm-s").unwrap();
+        let theta_t = [1.0, 0.1, 0.5];
+        let theta_a = [1.0, 0.4, 2.0]; // badly wrong range + smoothness
+        let (locs, _) = setup(30, 75);
+        let new_locs: Vec<Location> = (0..10)
+            .map(|i| Location::new(0.05 + 0.09 * i as f64, 0.45))
+            .collect();
+        let r = exact_mloe_mmom(
+            k.as_ref(),
+            &theta_t,
+            &theta_a,
+            &locs,
+            &new_locs,
+            DistanceMetric::Euclidean,
+        )
+        .unwrap();
+        assert!(r.mloe > 0.0, "mloe {}", r.mloe);
+    }
+}

@@ -1,0 +1,148 @@
+//! Per-task profiling and per-kind cost models.
+//!
+//! StarPU records execution times per codelet and hardware to build the
+//! cost models its schedulers use; we do the same.  The profile drives
+//! (a) the EXPERIMENTS.md §Perf numbers, and (b) the discrete-event
+//! simulator for the GPU / distributed studies (Figs 6–7).
+
+use super::TaskKind;
+use std::collections::HashMap;
+use std::time::Duration;
+
+/// One recorded task execution.
+#[derive(Copy, Clone, Debug)]
+pub struct TaskRecord {
+    pub worker: usize,
+    pub kind: TaskKind,
+    pub dur: Duration,
+    pub bytes: usize,
+}
+
+/// Aggregated execution profile.
+#[derive(Clone, Debug, Default)]
+pub struct Profile {
+    pub nworkers: usize,
+    pub records: Vec<TaskRecord>,
+    pub wall: Duration,
+}
+
+impl Profile {
+    pub fn new(nworkers: usize) -> Self {
+        Profile {
+            nworkers,
+            records: Vec::new(),
+            wall: Duration::ZERO,
+        }
+    }
+
+    pub fn record(&mut self, worker: usize, kind: TaskKind, dur: Duration, bytes: usize) {
+        self.records.push(TaskRecord {
+            worker,
+            kind,
+            dur,
+            bytes,
+        });
+    }
+
+    pub fn merge(&mut self, other: Profile) {
+        self.records.extend(other.records);
+    }
+
+    pub fn total_tasks(&self) -> usize {
+        self.records.len()
+    }
+
+    /// Sum of task execution times (ignores idle/waiting).
+    pub fn busy_time(&self) -> Duration {
+        self.records.iter().map(|r| r.dur).sum()
+    }
+
+    /// Parallel efficiency: busy / (wall * nworkers).
+    pub fn efficiency(&self) -> f64 {
+        if self.wall.is_zero() || self.nworkers == 0 {
+            return 0.0;
+        }
+        self.busy_time().as_secs_f64() / (self.wall.as_secs_f64() * self.nworkers as f64)
+    }
+
+    /// Build a per-kind cost model (mean seconds per task kind).
+    pub fn cost_model(&self) -> CostModel {
+        let mut sums: HashMap<&'static str, (f64, usize)> = HashMap::new();
+        for r in &self.records {
+            let e = sums.entry(r.kind.name).or_insert((0.0, 0));
+            e.0 += r.dur.as_secs_f64();
+            e.1 += 1;
+        }
+        CostModel {
+            mean_secs: sums
+                .into_iter()
+                .map(|(k, (s, n))| (k, s / n as f64))
+                .collect(),
+        }
+    }
+
+    /// Human-readable per-kind summary (used by `--profile` CLI output).
+    pub fn summary(&self) -> String {
+        let mut sums: HashMap<&'static str, (f64, usize)> = HashMap::new();
+        for r in &self.records {
+            let e = sums.entry(r.kind.name).or_insert((0.0, 0));
+            e.0 += r.dur.as_secs_f64();
+            e.1 += 1;
+        }
+        let mut rows: Vec<_> = sums.into_iter().collect();
+        rows.sort_by(|a, b| b.1 .0.total_cmp(&a.1 .0));
+        let mut out = format!(
+            "wall {:.3}s, {} tasks on {} workers, efficiency {:.1}%\n",
+            self.wall.as_secs_f64(),
+            self.total_tasks(),
+            self.nworkers,
+            100.0 * self.efficiency()
+        );
+        for (k, (s, n)) in rows {
+            out.push_str(&format!(
+                "  {k:<10} n={n:<6} total={s:>9.4}s mean={:>10.1}us\n",
+                1e6 * s / n as f64
+            ));
+        }
+        out
+    }
+}
+
+/// Mean per-kind execution time, used by the DES and the hetero dispatch.
+#[derive(Clone, Debug, Default)]
+pub struct CostModel {
+    pub mean_secs: HashMap<&'static str, f64>,
+}
+
+impl CostModel {
+    pub fn cost(&self, kind: TaskKind) -> f64 {
+        self.mean_secs.get(kind.name).copied().unwrap_or(1e-6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cost_model_means() {
+        let mut p = Profile::new(2);
+        p.record(0, TaskKind::GEMM, Duration::from_micros(100), 0);
+        p.record(1, TaskKind::GEMM, Duration::from_micros(300), 0);
+        p.record(0, TaskKind::POTRF, Duration::from_micros(50), 0);
+        let cm = p.cost_model();
+        assert!((cm.cost(TaskKind::GEMM) - 200e-6).abs() < 1e-12);
+        assert!((cm.cost(TaskKind::POTRF) - 50e-6).abs() < 1e-12);
+        // unknown kind gets a small default, not zero (DES needs progress)
+        assert!(cm.cost(TaskKind::DCMG) > 0.0);
+    }
+
+    #[test]
+    fn efficiency_bounds() {
+        let mut p = Profile::new(4);
+        p.wall = Duration::from_secs(1);
+        p.record(0, TaskKind::GEMM, Duration::from_secs(2), 0);
+        let e = p.efficiency();
+        assert!(e > 0.0 && e <= 1.0, "{e}");
+    }
+}

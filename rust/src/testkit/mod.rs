@@ -1,0 +1,96 @@
+//! Minimal property-testing harness (the offline substitute for `proptest`
+//! — see DESIGN.md substitution table).
+//!
+//! `forall` runs a property over `cases` randomly generated inputs.  On
+//! failure it panics with the case index and the root seed so the exact
+//! failing input can be replayed deterministically:
+//!
+//! ```no_run
+//! use exageostat::testkit::forall;
+//! forall(0xBEEF, 100, |rng| rng.uniform(0.0, 1.0), |x| assert!(*x < 1.0));
+//! ```
+
+use crate::rng::Pcg64;
+
+/// Run `prop` on `cases` inputs drawn by `gen` from a seeded RNG.
+pub fn forall<T: std::fmt::Debug>(
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Pcg64) -> T,
+    mut prop: impl FnMut(&T),
+) {
+    let mut root = Pcg64::seed_from_u64(seed);
+    for case in 0..cases {
+        let mut case_rng = root.split(case as u64);
+        let input = gen(&mut case_rng);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&input)));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property failed at case {case}/{cases} (seed {seed:#x}):\n  input: {input:?}\n  cause: {msg}"
+            );
+        }
+    }
+}
+
+/// Generator helpers.
+pub mod gen {
+    use crate::covariance::Location;
+    use crate::rng::Pcg64;
+
+    /// Uniform locations in the unit square.
+    pub fn locations(rng: &mut Pcg64, n: usize) -> Vec<Location> {
+        (0..n)
+            .map(|_| Location::new(rng.next_f64(), rng.next_f64()))
+            .collect()
+    }
+
+    /// A random valid ugsm-s parameter vector.
+    pub fn ugsm_theta(rng: &mut Pcg64) -> [f64; 3] {
+        [
+            rng.uniform(0.2, 3.0),          // sigma_sq
+            rng.uniform(0.03, 0.4),         // beta
+            [0.5, 1.0, 1.5, 2.0][rng.below(4)], // nu
+        ]
+    }
+
+    /// Random vector of standard normals.
+    pub fn normals(rng: &mut Pcg64, n: usize) -> Vec<f64> {
+        let mut v = vec![0.0; n];
+        rng.fill_normal(&mut v);
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_true_property() {
+        forall(1, 50, |rng| rng.uniform(-1.0, 1.0), |x| {
+            assert!(x.abs() <= 1.0);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed at case")]
+    fn forall_reports_failure_with_seed() {
+        forall(2, 50, |rng| rng.below(10), |&x| {
+            assert!(x < 9, "found the bad case");
+        });
+    }
+
+    #[test]
+    fn forall_is_deterministic() {
+        let mut seen_a = Vec::new();
+        forall(3, 10, |rng| rng.next_u64(), |&x| seen_a.push(x));
+        let mut seen_b = Vec::new();
+        forall(3, 10, |rng| rng.next_u64(), |&x| seen_b.push(x));
+        assert_eq!(seen_a, seen_b);
+    }
+}

@@ -1,0 +1,372 @@
+//! Cross-module integration tests: end-to-end pipelines over the public
+//! API, plus property-based invariants via the `testkit` harness
+//! (the proptest substitute — see DESIGN.md).
+
+use exageostat::api::{ExaGeoStat, Hardware, MleOptions};
+use exageostat::covariance::{
+    build_cov_dense, kernel_by_name, morton_perm, DistanceMetric, Location,
+};
+use exageostat::likelihood::{self, ExecCtx, Problem, Variant};
+use exageostat::linalg::blas::dpotrf;
+use exageostat::scheduler::pool::Policy;
+use exageostat::simulation::GeoData;
+use exageostat::testkit::{forall, gen};
+use std::sync::Arc;
+
+fn ctx(ts: usize) -> ExecCtx {
+    ExecCtx {
+        ncores: 2,
+        ts,
+        policy: Policy::Prio,
+    }
+}
+
+fn problem_from(locs: Vec<Location>, z: Vec<f64>) -> Problem {
+    Problem {
+        kernel: kernel_by_name("ugsm-s").unwrap().into(),
+        locs: Arc::new(locs),
+        z: Arc::new(z),
+        metric: DistanceMetric::Euclidean,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// property: the tiled Cholesky factor reconstructs Sigma (L L^T = Sigma)
+// ---------------------------------------------------------------------------
+#[test]
+fn prop_tiled_cholesky_reconstructs_covariance() {
+    forall(
+        0xC0FFEE,
+        8,
+        |rng| {
+            let n = 16 + rng.below(48);
+            let locs = gen::locations(rng, n);
+            let theta = gen::ugsm_theta(rng);
+            let ts = 8 + rng.below(24);
+            (locs, theta, ts)
+        },
+        |(locs, theta, ts)| {
+            let kernel = kernel_by_name("ugsm-s").unwrap();
+            let sigma = build_cov_dense(kernel.as_ref(), theta, locs, DistanceMetric::Euclidean);
+            let tm = exageostat::linalg::tile::TileMatrix::from_dense_lower(&sigma, *ts);
+            let mut g = exageostat::scheduler::TaskGraph::new();
+            let hs = exageostat::linalg::cholesky::TileHandles::register(&mut g, tm.nt());
+            let fail = exageostat::linalg::cholesky::new_fail_flag();
+            exageostat::linalg::cholesky::submit_tiled_potrf(&mut g, &tm, &hs, None, &fail);
+            exageostat::scheduler::pool::run(&mut g, 3, Policy::Lws);
+            exageostat::linalg::cholesky::check_fail(&fail).expect("SPD");
+            let l = tm.to_dense_lower();
+            let mut rec = exageostat::linalg::Matrix::zeros(sigma.rows(), sigma.cols());
+            exageostat::linalg::blas::dgemm(false, true, 1.0, &l, &l, 0.0, &mut rec);
+            let err = rec.max_abs_diff(&sigma);
+            assert!(err < 1e-9, "reconstruction err {err}");
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// property: likelihood is invariant under simultaneous permutation of
+// (locations, observations) — the correctness basis of Morton reordering
+// ---------------------------------------------------------------------------
+#[test]
+fn prop_loglik_permutation_invariant() {
+    forall(
+        0xBEEF01,
+        6,
+        |rng| {
+            let n = 20 + rng.below(40);
+            let locs = gen::locations(rng, n);
+            let z = gen::normals(rng, n);
+            let theta = gen::ugsm_theta(rng);
+            (locs, z, theta)
+        },
+        |(locs, z, theta)| {
+            let p1 = problem_from(locs.clone(), z.clone());
+            let base = likelihood::loglik(&p1, theta, Variant::Exact, &ctx(16)).unwrap();
+            let perm = morton_perm(locs);
+            let locs2: Vec<_> = perm.iter().map(|&i| locs[i]).collect();
+            let z2: Vec<_> = perm.iter().map(|&i| z[i]).collect();
+            let p2 = problem_from(locs2, z2);
+            let permuted = likelihood::loglik(&p2, theta, Variant::Exact, &ctx(16)).unwrap();
+            assert!(
+                (base.loglik - permuted.loglik).abs() < 1e-7,
+                "{} vs {}",
+                base.loglik,
+                permuted.loglik
+            );
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// property: DST with full bandwidth == exact; TLR tol->0 == exact
+// ---------------------------------------------------------------------------
+#[test]
+fn prop_approximations_have_exact_limits() {
+    forall(
+        0xBEEF02,
+        5,
+        |rng| {
+            let n = 24 + rng.below(40);
+            let locs = gen::locations(rng, n);
+            let z = gen::normals(rng, n);
+            let theta = gen::ugsm_theta(rng);
+            (locs, z, theta)
+        },
+        |(locs, z, theta)| {
+            let p = problem_from(locs.clone(), z.clone());
+            let c = ctx(16);
+            let nt = p.dim().div_ceil(16);
+            let exact = likelihood::loglik(&p, theta, Variant::Exact, &c).unwrap();
+            // DST internally Morton-reorders; full band is mathematically
+            // exact but rounding differs slightly under permutation.
+            let dst =
+                likelihood::loglik(&p, theta, Variant::Dst { band: nt - 1 }, &c).unwrap();
+            assert!((dst.loglik - exact.loglik).abs() < 1e-6);
+            let tlr = likelihood::loglik(
+                &p,
+                theta,
+                Variant::Tlr {
+                    tol: 1e-14,
+                    max_rank: usize::MAX,
+                },
+                &c,
+            )
+            .unwrap();
+            assert!(
+                (tlr.loglik - exact.loglik).abs() < 1e-5 * exact.loglik.abs(),
+                "tlr {} exact {}",
+                tlr.loglik,
+                exact.loglik
+            );
+            let mp = likelihood::loglik(&p, theta, Variant::Mp { band: nt - 1 }, &c).unwrap();
+            assert!((mp.loglik - exact.loglik).abs() < 1e-8);
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// property: kriging reproduces observations with zero variance, and
+// predictions fall inside the observed convex range for smooth fields
+// ---------------------------------------------------------------------------
+#[test]
+fn prop_kriging_interpolates() {
+    forall(
+        0xBEEF03,
+        6,
+        |rng| {
+            let n = 15 + rng.below(30);
+            let locs = gen::locations(rng, n);
+            let z = gen::normals(rng, n);
+            let theta = gen::ugsm_theta(rng);
+            (locs, z, theta)
+        },
+        |(locs, z, theta)| {
+            let kernel = kernel_by_name("ugsm-s").unwrap();
+            let pred = exageostat::prediction::exact_predict(
+                kernel.as_ref(),
+                theta,
+                locs,
+                z,
+                &locs[..3],
+                DistanceMetric::Euclidean,
+                true,
+            )
+            .unwrap();
+            for i in 0..3 {
+                assert!((pred.mean[i] - z[i]).abs() < 1e-6, "interpolation");
+                assert!(pred.variance.as_ref().unwrap()[i] < 1e-6, "zero variance");
+            }
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// property: every Table III kernel produces an SPD covariance over random
+// configurations (validated parameters)
+// ---------------------------------------------------------------------------
+#[test]
+fn prop_all_kernels_spd() {
+    use exageostat::covariance::kernels::ALL_KERNELS;
+    forall(
+        0xBEEF04,
+        6,
+        |rng| {
+            let n = 10 + rng.below(15);
+            let locs: Vec<Location> = (0..n)
+                .map(|i| {
+                    Location::new_st(
+                        rng.next_f64(),
+                        rng.next_f64(),
+                        (i % 4) as f64 * rng.uniform(0.1, 0.5),
+                    )
+                })
+                .collect();
+            (locs, rng.below(ALL_KERNELS.len()))
+        },
+        |(locs, kidx)| {
+            let name = ALL_KERNELS[*kidx];
+            let k = kernel_by_name(name).unwrap();
+            let theta: Vec<f64> = match name {
+                "ugsm-s" => vec![1.0, 0.1, 0.5],
+                "ugsmn-s" => vec![1.0, 0.1, 0.5, 0.1],
+                "bgspm-s" => vec![1.0, 1.5, 0.1, 0.5, 1.0, 0.3],
+                "bgsfm-s" => vec![1.0, 1.2, 0.12, 0.1, 0.08, 0.5, 1.0, 0.9, 0.3],
+                "tgspm-s" => vec![1.0, 1.2, 0.8, 0.1, 0.5, 1.0, 1.5, 0.3, 0.2, 0.25],
+                "ugsm-st" => vec![1.0, 0.1, 1.0, 0.5, 0.8, 0.5],
+                "bgsm-st" => vec![1.0, 1.3, 0.1, 1.0, 0.5, 1.0, 0.8, 0.5, 0.4],
+                _ => unreachable!(),
+            };
+            k.validate(&theta).unwrap();
+            let mut sigma = build_cov_dense(k.as_ref(), &theta, locs, DistanceMetric::Euclidean);
+            for i in 0..sigma.rows() {
+                sigma[(i, i)] += 1e-9;
+            }
+            dpotrf(&mut sigma).unwrap_or_else(|e| panic!("{name} not SPD: {e}"));
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// end-to-end: full pipeline through the public API (Example 2 protocol)
+// ---------------------------------------------------------------------------
+#[test]
+fn e2e_simulate_fit_predict_fisher() {
+    let exa = ExaGeoStat::init(Hardware {
+        ncores: 2,
+        ts: 64,
+        policy: Policy::Prio,
+        ..Hardware::default()
+    });
+    let theta_true = [1.0, 0.1, 0.5];
+    let data = exa
+        .simulate_data_exact("ugsm-s", &theta_true, "euclidean", 300, 42)
+        .unwrap();
+    let opt = MleOptions::new(vec![0.001; 3], vec![5.0; 3], 1e-4, 0);
+    let fit = exa.exact_mle(&data, "ugsm-s", "euclidean", &opt).unwrap();
+
+    // MLE invariant
+    let p = problem_from(data.locs.clone(), data.z.clone());
+    let at_truth = likelihood::loglik(&p, &theta_true, Variant::Exact, &ctx(64)).unwrap();
+    assert!(fit.loglik >= at_truth.loglik - 1e-2);
+
+    // kriging beats the prior mean on held-out points
+    let train = GeoData {
+        locs: data.locs[..280].to_vec(),
+        z: data.z[..280].to_vec(),
+    };
+    let pred = exa
+        .exact_predict(&train, &data.locs[280..], "ugsm-s", "euclidean", &fit.theta, true)
+        .unwrap();
+    let mse: f64 = pred
+        .mean
+        .iter()
+        .zip(&data.z[280..])
+        .map(|(a, b)| (a - b) * (a - b))
+        .sum::<f64>()
+        / 20.0;
+    let mse0: f64 = data.z[280..].iter().map(|v| v * v).sum::<f64>() / 20.0;
+    assert!(mse < mse0);
+
+    // Fisher std errs at the estimate are finite and positive
+    let fr = exa
+        .exact_fisher(&data.locs, "ugsm-s", "euclidean", &fit.theta)
+        .unwrap();
+    for e in &fr.std_errs {
+        assert!(e.is_finite() && *e > 0.0);
+    }
+
+    // MLOE/MMOM of the fitted parameters vs truth is small
+    let grid: Vec<Location> = (0..16)
+        .map(|k| Location::new(0.1 + 0.05 * (k % 4) as f64, 0.1 + 0.05 * (k / 4) as f64))
+        .collect();
+    let mm = exa
+        .exact_mloe_mmom(&data.locs, &grid, "ugsm-s", "euclidean", &theta_true, &fit.theta)
+        .unwrap();
+    assert!(mm.mloe >= -1e-9, "mloe {}", mm.mloe);
+    assert!(mm.mloe < 0.5, "fitted parameters should be efficient: {}", mm.mloe);
+    exa.finalize();
+}
+
+// ---------------------------------------------------------------------------
+// end-to-end: all four MLE variants agree on an easy problem
+// ---------------------------------------------------------------------------
+#[test]
+fn e2e_variant_mles_consistent() {
+    let exa = ExaGeoStat::init(Hardware {
+        ncores: 2,
+        ts: 32,
+        policy: Policy::Lws,
+        ..Hardware::default()
+    });
+    let data = exa
+        .simulate_data_exact("ugsm-s", &[1.0, 0.1, 0.5], "euclidean", 160, 3)
+        .unwrap();
+    let opt = MleOptions::new(vec![0.01; 3], vec![5.0; 3], 1e-4, 80);
+    let exact = exa.exact_mle(&data, "ugsm-s", "euclidean", &opt).unwrap();
+    let tlr = exa
+        .tlr_mle(&data, "ugsm-s", "euclidean", &opt, 1e-9, usize::MAX)
+        .unwrap();
+    let mp = exa.mp_mle(&data, "ugsm-s", "euclidean", &opt, 2).unwrap();
+    for (name, r) in [("tlr", &tlr), ("mp", &mp)] {
+        assert!(
+            (r.loglik - exact.loglik).abs() < 0.05 * exact.loglik.abs(),
+            "{name}: {} vs {}",
+            r.loglik,
+            exact.loglik
+        );
+    }
+    exa.finalize();
+}
+
+// ---------------------------------------------------------------------------
+// robustness (§III-D): near-duplicate locations — exact tolerates much
+// smaller separations than the singularity threshold the R packages hit
+// ---------------------------------------------------------------------------
+#[test]
+fn robustness_near_duplicate_locations() {
+    let kernel = kernel_by_name("ugsm-s").unwrap();
+    let theta = [1.0, 0.1, 0.5];
+    let base: Vec<Location> = (0..30)
+        .map(|i| Location::new((i % 6) as f64 * 0.2, (i / 6) as f64 * 0.2))
+        .collect();
+    // separation 1e-6: fine for our f64 Cholesky (paper: geoR/fields fail
+    // near 1e-4, ExaGeoStat near 1e-8); an exact duplicate (sep = 0)
+    // makes the covariance singular and must be reported cleanly.
+    for (sep, expect_ok) in [(1e-6, true), (0.0, false)] {
+        let mut locs = base.clone();
+        locs.push(Location::new(base[0].x + sep, base[0].y));
+        let z = vec![0.5; locs.len()];
+        let p = problem_from(locs, z);
+        let r = likelihood::loglik(&p, &theta, Variant::Exact, &ctx(8));
+        assert_eq!(r.is_ok(), expect_ok, "sep {sep}: {r:?}");
+        if !expect_ok {
+            let msg = r.unwrap_err().to_string();
+            assert!(msg.contains("not positive definite"), "{msg}");
+        }
+    }
+    let _ = kernel;
+}
+
+// ---------------------------------------------------------------------------
+// great-circle path end to end (the tutorial's dmetric option)
+// ---------------------------------------------------------------------------
+#[test]
+fn e2e_great_circle_mle() {
+    let exa = ExaGeoStat::init(Hardware {
+        ncores: 1,
+        ts: 64,
+        ..Hardware::default()
+    });
+    // lon/lat degrees over a ~500 km patch; beta in km
+    let mut rng = exageostat::rng::Pcg64::seed_from_u64(9);
+    let x: Vec<f64> = (0..120).map(|_| 20.0 + 4.0 * rng.next_f64()).collect();
+    let y: Vec<f64> = (0..120).map(|_| -40.0 + 4.0 * rng.next_f64()).collect();
+    let data = exa
+        .simulate_obs_exact(&x, &y, "ugsm-s", &[1.0, 80.0, 0.5], "great_circle", 5)
+        .unwrap();
+    let opt = MleOptions::new(vec![0.01, 1.0, 0.05], vec![10.0, 500.0, 3.0], 1e-4, 60);
+    let r = exa.mle(&data, "ugsm-s", "great_circle", &opt, Variant::Exact).unwrap();
+    assert!(r.theta[1] > 5.0 && r.theta[1] < 500.0, "beta(km) {}", r.theta[1]);
+    exa.finalize();
+}
