@@ -1,0 +1,55 @@
+# ExaGeoStatR reproduction — build / test / artifact entry points.
+#
+#   make artifacts    lower the JAX/Pallas kernels to HLO-text artifacts
+#                     (runs python/compile/aot.py once; needs JAX)
+#   make test         tier-1 verify: release build + full Rust test suite
+#   make bench-smoke  run every bench binary on tiny problem sizes
+#   make fmt / lint   formatting and clippy, as CI runs them
+#   make python-test  the python suite (skips cleanly without JAX)
+
+ARTIFACT_DIR ?= artifacts
+PYTHON ?= python3
+
+BENCHES = fig3_shared_memory fig5_scaling_n fig6_accelerated \
+          fig7_distributed table5_time_per_iter ablation_variants
+
+.PHONY: all test artifacts bench-smoke fmt lint python-test clean
+
+all: test
+
+# Tier-1 verify (ROADMAP.md): must pass on a clean machine with no
+# Python, JAX, or XLA installed.
+test:
+	cargo build --release
+	cargo test -q
+
+# AOT-lower the L1/L2 kernels to $(ARTIFACT_DIR)/*.hlo.txt + manifest.txt
+# (see rust/src/runtime/mod.rs; the PJRT backend loads these).
+artifacts:
+	cd python && $(PYTHON) -m compile.aot --out $(abspath $(ARTIFACT_DIR))
+
+# Smoke-run each bench binary in seconds: BENCH_QUICK shrinks every
+# problem size (see rust/benches/bench_util.rs `quick()`).
+bench-smoke:
+	@for b in $(BENCHES); do \
+		echo "== bench $$b (quick) =="; \
+		BENCH_QUICK=1 cargo bench --bench $$b || exit 1; \
+	done
+
+fmt:
+	cargo fmt --all --check
+
+lint:
+	cargo clippy --all-targets -- -D warnings
+
+python-test:
+	@if $(PYTHON) -c "import jax" 2>/dev/null; then \
+		$(PYTHON) -m pytest python/tests -q; \
+	else \
+		echo "JAX not installed — python suite skipped"; \
+	fi
+
+clean:
+	cargo clean
+	rm -rf $(ARTIFACT_DIR)
+	find python -name __pycache__ -type d -exec rm -rf {} + 2>/dev/null || true

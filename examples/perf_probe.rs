@@ -50,7 +50,7 @@ fn main() {
     let z: Vec<f64> = (0..1600).map(|_| rng.normal()).collect();
     let p = Problem { kernel: kernel_by_name("ugsm-s").unwrap().into(), locs: std::sync::Arc::new(locs), z: std::sync::Arc::new(z), metric: DistanceMetric::Euclidean };
     for ts in [100usize, 160, 320, 560] {
-        let ctx = ExecCtx { ncores: 1, ts, policy: Policy::Prio };
+        let ctx = ExecCtx::new(1, ts, Policy::Prio);
         timeit(&format!("loglik n=1600 ts={ts}"), 0.0, 2, || {
             let _ = exageostat::likelihood::loglik(&p, &[1.0, 0.1, 0.9], Variant::Exact, &ctx).unwrap();
         });

@@ -116,11 +116,7 @@ fn main() -> anyhow::Result<()> {
 
     // ----- Variant ablation on one fixed problem -------------------------
     println!("\nvariant ablation (n={n}, ts=64): loglik error vs exact + eval time");
-    let ctx = ExecCtx {
-        ncores: 2,
-        ts: 64,
-        policy: Policy::Prio,
-    };
+    let ctx = ExecCtx::new(2, 64, Policy::Prio);
     let exact = likelihood::loglik(&problem, &theta, Variant::Exact, &ctx)?;
     for (name, v) in [
         ("exact", Variant::Exact),

@@ -8,7 +8,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from compile.kernels import ref
 from compile.kernels.matern import matern_cov_matrix, matern_tile

@@ -29,11 +29,7 @@ fn main() {
     let theta = [1.0, 0.1, 0.5];
     let kernel: Arc<dyn exageostat::covariance::CovKernel> =
         Arc::from(kernel_by_name("ugsm-s").unwrap());
-    let ctx = ExecCtx {
-        ncores: 2,
-        ts,
-        policy: Policy::Prio,
-    };
+    let ctx = ExecCtx::new(2, ts, Policy::Prio);
     let data =
         simulate_data_exact(kernel.clone(), &theta, n, DistanceMetric::Euclidean, 0, &ctx).unwrap();
     let problem = Problem {

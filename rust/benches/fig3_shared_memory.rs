@@ -36,11 +36,7 @@ fn main() {
 
     println!("Fig 3 — time per iteration (s): measured 1-core + DES projection to k cores");
     for &n in sizes {
-        let ctx0 = ExecCtx {
-            ncores: 1,
-            ts: 320,
-            policy: Policy::Prio,
-        };
+        let ctx0 = ExecCtx::new(1, 320, Policy::Prio);
         let data = simulate_data_exact(
             kernel.clone(),
             &theta,
@@ -60,11 +56,7 @@ fn main() {
         header(&["ts", "meas 1c", "des 1c", "des 2c", "des 4c", "des 8c", "des 16c"]);
         for &ts in tile_sizes {
             // Measured: one full likelihood evaluation, single worker.
-            let ctx = ExecCtx {
-                ncores: 1,
-                ts,
-                policy: Policy::Prio,
-            };
+            let ctx = ExecCtx::new(1, ts, Policy::Prio);
             let t_meas = time_median(if quick { 1 } else { 3 }, || {
                 let _ = exageostat::likelihood::loglik(
                     &problem,

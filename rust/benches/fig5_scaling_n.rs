@@ -24,11 +24,7 @@ fn main() {
     let theta = [1.0, 0.1, 0.5];
     let kernel: Arc<dyn exageostat::covariance::CovKernel> =
         Arc::from(kernel_by_name("ugsm-s").unwrap());
-    let ctx = ExecCtx {
-        ncores: 2,
-        ts: 160,
-        policy: Policy::Prio,
-    };
+    let ctx = ExecCtx::new(2, 160, Policy::Prio);
 
     println!("Fig 5 — time per iteration (s) vs n; ratios vs exageostat (log10 scale in paper)");
     header(&["n", "exageostat", "geor-like", "fields-lik", "r_geor", "r_fields"]);

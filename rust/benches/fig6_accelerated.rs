@@ -37,11 +37,7 @@ fn main() {
     let theta = [1.0, 0.1, 0.5];
     let kernel: Arc<dyn exageostat::covariance::CovKernel> =
         Arc::from(kernel_by_name("ugsm-s").unwrap());
-    let ctx = ExecCtx {
-        ncores: 1,
-        ts: 320,
-        policy: Policy::Prio,
-    };
+    let ctx = ExecCtx::new(1, 320, Policy::Prio);
     let comm = CommModel {
         latency: 10e-6,
         bandwidth: 12e9,

@@ -33,11 +33,7 @@ fn main() {
     let theta = [1.0, 0.1, 0.5];
     let kernel: Arc<dyn exageostat::covariance::CovKernel> =
         Arc::from(kernel_by_name("ugsm-s").unwrap());
-    let ctx = ExecCtx {
-        ncores: 1,
-        ts: 320,
-        policy: Policy::Eager, // paper: STARPU_SCHED=eager
-    };
+    let ctx = ExecCtx::new(1, 320, Policy::Eager); // paper: STARPU_SCHED=eager
     let comm = CommModel {
         latency: 1.5e-6,
         bandwidth: 10e9,

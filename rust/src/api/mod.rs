@@ -2,6 +2,7 @@
 //! function, with the same argument structure (`hardware = list(...)`,
 //! `optimization = list(clb, cub, tol, max_iters)`).
 
+use crate::backend::{self, ArcEngine, Backend, Engine as _};
 use crate::covariance::{kernel_by_name, CovKernel, DistanceMetric, Location};
 use crate::likelihood::{self, ExecCtx, Problem, Variant};
 use crate::optimizer::{self, Bounds, Method, OptOptions};
@@ -72,25 +73,48 @@ pub struct MleResult {
 }
 
 /// An initialized ExaGeoStat instance (`exageostat_init` ...
-/// `exageostat_finalize`).
+/// `exageostat_finalize`).  The compute backend is picked once, at
+/// construction: [`ExaGeoStat::init`] honors `EXAGEOSTAT_BACKEND`
+/// (`native|pjrt`), [`ExaGeoStat::init_with_backend`] selects explicitly.
 pub struct ExaGeoStat {
     pub hw: Hardware,
+    engine: ArcEngine,
 }
 
 impl ExaGeoStat {
-    /// `exageostat_init(hardware)`.
+    /// `exageostat_init(hardware)`.  Backend from `EXAGEOSTAT_BACKEND`,
+    /// defaulting to the pure-Rust native engine.
     pub fn init(hw: Hardware) -> Self {
-        ExaGeoStat { hw }
+        ExaGeoStat {
+            hw,
+            engine: backend::default_engine(),
+        }
+    }
+
+    /// `exageostat_init(hardware)` with an explicit compute backend.
+    /// Fails cleanly when the backend is unavailable (e.g. `pjrt` without
+    /// the cargo feature or without `make artifacts`).
+    pub fn init_with_backend(hw: Hardware, b: Backend) -> anyhow::Result<Self> {
+        Ok(ExaGeoStat {
+            hw,
+            engine: backend::create_engine(b)?,
+        })
     }
 
     /// `exageostat_finalize()`.
     pub fn finalize(self) {}
+
+    /// Name of the active compute backend (`"native"` or `"pjrt"`).
+    pub fn backend_name(&self) -> &'static str {
+        self.engine.name()
+    }
 
     pub fn ctx(&self) -> ExecCtx {
         ExecCtx {
             ncores: self.hw.ncores.max(1),
             ts: self.hw.ts,
             policy: self.hw.policy,
+            engine: self.engine.clone(),
         }
     }
 
@@ -428,6 +452,20 @@ mod tests {
         let _ = ExaGeoStat::simulate_data_exact;
         let _ = ExaGeoStat::simulate_obs_exact;
         exa.finalize();
+    }
+
+    #[test]
+    fn backend_selected_at_init() {
+        let exa = ExaGeoStat::init(Hardware::default());
+        // Without EXAGEOSTAT_BACKEND the default is the native engine.
+        if std::env::var("EXAGEOSTAT_BACKEND").is_err() {
+            assert_eq!(exa.backend_name(), "native");
+        }
+        assert_eq!(exa.ctx().engine.name(), exa.backend_name());
+        let native = ExaGeoStat::init_with_backend(Hardware::default(), Backend::Native).unwrap();
+        assert_eq!(native.backend_name(), "native");
+        exa.finalize();
+        native.finalize();
     }
 
     #[test]

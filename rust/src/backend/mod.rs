@@ -1,0 +1,220 @@
+//! Pluggable compute backends for the likelihood hot path.
+//!
+//! The paper's premise is portability: the same exact Gaussian
+//! log-likelihood must run on whatever parallel architecture is available.
+//! This module is that seam on the Rust side — an [`Engine`] trait with
+//! two implementations:
+//!
+//! * [`native::NativeEngine`] — pure Rust (Matérn tiles via
+//!   `covariance::kernels`, dense log-likelihood via `linalg::cholesky`);
+//!   always available, no external dependencies, the default.
+//! * [`pjrt::PjrtBackend`] (cargo feature `pjrt`, off by default) — the
+//!   AOT-compiled JAX/Pallas artifacts executed through the PJRT client in
+//!   [`crate::runtime`], falling back to the native kernels for any shape
+//!   or parameter the artifacts don't cover.
+//!
+//! Selection happens once, at context construction
+//! ([`crate::likelihood::ExecCtx`] / [`crate::api::ExaGeoStat::init`]),
+//! and can be overridden with `EXAGEOSTAT_BACKEND=native|pjrt`. See
+//! `DESIGN.md` §2 for the backend-selection table.
+
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+
+use crate::covariance::{CovKernel, DistanceMetric, Location};
+use std::sync::{Arc, OnceLock};
+
+/// Shared handle to a compute engine (cheap to clone into task closures).
+pub type ArcEngine = Arc<dyn Engine>;
+
+/// Result of a dense (small-problem / oracle) log-likelihood evaluation.
+#[derive(Copy, Clone, Debug)]
+pub struct EngineLogLik {
+    pub loglik: f64,
+    pub logdet: f64,
+    pub sse: f64,
+}
+
+/// A compute backend for the two kernel families of the MLE pipeline:
+/// covariance-tile generation (the `dcmg` task body) and the fixed-size
+/// dense log-likelihood graph.
+pub trait Engine: Send + Sync {
+    /// Stable backend name (`"native"`, `"pjrt"`).
+    fn name(&self) -> &'static str;
+
+    /// Fill one `h x w` covariance tile at global offset `(row0, col0)`
+    /// into the column-major buffer `out` (length >= `h * w`).
+    ///
+    /// Infallible by contract: implementations that can miss (e.g. no
+    /// lowered artifact for this tile size) must fall back to the native
+    /// kernels rather than fail — tile tasks run inside the scheduler
+    /// where errors cannot propagate.
+    #[allow(clippy::too_many_arguments)]
+    fn fill_tile(
+        &self,
+        kernel: &dyn CovKernel,
+        theta: &[f64],
+        locs: &[Location],
+        metric: DistanceMetric,
+        row0: usize,
+        col0: usize,
+        h: usize,
+        w: usize,
+        out: &mut [f64],
+    );
+
+    /// Dense exact log-likelihood of `z` at `locs` under `kernel(theta)`
+    /// (the small-problem MLE objective and the parity-test oracle).
+    fn loglik(
+        &self,
+        kernel: &dyn CovKernel,
+        theta: &[f64],
+        locs: &[Location],
+        z: &[f64],
+        metric: DistanceMetric,
+    ) -> anyhow::Result<EngineLogLik>;
+}
+
+/// Backend selector (the value of `EXAGEOSTAT_BACKEND`).
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Pure-Rust kernels (general nu, any tile size). Always available.
+    Native,
+    /// AOT Pallas artifacts through PJRT (requires the `pjrt` feature and
+    /// `make artifacts`); uncovered shapes fall back to native.
+    Pjrt,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> anyhow::Result<Backend> {
+        match s {
+            "native" => Ok(Backend::Native),
+            "pjrt" => Ok(Backend::Pjrt),
+            other => anyhow::bail!("unknown backend {other:?} (native|pjrt)"),
+        }
+    }
+}
+
+/// Instantiate an engine for an explicit backend choice.
+pub fn create_engine(backend: Backend) -> anyhow::Result<ArcEngine> {
+    match backend {
+        Backend::Native => Ok(Arc::new(native::NativeEngine::new())),
+        #[cfg(feature = "pjrt")]
+        Backend::Pjrt => Ok(Arc::new(pjrt::PjrtBackend::from_default()?)),
+        #[cfg(not(feature = "pjrt"))]
+        Backend::Pjrt => anyhow::bail!(
+            "this binary was built without the `pjrt` feature; \
+             rebuild with `cargo build --features pjrt`"
+        ),
+    }
+}
+
+/// Process-wide default engine, honoring `EXAGEOSTAT_BACKEND=native|pjrt`.
+///
+/// Resolved once and memoized. A requested-but-unavailable backend (bad
+/// name, feature off, artifacts missing) degrades to the native engine
+/// with a warning on stderr — the default path must never panic on a
+/// machine without XLA or artifacts.
+pub fn default_engine() -> ArcEngine {
+    static ENGINE: OnceLock<ArcEngine> = OnceLock::new();
+    ENGINE
+        .get_or_init(|| match std::env::var("EXAGEOSTAT_BACKEND") {
+            Ok(name) => match Backend::parse(&name).and_then(create_engine) {
+                Ok(engine) => engine,
+                Err(err) => {
+                    eprintln!(
+                        "warning: EXAGEOSTAT_BACKEND={name} unavailable ({err:#}); \
+                         falling back to the native backend"
+                    );
+                    Arc::new(native::NativeEngine::new())
+                }
+            },
+            Err(_) => Arc::new(native::NativeEngine::new()),
+        })
+        .clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::covariance::fill_cov_tile;
+    use crate::likelihood::testutil::{dense_oracle, small_problem};
+
+    #[test]
+    fn backend_parse_roundtrip() {
+        assert_eq!(Backend::parse("native").unwrap(), Backend::Native);
+        assert_eq!(Backend::parse("pjrt").unwrap(), Backend::Pjrt);
+        assert!(Backend::parse("tpu").is_err());
+    }
+
+    #[test]
+    fn native_engine_matches_dense_oracle() {
+        // The satellite parity requirement: NativeEngine::loglik agrees
+        // with the likelihood oracle to 1e-10.
+        let engine = create_engine(Backend::Native).unwrap();
+        assert_eq!(engine.name(), "native");
+        for (n, seed) in [(40usize, 1u64), (60, 2)] {
+            let p = small_problem(n, seed);
+            for theta in [[1.0, 0.1, 0.5], [2.0, 0.2, 1.5]] {
+                let want = dense_oracle(&p, &theta);
+                let got = engine
+                    .loglik(p.kernel.as_ref(), &theta, &p.locs, &p.z, p.metric)
+                    .unwrap();
+                assert!(
+                    (got.loglik - want.loglik).abs() < 1e-10,
+                    "n={n} theta={theta:?}: {} vs {}",
+                    got.loglik,
+                    want.loglik
+                );
+                assert!((got.logdet - want.logdet).abs() < 1e-10);
+                assert!((got.sse - want.sse).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn native_fill_tile_matches_covariance_fill() {
+        let engine = default_engine();
+        let p = small_problem(30, 3);
+        let theta = [1.3, 0.2, 1.0];
+        let (row0, col0, h, w) = (4usize, 9usize, 7usize, 6usize);
+        let mut got = vec![0.0; h * w];
+        engine.fill_tile(
+            p.kernel.as_ref(),
+            &theta,
+            &p.locs,
+            p.metric,
+            row0,
+            col0,
+            h,
+            w,
+            &mut got,
+        );
+        let mut want = vec![0.0; h * w];
+        fill_cov_tile(
+            p.kernel.as_ref(),
+            &theta,
+            &p.locs,
+            p.metric,
+            row0,
+            col0,
+            h,
+            w,
+            &mut want,
+        );
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn non_spd_is_clean_error_not_panic() {
+        let engine = create_engine(Backend::Native).unwrap();
+        let p = small_problem(10, 4);
+        let mut locs = (*p.locs).clone();
+        locs[1] = locs[0]; // exact duplicate => singular covariance
+        let err = engine
+            .loglik(p.kernel.as_ref(), &[1.0, 0.1, 0.5], &locs, &p.z, p.metric)
+            .unwrap_err();
+        assert!(err.to_string().contains("not positive definite"), "{err}");
+    }
+}

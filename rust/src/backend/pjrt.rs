@@ -1,0 +1,129 @@
+//! PJRT compute engine (cargo feature `pjrt`): executes the AOT-compiled
+//! JAX/Pallas artifacts through [`crate::runtime::PjrtEngine`], and falls
+//! back to [`NativeEngine`] for anything the artifacts don't cover —
+//! non-lowered tile sizes, rectangular edge tiles, multivariate kernels,
+//! non-half-integer smoothness, or a missing/failed artifact.
+//!
+//! The artifact contract (see `python/compile/aot.py`): univariate
+//! Matérn (`ugsm-s`), Euclidean distance, `theta = (sigma_sq, beta, nu)`
+//! with nu in {0.5, 1.5, 2.5}, square `ts x ts` tiles for the lowered
+//! sizes, and fixed-size `loglik_n{n}` graphs.
+
+use super::native::NativeEngine;
+use super::{Engine, EngineLogLik};
+use crate::covariance::{CovKernel, DistanceMetric, Location};
+use crate::runtime::PjrtEngine;
+
+/// Is `nu` one of the half-integer smoothness values the Pallas kernel
+/// implements in closed form?
+fn half_integer_nu(nu: f64) -> bool {
+    [0.5, 1.5, 2.5].iter().any(|v| (nu - v).abs() < 1e-12)
+}
+
+/// The PJRT-backed engine: artifacts where possible, native elsewhere.
+pub struct PjrtBackend {
+    inner: PjrtEngine,
+    fallback: NativeEngine,
+    tile_sizes: Vec<usize>,
+}
+
+impl PjrtBackend {
+    /// Wrap an existing runtime engine.
+    pub fn new(inner: PjrtEngine) -> PjrtBackend {
+        let tile_sizes = inner.available_tile_sizes();
+        PjrtBackend {
+            inner,
+            fallback: NativeEngine::new(),
+            tile_sizes,
+        }
+    }
+
+    /// Construct from the default artifact directory (fails cleanly when
+    /// `make artifacts` has not run or the XLA runtime is unavailable).
+    pub fn from_default() -> anyhow::Result<PjrtBackend> {
+        Ok(PjrtBackend::new(PjrtEngine::from_default()?))
+    }
+
+    /// Can the tile artifact serve this request exactly?
+    #[allow(clippy::too_many_arguments)]
+    fn tile_covered(
+        &self,
+        kernel: &dyn CovKernel,
+        theta: &[f64],
+        locs: &[Location],
+        metric: DistanceMetric,
+        row0: usize,
+        col0: usize,
+        h: usize,
+        w: usize,
+    ) -> bool {
+        kernel.nvariates() == 1
+            && kernel.name() == "ugsm-s"
+            && metric == DistanceMetric::Euclidean
+            && theta.len() == 3
+            && half_integer_nu(theta[2])
+            && h == w
+            && self.tile_sizes.contains(&h)
+            && row0 + h <= locs.len()
+            && col0 + w <= locs.len()
+    }
+}
+
+impl Engine for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn fill_tile(
+        &self,
+        kernel: &dyn CovKernel,
+        theta: &[f64],
+        locs: &[Location],
+        metric: DistanceMetric,
+        row0: usize,
+        col0: usize,
+        h: usize,
+        w: usize,
+        out: &mut [f64],
+    ) {
+        if self.tile_covered(kernel, theta, locs, metric, row0, col0, h, w) {
+            let rows = &locs[row0..row0 + h];
+            let cols = &locs[col0..col0 + w];
+            if let Ok(tile) = self.inner.matern_tile(h, rows, cols, theta) {
+                out[..h * w].copy_from_slice(&tile);
+                return;
+            }
+        }
+        self.fallback
+            .fill_tile(kernel, theta, locs, metric, row0, col0, h, w, out);
+    }
+
+    fn loglik(
+        &self,
+        kernel: &dyn CovKernel,
+        theta: &[f64],
+        locs: &[Location],
+        z: &[f64],
+        metric: DistanceMetric,
+    ) -> anyhow::Result<EngineLogLik> {
+        let covered = kernel.nvariates() == 1
+            && kernel.name() == "ugsm-s"
+            && metric == DistanceMetric::Euclidean
+            && theta.len() == 3
+            && half_integer_nu(theta[2])
+            && z.len() == locs.len();
+        if covered {
+            // The artifact set only contains `loglik_n{n}` for the lowered
+            // problem sizes; any miss (size, parse, execute) falls through
+            // to the native dense path.
+            if let Ok((loglik, logdet, sse)) = self.inner.loglik(locs, z, theta) {
+                return Ok(EngineLogLik {
+                    loglik,
+                    logdet,
+                    sse,
+                });
+            }
+        }
+        self.fallback.loglik(kernel, theta, locs, z, metric)
+    }
+}

@@ -151,11 +151,7 @@ mod tests {
             n,
             DistanceMetric::Euclidean,
             seed,
-            &ExecCtx {
-                ncores: 1,
-                ts: 64,
-                policy: crate::scheduler::pool::Policy::Eager,
-            },
+            &ExecCtx::new(1, 64, crate::scheduler::pool::Policy::Eager),
         )
         .unwrap()
     }

@@ -287,11 +287,7 @@ mod tests {
     use super::*;
 
     fn ctx() -> ExecCtx {
-        ExecCtx {
-            ncores: 1,
-            ts: 128,
-            policy: crate::scheduler::pool::Policy::Eager,
-        }
+        ExecCtx::new(1, 128, crate::scheduler::pool::Policy::Eager)
     }
 
     fn tiny_cfg() -> SstConfig {

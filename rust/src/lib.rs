@@ -11,12 +11,15 @@
 //!   generator, and the GeoR/fields baseline analogues.
 //! * **L2/L1 (python/, build-time only)** — the Matérn covariance tile as
 //!   a Pallas kernel inside a JAX log-likelihood graph, AOT-lowered to HLO
-//!   text and executed from Rust through PJRT (`runtime` module).
+//!   text and executed from Rust through PJRT (`runtime` module, behind
+//!   the `pjrt` cargo feature; the `backend` module selects between the
+//!   pure-Rust engine and PJRT at context construction).
 //!
 //! See `DESIGN.md` for the full system inventory and the experiment index,
 //! and `EXPERIMENTS.md` for reproduced paper results.
 
 pub mod api;
+pub mod backend;
 pub mod baselines;
 pub mod cli;
 pub mod covariance;

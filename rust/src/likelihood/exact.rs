@@ -4,7 +4,7 @@
 //! ExaGeoStat's `MLE_alg` (Abdulah et al. 2018a, Alg. 1).
 
 use super::{ExecCtx, LogLik, Problem};
-use crate::covariance::fill_cov_tile;
+use crate::backend::{ArcEngine, Engine as _};
 use crate::linalg::cholesky::{
     check_fail, in_band, new_fail_flag, submit_tiled_forward_solve_banded, submit_tiled_potrf,
     TileHandles,
@@ -15,7 +15,8 @@ use crate::scheduler::{Access, TaskGraph, TaskKind};
 use std::sync::Arc;
 
 /// Submit generation tasks: fill each retained lower tile of `a` from the
-/// covariance kernel.  Mirrors ExaGeoStat's `dcmg` codelet.
+/// covariance kernel through the default compute backend.  Mirrors
+/// ExaGeoStat's `dcmg` codelet.
 pub fn submit_generation(
     g: &mut TaskGraph,
     a: &TileMatrix,
@@ -23,6 +24,21 @@ pub fn submit_generation(
     problem: &Problem,
     theta: &[f64],
     band: Option<usize>,
+) {
+    let engine = crate::backend::default_engine();
+    submit_generation_with(g, a, hs, problem, theta, band, &engine);
+}
+
+/// Submit generation tasks against an explicit backend engine (the
+/// likelihood hot path passes `ctx.engine`).
+pub fn submit_generation_with(
+    g: &mut TaskGraph,
+    a: &TileMatrix,
+    hs: &TileHandles,
+    problem: &Problem,
+    theta: &[f64],
+    band: Option<usize>,
+    engine: &ArcEngine,
 ) {
     let nt = a.nt();
     let ts = a.ts();
@@ -40,11 +56,12 @@ pub fn submit_generation(
             let locs = problem.locs.clone();
             let metric = problem.metric;
             let theta = theta.clone();
+            let engine = engine.clone();
             let (row0, col0) = (i * ts, j * ts);
             g.submit(TaskKind::DCMG, &[(hs.at(i, j), Access::W)], bytes, move || {
                 // SAFETY: STF ordering gives exclusive access to the tile.
                 let out = unsafe { ptr.as_mut() };
-                fill_cov_tile(
+                engine.fill_tile(
                     kernel.as_ref(),
                     &theta,
                     &locs,
@@ -93,7 +110,7 @@ pub fn loglik(
     let a = TileMatrix::zeros(dim, ctx.ts);
     let mut g = TaskGraph::new();
     let hs = TileHandles::register(&mut g, a.nt());
-    submit_generation(&mut g, &a, &hs, problem, theta, band);
+    submit_generation_with(&mut g, &a, &hs, problem, theta, band, &ctx.engine);
     let fail = new_fail_flag();
     submit_tiled_potrf(&mut g, &a, &hs, band, &fail);
     let y = TileVector::from_slice(&z, ctx.ts);
@@ -136,11 +153,7 @@ mod tests {
         let theta = [1.3, 0.2, 1.5];
         let oracle = dense_oracle(&p, &theta);
         for ts in [8usize, 16, 45, 64] {
-            let ctx = ExecCtx {
-                ncores: 2,
-                ts,
-                policy: Policy::Lws,
-            };
+            let ctx = ExecCtx::new(2, ts, Policy::Lws);
             let r = loglik(&p, &theta, None, &ctx).unwrap();
             assert!(
                 (r.loglik - oracle.loglik).abs() < 1e-8,
@@ -160,11 +173,7 @@ mod tests {
         let mut locs = (*p.locs).clone();
         locs[5] = locs[4];
         p.locs = std::sync::Arc::new(locs);
-        let ctx = ExecCtx {
-            ncores: 1,
-            ts: 4,
-            policy: Policy::Eager,
-        };
+        let ctx = ExecCtx::new(1, 4, Policy::Eager);
         let err = loglik(&p, &[1.0, 0.1, 0.5], None, &ctx).unwrap_err();
         assert!(err.to_string().contains("not positive definite"), "{err}");
     }
@@ -184,11 +193,7 @@ mod tests {
         };
         let theta = [1.0, 0.1, 0.5];
         let ts = 8;
-        let ctx = ExecCtx {
-            ncores: 1,
-            ts,
-            policy: Policy::Eager,
-        };
+        let ctx = ExecCtx::new(1, ts, Policy::Eager);
         let r = loglik(&p, &theta, Some(0), &ctx).unwrap();
         // oracle: sum of per-block dense logliks
         let mut want_logdet = 0.0;

@@ -16,6 +16,7 @@ pub mod exact;
 pub mod mp;
 pub mod tlr;
 
+use crate::backend::{ArcEngine, Engine as _};
 use crate::covariance::{CovKernel, DistanceMetric, Location};
 use crate::scheduler::pool::Policy;
 use std::sync::Arc;
@@ -36,21 +37,43 @@ pub enum Variant {
 }
 
 /// Execution context shared by the engines (the `exageostat_init`
-/// hardware settings).
-#[derive(Clone, Debug)]
+/// hardware settings), plus the compute backend picked at construction
+/// (`EXAGEOSTAT_BACKEND=native|pjrt` overrides the default — see
+/// [`crate::backend::default_engine`]).
+#[derive(Clone)]
 pub struct ExecCtx {
     pub ncores: usize,
     pub ts: usize,
     pub policy: Policy,
+    /// Compute backend for covariance generation and dense likelihood.
+    pub engine: ArcEngine,
+}
+
+impl ExecCtx {
+    pub fn new(ncores: usize, ts: usize, policy: Policy) -> ExecCtx {
+        ExecCtx {
+            ncores,
+            ts,
+            policy,
+            engine: crate::backend::default_engine(),
+        }
+    }
 }
 
 impl Default for ExecCtx {
     fn default() -> Self {
-        ExecCtx {
-            ncores: 1,
-            ts: 320,
-            policy: Policy::Lws,
-        }
+        ExecCtx::new(1, 320, Policy::Lws)
+    }
+}
+
+impl std::fmt::Debug for ExecCtx {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ExecCtx")
+            .field("ncores", &self.ncores)
+            .field("ts", &self.ts)
+            .field("policy", &self.policy)
+            .field("backend", &self.engine.name())
+            .finish()
     }
 }
 
@@ -157,11 +180,7 @@ mod tests {
     fn variants_agree_in_their_exact_limits() {
         let p = small_problem(60, 1);
         let theta = [1.0, 0.1, 0.5];
-        let ctx = ExecCtx {
-            ncores: 2,
-            ts: 16,
-            policy: Policy::Prio,
-        };
+        let ctx = ExecCtx::new(2, 16, Policy::Prio);
         let oracle = dense_oracle(&p, &theta);
         let exact = loglik(&p, &theta, Variant::Exact, &ctx).unwrap();
         assert!(
@@ -200,11 +219,7 @@ mod tests {
     fn approximations_close_but_not_exact() {
         let p = small_problem(80, 2);
         let theta = [1.0, 0.05, 0.5]; // short range => band approx is good
-        let ctx = ExecCtx {
-            ncores: 1,
-            ts: 16,
-            policy: Policy::Eager,
-        };
+        let ctx = ExecCtx::new(1, 16, Policy::Eager);
         let oracle = dense_oracle(&p, &theta);
         let dst = loglik(&p, &theta, Variant::Dst { band: 1 }, &ctx).unwrap();
         let mp = loglik(&p, &theta, Variant::Mp { band: 0 }, &ctx).unwrap();

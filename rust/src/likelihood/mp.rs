@@ -10,7 +10,7 @@
 //! paper's MP variant.
 
 use super::{ExecCtx, LogLik, Problem};
-use crate::covariance::fill_cov_tile;
+use crate::backend::{ArcEngine, Engine as _};
 use crate::linalg::cholesky::{
     check_fail, new_fail_flag, submit_tiled_forward_solve_banded, submit_tiled_potrf, TileHandles,
 };
@@ -41,6 +41,7 @@ fn submit_generation_mp(
     problem: &Problem,
     theta: &[f64],
     band: usize,
+    engine: &ArcEngine,
 ) {
     let nt = a.nt();
     let ts = a.ts();
@@ -55,12 +56,13 @@ fn submit_generation_mp(
             let locs = problem.locs.clone();
             let metric = problem.metric;
             let theta = theta.clone();
+            let engine = engine.clone();
             let (row0, col0) = (i * ts, j * ts);
             let demote = !is_f64_tile(band, i, j);
             g.submit(TaskKind::DCMG, &[(hs.at(i, j), Access::W)], bytes, move || {
                 // SAFETY: STF ordering gives exclusive access to the tile.
                 let out = unsafe { ptr.as_mut() };
-                fill_cov_tile(
+                engine.fill_tile(
                     kernel.as_ref(),
                     &theta,
                     &locs,
@@ -91,7 +93,7 @@ pub fn loglik(
     let a = TileMatrix::zeros(dim, ctx.ts);
     let mut g = TaskGraph::new();
     let hs = TileHandles::register(&mut g, a.nt());
-    submit_generation_mp(&mut g, &a, &hs, problem, theta, band);
+    submit_generation_mp(&mut g, &a, &hs, problem, theta, band, &ctx.engine);
     let fail = new_fail_flag();
     // Factorization is structurally dense (band = None): MP rounds values,
     // it does not drop tiles.
@@ -129,11 +131,7 @@ mod tests {
     fn mp_error_is_f32_scale() {
         let p = small_problem(64, 30);
         let theta = [1.0, 0.1, 0.5];
-        let ctx = ExecCtx {
-            ncores: 2,
-            ts: 16,
-            policy: Policy::Lws,
-        };
+        let ctx = ExecCtx::new(2, 16, Policy::Lws);
         let oracle = dense_oracle(&p, &theta);
         let mp = loglik(&p, &theta, 0, &ctx).unwrap();
         let rel = (mp.loglik - oracle.loglik).abs() / oracle.loglik.abs();
@@ -147,11 +145,7 @@ mod tests {
     fn wider_band_is_more_accurate() {
         let p = small_problem(80, 31);
         let theta = [1.0, 0.2, 1.0];
-        let ctx = ExecCtx {
-            ncores: 1,
-            ts: 16,
-            policy: Policy::Eager,
-        };
+        let ctx = ExecCtx::new(1, 16, Policy::Eager);
         let oracle = dense_oracle(&p, &theta);
         let e0 = (loglik(&p, &theta, 0, &ctx).unwrap().loglik - oracle.loglik).abs();
         let e_full = (loglik(&p, &theta, 4, &ctx).unwrap().loglik - oracle.loglik).abs();

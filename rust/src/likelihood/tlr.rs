@@ -15,7 +15,7 @@
 //! loops run serially (see DESIGN.md "Hardware adaptation").
 
 use super::{ExecCtx, LogLik, Problem};
-use crate::covariance::fill_cov_tile;
+use crate::backend::{ArcEngine, Engine as _};
 use crate::linalg::blas::{dpotrf_raw, dtrsv_ln};
 use crate::linalg::lowrank::{LrOpts, LrTile};
 use crate::linalg::matrix::Matrix;
@@ -69,8 +69,21 @@ impl TlrMatrix {
     }
 }
 
-/// Generate the TLR covariance: dense diagonal + compressed off-diagonal.
+/// Generate the TLR covariance: dense diagonal + compressed off-diagonal
+/// (through the default compute backend).
 pub fn generate(problem: &Problem, theta: &[f64], opts: LrOpts, ts: usize) -> TlrMatrix {
+    let engine = crate::backend::default_engine();
+    generate_with(problem, theta, opts, ts, &engine)
+}
+
+/// Generate the TLR covariance against an explicit backend engine.
+pub fn generate_with(
+    problem: &Problem,
+    theta: &[f64],
+    opts: LrOpts,
+    ts: usize,
+    engine: &ArcEngine,
+) -> TlrMatrix {
     let n = problem.dim();
     let nt = n.div_ceil(ts);
     let dim = |i: usize| ts.min(n - i * ts);
@@ -80,7 +93,7 @@ pub fn generate(problem: &Problem, theta: &[f64], opts: LrOpts, ts: usize) -> Tl
     for i in 0..nt {
         for j in 0..i {
             let (h, w) = (dim(i), dim(j));
-            fill_cov_tile(
+            engine.fill_tile(
                 problem.kernel.as_ref(),
                 theta,
                 &problem.locs,
@@ -94,7 +107,7 @@ pub fn generate(problem: &Problem, theta: &[f64], opts: LrOpts, ts: usize) -> Tl
             low.push(LrTile::compress_aca(h, w, &buf[..h * w], opts));
         }
         let h = dim(i);
-        fill_cov_tile(
+        engine.fill_tile(
             problem.kernel.as_ref(),
             theta,
             &problem.locs,
@@ -212,7 +225,7 @@ pub fn loglik(
         z: std::sync::Arc::new(Vec::new()),
         metric: problem.metric,
     };
-    let mut a = generate(&sorted, theta, opts, ctx.ts);
+    let mut a = generate_with(&sorted, theta, opts, ctx.ts, &ctx.engine);
     let logdet = tlr_potrf(&mut a, opts)?;
     tlr_forward_solve(&a, &mut y);
     let sse = y.iter().map(|v| v * v).sum();
@@ -268,11 +281,7 @@ mod tests {
         let p = small_problem(64, 21);
         let theta = [1.0, 0.1, 1.0];
         let oracle = dense_oracle(&p, &theta);
-        let ctx = ExecCtx {
-            ncores: 1,
-            ts: 16,
-            policy: Policy::Eager,
-        };
+        let ctx = ExecCtx::new(1, 16, Policy::Eager);
         let mut prev_err = f64::INFINITY;
         for tol in [1e-2, 1e-5, 1e-9, 1e-13] {
             let r = loglik(&p, &theta, tol, usize::MAX, &ctx).unwrap();
@@ -319,11 +328,7 @@ mod tests {
     fn rank_cap_limits_accuracy_gracefully() {
         let p = small_problem(48, 23);
         let theta = [1.0, 0.1, 0.5];
-        let ctx = ExecCtx {
-            ncores: 1,
-            ts: 12,
-            policy: Policy::Eager,
-        };
+        let ctx = ExecCtx::new(1, 12, Policy::Eager);
         let oracle = dense_oracle(&p, &theta);
         let r_cap = loglik(&p, &theta, 1e-13, 3, &ctx).unwrap();
         let r_free = loglik(&p, &theta, 1e-13, usize::MAX, &ctx).unwrap();

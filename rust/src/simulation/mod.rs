@@ -114,7 +114,15 @@ pub fn simulate_obs_exact(
     let a = TileMatrix::zeros(dim, ctx.ts);
     let mut g = TaskGraph::new();
     let hs = TileHandles::register(&mut g, a.nt());
-    crate::likelihood::exact::submit_generation(&mut g, &a, &hs, &problem, theta, None);
+    crate::likelihood::exact::submit_generation_with(
+        &mut g,
+        &a,
+        &hs,
+        &problem,
+        theta,
+        None,
+        &ctx.engine,
+    );
     let fail = new_fail_flag();
     submit_tiled_potrf(&mut g, &a, &hs, None, &fail);
     pool::run(&mut g, ctx.ncores, ctx.policy);
@@ -178,11 +186,7 @@ mod tests {
     use crate::covariance::kernel_by_name;
 
     fn ctx() -> ExecCtx {
-        ExecCtx {
-            ncores: 2,
-            ts: 32,
-            policy: crate::scheduler::pool::Policy::Lws,
-        }
+        ExecCtx::new(2, 32, crate::scheduler::pool::Policy::Lws)
     }
 
     #[test]

@@ -14,11 +14,7 @@ use exageostat::testkit::{forall, gen};
 use std::sync::Arc;
 
 fn ctx(ts: usize) -> ExecCtx {
-    ExecCtx {
-        ncores: 2,
-        ts,
-        policy: Policy::Prio,
-    }
+    ExecCtx::new(2, ts, Policy::Prio)
 }
 
 fn problem_from(locs: Vec<Location>, z: Vec<f64>) -> Problem {
