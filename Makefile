@@ -30,6 +30,8 @@ artifacts:
 
 # Smoke-run each bench binary in seconds: BENCH_QUICK shrinks every
 # problem size (see rust/benches/bench_util.rs `quick()`).
+# table5_time_per_iter also refreshes BENCH_mle_iter.json (per-variant
+# time/iteration + EvalSession warm-vs-cold speedup telemetry).
 bench-smoke:
 	@for b in $(BENCHES); do \
 		echo "== bench $$b (quick) =="; \

@@ -80,6 +80,7 @@ fn main() -> anyhow::Result<()> {
                 64,
                 64,
                 64,
+                None,
                 &mut pjrt_tile,
             );
             let mut native = vec![0.0; 64 * 64];

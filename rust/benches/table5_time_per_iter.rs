@@ -5,15 +5,25 @@
 //! Paper protocol: n = 1600, 100 replicates, abs tol 1e-5, starts at the
 //! lower bounds.  Scaled defaults here: n = 400, 3 replicates
 //! (`BENCH_FULL=1` for n=1600).
+//!
+//! Besides the table, this bench emits machine-readable MLE-iteration
+//! telemetry to `BENCH_mle_iter.json` (override the path with
+//! `BENCH_OUT`): per-variant median time/iteration and iteration counts,
+//! plus the warm-vs-cold evaluation speedup of the `EvalSession` hot loop
+//! (distance-tile cache + symmetric generation + zero warm allocations).
+//! `BENCH_N` overrides the problem size of the session measurement (e.g.
+//! `BENCH_N=6400` for the paper-scale regime).
 
 #[path = "bench_util.rs"]
 mod bench_util;
 use bench_util::*;
 
-use exageostat::api::{ExaGeoStat, Hardware, MleOptions};
+use exageostat::api::{ExaGeoStat, Hardware, MleOptions, MleResult};
 use exageostat::baselines::{fieldslike_mle, georlike_mle};
-use exageostat::covariance::DistanceMetric;
+use exageostat::covariance::{kernel_by_name, DistanceMetric};
+use exageostat::likelihood::{self, EvalSession, Problem, Variant};
 use exageostat::scheduler::pool::Policy;
+use std::sync::Arc;
 
 fn main() {
     let full = std::env::var("BENCH_FULL").is_ok();
@@ -30,9 +40,10 @@ fn main() {
     let betas = [0.03, 0.1, 0.3];
     let nus = [0.5, 1.0, 2.0];
 
+    let ts = 100;
     let exa = ExaGeoStat::init(Hardware {
         ncores: 2,
-        ts: 100,
+        ts,
         policy: Policy::Prio,
         ..Hardware::default()
     });
@@ -96,5 +107,94 @@ fn main() {
          below fields-like; exageostat takes MORE iterations (BOBYQA explores more) but\n\
          far less total time; iterations grow with nu for exageostat."
     );
+
+    // -----------------------------------------------------------------
+    // Machine-readable MLE-iteration telemetry (BENCH_mle_iter.json)
+    // -----------------------------------------------------------------
+    let n_sess: usize = std::env::var("BENCH_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(n);
+    let theta = [1.0, 0.1, 0.5];
+    let data = exa
+        .simulate_data_exact("ugsm-s", &theta, "euclidean", n_sess, 7)
+        .unwrap();
+
+    // Per-variant MLE runs through the session-backed api::mle route.
+    let max_iters = if quick { 25 } else { 200 };
+    let opt = MleOptions::new(vec![0.001; 3], vec![5.0; 3], tol, max_iters);
+    let mut variant_rows: Vec<(String, MleResult)> = Vec::new();
+    let exact = exa.exact_mle(&data, "ugsm-s", "euclidean", &opt).unwrap();
+    variant_rows.push(("exact".into(), exact));
+    let dst = exa.dst_mle(&data, "ugsm-s", "euclidean", &opt, 2).unwrap();
+    variant_rows.push(("dst_band2".into(), dst));
+    let tlr = exa
+        .tlr_mle(&data, "ugsm-s", "euclidean", &opt, 1e-7, usize::MAX)
+        .unwrap();
+    variant_rows.push(("tlr_tol1e-7".into(), tlr));
+    let mp = exa.mp_mle(&data, "ugsm-s", "euclidean", &opt, 1).unwrap();
+    variant_rows.push(("mp_band1".into(), mp));
+
+    // Warm-vs-cold single-evaluation speedup: the direct measurement of
+    // what the session layer buys per optimizer iteration.
+    let problem = Problem {
+        kernel: kernel_by_name("ugsm-s").unwrap().into(),
+        locs: Arc::new(data.locs.clone()),
+        z: Arc::new(data.z.clone()),
+        metric: DistanceMetric::Euclidean,
+    };
+    let ctx = exa.ctx();
+    let k = if quick { 2 } else { 5 };
+    let cold = time_median(k, || {
+        likelihood::loglik(&problem, &theta, Variant::Exact, &ctx).unwrap();
+    });
+    let mut session = EvalSession::new(&problem, Variant::Exact, &ctx).unwrap();
+    session.eval(&theta).unwrap(); // warm the distance cache + workspace
+    let warm = time_median(k, || {
+        session.eval(&theta).unwrap();
+    });
+    let speedup = cold / warm;
+    println!(
+        "\nEvalSession exact eval at n={n_sess}: cold {:.4}s, warm {:.4}s ({speedup:.2}x)",
+        cold, warm
+    );
+
+    // f64 -> JSON number; non-finite values (e.g. -inf loglik when every
+    // probe was non-SPD) become null so the document stays parseable.
+    let jnum = |v: f64| -> String {
+        if v.is_finite() {
+            format!("{v}")
+        } else {
+            "null".into()
+        }
+    };
+    let variants_json: Vec<String> = variant_rows
+        .iter()
+        .map(|(name, r)| {
+            format!(
+                "    {{\"variant\": \"{name}\", \"time_per_iter_s\": {}, \
+                 \"iters\": {}, \"loglik\": {}}}",
+                jnum(r.time_per_iter),
+                r.iters,
+                jnum(r.loglik)
+            )
+        })
+        .collect();
+    let mut json = String::from("{\n");
+    json.push_str("  \"bench\": \"table5_time_per_iter\",\n");
+    json.push_str(&format!("  \"n\": {n_sess},\n  \"ts\": {ts},\n  \"tol\": {tol},\n"));
+    json.push_str(&format!("  \"variants\": [\n{}\n  ],\n", variants_json.join(",\n")));
+    json.push_str("  \"session\": {\n    \"variant\": \"exact\",\n");
+    json.push_str(&format!(
+        "    \"cold_eval_s\": {},\n    \"warm_eval_s\": {},\n    \
+         \"speedup_warm_vs_cold\": {}\n",
+        jnum(cold),
+        jnum(warm),
+        jnum(speedup)
+    ));
+    json.push_str("  }\n}\n");
+    let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_mle_iter.json".into());
+    std::fs::write(&out, &json).unwrap_or_else(|e| eprintln!("cannot write {out}: {e}"));
+    println!("telemetry written to {out}");
     exa.finalize();
 }

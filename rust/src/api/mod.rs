@@ -4,7 +4,7 @@
 
 use crate::backend::{self, ArcEngine, Backend, Engine as _};
 use crate::covariance::{kernel_by_name, CovKernel, DistanceMetric, Location};
-use crate::likelihood::{self, ExecCtx, Problem, Variant};
+use crate::likelihood::{EvalSession, ExecCtx, Problem, Variant};
 use crate::optimizer::{self, Bounds, Method, OptOptions};
 use crate::prediction::{self, FisherResult, MloeMmom, Prediction};
 use crate::scheduler::pool::Policy;
@@ -187,6 +187,12 @@ impl ExaGeoStat {
             k.nparams()
         );
         let ctx = self.ctx();
+        // One evaluation session per MLE run: the Morton ordering, the
+        // per-tile distance cache and the factor/solve workspaces are
+        // resolved here, once, and every optimizer iteration below reuses
+        // them (the iteration-aware hot loop — see DESIGN.md §"Evaluation
+        // sessions and caching").
+        let mut session = EvalSession::new(&problem, variant, &ctx)?;
         // Optimize in log-parameter space: Matérn parameters are positive
         // and the (sigma_sq, beta) profile is banana-shaped in linear
         // scale; the log transform conditions it (standard practice, and
@@ -219,7 +225,7 @@ impl ExaGeoStat {
             opt.method,
             |x| {
                 let theta = back(x);
-                match likelihood::loglik(&problem, &theta, variant, &ctx) {
+                match session.eval(&theta) {
                     Ok(l) => -l.loglik,
                     Err(_) => f64::INFINITY,
                 }
@@ -344,6 +350,7 @@ impl ExaGeoStat {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::likelihood;
 
     fn small_hw(ts: usize) -> Hardware {
         Hardware {

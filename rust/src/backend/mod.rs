@@ -22,7 +22,7 @@ pub mod native;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 
-use crate::covariance::{CovKernel, DistanceMetric, Location};
+use crate::covariance::{CovKernel, DistBlock, DistanceMetric, Location};
 use std::sync::{Arc, OnceLock};
 
 /// Shared handle to a compute engine (cheap to clone into task closures).
@@ -46,6 +46,12 @@ pub trait Engine: Send + Sync {
     /// Fill one `h x w` covariance tile at global offset `(row0, col0)`
     /// into the column-major buffer `out` (length >= `h * w`).
     ///
+    /// `dist` is the warm-iteration fast path: when an
+    /// [`EvalSession`](crate::likelihood::EvalSession) has precomputed
+    /// this tile's distances, implementations should evaluate the kernel
+    /// straight from the cached block instead of redoing the metric work.
+    /// Passing `None` must produce the identical tile from `locs` alone.
+    ///
     /// Infallible by contract: implementations that can miss (e.g. no
     /// lowered artifact for this tile size) must fall back to the native
     /// kernels rather than fail — tile tasks run inside the scheduler
@@ -61,6 +67,7 @@ pub trait Engine: Send + Sync {
         col0: usize,
         h: usize,
         w: usize,
+        dist: Option<&DistBlock>,
         out: &mut [f64],
     );
 
@@ -189,6 +196,7 @@ mod tests {
             col0,
             h,
             w,
+            None,
             &mut got,
         );
         let mut want = vec![0.0; h * w];
@@ -204,6 +212,22 @@ mod tests {
             &mut want,
         );
         assert_eq!(got, want);
+        // Precomputed-distance fast path: identical tile.
+        let block = crate::covariance::build_dist_block(&p.locs, p.metric, row0, col0, h, w);
+        let mut cached = vec![0.0; h * w];
+        engine.fill_tile(
+            p.kernel.as_ref(),
+            &theta,
+            &p.locs,
+            p.metric,
+            row0,
+            col0,
+            h,
+            w,
+            Some(&block),
+            &mut cached,
+        );
+        assert_eq!(cached, want);
     }
 
     #[test]

@@ -5,7 +5,9 @@
 //! arbitrary tile shapes.
 
 use super::{Engine, EngineLogLik};
-use crate::covariance::{build_cov_dense, fill_cov_tile, CovKernel, DistanceMetric, Location};
+use crate::covariance::{
+    build_cov_dense, cov_from_dist, fill_cov_tile, CovKernel, DistBlock, DistanceMetric, Location,
+};
 use crate::linalg::cholesky::dense_chol_solve;
 
 /// The always-available pure-Rust backend.
@@ -33,9 +35,15 @@ impl Engine for NativeEngine {
         col0: usize,
         h: usize,
         w: usize,
+        dist: Option<&DistBlock>,
         out: &mut [f64],
     ) {
-        fill_cov_tile(kernel, theta, locs, metric, row0, col0, h, w, out);
+        match dist {
+            Some(block) if block.h == h && block.w == w => {
+                cov_from_dist(kernel, theta, locs.len(), row0, col0, block, out);
+            }
+            _ => fill_cov_tile(kernel, theta, locs, metric, row0, col0, h, w, out),
+        }
     }
 
     fn loglik(

@@ -11,7 +11,7 @@
 
 use super::native::NativeEngine;
 use super::{Engine, EngineLogLik};
-use crate::covariance::{CovKernel, DistanceMetric, Location};
+use crate::covariance::{CovKernel, DistBlock, DistanceMetric, Location};
 use crate::runtime::PjrtEngine;
 
 /// Is `nu` one of the half-integer smoothness values the Pallas kernel
@@ -84,8 +84,13 @@ impl Engine for PjrtBackend {
         col0: usize,
         h: usize,
         w: usize,
+        dist: Option<&DistBlock>,
         out: &mut [f64],
     ) {
+        // The artifact computes distances on-device from the coordinate
+        // blocks, so a precomputed `dist` is irrelevant on the artifact
+        // path; any miss falls back to native *with* the cache, keeping
+        // warm-iteration behaviour consistent across backends.
         if self.tile_covered(kernel, theta, locs, metric, row0, col0, h, w) {
             let rows = &locs[row0..row0 + h];
             let cols = &locs[col0..col0 + w];
@@ -95,7 +100,7 @@ impl Engine for PjrtBackend {
             }
         }
         self.fallback
-            .fill_tile(kernel, theta, locs, metric, row0, col0, h, w, out);
+            .fill_tile(kernel, theta, locs, metric, row0, col0, h, w, dist, out);
     }
 
     fn loglik(

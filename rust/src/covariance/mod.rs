@@ -226,6 +226,188 @@ pub fn fill_cov_tile(
     }
 }
 
+/// Precomputed distances (and temporal lags) for one covariance tile,
+/// laid out column-major like the tile buffer it feeds.
+///
+/// Distances depend only on the locations and metric — both immutable
+/// across optimizer iterations — so an MLE run computes them once (in a
+/// [`DistCache`]) and every subsequent `theta` evaluation reads them back
+/// instead of redoing the `sqrt`/haversine work per element.
+pub struct DistBlock {
+    pub h: usize,
+    pub w: usize,
+    /// Column-major spatial distances, length `h * w`.
+    pub d: Box<[f64]>,
+    /// Column-major temporal lags; `None` when every site has `t = 0`
+    /// (purely spatial data), in which case the lag is 0 everywhere.
+    pub u: Option<Box<[f64]>>,
+}
+
+/// Compute the distance block for the tile at global offset
+/// `(row0, col0)` of the `p*n`-dimensional covariance.  Global index `g`
+/// maps to site `g % n` (variate-major ordering), so the same function
+/// serves univariate and multivariate kernels.
+pub fn build_dist_block(
+    locs: &[Location],
+    metric: DistanceMetric,
+    row0: usize,
+    col0: usize,
+    h: usize,
+    w: usize,
+) -> DistBlock {
+    let has_time = locs.iter().any(|l| l.t != 0.0);
+    build_dist_block_inner(locs, metric, row0, col0, h, w, has_time)
+}
+
+/// [`build_dist_block`] with the (whole-location-set) `has_time` scan
+/// hoisted out — [`DistCache::build`] computes it once for all blocks.
+#[allow(clippy::too_many_arguments)]
+fn build_dist_block_inner(
+    locs: &[Location],
+    metric: DistanceMetric,
+    row0: usize,
+    col0: usize,
+    h: usize,
+    w: usize,
+    has_time: bool,
+) -> DistBlock {
+    let n = locs.len();
+    let mut d = vec![0.0f64; h * w].into_boxed_slice();
+    let mut u = has_time.then(|| vec![0.0f64; h * w].into_boxed_slice());
+    for j in 0..w {
+        let sj = (col0 + j) % n;
+        for i in 0..h {
+            let si = (row0 + i) % n;
+            d[i + j * h] = distance(metric, &locs[si], &locs[sj]);
+            if let Some(u) = u.as_mut() {
+                u[i + j * h] = (locs[si].t - locs[sj].t).abs();
+            }
+        }
+    }
+    DistBlock { h, w, d, u }
+}
+
+/// Fill a covariance tile from a precomputed [`DistBlock`] — the warm-path
+/// counterpart of [`fill_cov_tile`].  For diagonal tiles (`row0 == col0`,
+/// square) only the lower triangle is evaluated and mirrored, which is
+/// exact for any valid (cross-)covariance: swapping `(variate, site)`
+/// pairs leaves the kernel value unchanged.
+#[allow(clippy::too_many_arguments)]
+pub fn cov_from_dist(
+    kernel: &dyn CovKernel,
+    theta: &[f64],
+    nsites: usize,
+    row0: usize,
+    col0: usize,
+    dist: &DistBlock,
+    out: &mut [f64],
+) {
+    let (h, w) = (dist.h, dist.w);
+    debug_assert!(out.len() >= h * w);
+    let diagonal = row0 == col0 && h == w;
+    for j in 0..w {
+        let gj = col0 + j;
+        let (b, sj) = (gj / nsites, gj % nsites);
+        let i0 = if diagonal { j } else { 0 };
+        for i in i0..h {
+            let gi = row0 + i;
+            let (a, si) = (gi / nsites, gi % nsites);
+            let d = dist.d[i + j * h];
+            let u = dist.u.as_ref().map_or(0.0, |u| u[i + j * h]);
+            let v = kernel.cov(theta, d, u, a, b, si == sj);
+            out[i + j * h] = v;
+            if diagonal {
+                out[j + i * h] = v;
+            }
+        }
+    }
+}
+
+/// Per-tile distance cache for one tile grid (dimension `p*n`, tile size
+/// `ts`) — the iteration-invariant half of covariance generation.
+///
+/// Blocks are `Arc`-shared so scheduler tasks can capture them without
+/// copying.  An optional tile `band` (the DST structure) skips blocks that
+/// the banded factorization never reads.
+pub struct DistCache {
+    dim: usize,
+    ts: usize,
+    nt: usize,
+    blocks: Vec<Option<std::sync::Arc<DistBlock>>>,
+}
+
+impl DistCache {
+    /// Build the cache for `p`-variate data at `locs` under `metric`.
+    /// `band = None` caches every lower tile; `band = Some(b)` only tiles
+    /// with `i - j <= b`.
+    pub fn build(
+        locs: &[Location],
+        metric: DistanceMetric,
+        p: usize,
+        ts: usize,
+        band: Option<usize>,
+    ) -> DistCache {
+        let dim = p * locs.len();
+        let nt = dim.div_ceil(ts);
+        let tile_dim = |i: usize| ts.min(dim - i * ts);
+        let has_time = locs.iter().any(|l| l.t != 0.0);
+        let mut blocks = Vec::with_capacity(nt * (nt + 1) / 2);
+        for i in 0..nt {
+            for j in 0..=i {
+                let keep = match band {
+                    None => true,
+                    Some(b) => i - j <= b,
+                };
+                blocks.push(keep.then(|| {
+                    std::sync::Arc::new(build_dist_block_inner(
+                        locs,
+                        metric,
+                        i * ts,
+                        j * ts,
+                        tile_dim(i),
+                        tile_dim(j),
+                        has_time,
+                    ))
+                }));
+            }
+        }
+        DistCache {
+            dim,
+            ts,
+            nt,
+            blocks,
+        }
+    }
+
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+    #[inline]
+    pub fn ts(&self) -> usize {
+        self.ts
+    }
+    #[inline]
+    pub fn nt(&self) -> usize {
+        self.nt
+    }
+
+    /// The cached block for lower tile `(i, j)`, if retained at build time.
+    pub fn block(&self, i: usize, j: usize) -> Option<std::sync::Arc<DistBlock>> {
+        debug_assert!(i >= j && i < self.nt);
+        self.blocks[i * (i + 1) / 2 + j].clone()
+    }
+
+    /// Cached doubles (telemetry: the memory cost of warm iterations).
+    pub fn storage_len(&self) -> usize {
+        self.blocks
+            .iter()
+            .flatten()
+            .map(|b| b.d.len() + b.u.as_ref().map_or(0, |u| u.len()))
+            .sum()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -334,6 +516,87 @@ mod tests {
             first_cluster_low || first_cluster_high,
             "morton order should separate the clusters"
         );
+    }
+
+    #[test]
+    fn cov_from_dist_matches_direct_fill() {
+        // Univariate and bivariate, including a diagonal tile (mirrored
+        // fill) and an off-diagonal rectangular tile.
+        let locs: Vec<Location> = (0..11)
+            .map(|i| {
+                let f = i as f64;
+                Location::new((f * 0.29).fract(), (f * 0.61).fract())
+            })
+            .collect();
+        for (name, theta) in [
+            ("ugsm-s", vec![1.2, 0.2, 1.0]),
+            ("ugsmn-s", vec![1.0, 0.15, 0.8, 0.4]),
+            ("bgspm-s", vec![1.0, 1.4, 0.2, 0.6, 1.2, 0.3]),
+        ] {
+            let k = kernel_by_name(name).unwrap();
+            let dim = k.nvariates() * locs.len();
+            let ts = 5; // does not divide dim for either p
+            let nt = dim.div_ceil(ts);
+            let tile_dim = |i: usize| ts.min(dim - i * ts);
+            for i in 0..nt {
+                for j in 0..=i {
+                    let (h, w) = (tile_dim(i), tile_dim(j));
+                    let (r0, c0) = (i * ts, j * ts);
+                    let block = build_dist_block(&locs, DistanceMetric::Euclidean, r0, c0, h, w);
+                    assert_eq!((block.h, block.w), (h, w));
+                    let mut got = vec![0.0; h * w];
+                    cov_from_dist(k.as_ref(), &theta, locs.len(), r0, c0, &block, &mut got);
+                    let mut want = vec![0.0; h * w];
+                    fill_cov_tile(
+                        k.as_ref(),
+                        &theta,
+                        &locs,
+                        DistanceMetric::Euclidean,
+                        r0,
+                        c0,
+                        h,
+                        w,
+                        &mut want,
+                    );
+                    for e in 0..h * w {
+                        assert!(
+                            (got[e] - want[e]).abs() < 1e-15,
+                            "{name} tile ({i},{j}) entry {e}: {} vs {}",
+                            got[e],
+                            want[e]
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dist_cache_band_skips_offband_blocks() {
+        let locs: Vec<Location> = (0..20)
+            .map(|i| Location::new((i as f64 * 0.37).fract(), (i as f64 * 0.71).fract()))
+            .collect();
+        let full = DistCache::build(&locs, DistanceMetric::Euclidean, 1, 6, None);
+        assert_eq!(full.nt(), 4);
+        assert_eq!(full.dim(), 20);
+        let banded = DistCache::build(&locs, DistanceMetric::Euclidean, 1, 6, Some(1));
+        for i in 0..4 {
+            for j in 0..=i {
+                assert!(full.block(i, j).is_some());
+                assert_eq!(banded.block(i, j).is_some(), i - j <= 1);
+            }
+        }
+        assert!(banded.storage_len() < full.storage_len());
+        // spatial data: no temporal-lag plane cached
+        assert!(full.block(1, 0).unwrap().u.is_none());
+        // spatio-temporal data: lag plane present and correct
+        let st: Vec<Location> = (0..8)
+            .map(|i| Location::new_st(i as f64 * 0.1, 0.0, (i % 3) as f64))
+            .collect();
+        let c = DistCache::build(&st, DistanceMetric::Euclidean, 1, 4, None);
+        let b = c.block(1, 0).unwrap();
+        let u = b.u.as_ref().expect("temporal lags cached");
+        assert_eq!(u[0], (st[4].t - st[0].t).abs());
     }
 
     #[test]

@@ -5,6 +5,7 @@
 
 use super::{ExecCtx, LogLik, Problem};
 use crate::backend::{ArcEngine, Engine as _};
+use crate::covariance::DistCache;
 use crate::linalg::cholesky::{
     check_fail, in_band, new_fail_flag, submit_tiled_forward_solve_banded, submit_tiled_potrf,
     TileHandles,
@@ -26,11 +27,15 @@ pub fn submit_generation(
     band: Option<usize>,
 ) {
     let engine = crate::backend::default_engine();
-    submit_generation_with(g, a, hs, problem, theta, band, &engine);
+    submit_generation_with(g, a, hs, problem, theta, band, &engine, None);
 }
 
 /// Submit generation tasks against an explicit backend engine (the
-/// likelihood hot path passes `ctx.engine`).
+/// likelihood hot path passes `ctx.engine`).  `dist` is the per-tile
+/// distance cache of a warm [`super::EvalSession`] iteration; each task
+/// captures its tile's `Arc`-shared block so the engine can skip the
+/// metric work.
+#[allow(clippy::too_many_arguments)]
 pub fn submit_generation_with(
     g: &mut TaskGraph,
     a: &TileMatrix,
@@ -39,6 +44,7 @@ pub fn submit_generation_with(
     theta: &[f64],
     band: Option<usize>,
     engine: &ArcEngine,
+    dist: Option<&DistCache>,
 ) {
     let nt = a.nt();
     let ts = a.ts();
@@ -57,6 +63,7 @@ pub fn submit_generation_with(
             let metric = problem.metric;
             let theta = theta.clone();
             let engine = engine.clone();
+            let block = dist.and_then(|c| c.block(i, j));
             let (row0, col0) = (i * ts, j * ts);
             g.submit(TaskKind::DCMG, &[(hs.at(i, j), Access::W)], bytes, move || {
                 // SAFETY: STF ordering gives exclusive access to the tile.
@@ -70,6 +77,7 @@ pub fn submit_generation_with(
                     col0,
                     h,
                     w,
+                    block.as_deref(),
                     out,
                 );
             });
@@ -108,14 +116,35 @@ pub fn loglik(
             (problem, std::borrow::Cow::Borrowed(problem.z.as_slice()))
         };
     let a = TileMatrix::zeros(dim, ctx.ts);
+    let y = TileVector::from_slice(&z, ctx.ts);
+    run_pipeline(problem, theta, band, ctx, None, &a, &y)
+}
+
+/// The generation → tiled-Cholesky → forward-solve → reduction pipeline
+/// over caller-owned storage.  The cold path ([`loglik`]) allocates `a`
+/// and `y` fresh; a warm [`super::EvalSession`] iteration passes its
+/// reusable workspace (with `y` already reloaded) plus the distance
+/// cache, so no large allocation happens here.
+///
+/// `problem` must already be in final (possibly Morton-permuted) order;
+/// every retained tile of `a` is fully overwritten by generation, so
+/// stale factor values from a previous iteration are harmless.
+pub(crate) fn run_pipeline(
+    problem: &Problem,
+    theta: &[f64],
+    band: Option<usize>,
+    ctx: &ExecCtx,
+    dist: Option<&DistCache>,
+    a: &TileMatrix,
+    y: &TileVector,
+) -> anyhow::Result<LogLik> {
     let mut g = TaskGraph::new();
     let hs = TileHandles::register(&mut g, a.nt());
-    submit_generation_with(&mut g, &a, &hs, problem, theta, band, &ctx.engine);
+    submit_generation_with(&mut g, a, &hs, problem, theta, band, &ctx.engine, dist);
     let fail = new_fail_flag();
-    submit_tiled_potrf(&mut g, &a, &hs, band, &fail);
-    let y = TileVector::from_slice(&z, ctx.ts);
+    submit_tiled_potrf(&mut g, a, &hs, band, &fail);
     let yh = g.register_many(y.nt());
-    submit_tiled_forward_solve_banded(&mut g, &a, &hs, &y, &yh, band);
+    submit_tiled_forward_solve_banded(&mut g, a, &hs, y, &yh, band);
     pool::run(&mut g, ctx.ncores, ctx.policy);
     check_fail(&fail).map_err(|e| {
         anyhow::anyhow!(
@@ -125,7 +154,7 @@ pub fn loglik(
     })?;
     let logdet = 2.0 * a.diag_sum(f64::ln);
     let sse = y.dot_self();
-    Ok(LogLik::assemble(logdet, sse, dim))
+    Ok(LogLik::assemble(logdet, sse, a.n()))
 }
 
 /// Tile occupancy map for Fig 1 visualisation: returns, for each lower

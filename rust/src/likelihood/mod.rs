@@ -14,7 +14,10 @@
 
 pub mod exact;
 pub mod mp;
+pub mod session;
 pub mod tlr;
+
+pub use session::EvalSession;
 
 use crate::backend::{ArcEngine, Engine as _};
 use crate::covariance::{CovKernel, DistanceMetric, Location};

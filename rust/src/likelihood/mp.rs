@@ -11,6 +11,7 @@
 
 use super::{ExecCtx, LogLik, Problem};
 use crate::backend::{ArcEngine, Engine as _};
+use crate::covariance::DistCache;
 use crate::linalg::cholesky::{
     check_fail, new_fail_flag, submit_tiled_forward_solve_banded, submit_tiled_potrf, TileHandles,
 };
@@ -34,6 +35,7 @@ pub fn demote_f32(buf: &mut [f64]) {
 
 /// Submit MP generation tasks: every lower tile is generated; off-band
 /// tiles are rounded through f32.
+#[allow(clippy::too_many_arguments)]
 fn submit_generation_mp(
     g: &mut TaskGraph,
     a: &TileMatrix,
@@ -42,6 +44,7 @@ fn submit_generation_mp(
     theta: &[f64],
     band: usize,
     engine: &ArcEngine,
+    dist: Option<&DistCache>,
 ) {
     let nt = a.nt();
     let ts = a.ts();
@@ -57,6 +60,7 @@ fn submit_generation_mp(
             let metric = problem.metric;
             let theta = theta.clone();
             let engine = engine.clone();
+            let block = dist.and_then(|c| c.block(i, j));
             let (row0, col0) = (i * ts, j * ts);
             let demote = !is_f64_tile(band, i, j);
             g.submit(TaskKind::DCMG, &[(hs.at(i, j), Access::W)], bytes, move || {
@@ -71,6 +75,7 @@ fn submit_generation_mp(
                     col0,
                     h,
                     w,
+                    block.as_deref(),
                     out,
                 );
                 if demote {
@@ -91,16 +96,30 @@ pub fn loglik(
 ) -> anyhow::Result<LogLik> {
     let dim = problem.dim();
     let a = TileMatrix::zeros(dim, ctx.ts);
+    let y = TileVector::from_slice(&problem.z, ctx.ts);
+    run_pipeline(problem, theta, band, ctx, None, &a, &y)
+}
+
+/// MP pipeline over caller-owned storage (see
+/// [`super::exact::run_pipeline`] for the workspace-reuse contract).
+pub(crate) fn run_pipeline(
+    problem: &Problem,
+    theta: &[f64],
+    band: usize,
+    ctx: &ExecCtx,
+    dist: Option<&DistCache>,
+    a: &TileMatrix,
+    y: &TileVector,
+) -> anyhow::Result<LogLik> {
     let mut g = TaskGraph::new();
     let hs = TileHandles::register(&mut g, a.nt());
-    submit_generation_mp(&mut g, &a, &hs, problem, theta, band, &ctx.engine);
+    submit_generation_mp(&mut g, a, &hs, problem, theta, band, &ctx.engine, dist);
     let fail = new_fail_flag();
     // Factorization is structurally dense (band = None): MP rounds values,
     // it does not drop tiles.
-    submit_tiled_potrf(&mut g, &a, &hs, None, &fail);
-    let y = TileVector::from_slice(&problem.z, ctx.ts);
+    submit_tiled_potrf(&mut g, a, &hs, None, &fail);
     let yh = g.register_many(y.nt());
-    submit_tiled_forward_solve_banded(&mut g, &a, &hs, &y, &yh, None);
+    submit_tiled_forward_solve_banded(&mut g, a, &hs, y, &yh, None);
     pool::run(&mut g, ctx.ncores, ctx.policy);
     check_fail(&fail).map_err(|e| {
         anyhow::anyhow!(
@@ -110,7 +129,7 @@ pub fn loglik(
     })?;
     let logdet = 2.0 * a.diag_sum(f64::ln);
     let sse = y.dot_self();
-    Ok(LogLik::assemble(logdet, sse, dim))
+    Ok(LogLik::assemble(logdet, sse, a.n()))
 }
 
 #[cfg(test)]

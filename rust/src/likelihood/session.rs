@@ -1,0 +1,275 @@
+//! `EvalSession` — the iteration-aware evaluation layer between
+//! [`Problem`] and the four likelihood engines.
+//!
+//! The MLE hot loop (Table V: hundreds of BOBYQA iterations) re-evaluates
+//! the likelihood at a new `theta` while everything else — locations,
+//! metric, kernel, tile grid, data vector — stays fixed.  The plain
+//! [`super::loglik`] entry point treats every call as cold: it reorders
+//! locations, recomputes every pairwise distance and allocates a fresh
+//! [`TileMatrix`] each time.  A session hoists all of that out of the
+//! loop:
+//!
+//! * **Morton permutation** resolved once (per variant, matching the cold
+//!   paths' reordering rules exactly, so results are bit-compatible);
+//! * **distance-tile cache** ([`DistCache`]): per-tile `Arc`-shared
+//!   blocks of spatial distances (and temporal lags when present),
+//!   metric-resolved once — warm generation evaluates the kernel straight
+//!   from the cache through the [`crate::backend::Engine::fill_tile`]
+//!   fast path, and mirrors diagonal tiles instead of evaluating their
+//!   upper halves;
+//! * **workspace reuse**: the `TileMatrix` factor storage and the
+//!   `TileVector` solve vector are allocated once and reloaded per
+//!   iteration, so warm iterations perform zero large allocations
+//!   (guarded by the `tile_matrix_allocs` regression tests).
+//!
+//! `api::ExaGeoStat::mle` routes every optimizer objective evaluation
+//! through a session; one-shot callers can keep using `likelihood::loglik`.
+
+use super::{exact, mp, tlr, ExecCtx, LogLik, Problem, Variant};
+use crate::covariance::{morton_perm, DistCache};
+use crate::linalg::lowrank::LrOpts;
+use crate::linalg::tile::{TileMatrix, TileVector};
+use std::sync::Arc;
+
+/// Reusable factor + solve-vector storage for the tiled variants
+/// (exact / DST / MP).  TLR owns no equivalent: its low-rank tiles are
+/// rank-adaptive per `theta`, so their storage is intrinsically
+/// per-iteration.
+struct TiledWorkspace {
+    a: TileMatrix,
+    y: TileVector,
+}
+
+/// One MLE run's evaluation state: construct once, call
+/// [`EvalSession::eval`] per optimizer iteration.
+pub struct EvalSession {
+    variant: Variant,
+    ctx: ExecCtx,
+    /// Locations/kernel/metric/data in final (possibly Morton-permuted)
+    /// order; `problem.z` is the observation vector warm solves reload.
+    problem: Problem,
+    dist: Arc<DistCache>,
+    tiled: Option<TiledWorkspace>,
+    /// TLR forward-solve scratch (reused across iterations).
+    y_scratch: Vec<f64>,
+    evals: usize,
+}
+
+impl EvalSession {
+    /// Build a session for `variant`.  Validates the data shape, applies
+    /// the variant's location reordering, precomputes the distance tiles
+    /// and allocates the iteration workspace.
+    pub fn new(problem: &Problem, variant: Variant, ctx: &ExecCtx) -> anyhow::Result<EvalSession> {
+        let dim = problem.dim();
+        anyhow::ensure!(
+            problem.z.len() == dim,
+            "z has length {} but kernel/locations imply {}",
+            problem.z.len(),
+            dim
+        );
+        if let Variant::Tlr { .. } = variant {
+            anyhow::ensure!(
+                problem.kernel.nvariates() == 1,
+                "TLR path currently supports univariate kernels"
+            );
+        }
+        // Reordering rules must mirror the cold paths exactly (the warm
+        // result is then identical): DST and TLR Morton-sort univariate
+        // problems; exact and MP evaluate in user order.
+        let permute = match variant {
+            Variant::Exact => false,
+            Variant::Dst { .. } => problem.kernel.nvariates() == 1,
+            Variant::Mp { .. } => false,
+            Variant::Tlr { .. } => true,
+        };
+        let (locs, z) = if permute {
+            let perm = morton_perm(&problem.locs);
+            let locs: Vec<_> = perm.iter().map(|&i| problem.locs[i]).collect();
+            let z: Vec<f64> = perm.iter().map(|&i| problem.z[i]).collect();
+            (Arc::new(locs), Arc::new(z))
+        } else {
+            (problem.locs.clone(), problem.z.clone())
+        };
+        // Only DST never touches off-band tiles; the other variants need
+        // the full lower triangle of distance blocks.
+        let band = match variant {
+            Variant::Dst { band } => Some(band),
+            _ => None,
+        };
+        let dist = Arc::new(DistCache::build(
+            &locs,
+            problem.metric,
+            problem.kernel.nvariates(),
+            ctx.ts,
+            band,
+        ));
+        let tiled = match variant {
+            Variant::Tlr { .. } => None,
+            _ => Some(TiledWorkspace {
+                a: TileMatrix::zeros(dim, ctx.ts),
+                y: TileVector::from_slice(&z, ctx.ts),
+            }),
+        };
+        Ok(EvalSession {
+            variant,
+            ctx: ctx.clone(),
+            problem: Problem {
+                kernel: problem.kernel.clone(),
+                locs,
+                z,
+                metric: problem.metric,
+            },
+            dist,
+            tiled,
+            y_scratch: Vec::new(),
+            evals: 0,
+        })
+    }
+
+    /// Evaluate the log-likelihood at `theta`.  Warm calls reuse the
+    /// cached distances and workspaces; the value matches a cold
+    /// [`super::loglik`] on the original problem.
+    pub fn eval(&mut self, theta: &[f64]) -> anyhow::Result<LogLik> {
+        self.evals += 1;
+        self.problem.kernel.validate(theta)?;
+        match self.variant {
+            Variant::Exact => self.eval_tiled(theta, None, false),
+            Variant::Dst { band } => self.eval_tiled(theta, Some(band), false),
+            Variant::Mp { band } => self.eval_tiled(theta, Some(band), true),
+            Variant::Tlr { tol, max_rank } => self.eval_tlr(theta, tol, max_rank),
+        }
+    }
+
+    fn eval_tiled(
+        &mut self,
+        theta: &[f64],
+        band: Option<usize>,
+        mp: bool,
+    ) -> anyhow::Result<LogLik> {
+        let ws = self.tiled.as_mut().expect("tiled workspace present");
+        ws.y.load(&self.problem.z);
+        if mp {
+            mp::run_pipeline(
+                &self.problem,
+                theta,
+                band.unwrap_or(0),
+                &self.ctx,
+                Some(&*self.dist),
+                &ws.a,
+                &ws.y,
+            )
+        } else {
+            exact::run_pipeline(
+                &self.problem,
+                theta,
+                band,
+                &self.ctx,
+                Some(&*self.dist),
+                &ws.a,
+                &ws.y,
+            )
+        }
+    }
+
+    fn eval_tlr(&mut self, theta: &[f64], tol: f64, max_rank: usize) -> anyhow::Result<LogLik> {
+        let opts = LrOpts { tol, max_rank };
+        let mut a = tlr::generate_with(
+            &self.problem,
+            theta,
+            opts,
+            self.ctx.ts,
+            &self.ctx.engine,
+            Some(&*self.dist),
+        );
+        let logdet = tlr::tlr_potrf(&mut a, opts)?;
+        self.y_scratch.clear();
+        self.y_scratch.extend_from_slice(&self.problem.z);
+        tlr::tlr_forward_solve(&a, &mut self.y_scratch);
+        let sse = self.y_scratch.iter().map(|v| v * v).sum();
+        Ok(LogLik::assemble(logdet, sse, self.problem.dim()))
+    }
+
+    /// Evaluations performed so far (successful or failed).
+    pub fn evals(&self) -> usize {
+        self.evals
+    }
+
+    /// The variant this session evaluates.
+    pub fn variant(&self) -> Variant {
+        self.variant
+    }
+
+    /// Doubles held by the distance cache (memory telemetry).
+    pub fn dist_storage_len(&self) -> usize {
+        self.dist.storage_len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::likelihood;
+    use crate::likelihood::testutil::small_problem;
+    use crate::scheduler::pool::Policy;
+
+    #[test]
+    fn session_matches_cold_loglik_for_every_variant() {
+        let p = small_problem(50, 7);
+        let theta = [1.1, 0.08, 0.5];
+        let ctx = ExecCtx::new(2, 16, Policy::Lws);
+        let nt = 50usize.div_ceil(16);
+        for variant in [
+            Variant::Exact,
+            Variant::Dst { band: 1 },
+            Variant::Dst { band: nt - 1 },
+            Variant::Mp { band: 1 },
+            Variant::Tlr {
+                tol: 1e-7,
+                max_rank: usize::MAX,
+            },
+        ] {
+            let cold = likelihood::loglik(&p, &theta, variant, &ctx).unwrap();
+            let mut s = EvalSession::new(&p, variant, &ctx).unwrap();
+            for pass in 0..3 {
+                let warm = s.eval(&theta).unwrap();
+                assert!(
+                    (warm.loglik - cold.loglik).abs() < 1e-12,
+                    "{variant:?} pass {pass}: warm {} vs cold {}",
+                    warm.loglik,
+                    cold.loglik
+                );
+                assert!((warm.logdet - cold.logdet).abs() < 1e-12);
+                assert!((warm.sse - cold.sse).abs() < 1e-12);
+            }
+            assert_eq!(s.evals(), 3);
+        }
+    }
+
+    #[test]
+    fn session_rejects_bad_shapes() {
+        let mut p = small_problem(10, 8);
+        let ctx = ExecCtx::new(1, 4, Policy::Eager);
+        p.z = Arc::new(vec![0.0; 7]);
+        assert!(EvalSession::new(&p, Variant::Exact, &ctx).is_err());
+        let p2 = small_problem(10, 9);
+        let mut s = EvalSession::new(&p2, Variant::Exact, &ctx).unwrap();
+        assert!(s.eval(&[1.0, -0.1, 0.5]).is_err());
+        // a failed eval does not poison the session
+        assert!(s.eval(&[1.0, 0.1, 0.5]).is_ok());
+    }
+
+    #[test]
+    fn non_spd_theta_reported_then_recoverable() {
+        // Duplicate locations without nugget => singular covariance; the
+        // session must surface the error and stay usable (BOBYQA probes
+        // infeasible corners routinely).
+        let mut p = small_problem(12, 10);
+        let mut locs = (*p.locs).clone();
+        locs[5] = locs[4];
+        p.locs = Arc::new(locs);
+        let ctx = ExecCtx::new(1, 4, Policy::Eager);
+        let mut s = EvalSession::new(&p, Variant::Exact, &ctx).unwrap();
+        let err = s.eval(&[1.0, 0.1, 0.5]).unwrap_err();
+        assert!(err.to_string().contains("not positive definite"), "{err}");
+    }
+}

@@ -16,6 +16,7 @@
 
 use super::{ExecCtx, LogLik, Problem};
 use crate::backend::{ArcEngine, Engine as _};
+use crate::covariance::DistCache;
 use crate::linalg::blas::{dpotrf_raw, dtrsv_ln};
 use crate::linalg::lowrank::{LrOpts, LrTile};
 use crate::linalg::matrix::Matrix;
@@ -73,16 +74,20 @@ impl TlrMatrix {
 /// (through the default compute backend).
 pub fn generate(problem: &Problem, theta: &[f64], opts: LrOpts, ts: usize) -> TlrMatrix {
     let engine = crate::backend::default_engine();
-    generate_with(problem, theta, opts, ts, &engine)
+    generate_with(problem, theta, opts, ts, &engine, None)
 }
 
 /// Generate the TLR covariance against an explicit backend engine.
+/// `dist` is the tile-aligned distance cache of a warm
+/// [`super::EvalSession`] iteration (same tile grid: `ts` over
+/// `problem.dim()`).
 pub fn generate_with(
     problem: &Problem,
     theta: &[f64],
     opts: LrOpts,
     ts: usize,
     engine: &ArcEngine,
+    dist: Option<&DistCache>,
 ) -> TlrMatrix {
     let n = problem.dim();
     let nt = n.div_ceil(ts);
@@ -90,34 +95,29 @@ pub fn generate_with(
     let mut diag = Vec::with_capacity(nt);
     let mut low = Vec::with_capacity(nt * (nt - 1) / 2);
     let mut buf = vec![0.0f64; ts * ts];
-    for i in 0..nt {
-        for j in 0..i {
-            let (h, w) = (dim(i), dim(j));
-            engine.fill_tile(
-                problem.kernel.as_ref(),
-                theta,
-                &problem.locs,
-                problem.metric,
-                i * ts,
-                j * ts,
-                h,
-                w,
-                &mut buf,
-            );
-            low.push(LrTile::compress_aca(h, w, &buf[..h * w], opts));
-        }
-        let h = dim(i);
+    let fill = |i: usize, j: usize, h: usize, w: usize, buf: &mut [f64]| {
+        let block = dist.and_then(|c| c.block(i, j));
         engine.fill_tile(
             problem.kernel.as_ref(),
             theta,
             &problem.locs,
             problem.metric,
             i * ts,
-            i * ts,
+            j * ts,
             h,
-            h,
-            &mut buf,
+            w,
+            block.as_deref(),
+            buf,
         );
+    };
+    for i in 0..nt {
+        for j in 0..i {
+            let (h, w) = (dim(i), dim(j));
+            fill(i, j, h, w, &mut buf);
+            low.push(LrTile::compress_aca(h, w, &buf[..h * w], opts));
+        }
+        let h = dim(i);
+        fill(i, i, h, h, &mut buf);
         diag.push(Matrix::from_col_major(h, h, &buf[..h * h]));
     }
     TlrMatrix {
@@ -225,7 +225,7 @@ pub fn loglik(
         z: std::sync::Arc::new(Vec::new()),
         metric: problem.metric,
     };
-    let mut a = generate_with(&sorted, theta, opts, ctx.ts, &ctx.engine);
+    let mut a = generate_with(&sorted, theta, opts, ctx.ts, &ctx.engine, None);
     let logdet = tlr_potrf(&mut a, opts)?;
     tlr_forward_solve(&a, &mut y);
     let sse = y.iter().map(|v| v * v).sum();

@@ -5,6 +5,22 @@
 //! buffer — one scheduler data handle per tile.
 
 use crate::linalg::matrix::Matrix;
+use std::cell::Cell;
+
+thread_local! {
+    /// Per-thread count of [`TileMatrix`] buffer allocations — the
+    /// testkit telemetry behind the allocation-regression tests that
+    /// guard `EvalSession`'s workspace-reuse invariant (warm optimizer
+    /// iterations must construct zero new tile matrices).  Thread-local
+    /// so parallel tests cannot perturb each other's counts; sessions
+    /// allocate on the calling thread, never inside worker tasks.
+    static TILE_MATRIX_ALLOCS: Cell<u64> = Cell::new(0);
+}
+
+/// Number of `TileMatrix` allocations performed by the current thread.
+pub fn tile_matrix_allocs() -> u64 {
+    TILE_MATRIX_ALLOCS.with(|c| c.get())
+}
 
 /// Raw pointer to a tile buffer that tasks capture.
 ///
@@ -57,6 +73,7 @@ impl TileMatrix {
     /// tile size `ts`.
     pub fn zeros(n: usize, ts: usize) -> Self {
         assert!(n > 0 && ts > 0);
+        TILE_MATRIX_ALLOCS.with(|c| c.set(c.get() + 1));
         let nt = n.div_ceil(ts);
         let mut tiles = Vec::with_capacity(nt * (nt + 1) / 2);
         for i in 0..nt {
@@ -229,6 +246,15 @@ impl TileVector {
     pub fn nt(&self) -> usize {
         self.segs.len()
     }
+    /// Refill the segments from `x` without reallocating (workspace reuse
+    /// across optimizer iterations; `x` must have the original length).
+    pub fn load(&mut self, x: &[f64]) {
+        assert_eq!(x.len(), self.n, "TileVector::load length mismatch");
+        for (i, s) in self.segs.iter_mut().enumerate() {
+            let lo = i * self.ts;
+            s.copy_from_slice(&x[lo..lo + s.len()]);
+        }
+    }
     pub fn seg(&self, i: usize) -> &[f64] {
         &self.segs[i]
     }
@@ -317,6 +343,23 @@ mod tests {
         assert_eq!(tv.to_vec(), x);
         let ds: f64 = x.iter().map(|v| v * v).sum();
         assert!((tv.dot_self() - ds).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tile_vector_load_reuses_segments() {
+        let x: Vec<f64> = (0..11).map(|v| v as f64).collect();
+        let mut tv = TileVector::from_slice(&x, 4);
+        let y: Vec<f64> = (0..11).map(|v| (v * v) as f64).collect();
+        tv.load(&y);
+        assert_eq!(tv.to_vec(), y);
+    }
+
+    #[test]
+    fn alloc_counter_tracks_this_thread() {
+        let before = tile_matrix_allocs();
+        let _a = TileMatrix::zeros(8, 4);
+        let _b = TileMatrix::zeros(8, 4);
+        assert_eq!(tile_matrix_allocs(), before + 2);
     }
 
     #[test]

@@ -122,6 +122,7 @@ pub fn simulate_obs_exact(
         theta,
         None,
         &ctx.engine,
+        None,
     );
     let fail = new_fail_flag();
     submit_tiled_potrf(&mut g, &a, &hs, None, &fail);

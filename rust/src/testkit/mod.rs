@@ -12,6 +12,11 @@
 
 use crate::rng::Pcg64;
 
+/// Per-thread [`crate::linalg::tile::TileMatrix`] allocation counter —
+/// the telemetry behind the allocation-regression tests that pin
+/// [`crate::likelihood::EvalSession`]'s workspace-reuse invariant.
+pub use crate::linalg::tile::tile_matrix_allocs;
+
 /// Run `prop` on `cases` inputs drawn by `gen` from a seeded RNG.
 pub fn forall<T: std::fmt::Debug>(
     seed: u64,

@@ -4,7 +4,7 @@
 
 use exageostat::backend::{self, Backend, Engine as _};
 use exageostat::covariance::{
-    build_cov_dense, fill_cov_tile, kernel_by_name, DistanceMetric, Location,
+    build_cov_dense, build_dist_block, fill_cov_tile, kernel_by_name, DistanceMetric, Location,
 };
 use exageostat::likelihood::{self, ExecCtx, Problem, Variant};
 use exageostat::linalg::cholesky::dense_chol_solve;
@@ -89,6 +89,7 @@ fn engine_fill_tile_matches_covariance_kernels() {
             col0,
             h,
             w,
+            None,
             &mut got,
         );
         let mut want = vec![0.0; h * w];
@@ -104,6 +105,23 @@ fn engine_fill_tile_matches_covariance_kernels() {
             &mut want,
         );
         assert_eq!(got, want, "tile ({row0},{col0},{h},{w})");
+        // The precomputed-distance fast path of the new fill_tile
+        // contract produces the identical tile.
+        let block = build_dist_block(&locs, DistanceMetric::Euclidean, row0, col0, h, w);
+        let mut cached = vec![0.0; h * w];
+        engine.fill_tile(
+            kernel.as_ref(),
+            &theta,
+            &locs,
+            DistanceMetric::Euclidean,
+            row0,
+            col0,
+            h,
+            w,
+            Some(&block),
+            &mut cached,
+        );
+        assert_eq!(cached, want, "cached tile ({row0},{col0},{h},{w})");
     }
 }
 
@@ -144,9 +162,62 @@ fn missing_artifacts_paths_never_panic() {
         0,
         4,
         4,
+        None,
         &mut out,
     );
     assert!(out.iter().all(|v| v.is_finite()));
     // ExecCtx::default() resolves an engine without panicking either.
     assert!(!ExecCtx::default().engine.name().is_empty());
+}
+
+/// `cargo test --features pjrt` (stub-backed in CI): the PJRT paths of
+/// the fill_tile contract must degrade to native behaviour, not panic —
+/// an unavailable XLA runtime means `create_engine(Pjrt)` fails cleanly,
+/// and the degraded default engine still serves both the plain and the
+/// precomputed-distance tile paths with native-identical results.
+#[cfg(feature = "pjrt")]
+#[test]
+fn pjrt_feature_fallback_serves_fill_tile_contract() {
+    if artifacts_available() && backend::create_engine(Backend::Pjrt).is_ok() {
+        eprintln!("real PJRT runtime present — degradation path not exercised here");
+        return;
+    }
+    let err = backend::create_engine(Backend::Pjrt).unwrap_err();
+    assert!(!format!("{err:#}").is_empty());
+    let engine = backend::default_engine();
+    let kernel = kernel_by_name("ugsm-s").unwrap();
+    let locs = grid(5, 41); // n = 25
+    let theta = [1.0, 0.1, 0.5];
+    let (row0, col0, h, w) = (8usize, 0usize, 8usize, 8usize);
+    let mut want = vec![0.0; h * w];
+    fill_cov_tile(
+        kernel.as_ref(),
+        &theta,
+        &locs,
+        DistanceMetric::Euclidean,
+        row0,
+        col0,
+        h,
+        w,
+        &mut want,
+    );
+    for dist in [
+        None,
+        Some(build_dist_block(&locs, DistanceMetric::Euclidean, row0, col0, h, w)),
+    ] {
+        let mut got = vec![0.0; h * w];
+        engine.fill_tile(
+            kernel.as_ref(),
+            &theta,
+            &locs,
+            DistanceMetric::Euclidean,
+            row0,
+            col0,
+            h,
+            w,
+            dist.as_ref(),
+            &mut got,
+        );
+        assert_eq!(got, want);
+    }
 }

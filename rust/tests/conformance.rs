@@ -1,0 +1,124 @@
+//! Cross-variant conformance property suite (`testkit::forall`): each
+//! approximate likelihood variant must coincide with the Exact engine in
+//! its exact limit —
+//!
+//! * DST with `band >= nt - 1` (no tile annihilated),
+//! * TLR with `tol -> 0`, unbounded rank (no compression error),
+//! * MP with `band >= nt` (no tile demoted to f32),
+//!
+//! across randomly drawn problem sizes, tile sizes (including ones that
+//! do not divide `n`), parameter vectors and data.  The variant under
+//! test evaluates through an [`EvalSession`] (the route `api::mle` uses);
+//! the Exact reference evaluates through the cold `likelihood::loglik`
+//! path, so every case also re-certifies warm-vs-cold agreement.
+
+use exageostat::covariance::{DistanceMetric, Location};
+use exageostat::likelihood::{self, EvalSession, ExecCtx, Problem, Variant};
+use exageostat::rng::Pcg64;
+use exageostat::scheduler::pool::Policy;
+use exageostat::testkit::{forall, gen};
+use std::sync::Arc;
+
+#[derive(Debug)]
+struct Case {
+    n: usize,
+    ts: usize,
+    locs: Vec<Location>,
+    z: Vec<f64>,
+    theta: [f64; 3],
+}
+
+fn gen_case(rng: &mut Pcg64) -> Case {
+    let n = 24 + rng.below(49); // 24..=72
+    let ts = [7usize, 11, 16, 24][rng.below(4)];
+    Case {
+        n,
+        ts,
+        locs: gen::locations(rng, n),
+        z: gen::normals(rng, n),
+        theta: gen::ugsm_theta(rng),
+    }
+}
+
+fn problem(case: &Case) -> Problem {
+    Problem {
+        kernel: exageostat::covariance::kernel_by_name("ugsm-s").unwrap().into(),
+        locs: Arc::new(case.locs.clone()),
+        z: Arc::new(case.z.clone()),
+        metric: DistanceMetric::Euclidean,
+    }
+}
+
+/// Exact reference (cold path) vs. the variant under test (session path).
+fn assert_conformance(case: &Case, variant: Variant, tol_scale: f64) {
+    let p = problem(case);
+    let ctx = ExecCtx::new(2, case.ts, Policy::Lws);
+    let exact = likelihood::loglik(&p, &case.theta, Variant::Exact, &ctx).unwrap();
+    let mut session = EvalSession::new(&p, variant, &ctx).unwrap();
+    let got = session.eval(&case.theta).unwrap();
+    let tol = tol_scale * (1.0 + exact.loglik.abs());
+    assert!(
+        (got.loglik - exact.loglik).abs() <= tol,
+        "{variant:?} vs exact at n={} ts={} theta={:?}: {} vs {} (tol {tol:e})",
+        case.n,
+        case.ts,
+        case.theta,
+        got.loglik,
+        exact.loglik
+    );
+    assert!((got.logdet - exact.logdet).abs() <= tol, "logdet mismatch");
+    assert!((got.sse - exact.sse).abs() <= tol, "sse mismatch");
+}
+
+#[test]
+fn dst_full_band_conforms_to_exact() {
+    forall(0xD57_0001, 10, gen_case, |case| {
+        let nt = case.n.div_ceil(case.ts);
+        // band >= nt - 1 retains every lower tile; only the Morton
+        // reordering (likelihood-invariant) separates it from Exact.
+        assert_conformance(case, Variant::Dst { band: nt - 1 }, 1e-8);
+    });
+}
+
+#[test]
+fn tlr_tight_tolerance_conforms_to_exact() {
+    // TLR compresses to a *relative* tile tolerance, so the exact-limit
+    // error is the ACA threshold amplified by the conditioning of Sigma;
+    // the generator keeps smoothness/range in the well-conditioned regime
+    // (the regime TLR targets) while still randomizing every dimension.
+    let gen_tlr = |rng: &mut Pcg64| {
+        let n = 24 + rng.below(25); // 24..=48
+        let ts = [7usize, 11, 16][rng.below(3)];
+        let theta = [
+            rng.uniform(0.5, 2.0),
+            rng.uniform(0.03, 0.15),
+            [0.5, 1.0][rng.below(2)],
+        ];
+        Case {
+            n,
+            ts,
+            locs: gen::locations(rng, n),
+            z: gen::normals(rng, n),
+            theta,
+        }
+    };
+    forall(0x71_0002, 8, gen_tlr, |case| {
+        assert_conformance(
+            case,
+            Variant::Tlr {
+                tol: 1e-15,
+                max_rank: usize::MAX,
+            },
+            1e-8,
+        );
+    });
+}
+
+#[test]
+fn mp_full_band_conforms_to_exact() {
+    forall(0x3F_0003, 10, gen_case, |case| {
+        let nt = case.n.div_ceil(case.ts);
+        // band >= nt keeps every tile in f64: bit-identical to Exact.
+        assert_conformance(case, Variant::Mp { band: nt }, 1e-8);
+    });
+}

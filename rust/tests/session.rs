@@ -1,0 +1,156 @@
+//! `EvalSession` integration suite: warm (cached-distance,
+//! reused-workspace) evaluations must match a cold fresh-`Problem`
+//! evaluation to <= 1e-12 across kernels (univariate, nugget, bivariate),
+//! both distance metrics and tile sizes that do not divide `n` — and warm
+//! iterations must allocate zero new tile matrices (the workspace-reuse
+//! invariant, guarded through the `testkit` allocation counter).
+
+use exageostat::covariance::{kernel_by_name, DistanceMetric, Location};
+use exageostat::likelihood::{self, EvalSession, ExecCtx, Problem, Variant};
+use exageostat::rng::Pcg64;
+use exageostat::scheduler::pool::Policy;
+use exageostat::testkit::tile_matrix_allocs;
+use std::sync::Arc;
+
+/// Random problem for `kernel` under `metric`.  Euclidean locations live
+/// in the unit square; great-circle locations are (lon, lat) degrees over
+/// a ~400 km patch, with range parameters in km.
+fn make_problem(kernel: &str, metric: DistanceMetric, n: usize, seed: u64) -> Problem {
+    let mut rng = Pcg64::seed_from_u64(seed);
+    let locs: Vec<Location> = (0..n)
+        .map(|_| match metric {
+            DistanceMetric::Euclidean => Location::new(rng.next_f64(), rng.next_f64()),
+            DistanceMetric::GreatCircle => {
+                Location::new(20.0 + 4.0 * rng.next_f64(), -40.0 + 4.0 * rng.next_f64())
+            }
+        })
+        .collect();
+    let k: Arc<dyn exageostat::covariance::CovKernel> = kernel_by_name(kernel).unwrap().into();
+    let dim = k.nvariates() * n;
+    let z: Vec<f64> = (0..dim).map(|_| rng.normal()).collect();
+    Problem {
+        kernel: k,
+        locs: Arc::new(locs),
+        z: Arc::new(z),
+        metric,
+    }
+}
+
+/// Warm evaluations (3 passes) must reproduce the cold path exactly; if
+/// the cold path rejects the configuration (non-SPD), so must the warm
+/// one — the session may never silently diverge from `loglik`.
+fn assert_warm_matches_cold(p: &Problem, theta: &[f64], variant: Variant, ts: usize) {
+    let ctx = ExecCtx::new(2, ts, Policy::Lws);
+    let cold = likelihood::loglik(p, theta, variant, &ctx);
+    let mut s = EvalSession::new(p, variant, &ctx).unwrap();
+    for pass in 0..3 {
+        match (&cold, s.eval(theta)) {
+            (Ok(c), Ok(w)) => {
+                assert!(
+                    (w.loglik - c.loglik).abs() <= 1e-12,
+                    "{} {:?} {variant:?} ts={ts} pass {pass}: warm {} vs cold {}",
+                    p.kernel.name(),
+                    p.metric,
+                    w.loglik,
+                    c.loglik
+                );
+                assert!((w.logdet - c.logdet).abs() <= 1e-12);
+                assert!((w.sse - c.sse).abs() <= 1e-12);
+            }
+            (Err(_), Err(_)) => {}
+            (c, w) => panic!(
+                "{} {:?} {variant:?} ts={ts}: cold {c:?} but warm {w:?}",
+                p.kernel.name(),
+                p.metric
+            ),
+        }
+    }
+}
+
+/// Variants applicable to a kernel (TLR is univariate-only; bivariate DST
+/// keeps the full band, since an unreordered multivariate band-1 matrix
+/// can lose positive definiteness — parity must compare *successful*
+/// evaluations too, not only matching failures).
+fn variants_for(p: &Problem, ts: usize) -> Vec<Variant> {
+    let nt = p.dim().div_ceil(ts);
+    let mut v = vec![Variant::Exact, Variant::Mp { band: 1 }];
+    if p.kernel.nvariates() == 1 {
+        v.push(Variant::Dst { band: 1 });
+        v.push(Variant::Tlr {
+            tol: 1e-7,
+            max_rank: usize::MAX,
+        });
+    }
+    // Full band always succeeds, so DST parity is exercised on a
+    // successful evaluation for every kernel/metric combination.
+    v.push(Variant::Dst { band: nt - 1 });
+    v
+}
+
+#[test]
+fn warm_matches_cold_euclidean() {
+    let n = 45; // 45 % 16 = 13, 45 % 10 = 5: edge tiles everywhere
+    for (kernel, theta) in [
+        ("ugsm-s", vec![1.2, 0.15, 1.0]),
+        ("ugsmn-s", vec![1.0, 0.15, 0.5, 0.3]),
+        ("bgspm-s", vec![1.0, 1.4, 0.15, 0.6, 1.2, 0.3]),
+    ] {
+        let p = make_problem(kernel, DistanceMetric::Euclidean, n, 0xE0C1);
+        for ts in [16usize, 10] {
+            for variant in variants_for(&p, ts) {
+                assert_warm_matches_cold(&p, &theta, variant, ts);
+            }
+        }
+    }
+}
+
+#[test]
+fn warm_matches_cold_great_circle() {
+    let n = 45;
+    for (kernel, theta) in [
+        ("ugsm-s", vec![1.0, 60.0, 0.5]),
+        ("ugsmn-s", vec![1.0, 60.0, 0.5, 0.2]),
+        ("bgspm-s", vec![1.0, 1.4, 60.0, 0.6, 1.2, 0.3]),
+    ] {
+        let p = make_problem(kernel, DistanceMetric::GreatCircle, n, 0x6C71);
+        for ts in [16usize, 10] {
+            for variant in variants_for(&p, ts) {
+                assert_warm_matches_cold(&p, &theta, variant, ts);
+            }
+        }
+    }
+}
+
+#[test]
+fn warm_iterations_allocate_zero_tile_matrices() {
+    let p = make_problem("ugsm-s", DistanceMetric::Euclidean, 40, 0xA110);
+    let ctx = ExecCtx::new(2, 16, Policy::Lws);
+    let thetas = [[1.0, 0.08, 0.5], [1.5, 0.12, 1.0], [0.8, 0.1, 0.5]];
+    for variant in [
+        Variant::Exact,
+        Variant::Dst { band: 1 },
+        Variant::Mp { band: 1 },
+        Variant::Tlr {
+            tol: 1e-7,
+            max_rank: usize::MAX,
+        },
+    ] {
+        let mut s = EvalSession::new(&p, variant, &ctx).unwrap();
+        s.eval(&thetas[0]).unwrap();
+        let base = tile_matrix_allocs();
+        // Iterations >= 2 must construct zero new tile matrices: the
+        // session's workspace-reuse invariant, pinned against refactors.
+        s.eval(&thetas[1]).unwrap();
+        s.eval(&thetas[2]).unwrap();
+        assert_eq!(
+            tile_matrix_allocs(),
+            base,
+            "{variant:?}: warm iterations allocated tile matrices"
+        );
+        assert_eq!(s.evals(), 3);
+    }
+    // Control: the counter is live — every cold evaluation allocates.
+    let before = tile_matrix_allocs();
+    likelihood::loglik(&p, &thetas[0], Variant::Exact, &ctx).unwrap();
+    assert!(tile_matrix_allocs() > before, "cold path must allocate");
+}
