@@ -11,7 +11,8 @@ ARTIFACT_DIR ?= artifacts
 PYTHON ?= python3
 
 BENCHES = fig3_shared_memory fig5_scaling_n fig6_accelerated \
-          fig7_distributed table5_time_per_iter ablation_variants
+          fig7_distributed table5_time_per_iter ablation_variants \
+          serving_throughput
 
 .PHONY: all test artifacts bench-smoke fmt lint python-test clean
 
@@ -31,12 +32,24 @@ artifacts:
 # Smoke-run each bench binary in seconds: BENCH_QUICK shrinks every
 # problem size (see rust/benches/bench_util.rs `quick()`).
 # table5_time_per_iter also refreshes BENCH_mle_iter.json (per-variant
-# time/iteration + EvalSession warm-vs-cold speedup telemetry).
+# time/iteration + EvalSession warm-vs-cold speedup telemetry);
+# serving_throughput refreshes BENCH_serving.json (shared-runtime vs
+# per-job-pool requests/sec + latency percentiles).  Ends with a smoke
+# invocation of the `exageostat serve` subcommand.
 bench-smoke:
 	@for b in $(BENCHES); do \
 		echo "== bench $$b (quick) =="; \
 		BENCH_QUICK=1 cargo bench --bench $$b || exit 1; \
 	done
+	@echo "== serve smoke =="
+	@mkdir -p target
+	@printf '%s\n%s\n%s\n' \
+		'{"type":"simulate","n":100,"seed":1}' \
+		'{"type":"mle","n":100,"seed":1,"max_iters":5}' \
+		'{"type":"predict","n":100,"seed":1,"grid":5}' \
+		> target/serve_smoke.jsonl
+	cargo run --release -p exageostat -- serve \
+		--requests target/serve_smoke.jsonl --clients 2 --ncores 2 --ts 50
 
 fmt:
 	cargo fmt --all --check

@@ -1,0 +1,153 @@
+//! **Serving throughput** — the concurrent-coordinator benchmark behind
+//! the persistent-runtime refactor: K client threads submit a mixed
+//! MLE + predict + simulate workload to **one** shared `Runtime`
+//! (`Coordinator`), versus the pre-refactor serving model of one fresh
+//! worker pool per job, run sequentially.
+//!
+//! Emits `BENCH_serving.json` (override the path with `BENCH_OUT`):
+//! requests/sec and p50/p95 latency for both modes.  `BENCH_QUICK`
+//! (or `--quick`) shrinks the workload for CI.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+use bench_util::*;
+
+use exageostat::api::{Hardware, MleOptions};
+use exageostat::coordinator::{Coordinator, DataSpec, Request, RequestKind};
+use exageostat::likelihood::Variant;
+use exageostat::scheduler::pool::Policy;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+fn workload(n: usize, count: usize, max_iters: usize) -> Vec<Request> {
+    (0..count)
+        .map(|i| {
+            let data = DataSpec {
+                n,
+                seed: (i % 3) as u64, // 3 distinct datasets -> real cache traffic
+                ..DataSpec::default()
+            };
+            let kind = match i % 3 {
+                0 => RequestKind::Mle {
+                    variant: Variant::Exact,
+                    opt: MleOptions::new(vec![0.01; 3], vec![5.0; 3], 1e-4, max_iters),
+                },
+                1 => RequestKind::Predict { grid: 6 },
+                _ => RequestKind::Simulate,
+            };
+            Request {
+                data,
+                kind,
+                priority: (i % 4) as u8,
+            }
+        })
+        .collect()
+}
+
+/// K client threads, one shared coordinator/runtime.
+fn run_concurrent(hw: &Hardware, reqs: &[Request], clients: usize) -> (f64, Vec<f64>) {
+    let coord = Coordinator::new(hw.clone());
+    let next = AtomicUsize::new(0);
+    let lats = Mutex::new(Vec::with_capacity(reqs.len()));
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for _ in 0..clients {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= reqs.len() {
+                    break;
+                }
+                let r = coord.run(reqs[i].clone()).expect("request");
+                lats.lock().unwrap().push(r.wall_s);
+            });
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    coord.shutdown();
+    (wall, lats.into_inner().unwrap())
+}
+
+/// Pre-refactor model: every request stands up (and tears down) its own
+/// pool; requests run back to back.
+fn run_sequential(hw: &Hardware, reqs: &[Request]) -> (f64, Vec<f64>) {
+    let mut lats = Vec::with_capacity(reqs.len());
+    let t0 = Instant::now();
+    for r in reqs {
+        let coord = Coordinator::new(hw.clone());
+        let resp = coord.run(r.clone()).expect("request");
+        lats.push(resp.wall_s);
+        coord.shutdown();
+    }
+    (t0.elapsed().as_secs_f64(), lats)
+}
+
+fn pct(lat: &mut [f64], p: f64) -> f64 {
+    lat.sort_by(f64::total_cmp);
+    exageostat::testkit::percentile(lat, p)
+}
+
+fn main() {
+    let quick = quick();
+    let n = if quick { 100 } else { 250 };
+    let count = if quick { 6 } else { 18 };
+    let max_iters = if quick { 4 } else { 12 };
+    let clients = 4;
+    let hw = Hardware {
+        ncores: 2,
+        ts: 64,
+        policy: Policy::Prio,
+        ..Hardware::default()
+    };
+    let reqs = workload(n, count, max_iters);
+
+    println!(
+        "Serving throughput — {count} requests (n={n}, {max_iters} MLE iters), \
+         {clients} clients, {} workers",
+        hw.ncores
+    );
+    header(&["mode", "wall s", "req/s", "p50 s", "p95 s"]);
+
+    let (seq_wall, mut seq_lat) = run_sequential(&hw, &reqs);
+    let seq_rps = count as f64 / seq_wall;
+    let (seq_p50, seq_p95) = (pct(&mut seq_lat, 0.50), pct(&mut seq_lat, 0.95));
+    row(&[
+        "per-job".into(),
+        s(seq_wall),
+        s2(seq_rps),
+        s(seq_p50),
+        s(seq_p95),
+    ]);
+
+    let (con_wall, mut con_lat) = run_concurrent(&hw, &reqs, clients);
+    let con_rps = count as f64 / con_wall;
+    let (con_p50, con_p95) = (pct(&mut con_lat, 0.50), pct(&mut con_lat, 0.95));
+    row(&[
+        "shared".into(),
+        s(con_wall),
+        s2(con_rps),
+        s(con_p50),
+        s(con_p95),
+    ]);
+
+    println!(
+        "\nshape check: the shared persistent runtime should serve at >= the\n\
+         sequential per-job-pool rate (cache reuse + no spawn/join per job);\n\
+         here {:.2}x.",
+        con_rps / seq_rps.max(1e-12)
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"serving_throughput\",\n  \"n\": {n},\n  \
+         \"requests\": {count},\n  \"clients\": {clients},\n  \
+         \"ncores\": {},\n  \"mle_max_iters\": {max_iters},\n  \
+         \"shared\": {{\"wall_s\": {con_wall}, \"req_per_s\": {con_rps}, \
+         \"p50_s\": {con_p50}, \"p95_s\": {con_p95}}},\n  \
+         \"sequential_per_job\": {{\"wall_s\": {seq_wall}, \"req_per_s\": {seq_rps}, \
+         \"p50_s\": {seq_p50}, \"p95_s\": {seq_p95}}}\n}}\n",
+        hw.ncores
+    );
+    let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_serving.json".into());
+    std::fs::write(&out, &json).unwrap_or_else(|e| eprintln!("cannot write {out}: {e}"));
+    println!("telemetry written to {out}");
+}

@@ -8,8 +8,24 @@ use crate::likelihood::{EvalSession, ExecCtx, Problem, Variant};
 use crate::optimizer::{self, Bounds, Method, OptOptions};
 use crate::prediction::{self, FisherResult, MloeMmom, Prediction};
 use crate::scheduler::pool::Policy;
+use crate::scheduler::runtime::Runtime;
 use crate::simulation::{self, GeoData};
 use std::sync::Arc;
+
+/// Default worker-thread count: the `EXAGEOSTAT_NCORES` environment
+/// override when set (and positive), else the machine's available
+/// parallelism.  The old default of `1` silently serialized everything.
+pub fn default_ncores() -> usize {
+    std::env::var("EXAGEOSTAT_NCORES")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|c| c.get())
+                .unwrap_or(1)
+        })
+}
 
 /// `hardware = list(ncores, ngpus, ts, pgrid, qgrid)` of `exageostat_init`.
 /// `ngpus`, `pgrid`, `qgrid` configure the *simulated* accelerator /
@@ -28,7 +44,10 @@ pub struct Hardware {
 impl Default for Hardware {
     fn default() -> Self {
         Hardware {
-            ncores: 1,
+            // All available hardware threads (EXAGEOSTAT_NCORES overrides;
+            // so does the CLI's --ncores).  Runtime construction warns when
+            // a request oversubscribes the machine.
+            ncores: default_ncores(),
             ngpus: 0,
             ts: 320,
             pgrid: 1,
@@ -76,18 +95,29 @@ pub struct MleResult {
 /// `exageostat_finalize`).  The compute backend is picked once, at
 /// construction: [`ExaGeoStat::init`] honors `EXAGEOSTAT_BACKEND`
 /// (`native|pjrt`), [`ExaGeoStat::init_with_backend`] selects explicitly.
+///
+/// Construction also spawns the **persistent task runtime**: `ncores`
+/// worker threads that live for the instance's lifetime and execute
+/// every task-graph job (simulation, all likelihood variants, kriging)
+/// — the `starpu_init` / `starpu_shutdown` lifecycle of ExaGeoStat.
+/// [`ExaGeoStat::finalize`] is a real shutdown: it drains in-flight
+/// work and joins the workers.
 pub struct ExaGeoStat {
     pub hw: Hardware,
     engine: ArcEngine,
+    runtime: Arc<Runtime>,
 }
 
 impl ExaGeoStat {
     /// `exageostat_init(hardware)`.  Backend from `EXAGEOSTAT_BACKEND`,
-    /// defaulting to the pure-Rust native engine.
+    /// defaulting to the pure-Rust native engine.  Spawns the worker
+    /// runtime.
     pub fn init(hw: Hardware) -> Self {
+        let runtime = Arc::new(Runtime::new(hw.ncores.max(1), hw.policy));
         ExaGeoStat {
             hw,
             engine: backend::default_engine(),
+            runtime,
         }
     }
 
@@ -95,14 +125,27 @@ impl ExaGeoStat {
     /// Fails cleanly when the backend is unavailable (e.g. `pjrt` without
     /// the cargo feature or without `make artifacts`).
     pub fn init_with_backend(hw: Hardware, b: Backend) -> anyhow::Result<Self> {
+        let engine = backend::create_engine(b)?;
+        let runtime = Arc::new(Runtime::new(hw.ncores.max(1), hw.policy));
         Ok(ExaGeoStat {
             hw,
-            engine: backend::create_engine(b)?,
+            engine,
+            runtime,
         })
     }
 
-    /// `exageostat_finalize()`.
-    pub fn finalize(self) {}
+    /// `exageostat_finalize()`: drain in-flight jobs and join the worker
+    /// threads.  Contexts cloned from this instance must not submit
+    /// afterwards (doing so panics).
+    pub fn finalize(self) {
+        self.runtime.shutdown();
+    }
+
+    /// The persistent worker runtime (shared by every [`ExecCtx`] this
+    /// instance hands out).
+    pub fn runtime(&self) -> &Arc<Runtime> {
+        &self.runtime
+    }
 
     /// Name of the active compute backend (`"native"` or `"pjrt"`).
     pub fn backend_name(&self) -> &'static str {
@@ -115,6 +158,8 @@ impl ExaGeoStat {
             ts: self.hw.ts,
             policy: self.hw.policy,
             engine: self.engine.clone(),
+            runtime: self.runtime.clone(),
+            job_prio: 0,
         }
     }
 
@@ -180,6 +225,9 @@ impl ExaGeoStat {
         variant: Variant,
     ) -> anyhow::Result<MleResult> {
         let (problem, k) = self.problem(data, kernel, dmetric)?;
+        // Cheap arity check first: session construction below does the
+        // O(n^2) distance-cache work, which malformed bounds should not
+        // pay for (mle_with_session re-checks for its other callers).
         anyhow::ensure!(
             opt.clb.len() == k.nparams() && opt.cub.len() == k.nparams(),
             "{} expects {} parameters in clb/cub",
@@ -193,58 +241,7 @@ impl ExaGeoStat {
         // them (the iteration-aware hot loop — see DESIGN.md §"Evaluation
         // sessions and caching").
         let mut session = EvalSession::new(&problem, variant, &ctx)?;
-        // Optimize in log-parameter space: Matérn parameters are positive
-        // and the (sigma_sq, beta) profile is banana-shaped in linear
-        // scale; the log transform conditions it (standard practice, and
-        // what makes BOBYQA's quadratic models accurate here).
-        let log_ok = opt.clb.iter().all(|&v| v > 0.0);
-        let (lo, hi, init): (Vec<f64>, Vec<f64>, Vec<f64>) = if log_ok {
-            (
-                opt.clb.iter().map(|v| v.ln()).collect(),
-                opt.cub.iter().map(|v| v.ln()).collect(),
-                // The R package starts the search at the lower bounds.
-                opt.clb.iter().map(|v| v.ln()).collect(),
-            )
-        } else {
-            (opt.clb.clone(), opt.cub.clone(), opt.clb.clone())
-        };
-        let bounds = Bounds::new(lo, hi)?;
-        let opts = OptOptions {
-            tol: opt.tol,
-            max_iters: opt.max_iters,
-            init,
-        };
-        let back = |x: &[f64]| -> Vec<f64> {
-            if log_ok {
-                x.iter().map(|v| v.exp()).collect()
-            } else {
-                x.to_vec()
-            }
-        };
-        let r = optimizer::minimize(
-            opt.method,
-            |x| {
-                let theta = back(x);
-                match session.eval(&theta) {
-                    Ok(l) => -l.loglik,
-                    Err(_) => f64::INFINITY,
-                }
-            },
-            bounds,
-            &opts,
-        );
-        anyhow::ensure!(
-            r.fx.is_finite(),
-            "MLE failed: no positive-definite covariance found within bounds"
-        );
-        Ok(MleResult {
-            theta: back(&r.x),
-            loglik: -r.fx,
-            iters: r.iters,
-            time_per_iter: r.time_per_iter,
-            total_time: r.total_time,
-            history: r.history,
-        })
+        mle_with_session(&mut session, opt)
     }
 
     /// `exact_mle(data, kernel, dmetric, optimization)`.
@@ -295,7 +292,10 @@ impl ExaGeoStat {
         self.mle(data, kernel, dmetric, opt, Variant::Mp { band })
     }
 
-    /// `exact_predict(train, new, kernel, dmetric, est_theta)`.
+    /// `exact_predict(train, new, kernel, dmetric, est_theta)`.  The
+    /// covariance factorization and forward solve run as one job on the
+    /// instance's persistent runtime (tiled, parallel) rather than on a
+    /// private dense path.
     pub fn exact_predict(
         &self,
         train: &GeoData,
@@ -305,16 +305,17 @@ impl ExaGeoStat {
         theta: &[f64],
         with_variance: bool,
     ) -> anyhow::Result<Prediction> {
-        let k = kernel_by_name(kernel)?;
+        let k: Arc<dyn CovKernel> = Arc::from(kernel_by_name(kernel)?);
         let metric = DistanceMetric::parse(dmetric)?;
-        prediction::exact_predict(
-            k.as_ref(),
+        prediction::exact_predict_ctx(
+            k,
             theta,
             &train.locs,
             &train.z,
             new_locs,
             metric,
             with_variance,
+            &self.ctx(),
         )
     }
 
@@ -345,6 +346,74 @@ impl ExaGeoStat {
         let metric = DistanceMetric::parse(dmetric)?;
         prediction::exact_mloe_mmom(k.as_ref(), theta_true, theta_approx, obs_locs, new_locs, metric)
     }
+}
+
+/// Drive the optimizer over an existing [`EvalSession`].
+///
+/// This is the reusable core of [`ExaGeoStat::mle`]: the coordinator
+/// calls it directly with sessions from its cache, so repeated MLE
+/// requests on the same dataset skip the Morton/distance/workspace
+/// setup entirely and only pay warm iterations.
+pub fn mle_with_session(session: &mut EvalSession, opt: &MleOptions) -> anyhow::Result<MleResult> {
+    let nparams = session.kernel().nparams();
+    anyhow::ensure!(
+        opt.clb.len() == nparams && opt.cub.len() == nparams,
+        "{} expects {} parameters in clb/cub",
+        session.kernel().name(),
+        nparams
+    );
+    // Optimize in log-parameter space: Matérn parameters are positive
+    // and the (sigma_sq, beta) profile is banana-shaped in linear
+    // scale; the log transform conditions it (standard practice, and
+    // what makes BOBYQA's quadratic models accurate here).
+    let log_ok = opt.clb.iter().all(|&v| v > 0.0);
+    let (lo, hi, init): (Vec<f64>, Vec<f64>, Vec<f64>) = if log_ok {
+        (
+            opt.clb.iter().map(|v| v.ln()).collect(),
+            opt.cub.iter().map(|v| v.ln()).collect(),
+            // The R package starts the search at the lower bounds.
+            opt.clb.iter().map(|v| v.ln()).collect(),
+        )
+    } else {
+        (opt.clb.clone(), opt.cub.clone(), opt.clb.clone())
+    };
+    let bounds = Bounds::new(lo, hi)?;
+    let opts = OptOptions {
+        tol: opt.tol,
+        max_iters: opt.max_iters,
+        init,
+    };
+    let back = |x: &[f64]| -> Vec<f64> {
+        if log_ok {
+            x.iter().map(|v| v.exp()).collect()
+        } else {
+            x.to_vec()
+        }
+    };
+    let r = optimizer::minimize(
+        opt.method,
+        |x| {
+            let theta = back(x);
+            match session.eval(&theta) {
+                Ok(l) => -l.loglik,
+                Err(_) => f64::INFINITY,
+            }
+        },
+        bounds,
+        &opts,
+    );
+    anyhow::ensure!(
+        r.fx.is_finite(),
+        "MLE failed: no positive-definite covariance found within bounds"
+    );
+    Ok(MleResult {
+        theta: back(&r.x),
+        loglik: -r.fx,
+        iters: r.iters,
+        time_per_iter: r.time_per_iter,
+        total_time: r.total_time,
+        history: r.history,
+    })
 }
 
 #[cfg(test)]

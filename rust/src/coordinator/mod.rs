@@ -1,1 +1,855 @@
-// paper's L3 coordination contribution
+//! Concurrent job coordinator — the serving layer on top of the
+//! persistent [`Runtime`] (the paper's L3 coordination contribution, and
+//! the ROADMAP north star of serving many concurrent requests).
+//!
+//! ExaGeoStat initializes one StarPU context per hardware configuration
+//! and multiplexes every task DAG onto it; the [`Coordinator`] does the
+//! same at request granularity: it owns **one** runtime plus a session
+//! cache, accepts [`Request`]s (`mle` / `predict` / `simulate`) from any
+//! number of client threads concurrently, runs each request's task
+//! graphs as jobs on the shared workers (fair interleaving under the
+//! context's scheduling policy, with the request's `priority` as the
+//! `prio`-policy tie-break) and reports per-request stats.
+//!
+//! Two caches keep repeated requests cheap:
+//!
+//! * **dataset cache** — simulated `GeoData` keyed by its generation
+//!   spec, so an MLE + predict pair over the same `(n, seed, kernel,
+//!   theta)` shares one simulation;
+//! * **session cache** — warm [`EvalSession`]s keyed by (dataset,
+//!   variant, tile size): a repeated MLE request skips the Morton /
+//!   distance-cache / workspace setup and starts on warm iterations.
+//!   Identical concurrent MLE requests serialize on their shared
+//!   session (they would race its workspaces otherwise); distinct
+//!   requests run fully concurrently.
+//!
+//! Both caches are FIFO-bounded ([`MAX_CACHED_DATASETS`] /
+//! [`MAX_CACHED_SESSIONS`]) so a long-running serve process cannot
+//! grow without bound — each session pins O(n^2) workspace.  Evicted
+//! entries stay alive for requests already holding their `Arc`.
+//!
+//! The `exageostat serve --requests file.jsonl` subcommand drives this
+//! layer from the command line (one JSON object per line — see
+//! [`parse_request`]), and `rust/benches/serving_throughput.rs` measures
+//! it against sequential per-job pools.
+
+use crate::api::{mle_with_session, Hardware, MleOptions, MleResult};
+use crate::backend::{self, ArcEngine};
+use crate::covariance::{kernel_by_name, CovKernel, DistanceMetric, Location};
+use crate::likelihood::{EvalSession, ExecCtx, Problem, Variant};
+use crate::optimizer::Method;
+use crate::prediction;
+use crate::scheduler::runtime::Runtime;
+use crate::simulation::{self, GeoData};
+use anyhow::Context as _;
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Cache capacity bounds (FIFO eviction; an evicted entry stays alive
+/// for any request already holding its `Arc`).  A proper
+/// memory-footprint LRU is a ROADMAP open item.
+const MAX_CACHED_DATASETS: usize = 32;
+const MAX_CACHED_SESSIONS: usize = 8;
+
+/// A FIFO-bounded keyed cache: the minimal eviction policy that keeps
+/// a long-running serve process from growing without bound (each
+/// session entry pins O(n^2) workspace).
+struct BoundedCache<V> {
+    map: HashMap<String, V>,
+    order: VecDeque<String>,
+    cap: usize,
+}
+
+impl<V: Clone> BoundedCache<V> {
+    fn new(cap: usize) -> Self {
+        BoundedCache {
+            map: HashMap::new(),
+            order: VecDeque::new(),
+            cap,
+        }
+    }
+
+    fn get(&self, key: &str) -> Option<V> {
+        self.map.get(key).cloned()
+    }
+
+    /// Insert unless the key raced in already; returns the cached value
+    /// (the winner's, so concurrent requests share one `Arc`).
+    fn insert(&mut self, key: String, value: V) -> V {
+        if let Some(existing) = self.map.get(&key) {
+            return existing.clone();
+        }
+        while self.map.len() >= self.cap {
+            match self.order.pop_front() {
+                Some(old) => {
+                    self.map.remove(&old);
+                }
+                None => break,
+            }
+        }
+        self.map.insert(key.clone(), value.clone());
+        self.order.push_back(key);
+        value
+    }
+}
+
+/// How a request's dataset is produced: simulated from a kernel + seed
+/// (the serving benchmark's workload; file-backed data goes through the
+/// library API instead).
+#[derive(Clone, Debug)]
+pub struct DataSpec {
+    pub n: usize,
+    pub seed: u64,
+    pub kernel: String,
+    pub dmetric: String,
+    /// Generating parameter vector (the simulation truth).
+    pub theta: Vec<f64>,
+}
+
+impl Default for DataSpec {
+    fn default() -> Self {
+        DataSpec {
+            n: 400,
+            seed: 0,
+            kernel: "ugsm-s".into(),
+            dmetric: "euclidean".into(),
+            theta: vec![1.0, 0.1, 0.5],
+        }
+    }
+}
+
+impl DataSpec {
+    fn key(&self) -> String {
+        format!(
+            "{}|{}|{}|{}|{:?}",
+            self.n, self.seed, self.kernel, self.dmetric, self.theta
+        )
+    }
+}
+
+/// What to do with the dataset.
+#[derive(Clone, Debug)]
+pub enum RequestKind {
+    /// Simulate (and cache) the dataset only.
+    Simulate,
+    /// Fit the variant's MLE on the dataset.
+    Mle { variant: Variant, opt: MleOptions },
+    /// Krige a `grid x grid` lattice over the unit square from the
+    /// dataset at its generating `theta`.
+    Predict { grid: usize },
+}
+
+/// One client request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub data: DataSpec,
+    pub kind: RequestKind,
+    /// Job-priority tie-break under the `prio` policy (higher = sooner).
+    pub priority: u8,
+}
+
+/// Request outcome payload.
+#[derive(Clone, Debug)]
+pub enum Outcome {
+    Simulated { n: usize },
+    Mle(MleResult),
+    Predicted { npoints: usize, mean_abs: f64 },
+}
+
+/// Per-request result + stats.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub kind: &'static str,
+    /// Wall-clock seconds from acceptance to completion (queueing on a
+    /// busy runtime included — this is the serving latency).
+    pub wall_s: f64,
+    pub data_cache_hit: bool,
+    pub session_cache_hit: bool,
+    pub outcome: Outcome,
+}
+
+/// Aggregate serving stats.
+#[derive(Clone, Debug, Default)]
+pub struct CoordinatorStats {
+    pub requests: u64,
+    pub errors: u64,
+    pub data_cache_hits: u64,
+    pub session_cache_hits: u64,
+    /// Tasks executed by the shared runtime (all jobs, all requests).
+    pub tasks_executed: u64,
+    pub worker_threads: usize,
+}
+
+/// The serving coordinator (see module docs).
+pub struct Coordinator {
+    hw: Hardware,
+    engine: ArcEngine,
+    runtime: Arc<Runtime>,
+    data_cache: Mutex<BoundedCache<Arc<GeoData>>>,
+    sessions: Mutex<BoundedCache<Arc<Mutex<EvalSession>>>>,
+    next_id: AtomicU64,
+    requests: AtomicU64,
+    errors: AtomicU64,
+    data_hits: AtomicU64,
+    session_hits: AtomicU64,
+}
+
+impl Coordinator {
+    /// Spawn the shared runtime (`hw.ncores` workers, `hw.policy`) and an
+    /// empty cache.
+    pub fn new(hw: Hardware) -> Coordinator {
+        let runtime = Arc::new(Runtime::new(hw.ncores.max(1), hw.policy));
+        Coordinator {
+            hw,
+            engine: backend::default_engine(),
+            runtime,
+            data_cache: Mutex::new(BoundedCache::new(MAX_CACHED_DATASETS)),
+            sessions: Mutex::new(BoundedCache::new(MAX_CACHED_SESSIONS)),
+            next_id: AtomicU64::new(0),
+            requests: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            data_hits: AtomicU64::new(0),
+            session_hits: AtomicU64::new(0),
+        }
+    }
+
+    /// The shared runtime (for tests / introspection).
+    pub fn runtime(&self) -> &Arc<Runtime> {
+        &self.runtime
+    }
+
+    /// Execution context bound to the shared runtime, with the request's
+    /// priority as the job tie-break.
+    fn ctx_with_priority(&self, priority: u8) -> ExecCtx {
+        let mut ctx = ExecCtx::with_runtime(self.runtime.clone(), self.hw.ts, self.engine.clone());
+        ctx.job_prio = priority;
+        ctx
+    }
+
+    /// Fetch (or simulate-and-cache) the dataset of `spec`.  Returns the
+    /// data and whether it was a cache hit.
+    fn dataset(&self, spec: &DataSpec, ctx: &ExecCtx) -> anyhow::Result<(Arc<GeoData>, bool)> {
+        let key = spec.key();
+        if let Some(d) = self.data_cache.lock().unwrap().get(&key) {
+            self.data_hits.fetch_add(1, Ordering::Relaxed);
+            return Ok((d, true));
+        }
+        // Simulate outside the lock (it is the expensive part); if two
+        // requests race, the first insert wins and both share it.
+        let kernel: Arc<dyn CovKernel> = Arc::from(kernel_by_name(&spec.kernel)?);
+        let metric = DistanceMetric::parse(&spec.dmetric)?;
+        let data = Arc::new(simulation::simulate_data_exact(
+            kernel, &spec.theta, spec.n, metric, spec.seed, ctx,
+        )?);
+        let entry = self.data_cache.lock().unwrap().insert(key, data);
+        Ok((entry, false))
+    }
+
+    /// Fetch (or build-and-cache) the warm evaluation session for an MLE
+    /// request.
+    fn session_for(
+        &self,
+        spec: &DataSpec,
+        variant: Variant,
+        data: &Arc<GeoData>,
+        ctx: &ExecCtx,
+    ) -> anyhow::Result<(Arc<Mutex<EvalSession>>, bool)> {
+        let key = format!("{}|{:?}|ts{}", spec.key(), variant, self.hw.ts);
+        if let Some(s) = self.sessions.lock().unwrap().get(&key) {
+            self.session_hits.fetch_add(1, Ordering::Relaxed);
+            return Ok((s, true));
+        }
+        let kernel: Arc<dyn CovKernel> = Arc::from(kernel_by_name(&spec.kernel)?);
+        let metric = DistanceMetric::parse(&spec.dmetric)?;
+        let problem = Problem {
+            kernel,
+            locs: Arc::new(data.locs.clone()),
+            z: Arc::new(data.z.clone()),
+            metric,
+        };
+        let session = Arc::new(Mutex::new(EvalSession::new(&problem, variant, ctx)?));
+        let entry = self.sessions.lock().unwrap().insert(key, session);
+        Ok((entry, false))
+    }
+
+    /// Serve one request.  Safe to call from many threads concurrently;
+    /// each request's task graphs interleave on the shared workers.
+    pub fn run(&self, req: Request) -> anyhow::Result<Response> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        let t0 = Instant::now();
+        let r = self.dispatch(&req);
+        if r.is_err() {
+            self.errors.fetch_add(1, Ordering::Relaxed);
+        }
+        let (kind, data_cache_hit, session_cache_hit, outcome) = r?;
+        Ok(Response {
+            id,
+            kind,
+            wall_s: t0.elapsed().as_secs_f64(),
+            data_cache_hit,
+            session_cache_hit,
+            outcome,
+        })
+    }
+
+    fn dispatch(&self, req: &Request) -> anyhow::Result<(&'static str, bool, bool, Outcome)> {
+        let ctx = self.ctx_with_priority(req.priority);
+        match &req.kind {
+            RequestKind::Simulate => {
+                let (d, hit) = self.dataset(&req.data, &ctx)?;
+                Ok(("simulate", hit, false, Outcome::Simulated { n: d.n() }))
+            }
+            RequestKind::Mle { variant, opt } => {
+                let (d, hit) = self.dataset(&req.data, &ctx)?;
+                let (session, shit) = self.session_for(&req.data, *variant, &d, &ctx)?;
+                let mut s = session.lock().unwrap();
+                // A cached session captured the priority of the request
+                // that built it; this request's priority wins.
+                s.set_job_prio(req.priority);
+                let r = mle_with_session(&mut s, opt)?;
+                Ok(("mle", hit, shit, Outcome::Mle(r)))
+            }
+            RequestKind::Predict { grid } => {
+                let (d, hit) = self.dataset(&req.data, &ctx)?;
+                let g = (*grid).max(1);
+                let new_locs: Vec<Location> = (0..g * g)
+                    .map(|k| {
+                        Location::new(
+                            (k % g) as f64 / (g - 1).max(1) as f64,
+                            (k / g) as f64 / (g - 1).max(1) as f64,
+                        )
+                    })
+                    .collect();
+                let kernel: Arc<dyn CovKernel> = Arc::from(kernel_by_name(&req.data.kernel)?);
+                let metric = DistanceMetric::parse(&req.data.dmetric)?;
+                let p = prediction::exact_predict_ctx(
+                    kernel,
+                    &req.data.theta,
+                    &d.locs,
+                    &d.z,
+                    &new_locs,
+                    metric,
+                    true,
+                    &ctx,
+                )?;
+                let mean_abs =
+                    p.mean.iter().map(|v| v.abs()).sum::<f64>() / p.mean.len().max(1) as f64;
+                Ok((
+                    "predict",
+                    hit,
+                    false,
+                    Outcome::Predicted {
+                        npoints: new_locs.len(),
+                        mean_abs,
+                    },
+                ))
+            }
+        }
+    }
+
+    /// Aggregate serving stats so far.
+    pub fn stats(&self) -> CoordinatorStats {
+        CoordinatorStats {
+            requests: self.requests.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            data_cache_hits: self.data_hits.load(Ordering::Relaxed),
+            session_cache_hits: self.session_hits.load(Ordering::Relaxed),
+            tasks_executed: self.runtime.tasks_executed(),
+            worker_threads: self.runtime.nworkers(),
+        }
+    }
+
+    /// Drain in-flight jobs and join the shared workers (the
+    /// `exageostat_finalize` of the serving layer).
+    pub fn shutdown(&self) {
+        self.runtime.shutdown();
+    }
+}
+
+// ---------------------------------------------------------------------
+// JSONL request parsing (offline substitute for serde — flat JSON
+// objects with string / number / bool / number-array values).
+// ---------------------------------------------------------------------
+
+/// Minimal JSON value (what the request grammar needs).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+struct JsonParser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl JsonParser<'_> {
+    fn skip_ws(&mut self) {
+        while self.i < self.b.len() && self.b[self.i].is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn expect(&mut self, c: u8) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.peek() == Some(c),
+            "expected {:?} at byte {}",
+            c as char,
+            self.i
+        );
+        self.i += 1;
+        Ok(())
+    }
+
+    fn value(&mut self) -> anyhow::Result<Json> {
+        self.skip_ws();
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(_) => self.number(),
+            None => anyhow::bail!("unexpected end of JSON"),
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: Json) -> anyhow::Result<Json> {
+        anyhow::ensure!(
+            self.b[self.i..].starts_with(word.as_bytes()),
+            "bad literal at byte {}",
+            self.i
+        );
+        self.i += word.len();
+        Ok(v)
+    }
+
+    fn number(&mut self) -> anyhow::Result<Json> {
+        let start = self.i;
+        while let Some(c) = self.peek() {
+            if c.is_ascii_digit() || matches!(c, b'-' | b'+' | b'.' | b'e' | b'E') {
+                self.i += 1;
+            } else {
+                break;
+            }
+        }
+        let s = std::str::from_utf8(&self.b[start..self.i]).expect("ascii number");
+        s.parse::<f64>()
+            .map(Json::Num)
+            .map_err(|_| anyhow::anyhow!("bad number {s:?} at byte {start}"))
+    }
+
+    fn string(&mut self) -> anyhow::Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            let Some(c) = self.peek() else {
+                anyhow::bail!("unterminated string")
+            };
+            self.i += 1;
+            match c {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let Some(e) = self.peek() else {
+                        anyhow::bail!("bad escape")
+                    };
+                    self.i += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b't' => out.push('\t'),
+                        b'r' => out.push('\r'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'u' => {
+                            anyhow::ensure!(self.i + 4 <= self.b.len(), "bad \\u escape");
+                            let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])
+                                .map_err(|_| anyhow::anyhow!("bad \\u escape"))?;
+                            let cp = u32::from_str_radix(hex, 16)
+                                .map_err(|_| anyhow::anyhow!("bad \\u escape {hex:?}"))?;
+                            self.i += 4;
+                            out.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                        }
+                        other => anyhow::bail!("unknown escape \\{}", other as char),
+                    }
+                }
+                _ => {
+                    // copy the raw byte run (UTF-8 passes through intact)
+                    let start = self.i - 1;
+                    while let Some(c) = self.peek() {
+                        if c == b'"' || c == b'\\' {
+                            break;
+                        }
+                        self.i += 1;
+                    }
+                    out.push_str(
+                        std::str::from_utf8(&self.b[start..self.i])
+                            .map_err(|_| anyhow::anyhow!("invalid UTF-8 in string"))?,
+                    );
+                }
+            }
+        }
+    }
+
+    fn array(&mut self) -> anyhow::Result<Json> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => anyhow::bail!("expected ',' or ']' at byte {}", self.i),
+            }
+        }
+    }
+
+    fn object(&mut self) -> anyhow::Result<Json> {
+        self.expect(b'{')?;
+        let mut fields = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(Json::Obj(fields));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            let val = self.value()?;
+            fields.push((key, val));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(Json::Obj(fields));
+                }
+                _ => anyhow::bail!("expected ',' or '}}' at byte {}", self.i),
+            }
+        }
+    }
+}
+
+/// Parse one JSON document.
+pub fn parse_json(src: &str) -> anyhow::Result<Json> {
+    let mut p = JsonParser {
+        b: src.as_bytes(),
+        i: 0,
+    };
+    let v = p.value()?;
+    p.skip_ws();
+    anyhow::ensure!(p.i == p.b.len(), "trailing characters at byte {}", p.i);
+    Ok(v)
+}
+
+fn field<'a>(obj: &'a [(String, Json)], key: &str) -> Option<&'a Json> {
+    obj.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+}
+
+fn get_num(obj: &[(String, Json)], key: &str, default: f64) -> anyhow::Result<f64> {
+    match field(obj, key) {
+        None => Ok(default),
+        Some(Json::Num(v)) => Ok(*v),
+        Some(other) => anyhow::bail!("field {key:?} must be a number, got {other:?}"),
+    }
+}
+
+fn get_usize(obj: &[(String, Json)], key: &str, default: usize) -> anyhow::Result<usize> {
+    let v = get_num(obj, key, default as f64)?;
+    anyhow::ensure!(
+        v >= 0.0 && v.fract() == 0.0,
+        "field {key:?} must be a non-negative integer, got {v}"
+    );
+    Ok(v as usize)
+}
+
+fn get_str(obj: &[(String, Json)], key: &str, default: &str) -> anyhow::Result<String> {
+    match field(obj, key) {
+        None => Ok(default.to_string()),
+        Some(Json::Str(s)) => Ok(s.clone()),
+        Some(other) => anyhow::bail!("field {key:?} must be a string, got {other:?}"),
+    }
+}
+
+fn get_f64_arr(obj: &[(String, Json)], key: &str) -> anyhow::Result<Option<Vec<f64>>> {
+    match field(obj, key) {
+        None => Ok(None),
+        Some(Json::Arr(items)) => items
+            .iter()
+            .map(|j| match j {
+                Json::Num(v) => Ok(*v),
+                other => anyhow::bail!("field {key:?} must hold numbers, got {other:?}"),
+            })
+            .collect::<anyhow::Result<Vec<f64>>>()
+            .map(Some),
+        Some(other) => anyhow::bail!("field {key:?} must be an array, got {other:?}"),
+    }
+}
+
+/// Parse one request line, e.g.
+/// `{"type":"mle","n":400,"seed":1,"variant":"dst","band":2,"max_iters":50}`.
+///
+/// Recognized fields: `type` (`mle`|`predict`|`simulate`, default `mle`),
+/// dataset (`n`, `seed`, `kernel`, `dmetric`, `theta`), MLE (`variant`,
+/// `band`, `tlr_tol`, `max_rank`, `clb`, `cub`, `tol`, `max_iters`,
+/// `method`), predict (`grid`), and `priority`.
+pub fn parse_request(line: &str) -> anyhow::Result<Request> {
+    let Json::Obj(obj) = parse_json(line)? else {
+        anyhow::bail!("request line must be a JSON object");
+    };
+    let data = DataSpec {
+        n: get_usize(&obj, "n", 400)?,
+        seed: get_usize(&obj, "seed", 0)? as u64,
+        kernel: get_str(&obj, "kernel", "ugsm-s")?,
+        dmetric: get_str(&obj, "dmetric", "euclidean")?,
+        theta: get_f64_arr(&obj, "theta")?.unwrap_or_else(|| vec![1.0, 0.1, 0.5]),
+    };
+    // Reject absurd sizes at parse time: a runaway `n` would otherwise
+    // attempt an O(n^2) allocation inside a client thread and take the
+    // whole serve run down instead of failing this one request.
+    anyhow::ensure!(
+        (1..=1_000_000).contains(&data.n),
+        "n must be in 1..=1000000, got {}",
+        data.n
+    );
+    let priority = get_usize(&obj, "priority", 0)?.min(u8::MAX as usize) as u8;
+    let ty = get_str(&obj, "type", "mle")?;
+    let kind = match ty.as_str() {
+        "simulate" => RequestKind::Simulate,
+        "predict" => {
+            let grid = get_usize(&obj, "grid", 8)?;
+            anyhow::ensure!(
+                (1..=1024).contains(&grid),
+                "grid must be in 1..=1024, got {grid}"
+            );
+            RequestKind::Predict { grid }
+        }
+        "mle" => {
+            let variant = match get_str(&obj, "variant", "exact")?.as_str() {
+                "exact" => Variant::Exact,
+                "dst" => Variant::Dst {
+                    band: get_usize(&obj, "band", 1)?,
+                },
+                "tlr" => Variant::Tlr {
+                    tol: get_num(&obj, "tlr_tol", 1e-7)?,
+                    max_rank: get_usize(&obj, "max_rank", usize::MAX)?,
+                },
+                "mp" => Variant::Mp {
+                    band: get_usize(&obj, "band", 1)?,
+                },
+                other => anyhow::bail!("unknown variant {other:?} (exact|dst|tlr|mp)"),
+            };
+            let nparams = kernel_by_name(&data.kernel)?.nparams();
+            let opt = MleOptions {
+                clb: get_f64_arr(&obj, "clb")?.unwrap_or_else(|| vec![0.001; nparams]),
+                cub: get_f64_arr(&obj, "cub")?.unwrap_or_else(|| vec![5.0; nparams]),
+                tol: get_num(&obj, "tol", 1e-4)?,
+                max_iters: get_usize(&obj, "max_iters", 0)?,
+                method: Method::parse(&get_str(&obj, "method", "bobyqa")?)?,
+            };
+            RequestKind::Mle { variant, opt }
+        }
+        other => anyhow::bail!("unknown request type {other:?} (mle|predict|simulate)"),
+    };
+    Ok(Request {
+        data,
+        kind,
+        priority,
+    })
+}
+
+/// Parse a whole JSONL request file (blank lines and `#` comments are
+/// skipped).
+pub fn parse_requests_jsonl(text: &str) -> anyhow::Result<Vec<Request>> {
+    text.lines()
+        .map(str::trim)
+        .enumerate()
+        .filter(|(_, l)| !l.is_empty() && !l.starts_with('#'))
+        .map(|(i, l)| parse_request(l).with_context(|| format!("request at line {}", i + 1)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::pool::Policy;
+
+    fn hw(ncores: usize, ts: usize) -> Hardware {
+        Hardware {
+            ncores,
+            ts,
+            policy: Policy::Prio,
+            ..Hardware::default()
+        }
+    }
+
+    #[test]
+    fn json_parser_round_trips_request_shapes() {
+        let j = parse_json(r#"{"a": 1.5, "b": [1, 2.25, -3e-1], "c": "x\ny", "d": true}"#).unwrap();
+        let Json::Obj(obj) = j else { panic!("obj") };
+        assert_eq!(field(&obj, "a"), Some(&Json::Num(1.5)));
+        assert_eq!(
+            field(&obj, "b"),
+            Some(&Json::Arr(vec![
+                Json::Num(1.0),
+                Json::Num(2.25),
+                Json::Num(-0.3)
+            ]))
+        );
+        assert_eq!(field(&obj, "c"), Some(&Json::Str("x\ny".into())));
+        assert_eq!(field(&obj, "d"), Some(&Json::Bool(true)));
+        assert!(parse_json("{\"unterminated\": ").is_err());
+        assert!(parse_json("{} trailing").is_err());
+    }
+
+    #[test]
+    fn request_lines_parse_with_defaults() {
+        let r = parse_request(r#"{"type":"mle","n":100,"variant":"dst","band":2}"#).unwrap();
+        assert_eq!(r.data.n, 100);
+        assert_eq!(r.data.kernel, "ugsm-s");
+        match r.kind {
+            RequestKind::Mle { variant, ref opt } => {
+                assert_eq!(variant, Variant::Dst { band: 2 });
+                assert_eq!(opt.clb.len(), 3);
+                assert_eq!(opt.max_iters, 0);
+            }
+            ref other => panic!("wrong kind {other:?}"),
+        }
+        let p = parse_request(r#"{"type":"predict","grid":5,"priority":3}"#).unwrap();
+        assert_eq!(p.priority, 3);
+        assert!(matches!(p.kind, RequestKind::Predict { grid: 5 }));
+        assert!(parse_request(r#"{"type":"nope"}"#).is_err());
+        assert!(parse_request(r#"[1,2]"#).is_err());
+
+        let reqs = parse_requests_jsonl(
+            "# comment\n\n{\"type\":\"simulate\",\"n\":50}\n{\"type\":\"mle\",\"max_iters\":5}\n",
+        )
+        .unwrap();
+        assert_eq!(reqs.len(), 2);
+        assert!(matches!(reqs[0].kind, RequestKind::Simulate));
+    }
+
+    #[test]
+    fn coordinator_caches_dataset_and_session() {
+        let coord = Coordinator::new(hw(2, 32));
+        let data = DataSpec {
+            n: 80,
+            seed: 11,
+            ..DataSpec::default()
+        };
+        let sim = Request {
+            data: data.clone(),
+            kind: RequestKind::Simulate,
+            priority: 0,
+        };
+        let r0 = coord.run(sim.clone()).unwrap();
+        assert!(!r0.data_cache_hit);
+        let r1 = coord.run(sim).unwrap();
+        assert!(r1.data_cache_hit);
+
+        let mle = Request {
+            data: data.clone(),
+            kind: RequestKind::Mle {
+                variant: Variant::Exact,
+                opt: MleOptions::new(vec![0.01; 3], vec![5.0; 3], 1e-3, 8),
+            },
+            priority: 0,
+        };
+        let m0 = coord.run(mle.clone()).unwrap();
+        assert!(!m0.session_cache_hit);
+        let m1 = coord.run(mle).unwrap();
+        assert!(m1.session_cache_hit, "second identical MLE reuses session");
+        let (Outcome::Mle(a), Outcome::Mle(b)) = (&m0.outcome, &m1.outcome) else {
+            panic!("mle outcomes");
+        };
+        assert_eq!(a.loglik.to_bits(), b.loglik.to_bits());
+
+        let st = coord.stats();
+        assert_eq!(st.requests, 4);
+        assert_eq!(st.errors, 0);
+        assert!(st.data_cache_hits >= 3);
+        assert_eq!(st.session_cache_hits, 1);
+        assert!(st.tasks_executed > 0);
+        assert_eq!(st.worker_threads, 2);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn bounded_cache_evicts_fifo_and_dedups_racers() {
+        let mut c: BoundedCache<Arc<usize>> = BoundedCache::new(2);
+        let a = c.insert("a".into(), Arc::new(1));
+        assert_eq!(*a, 1);
+        // racing insert under the same key keeps the winner
+        let a2 = c.insert("a".into(), Arc::new(99));
+        assert_eq!(*a2, 1);
+        c.insert("b".into(), Arc::new(2));
+        c.insert("c".into(), Arc::new(3)); // evicts "a" (oldest)
+        assert!(c.get("a").is_none());
+        assert!(c.get("b").is_some() && c.get("c").is_some());
+        assert!(c.map.len() <= 2);
+    }
+
+    #[test]
+    fn request_size_bounds_enforced() {
+        assert!(parse_request(r#"{"type":"simulate","n":1e18}"#).is_err());
+        assert!(parse_request(r#"{"type":"simulate","n":0}"#).is_err());
+        assert!(parse_request(r#"{"type":"predict","grid":100000}"#).is_err());
+        assert!(parse_request(r#"{"type":"predict","grid":8}"#).is_ok());
+    }
+
+    #[test]
+    fn coordinator_reports_errors_and_stays_usable() {
+        let coord = Coordinator::new(hw(1, 16));
+        let bad = Request {
+            data: DataSpec {
+                kernel: "no-such-kernel".into(),
+                ..DataSpec::default()
+            },
+            kind: RequestKind::Simulate,
+            priority: 0,
+        };
+        assert!(coord.run(bad).is_err());
+        let ok = Request {
+            data: DataSpec {
+                n: 40,
+                ..DataSpec::default()
+            },
+            kind: RequestKind::Predict { grid: 3 },
+            priority: 0,
+        };
+        let r = coord.run(ok).unwrap();
+        let Outcome::Predicted { npoints, .. } = r.outcome else {
+            panic!("predict outcome");
+        };
+        assert_eq!(npoints, 9);
+        let st = coord.stats();
+        assert_eq!(st.errors, 1);
+        assert_eq!(st.requests, 2);
+    }
+}

@@ -22,6 +22,7 @@ pub mod api;
 pub mod backend;
 pub mod baselines;
 pub mod cli;
+pub mod coordinator;
 pub mod covariance;
 pub mod data;
 pub mod likelihood;

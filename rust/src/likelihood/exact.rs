@@ -11,7 +11,6 @@ use crate::linalg::cholesky::{
     TileHandles,
 };
 use crate::linalg::tile::{TileMatrix, TileVector};
-use crate::scheduler::pool;
 use crate::scheduler::{Access, TaskGraph, TaskKind};
 use std::sync::Arc;
 
@@ -145,7 +144,9 @@ pub(crate) fn run_pipeline(
     submit_tiled_potrf(&mut g, a, &hs, band, &fail);
     let yh = g.register_many(y.nt());
     submit_tiled_forward_solve_banded(&mut g, a, &hs, y, &yh, band);
-    pool::run(&mut g, ctx.ncores, ctx.policy);
+    // One job on the context's persistent runtime: no threads are
+    // spawned here — warm MLE iterations reuse the parked workers.
+    ctx.run_graph(g);
     check_fail(&fail).map_err(|e| {
         anyhow::anyhow!(
             "covariance not positive definite at pivot {} (theta = {theta:?})",

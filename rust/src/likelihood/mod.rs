@@ -22,6 +22,9 @@ pub use session::EvalSession;
 use crate::backend::{ArcEngine, Engine as _};
 use crate::covariance::{CovKernel, DistanceMetric, Location};
 use crate::scheduler::pool::Policy;
+use crate::scheduler::profile::Profile;
+use crate::scheduler::runtime::{JobHandle, Runtime};
+use crate::scheduler::TaskGraph;
 use std::sync::Arc;
 
 /// Which covariance representation to use (Fig 1).
@@ -42,24 +45,69 @@ pub enum Variant {
 /// Execution context shared by the engines (the `exageostat_init`
 /// hardware settings), plus the compute backend picked at construction
 /// (`EXAGEOSTAT_BACKEND=native|pjrt` overrides the default — see
-/// [`crate::backend::default_engine`]).
+/// [`crate::backend::default_engine`]) and the **persistent task
+/// runtime**: `ncores` worker threads are spawned once, here, and every
+/// task-graph job of this context (likelihood pipelines, simulation,
+/// kriging) is multiplexed onto them.  Clones share the same runtime.
 #[derive(Clone)]
 pub struct ExecCtx {
+    /// Worker count of `runtime` (descriptive; execution always follows
+    /// the runtime).  Build contexts through the constructors so these
+    /// fields cannot disagree with the runtime that actually executes.
     pub ncores: usize,
     pub ts: usize,
+    /// Scheduling policy of `runtime` (descriptive — see `ncores`).
     pub policy: Policy,
     /// Compute backend for covariance generation and dense likelihood.
     pub engine: ArcEngine,
+    /// Long-lived worker runtime (shut down when the last clone drops,
+    /// or explicitly via `ExaGeoStat::finalize`).
+    pub runtime: Arc<Runtime>,
+    /// Job priority for graphs submitted through this context: the
+    /// coordinator's per-request fairness tie-break (0 = default).
+    pub job_prio: u8,
 }
 
 impl ExecCtx {
     pub fn new(ncores: usize, ts: usize, policy: Policy) -> ExecCtx {
+        ExecCtx::with_engine(ncores, ts, policy, crate::backend::default_engine())
+    }
+
+    /// Build a context around an explicit compute backend, spawning a
+    /// fresh runtime of `ncores` workers.
+    pub fn with_engine(ncores: usize, ts: usize, policy: Policy, engine: ArcEngine) -> ExecCtx {
+        let ncores = ncores.max(1);
         ExecCtx {
             ncores,
             ts,
             policy,
-            engine: crate::backend::default_engine(),
+            engine,
+            runtime: Arc::new(Runtime::new(ncores, policy)),
+            job_prio: 0,
         }
+    }
+
+    /// Build a context that *shares* an existing runtime (the coordinator
+    /// hands every request the same one).
+    pub fn with_runtime(runtime: Arc<Runtime>, ts: usize, engine: ArcEngine) -> ExecCtx {
+        ExecCtx {
+            ncores: runtime.nworkers(),
+            ts,
+            policy: runtime.policy(),
+            engine,
+            runtime,
+            job_prio: 0,
+        }
+    }
+
+    /// Submit a task graph as one job on this context's runtime.
+    pub fn submit(&self, g: TaskGraph) -> JobHandle {
+        self.runtime.submit_with_priority(g, self.job_prio)
+    }
+
+    /// Submit a task graph and block until it completes.
+    pub fn run_graph(&self, g: TaskGraph) -> Profile {
+        self.submit(g).wait()
     }
 }
 

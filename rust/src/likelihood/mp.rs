@@ -16,7 +16,6 @@ use crate::linalg::cholesky::{
     check_fail, new_fail_flag, submit_tiled_forward_solve_banded, submit_tiled_potrf, TileHandles,
 };
 use crate::linalg::tile::{TileMatrix, TileVector};
-use crate::scheduler::pool;
 use crate::scheduler::{Access, TaskGraph, TaskKind};
 use std::sync::Arc;
 
@@ -120,7 +119,7 @@ pub(crate) fn run_pipeline(
     submit_tiled_potrf(&mut g, a, &hs, None, &fail);
     let yh = g.register_many(y.nt());
     submit_tiled_forward_solve_banded(&mut g, a, &hs, y, &yh, None);
-    pool::run(&mut g, ctx.ncores, ctx.policy);
+    ctx.run_graph(g);
     check_fail(&fail).map_err(|e| {
         anyhow::anyhow!(
             "MP covariance not positive definite at pivot {} (theta = {theta:?})",

@@ -194,6 +194,20 @@ impl EvalSession {
         self.evals
     }
 
+    /// The covariance kernel this session evaluates (the coordinator and
+    /// `api::mle_with_session` read its arity/name for validation).
+    pub fn kernel(&self) -> &dyn crate::covariance::CovKernel {
+        self.problem.kernel.as_ref()
+    }
+
+    /// Set the job priority this session's submissions carry from now
+    /// on.  The coordinator applies the *current* request's priority
+    /// before driving a cached session (whose captured context would
+    /// otherwise keep the priority of the request that built it).
+    pub fn set_job_prio(&mut self, prio: u8) {
+        self.ctx.job_prio = prio;
+    }
+
     /// The variant this session evaluates.
     pub fn variant(&self) -> Variant {
         self.variant

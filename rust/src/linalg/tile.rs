@@ -27,8 +27,9 @@ pub fn tile_matrix_allocs() -> u64 {
 /// SAFETY: the scheduler's STF dependency inference guarantees that a
 /// writer has exclusive access and readers never overlap a writer, so
 /// aliased `&mut` access cannot occur at runtime.  The pointee (the
-/// `TileMatrix`) outlives graph execution because `pool::run` borrows the
-/// graph for the duration of the scoped threads.
+/// `TileMatrix`) outlives graph execution because every submission path
+/// waits on its `JobHandle` before the storage goes out of scope (the
+/// handle also waits on `Drop` — see `scheduler::runtime`).
 #[derive(Copy, Clone)]
 pub struct TilePtr {
     ptr: *mut f64,

@@ -11,6 +11,7 @@
 //! exageostat fisher --n 400 --theta 1,0.1,0.5
 //! exageostat sst --days 4
 //! exageostat structures --n 1024 --ts 128
+//! exageostat serve --requests requests.jsonl --clients 4 --ncores 4
 //! ```
 
 use anyhow::Context;
@@ -24,7 +25,9 @@ use std::path::PathBuf;
 
 fn hardware(args: &Args) -> anyhow::Result<Hardware> {
     Ok(Hardware {
-        ncores: args.get_usize("ncores", 1)?,
+        // Default: all available hardware threads (EXAGEOSTAT_NCORES
+        // overrides); --ncores pins it explicitly.
+        ncores: args.get_usize("ncores", exageostat::api::default_ncores())?,
         ngpus: args.get_usize("ngpus", 0)?,
         ts: args.get_usize("ts", 320)?,
         pgrid: args.get_usize("pgrid", 1)?,
@@ -243,6 +246,103 @@ fn cmd_sst(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    use exageostat::coordinator::{parse_requests_jsonl, Coordinator, Response};
+    use exageostat::testkit::percentile;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Mutex;
+
+    let hw = hardware(args)?;
+    let path = args
+        .get("requests")
+        .context("serve requires --requests <file.jsonl>")?
+        .to_string();
+    let text =
+        std::fs::read_to_string(&path).with_context(|| format!("reading {path}"))?;
+    let reqs = parse_requests_jsonl(&text)?;
+    anyhow::ensure!(!reqs.is_empty(), "no requests in {path}");
+    let clients = args.get_usize("clients", reqs.len().min(4))?.max(1);
+    println!(
+        "serving {} requests with {clients} client threads on {} workers ({:?}, ts {})",
+        reqs.len(),
+        hw.ncores.max(1),
+        hw.policy,
+        hw.ts
+    );
+
+    let coord = Coordinator::new(hw);
+    let next = AtomicUsize::new(0);
+    let responses: Mutex<Vec<Response>> = Mutex::new(Vec::new());
+    let failures: Mutex<Vec<String>> = Mutex::new(Vec::new());
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|s| {
+        for _ in 0..clients {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= reqs.len() {
+                    break;
+                }
+                match coord.run(reqs[i].clone()) {
+                    Ok(r) => {
+                        println!(
+                            "  [{:>3}] {:<8} {:>8.3}s{}{}",
+                            r.id,
+                            r.kind,
+                            r.wall_s,
+                            if r.data_cache_hit { "  data*" } else { "" },
+                            if r.session_cache_hit { "  session*" } else { "" },
+                        );
+                        responses.lock().unwrap().push(r);
+                    }
+                    Err(e) => failures.lock().unwrap().push(format!("request {i}: {e:#}")),
+                }
+            });
+        }
+    });
+    let total_s = t0.elapsed().as_secs_f64();
+
+    let responses = responses.into_inner().unwrap();
+    let failures = failures.into_inner().unwrap();
+    let mut lat: Vec<f64> = responses.iter().map(|r| r.wall_s).collect();
+    lat.sort_by(f64::total_cmp);
+    let st = coord.stats();
+    println!(
+        "{} ok, {} failed in {total_s:.3}s — {:.2} req/s, latency p50 {:.3}s / p95 {:.3}s",
+        responses.len(),
+        failures.len(),
+        responses.len() as f64 / total_s.max(1e-9),
+        percentile(&lat, 0.50),
+        percentile(&lat, 0.95),
+    );
+    println!(
+        "cache hits: {} data, {} session; {} tasks on {} workers",
+        st.data_cache_hits, st.session_cache_hits, st.tasks_executed, st.worker_threads
+    );
+    for f in &failures {
+        eprintln!("error: {f}");
+    }
+    if let Some(out) = args.get("out") {
+        let json = format!(
+            "{{\n  \"requests\": {},\n  \"ok\": {},\n  \"failed\": {},\n  \
+             \"total_s\": {total_s},\n  \"req_per_s\": {},\n  \"p50_s\": {},\n  \
+             \"p95_s\": {},\n  \"data_cache_hits\": {},\n  \"session_cache_hits\": {}\n}}\n",
+            reqs.len(),
+            responses.len(),
+            failures.len(),
+            responses.len() as f64 / total_s.max(1e-9),
+            percentile(&lat, 0.50),
+            percentile(&lat, 0.95),
+            st.data_cache_hits,
+            st.session_cache_hits,
+        );
+        std::fs::write(out, json).with_context(|| format!("writing {out}"))?;
+        println!("stats written to {out}");
+    }
+    coord.shutdown();
+    anyhow::ensure!(failures.is_empty(), "{} request(s) failed", failures.len());
+    Ok(())
+}
+
 fn mean(v: &[f64]) -> f64 {
     v.iter().sum::<f64>() / v.len() as f64
 }
@@ -261,10 +361,12 @@ fn main() {
         Some("mloe-mmom") => cmd_mloe_mmom(&args),
         Some("structures") => cmd_structures(&args),
         Some("sst") => cmd_sst(&args),
+        Some("serve") => cmd_serve(&args),
         _ => {
             eprintln!(
-                "usage: exageostat <simulate|mle|predict|fisher|mloe-mmom|structures|sst> [--flags]\n\
+                "usage: exageostat <simulate|mle|predict|fisher|mloe-mmom|structures|sst|serve> [--flags]\n\
                  common flags: --ncores N --ts N --sched eager|prio|lws|random\n\
+                 serve flags:  --requests file.jsonl --clients K [--out stats.json]\n\
                  see rust/src/main.rs header for examples"
             );
             std::process::exit(2);

@@ -3,8 +3,15 @@
 //! efficiency metrics (`exact_mloe_mmom`, Hong et al. 2021).
 
 use crate::covariance::{build_cov_dense, build_cross_cov, CovKernel, DistanceMetric, Location};
+use crate::likelihood::{ExecCtx, Problem};
 use crate::linalg::blas::{dpotrf, dtrsm_llnn_raw, dtrsv_ln, dtrsv_lt};
+use crate::linalg::cholesky::{
+    check_fail, new_fail_flag, submit_tiled_forward_solve, submit_tiled_potrf, TileHandles,
+};
 use crate::linalg::matrix::Matrix;
+use crate::linalg::tile::{TileMatrix, TileVector};
+use crate::scheduler::TaskGraph;
+use std::sync::Arc;
 
 /// Kriging output.
 #[derive(Clone, Debug)]
@@ -14,31 +21,22 @@ pub struct Prediction {
     pub variance: Option<Vec<f64>>,
 }
 
-/// Exact simple kriging with a global neighbourhood (univariate kernels):
-/// `mean = C_no Sigma^{-1} z`, `var_i = C(0) - || L^{-1} c_i ||^2`.
-pub fn exact_predict(
+/// Shared kriging algebra given the Cholesky factor `l` of the obs
+/// covariance and `alpha = Sigma^{-1} z`:
+/// `mean = C_no alpha`, `var_j = C(0) - || L^{-1} c_j ||^2`.
+#[allow(clippy::too_many_arguments)]
+fn krig_from_factor(
     kernel: &dyn CovKernel,
     theta: &[f64],
+    l: &Matrix,
+    alpha: &[f64],
     obs_locs: &[Location],
-    obs_z: &[f64],
     new_locs: &[Location],
     metric: DistanceMetric,
     with_variance: bool,
-) -> anyhow::Result<Prediction> {
-    anyhow::ensure!(kernel.nvariates() == 1, "exact_predict is univariate");
-    anyhow::ensure!(obs_locs.len() == obs_z.len(), "obs shape mismatch");
-    kernel.validate(theta)?;
+) -> Prediction {
     let n = obs_locs.len();
     let m = new_locs.len();
-
-    let mut l = build_cov_dense(kernel, theta, obs_locs, metric);
-    dpotrf(&mut l).map_err(|e| anyhow::anyhow!("kriging covariance not SPD: {e}"))?;
-
-    // a = Sigma^{-1} z
-    let mut a = obs_z.to_vec();
-    dtrsv_ln(n, l.as_slice(), n, &mut a);
-    dtrsv_lt(n, l.as_slice(), n, &mut a);
-
     // C_on: obs x new cross-covariance (column per new location)
     let c_on = build_cross_cov(kernel, theta, obs_locs, new_locs, metric);
     let mut mean = vec![0.0; m];
@@ -46,7 +44,7 @@ pub fn exact_predict(
         mean[j] = c_on
             .col(j)
             .iter()
-            .zip(&a)
+            .zip(alpha)
             .map(|(c, av)| c * av)
             .sum::<f64>();
     }
@@ -68,7 +66,112 @@ pub fn exact_predict(
         None
     };
 
-    Ok(Prediction { mean, variance })
+    Prediction { mean, variance }
+}
+
+/// Exact simple kriging with a global neighbourhood (univariate kernels):
+/// `mean = C_no Sigma^{-1} z`, `var_i = C(0) - || L^{-1} c_i ||^2`.
+/// Dense single-threaded reference path; the API routes through
+/// [`exact_predict_ctx`], which factors on the task runtime instead.
+pub fn exact_predict(
+    kernel: &dyn CovKernel,
+    theta: &[f64],
+    obs_locs: &[Location],
+    obs_z: &[f64],
+    new_locs: &[Location],
+    metric: DistanceMetric,
+    with_variance: bool,
+) -> anyhow::Result<Prediction> {
+    anyhow::ensure!(kernel.nvariates() == 1, "exact_predict is univariate");
+    anyhow::ensure!(obs_locs.len() == obs_z.len(), "obs shape mismatch");
+    kernel.validate(theta)?;
+    let n = obs_locs.len();
+
+    let mut l = build_cov_dense(kernel, theta, obs_locs, metric);
+    dpotrf(&mut l).map_err(|e| anyhow::anyhow!("kriging covariance not SPD: {e}"))?;
+
+    // alpha = Sigma^{-1} z
+    let mut alpha = obs_z.to_vec();
+    dtrsv_ln(n, l.as_slice(), n, &mut alpha);
+    dtrsv_lt(n, l.as_slice(), n, &mut alpha);
+
+    Ok(krig_from_factor(
+        kernel,
+        theta,
+        &l,
+        &alpha,
+        obs_locs,
+        new_locs,
+        metric,
+        with_variance,
+    ))
+}
+
+/// Exact kriging with the O(n^3) work — covariance generation, tiled
+/// Cholesky and the forward solve — submitted as **one job** on the
+/// context's persistent runtime, exactly like a likelihood evaluation
+/// (only the O(n^2 m) cross-covariance algebra stays on the calling
+/// thread).  Numerically identical to [`exact_predict`].
+#[allow(clippy::too_many_arguments)]
+pub fn exact_predict_ctx(
+    kernel: Arc<dyn CovKernel>,
+    theta: &[f64],
+    obs_locs: &[Location],
+    obs_z: &[f64],
+    new_locs: &[Location],
+    metric: DistanceMetric,
+    with_variance: bool,
+    ctx: &ExecCtx,
+) -> anyhow::Result<Prediction> {
+    anyhow::ensure!(kernel.nvariates() == 1, "exact_predict is univariate");
+    anyhow::ensure!(obs_locs.len() == obs_z.len(), "obs shape mismatch");
+    anyhow::ensure!(!obs_locs.is_empty(), "kriging needs observations");
+    kernel.validate(theta)?;
+    let n = obs_locs.len();
+
+    let problem = Problem {
+        kernel: kernel.clone(),
+        locs: Arc::new(obs_locs.to_vec()),
+        z: Arc::new(Vec::new()),
+        metric,
+    };
+    let a = TileMatrix::zeros(n, ctx.ts);
+    let y = TileVector::from_slice(obs_z, ctx.ts);
+    let mut g = TaskGraph::new();
+    let hs = TileHandles::register(&mut g, a.nt());
+    crate::likelihood::exact::submit_generation_with(
+        &mut g,
+        &a,
+        &hs,
+        &problem,
+        theta,
+        None,
+        &ctx.engine,
+        None,
+    );
+    let fail = new_fail_flag();
+    submit_tiled_potrf(&mut g, &a, &hs, None, &fail);
+    let yh = g.register_many(y.nt());
+    submit_tiled_forward_solve(&mut g, &a, &hs, &y, &yh);
+    ctx.run_graph(g);
+    check_fail(&fail)
+        .map_err(|e| anyhow::anyhow!("kriging covariance not SPD at pivot {}", e.pivot))?;
+
+    // y now holds w = L^{-1} z; finish alpha = L^{-T} w densely.
+    let l = a.to_dense_lower();
+    let mut alpha = y.to_vec();
+    dtrsv_lt(n, l.as_slice(), n, &mut alpha);
+
+    Ok(krig_from_factor(
+        kernel.as_ref(),
+        theta,
+        &l,
+        &alpha,
+        obs_locs,
+        new_locs,
+        metric,
+        with_variance,
+    ))
 }
 
 /// Fisher information of the covariance parameters at `theta`:
@@ -289,6 +392,54 @@ mod tests {
                 z[i]
             );
             assert!(pred.variance.as_ref().unwrap()[i] < 1e-7);
+        }
+    }
+
+    #[test]
+    fn runtime_routed_kriging_matches_dense_path() {
+        let k = kernel_by_name("ugsm-s").unwrap();
+        let theta = [1.1, 0.15, 1.0];
+        let (locs, z) = setup(60, 76);
+        let new_locs: Vec<Location> = (0..7)
+            .map(|i| Location::new(0.1 + 0.1 * i as f64, 0.3))
+            .collect();
+        let dense = exact_predict(
+            k.as_ref(),
+            &theta,
+            &locs,
+            &z,
+            &new_locs,
+            DistanceMetric::Euclidean,
+            true,
+        )
+        .unwrap();
+        let k_arc: Arc<dyn CovKernel> = Arc::from(kernel_by_name("ugsm-s").unwrap());
+        for ncores in [1usize, 3] {
+            let ctx = ExecCtx::new(ncores, 16, crate::scheduler::pool::Policy::Prio);
+            let tiled = exact_predict_ctx(
+                k_arc.clone(),
+                &theta,
+                &locs,
+                &z,
+                &new_locs,
+                DistanceMetric::Euclidean,
+                true,
+                &ctx,
+            )
+            .unwrap();
+            for j in 0..new_locs.len() {
+                assert!(
+                    (tiled.mean[j] - dense.mean[j]).abs() < 1e-10,
+                    "ncores={ncores} mean[{j}]: {} vs {}",
+                    tiled.mean[j],
+                    dense.mean[j]
+                );
+                let (vt, vd) = (
+                    tiled.variance.as_ref().unwrap()[j],
+                    dense.variance.as_ref().unwrap()[j],
+                );
+                assert!((vt - vd).abs() < 1e-10, "ncores={ncores} var[{j}]");
+            }
         }
     }
 

@@ -249,12 +249,7 @@ mod tests {
             z: std::sync::Arc::new(z),
             metric: DistanceMetric::Euclidean,
         };
-        let ctx = crate::likelihood::ExecCtx {
-            ncores: 1,
-            ts: 64,
-            policy: crate::scheduler::pool::Policy::Eager,
-            ..crate::likelihood::ExecCtx::default()
-        };
+        let ctx = crate::likelihood::ExecCtx::new(1, 64, crate::scheduler::pool::Policy::Eager);
         let want =
             crate::likelihood::loglik(&problem, &theta, crate::likelihood::Variant::Exact, &ctx)
                 .unwrap();

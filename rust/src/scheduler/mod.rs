@@ -8,9 +8,13 @@
 //! model:
 //!
 //! * [`TaskGraph`] — STF submission + dependency inference.
-//! * [`pool`] — worker pool with `eager` (central FIFO), `prio`
-//!   (priority heap) and `lws` (locality work stealing) policies, mirroring
-//!   StarPU's `STARPU_SCHED` choices used in the paper (§III-B).
+//! * [`runtime`] — the persistent worker runtime: threads spawned once
+//!   per hardware context (`starpu_init` analogue), task graphs submitted
+//!   as concurrent *jobs* and interleaved under a pluggable policy.
+//! * [`pool`] — the scheduling [`pool::Policy`] enum (`eager` central
+//!   FIFO, `prio` priority heap, `lws` locality work stealing, `random`),
+//!   mirroring StarPU's `STARPU_SCHED` choices used in the paper (§III-B),
+//!   plus the one-shot `pool::run` convenience executor.
 //! * [`profile`] — per-task timing and per-kind cost models (StarPU builds
 //!   the same cost models to drive heterogeneous dispatch).
 //! * [`des`] — a discrete-event simulator that replays a measured task
@@ -20,6 +24,7 @@
 pub mod des;
 pub mod pool;
 pub mod profile;
+pub mod runtime;
 
 use std::collections::HashMap;
 

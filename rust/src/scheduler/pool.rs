@@ -1,11 +1,18 @@
-//! Worker-pool executor for [`super::TaskGraph`] with pluggable scheduling
-//! policies (the StarPU `STARPU_SCHED` analogue, §III-B of the paper).
+//! Scheduling policies + the one-shot graph executor.
+//!
+//! The persistent worker machinery lives in [`super::runtime`]
+//! ([`super::runtime::Runtime`]): workers are spawned once per hardware
+//! context and every task graph is multiplexed onto them as a job.
+//! [`run`] remains as the *one-shot* convenience for tests and tools
+//! that execute a single graph and do not hold a context — it stands up
+//! a temporary runtime, submits the graph as its only job and tears the
+//! runtime down again.  Hot paths (likelihood pipelines, simulation,
+//! kriging) go through `ExecCtx::run_graph`, which reuses the context's
+//! long-lived runtime instead.
 
 use super::profile::Profile;
+use super::runtime::Runtime;
 use super::TaskGraph;
-use std::collections::{BinaryHeap, VecDeque};
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Condvar, Mutex};
 use std::time::Instant;
 
 /// Scheduling policy (paper/StarPU names: eager, prio, lws "locality work
@@ -15,7 +22,7 @@ pub enum Policy {
     /// Single central FIFO queue.
     Eager,
     /// Central priority heap ordered by [`super::TaskKind::priority`]
-    /// (critical-path first).
+    /// (critical-path first), with the job priority as tie-break.
     Prio,
     /// Per-worker LIFO deques with random stealing.
     Lws,
@@ -35,99 +42,17 @@ impl Policy {
     }
 }
 
-/// Ready-task entry for the priority heap.
-#[derive(PartialEq, Eq)]
-struct PrioEntry {
-    prio: u8,
-    /// tie-break on submission order (older first) for determinism
-    id: std::cmp::Reverse<usize>,
-}
-impl Ord for PrioEntry {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        (self.prio, &self.id).cmp(&(other.prio, &other.id))
-    }
-}
-impl PartialOrd for PrioEntry {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-
-/// Shared scheduler state.
-struct Shared {
-    /// eager / random: one FIFO per "slot" (eager uses slot 0 only).
-    queues: Vec<Mutex<VecDeque<usize>>>,
-    heap: Mutex<BinaryHeap<PrioEntry>>,
-    cv: Condvar,
-    cv_guard: Mutex<()>,
-    remaining: AtomicUsize,
-    policy: Policy,
-    nworkers: usize,
-    rng_state: AtomicUsize,
-}
-
-impl Shared {
-    fn push(&self, id: usize, prio: u8, local: usize) {
-        match self.policy {
-            Policy::Eager => self.queues[0].lock().unwrap().push_back(id),
-            Policy::Prio => self.heap.lock().unwrap().push(PrioEntry {
-                prio,
-                id: std::cmp::Reverse(id),
-            }),
-            Policy::Lws => self.queues[local].lock().unwrap().push_back(id),
-            Policy::Random => {
-                // xorshift over an atomic — cheap, contention-tolerant
-                let s = self.rng_state.fetch_add(0x9E3779B9, Ordering::Relaxed);
-                let mut x = s.wrapping_mul(0x2545F4914F6CDD1D) ^ 0x1234_5678;
-                x ^= x >> 17;
-                self.queues[x % self.nworkers].lock().unwrap().push_back(id)
-            }
-        }
-        // wake one sleeper
-        let _g = self.cv_guard.lock().unwrap();
-        self.cv.notify_all();
-    }
-
-    fn pop(&self, me: usize) -> Option<usize> {
-        match self.policy {
-            Policy::Eager => self.queues[0].lock().unwrap().pop_front(),
-            Policy::Prio => self.heap.lock().unwrap().pop().map(|e| e.id.0),
-            Policy::Lws => {
-                // local LIFO first (cache locality), then steal FIFO
-                if let Some(id) = self.queues[me].lock().unwrap().pop_back() {
-                    return Some(id);
-                }
-                for off in 1..self.nworkers {
-                    let v = (me + off) % self.nworkers;
-                    if let Some(id) = self.queues[v].lock().unwrap().pop_front() {
-                        return Some(id);
-                    }
-                }
-                None
-            }
-            Policy::Random => {
-                if let Some(id) = self.queues[me].lock().unwrap().pop_front() {
-                    return Some(id);
-                }
-                for off in 1..self.nworkers {
-                    let v = (me + off) % self.nworkers;
-                    if let Some(id) = self.queues[v].lock().unwrap().pop_front() {
-                        return Some(id);
-                    }
-                }
-                None
-            }
-        }
-    }
-}
-
-/// Execute `graph` on `nworkers` threads under `policy`; returns the merged
-/// execution profile (wall time + per-task records).
+/// Execute `graph` once on a **temporary** `nworkers`-thread runtime under
+/// `policy`; returns the merged execution profile (wall time + per-task
+/// records).  `nworkers <= 1` runs serially on the calling thread, as
+/// before.
+///
+/// This is the one-shot compatibility path: it spawns and joins threads
+/// per call.  Anything that executes more than one graph should hold a
+/// [`Runtime`] (or an `ExecCtx`, which owns one) and submit jobs to it.
 pub fn run(graph: &mut TaskGraph, nworkers: usize, policy: Policy) -> Profile {
-    let n = graph.tasks.len();
-    let mut prof = Profile::new(nworkers.max(1));
-    if n == 0 {
-        return prof;
+    if graph.tasks.is_empty() {
+        return Profile::new(nworkers.max(1));
     }
     if nworkers <= 1 {
         let t0 = Instant::now();
@@ -136,97 +61,10 @@ pub fn run(graph: &mut TaskGraph, nworkers: usize, policy: Policy) -> Profile {
         p.nworkers = 1;
         return p;
     }
-
-    // Take closures + build executable metadata.
-    let mut runs: Vec<Option<Box<dyn FnOnce() + Send>>> = Vec::with_capacity(n);
-    let mut preds: Vec<AtomicUsize> = Vec::with_capacity(n);
-    for t in graph.tasks.iter_mut() {
-        runs.push(t.run.take());
-        preds.push(AtomicUsize::new(t.npred));
-    }
-    let kinds: Vec<_> = graph.tasks.iter().map(|t| (t.kind, t.bytes)).collect();
-    let succs: Vec<&[usize]> = graph.tasks.iter().map(|t| t.succs.as_slice()).collect();
-    // Cells the workers will take closures out of.  Mutex<Option<..>> keeps
-    // this fully safe; the lock is uncontended (each task taken once).
-    let cells: Vec<Mutex<Option<Box<dyn FnOnce() + Send>>>> =
-        runs.into_iter().map(Mutex::new).collect();
-
-    let nslots = match policy {
-        Policy::Eager | Policy::Prio => 1,
-        _ => nworkers,
-    };
-    let shared = Shared {
-        queues: (0..nslots.max(nworkers)).map(|_| Mutex::new(VecDeque::new())).collect(),
-        heap: Mutex::new(BinaryHeap::new()),
-        cv: Condvar::new(),
-        cv_guard: Mutex::new(()),
-        remaining: AtomicUsize::new(n),
-        policy,
-        nworkers,
-        rng_state: AtomicUsize::new(0x5DEECE66),
-    };
-
-    // Seed initial ready set.
-    for id in 0..n {
-        if preds[id].load(Ordering::Relaxed) == 0 {
-            shared.push(id, kinds[id].0.priority, id % nworkers);
-        }
-    }
-
-    let t0 = Instant::now();
-    let profiles: Vec<Profile> = std::thread::scope(|scope| {
-        let mut handles = Vec::new();
-        for w in 0..nworkers {
-            let shared = &shared;
-            let preds = &preds;
-            let kinds = &kinds;
-            let succs = &succs;
-            let cells = &cells;
-            handles.push(scope.spawn(move || {
-                let mut local = Profile::new(1);
-                loop {
-                    if shared.remaining.load(Ordering::Acquire) == 0 {
-                        break;
-                    }
-                    let Some(id) = shared.pop(w) else {
-                        // Sleep until new work or completion.
-                        let g = shared.cv_guard.lock().unwrap();
-                        if shared.remaining.load(Ordering::Acquire) == 0 {
-                            break;
-                        }
-                        let _ = shared
-                            .cv
-                            .wait_timeout(g, std::time::Duration::from_micros(200))
-                            .unwrap();
-                        continue;
-                    };
-                    let run = cells[id].lock().unwrap().take();
-                    let ts = Instant::now();
-                    if let Some(f) = run {
-                        f();
-                    }
-                    local.record(w, kinds[id].0, ts.elapsed(), kinds[id].1);
-                    // Release successors.
-                    for &s in succs[id] {
-                        if preds[s].fetch_sub(1, Ordering::AcqRel) == 1 {
-                            shared.push(s, kinds[s].0.priority, w);
-                        }
-                    }
-                    if shared.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
-                        // last task: wake all sleepers so they exit
-                        let _g = shared.cv_guard.lock().unwrap();
-                        shared.cv.notify_all();
-                    }
-                }
-                local
-            }));
-        }
-        handles.into_iter().map(|h| h.join().unwrap()).collect()
-    });
-    for p in profiles {
-        prof.merge(p);
-    }
-    prof.wall = t0.elapsed();
+    let rt = Runtime::new(nworkers, policy);
+    let g = std::mem::take(graph);
+    let prof = rt.submit(g).wait();
+    rt.shutdown();
     prof
 }
 
@@ -235,7 +73,7 @@ mod tests {
     use super::*;
     use crate::scheduler::{Access, TaskKind};
     use std::sync::atomic::{AtomicUsize, Ordering};
-    use std::sync::Arc;
+    use std::sync::{Arc, Mutex};
 
     fn all_policies() -> [Policy; 4] {
         [Policy::Eager, Policy::Prio, Policy::Lws, Policy::Random]

@@ -8,7 +8,6 @@ use crate::linalg::blas::{dgemv_raw, dtrmv_ln, Trans};
 use crate::linalg::cholesky::{check_fail, new_fail_flag, submit_tiled_potrf, TileHandles};
 use crate::linalg::tile::TileMatrix;
 use crate::rng::Pcg64;
-use crate::scheduler::pool;
 use crate::scheduler::TaskGraph;
 use std::sync::Arc;
 
@@ -126,7 +125,7 @@ pub fn simulate_obs_exact(
     );
     let fail = new_fail_flag();
     submit_tiled_potrf(&mut g, &a, &hs, None, &fail);
-    pool::run(&mut g, ctx.ncores, ctx.policy);
+    ctx.run_graph(g);
     check_fail(&fail)
         .map_err(|e| anyhow::anyhow!("simulation covariance not SPD at pivot {}", e.pivot))?;
 

@@ -17,6 +17,26 @@ use crate::rng::Pcg64;
 /// [`crate::likelihood::EvalSession`]'s workspace-reuse invariant.
 pub use crate::linalg::tile::tile_matrix_allocs;
 
+/// Process-wide count of worker threads spawned by
+/// [`crate::scheduler::runtime::Runtime`]s — the telemetry behind the
+/// runtime-lifecycle regression tests ("a full MLE run spawns exactly
+/// `ncores` threads; warm iterations spawn zero").  Note this counter is
+/// global: tests asserting deltas must serialize against other
+/// runtime-creating tests in the same process (see
+/// `rust/tests/runtime_lifecycle.rs`).
+pub use crate::scheduler::runtime::worker_threads_spawned;
+
+/// Nearest-rank percentile of an **ascending-sorted** slice, `p` in
+/// [0, 1].  Shared by the `serve` subcommand and the serving bench so
+/// their latency quantiles cannot drift apart.
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
 /// Run `prop` on `cases` inputs drawn by `gen` from a seeded RNG.
 pub fn forall<T: std::fmt::Debug>(
     seed: u64,
