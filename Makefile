@@ -14,7 +14,7 @@ BENCHES = fig3_shared_memory fig5_scaling_n fig6_accelerated \
           fig7_distributed table5_time_per_iter ablation_variants \
           serving_throughput
 
-.PHONY: all test artifacts bench-smoke fmt lint python-test clean
+.PHONY: all test artifacts bench-smoke fmt lint doc python-test clean
 
 all: test
 
@@ -41,7 +41,7 @@ bench-smoke:
 		echo "== bench $$b (quick) =="; \
 		BENCH_QUICK=1 cargo bench --bench $$b || exit 1; \
 	done
-	@echo "== serve smoke =="
+	@echo "== serve smoke (file) =="
 	@mkdir -p target
 	@printf '%s\n%s\n%s\n' \
 		'{"type":"simulate","n":100,"seed":1}' \
@@ -50,12 +50,23 @@ bench-smoke:
 		> target/serve_smoke.jsonl
 	cargo run --release -p exageostat -- serve \
 		--requests target/serve_smoke.jsonl --clients 2 --ncores 2 --ts 50
+	@echo "== serve smoke (stdin stream) =="
+	@printf '%s\n%s\n' \
+		'{"type":"simulate","n":100,"seed":2}' \
+		'{"type":"mle","n":100,"seed":2,"max_iters":5}' \
+		| cargo run --release -p exageostat -- serve \
+		--stdin --clients 2 --ncores 2 --ts 50 --window 2
 
 fmt:
 	cargo fmt --all --check
 
-lint:
+lint: doc
 	cargo clippy --all-targets -- -D warnings
+
+# Public-API docs; fails on rustdoc warnings (broken links etc.), as CI
+# runs it in the lint job.
+doc:
+	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 
 python-test:
 	@if $(PYTHON) -c "import jax" 2>/dev/null; then \

@@ -6,9 +6,10 @@
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use exageostat::api::{ExaGeoStat, Hardware, MleOptions};
+use exageostat::api::{ExaGeoStat, GeoModel, Hardware};
 use exageostat::backend::{self, Backend, Engine as _};
 use exageostat::covariance::{fill_cov_tile, kernel_by_name, DistanceMetric};
+use exageostat::likelihood::Variant;
 use exageostat::scheduler::pool::Policy;
 
 fn main() -> anyhow::Result<()> {
@@ -29,11 +30,22 @@ fn main() -> anyhow::Result<()> {
     let data = exa.simulate_data_exact("ugsm-s", &theta_true, "euclidean", 400, 0)?;
     println!("simulated n = {} (seed 0, theta = {theta_true:?})", data.n());
 
-    // 3. exact_mle with the paper's optimization settings.
-    let opt = MleOptions::new(vec![0.001; 3], vec![5.0; 3], 1e-5, 0);
-    let fit = exa.exact_mle(&data, "ugsm-s", "euclidean", &opt)?;
+    // 3. Exact MLE with the paper's optimization settings, through the
+    //    typed model builder (the legacy `exa.exact_mle(&data, "ugsm-s",
+    //    "euclidean", &opt)` wrapper still works and is bit-identical —
+    //    see the README migration table).
+    let model = GeoModel::builder()
+        .data(data.clone())
+        .kernel("ugsm-s")
+        .metric("euclidean")
+        .variant(Variant::Exact)
+        .bounds(vec![0.001; 3], vec![5.0; 3])
+        .tol(1e-5)
+        .tile_size(64)
+        .build()?;
+    let fit = model.fit(&exa)?;
     println!(
-        "exact_mle: theta_hat = ({:.3}, {:.3}, {:.3}), loglik = {:.3}, {} iters, {:.4} s/iter",
+        "GeoModel fit: theta_hat = ({:.3}, {:.3}, {:.3}), loglik = {:.3}, {} iters, {:.4} s/iter",
         fit.theta[0], fit.theta[1], fit.theta[2], fit.loglik, fit.iters, fit.time_per_iter
     );
 
@@ -117,6 +129,7 @@ fn main() -> anyhow::Result<()> {
                 tol: 1e-4,
                 max_iters: 150,
                 init: vec![0.01; 3],
+                stop: None,
             };
             let k2 = kernel_by_name("ugsm-s")?;
             let r = exageostat::optimizer::minimize(

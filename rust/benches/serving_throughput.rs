@@ -2,22 +2,26 @@
 //! the persistent-runtime refactor: K client threads submit a mixed
 //! MLE + predict + simulate workload to **one** shared `Runtime`
 //! (`Coordinator`), versus the pre-refactor serving model of one fresh
-//! worker pool per job, run sequentially.
+//! worker pool per job, run sequentially — plus the **streaming** path
+//! (`serve_stream` over a JSONL pipe with a bounded in-flight window)
+//! and a cancellation round (every third ticket cancelled mid-flight).
 //!
 //! Emits `BENCH_serving.json` (override the path with `BENCH_OUT`):
-//! requests/sec and p50/p95 latency for both modes.  `BENCH_QUICK`
-//! (or `--quick`) shrinks the workload for CI.
+//! requests/sec, p50/p95/p99 latency per mode, and cancelled-request
+//! counts.  `BENCH_QUICK` (or `--quick`) shrinks the workload for CI.
 
 #[path = "bench_util.rs"]
 mod bench_util;
 use bench_util::*;
 
 use exageostat::api::{Hardware, MleOptions};
-use exageostat::coordinator::{Coordinator, DataSpec, Request, RequestKind};
+use exageostat::coordinator::{
+    serve_stream, Client, Completion, Coordinator, DataSpec, Request, RequestKind, ServeOptions,
+};
 use exageostat::likelihood::Variant;
 use exageostat::scheduler::pool::Policy;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 fn workload(n: usize, count: usize, max_iters: usize) -> Vec<Request> {
@@ -37,9 +41,27 @@ fn workload(n: usize, count: usize, max_iters: usize) -> Vec<Request> {
                 _ => RequestKind::Simulate,
             };
             Request {
-                data,
+                data: data.into(),
                 kind,
                 priority: (i % 4) as u8,
+            }
+        })
+        .collect()
+}
+
+/// The same workload as JSONL lines (what the streaming path ingests).
+fn workload_jsonl(n: usize, count: usize, max_iters: usize) -> String {
+    (0..count)
+        .map(|i| {
+            let seed = i % 3;
+            match i % 3 {
+                0 => format!(
+                    "{{\"type\":\"mle\",\"n\":{n},\"seed\":{seed},\"max_iters\":{max_iters},\
+                     \"clb\":[0.01,0.01,0.01],\"priority\":{}}}\n",
+                    i % 4
+                ),
+                1 => format!("{{\"type\":\"predict\",\"n\":{n},\"seed\":{seed},\"grid\":6}}\n"),
+                _ => format!("{{\"type\":\"simulate\",\"n\":{n},\"seed\":{seed}}}\n"),
             }
         })
         .collect()
@@ -82,6 +104,55 @@ fn run_sequential(hw: &Hardware, reqs: &[Request]) -> (f64, Vec<f64>) {
     (t0.elapsed().as_secs_f64(), lats)
 }
 
+/// Streaming path: `serve_stream` over an in-memory JSONL "pipe" with a
+/// bounded in-flight window.  Returns (wall, sorted latencies).
+fn run_streaming(hw: &Hardware, jsonl: &str, clients: usize, window: usize) -> (f64, Vec<f64>) {
+    let coord = Arc::new(Coordinator::new(hw.clone()));
+    let client = Client::new(coord.clone(), clients);
+    let mut reader = std::io::BufReader::new(jsonl.as_bytes());
+    let opts = ServeOptions {
+        window,
+        depth_limit: None,
+    };
+    let t0 = Instant::now();
+    let summary = serve_stream(&client, &mut reader, &opts, |_, _| {}).expect("stream");
+    let wall = t0.elapsed().as_secs_f64();
+    assert_eq!(summary.failed, 0, "streaming workload must not fail");
+    client.shutdown();
+    coord.shutdown();
+    (wall, summary.latencies_s)
+}
+
+/// Cancellation round: submit everything through tickets, cancel every
+/// second one immediately, wait for the rest.  Returns (completed,
+/// cancelled, tasks_executed).  The stride is 2 on purpose: the
+/// workload assigns request *kinds* by `i % 3`, so a stride of 3 would
+/// only ever cancel MLEs — 2 exercises the predict and simulate
+/// cancellation paths too.
+fn run_cancelling(hw: &Hardware, reqs: &[Request]) -> (usize, usize, u64) {
+    let coord = Arc::new(Coordinator::new(hw.clone()));
+    let client = Client::new(coord.clone(), 4);
+    let tickets: Vec<_> = reqs.iter().map(|r| client.submit(r.clone())).collect();
+    for (i, t) in tickets.iter().enumerate() {
+        if i % 2 == 0 {
+            t.cancel();
+        }
+    }
+    let mut done = 0usize;
+    let mut cancelled = 0usize;
+    for t in &tickets {
+        match t.wait() {
+            Completion::Done(_) => done += 1,
+            Completion::Cancelled => cancelled += 1,
+            Completion::Failed(e) => panic!("bench request failed: {e}"),
+        }
+    }
+    let tasks = coord.runtime().tasks_executed();
+    client.shutdown();
+    coord.shutdown();
+    (done, cancelled, tasks)
+}
+
 fn pct(lat: &mut [f64], p: f64) -> f64 {
     lat.sort_by(f64::total_cmp);
     exageostat::testkit::percentile(lat, p)
@@ -106,35 +177,69 @@ fn main() {
          {clients} clients, {} workers",
         hw.ncores
     );
-    header(&["mode", "wall s", "req/s", "p50 s", "p95 s"]);
+    header(&["mode", "wall s", "req/s", "p50 s", "p95 s", "p99 s"]);
 
     let (seq_wall, mut seq_lat) = run_sequential(&hw, &reqs);
     let seq_rps = count as f64 / seq_wall;
-    let (seq_p50, seq_p95) = (pct(&mut seq_lat, 0.50), pct(&mut seq_lat, 0.95));
+    let (seq_p50, seq_p95, seq_p99) = (
+        pct(&mut seq_lat, 0.50),
+        pct(&mut seq_lat, 0.95),
+        pct(&mut seq_lat, 0.99),
+    );
     row(&[
         "per-job".into(),
         s(seq_wall),
         s2(seq_rps),
         s(seq_p50),
         s(seq_p95),
+        s(seq_p99),
     ]);
 
     let (con_wall, mut con_lat) = run_concurrent(&hw, &reqs, clients);
     let con_rps = count as f64 / con_wall;
-    let (con_p50, con_p95) = (pct(&mut con_lat, 0.50), pct(&mut con_lat, 0.95));
+    let (con_p50, con_p95, con_p99) = (
+        pct(&mut con_lat, 0.50),
+        pct(&mut con_lat, 0.95),
+        pct(&mut con_lat, 0.99),
+    );
     row(&[
         "shared".into(),
         s(con_wall),
         s2(con_rps),
         s(con_p50),
         s(con_p95),
+        s(con_p99),
     ]);
 
+    let jsonl = workload_jsonl(n, count, max_iters);
+    let window = 2 * clients;
+    let (str_wall, mut str_lat) = run_streaming(&hw, &jsonl, clients, window);
+    let str_rps = count as f64 / str_wall;
+    let (str_p50, str_p95, str_p99) = (
+        pct(&mut str_lat, 0.50),
+        pct(&mut str_lat, 0.95),
+        pct(&mut str_lat, 0.99),
+    );
+    row(&[
+        "streaming".into(),
+        s(str_wall),
+        s2(str_rps),
+        s(str_p50),
+        s(str_p95),
+        s(str_p99),
+    ]);
+
+    let (can_done, can_cancelled, can_tasks) = run_cancelling(&hw, &reqs);
     println!(
-        "\nshape check: the shared persistent runtime should serve at >= the\n\
+        "\ncancellation round: {can_done} completed, {can_cancelled} cancelled \
+         (every 2nd ticket, mixed kinds), {can_tasks} tasks executed"
+    );
+    println!(
+        "shape check: the shared persistent runtime should serve at >= the\n\
          sequential per-job-pool rate (cache reuse + no spawn/join per job);\n\
-         here {:.2}x.",
-        con_rps / seq_rps.max(1e-12)
+         here {:.2}x (streaming {:.2}x).",
+        con_rps / seq_rps.max(1e-12),
+        str_rps / seq_rps.max(1e-12)
     );
 
     let json = format!(
@@ -142,9 +247,14 @@ fn main() {
          \"requests\": {count},\n  \"clients\": {clients},\n  \
          \"ncores\": {},\n  \"mle_max_iters\": {max_iters},\n  \
          \"shared\": {{\"wall_s\": {con_wall}, \"req_per_s\": {con_rps}, \
-         \"p50_s\": {con_p50}, \"p95_s\": {con_p95}}},\n  \
+         \"p50_s\": {con_p50}, \"p95_s\": {con_p95}, \"p99_s\": {con_p99}}},\n  \
          \"sequential_per_job\": {{\"wall_s\": {seq_wall}, \"req_per_s\": {seq_rps}, \
-         \"p50_s\": {seq_p50}, \"p95_s\": {seq_p95}}}\n}}\n",
+         \"p50_s\": {seq_p50}, \"p95_s\": {seq_p95}, \"p99_s\": {seq_p99}}},\n  \
+         \"streaming\": {{\"wall_s\": {str_wall}, \"req_per_s\": {str_rps}, \
+         \"p50_s\": {str_p50}, \"p95_s\": {str_p95}, \"p99_s\": {str_p99}, \
+         \"window\": {window}}},\n  \
+         \"cancellation\": {{\"completed\": {can_done}, \"cancelled\": {can_cancelled}, \
+         \"tasks_executed\": {can_tasks}}}\n}}\n",
         hw.ncores
     );
     let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_serving.json".into());

@@ -1,0 +1,101 @@
+//! Typed errors for the public API.
+//!
+//! The legacy Table-II entry points reported misconfiguration through
+//! ad-hoc `anyhow!` strings, and some of it (bounds of the wrong
+//! length) only surfaced deep inside the optimizer.  The builder and
+//! client layers validate up front and return these variants instead;
+//! callers that care can `downcast_ref::<ApiError>()`, everyone else
+//! still sees a readable message through `anyhow`.
+
+use std::fmt;
+
+/// Machine-matchable error cases of the model/client API.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ApiError {
+    /// `clb`/`cub` do not both have one entry per kernel parameter.
+    BoundsArity {
+        /// Kernel name (e.g. `"ugsm-s"`).
+        kernel: String,
+        /// The kernel's parameter count.
+        expected: usize,
+        /// Length of the supplied lower-bound vector.
+        got_clb: usize,
+        /// Length of the supplied upper-bound vector.
+        got_cub: usize,
+    },
+    /// A DST/MP `band` at least the tile-grid size: every tile is
+    /// already in band, so the request is either a misunderstanding of
+    /// `band` or should have been `Variant::Exact`.
+    BandTooLarge {
+        /// The requested band.
+        band: usize,
+        /// Tiles per matrix dimension for this problem and tile size.
+        ntiles: usize,
+    },
+    /// A required builder field was never set.
+    BuilderIncomplete(&'static str),
+    /// The job was cancelled before it produced a result.
+    Cancelled,
+}
+
+impl fmt::Display for ApiError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ApiError::BoundsArity {
+                kernel,
+                expected,
+                got_clb,
+                got_cub,
+            } => write!(
+                f,
+                "kernel {kernel:?} expects {expected} parameters in clb/cub \
+                 (got {got_clb} and {got_cub})"
+            ),
+            ApiError::BandTooLarge { band, ntiles } => write!(
+                f,
+                "band {band} covers the whole {ntiles}x{ntiles} tile grid \
+                 (use band < {ntiles}, or Variant::Exact)"
+            ),
+            ApiError::BuilderIncomplete(field) => {
+                write!(f, "ModelBuilder is missing required field `{field}`")
+            }
+            ApiError::Cancelled => write!(f, "job cancelled"),
+        }
+    }
+}
+
+impl std::error::Error for ApiError {}
+
+/// Does `err` represent a cancellation (an [`ApiError::Cancelled`]
+/// anywhere in its chain)?
+pub fn is_cancelled(err: &anyhow::Error) -> bool {
+    err.chain()
+        .any(|e| matches!(e.downcast_ref::<ApiError>(), Some(ApiError::Cancelled)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_and_downcast() {
+        let e: anyhow::Error = ApiError::BoundsArity {
+            kernel: "ugsm-s".into(),
+            expected: 3,
+            got_clb: 2,
+            got_cub: 3,
+        }
+        .into();
+        assert!(e.to_string().contains("3 parameters"));
+        assert!(matches!(
+            e.downcast_ref::<ApiError>(),
+            Some(ApiError::BoundsArity { expected: 3, .. })
+        ));
+        assert!(!is_cancelled(&e));
+        let c: anyhow::Error = ApiError::Cancelled.into();
+        assert!(is_cancelled(&c));
+        // context layers must not hide the marker
+        let wrapped = c.context("request 7");
+        assert!(is_cancelled(&wrapped));
+    }
+}

@@ -1,14 +1,28 @@
-//! The ExaGeoStatR user-facing API (Table II): one Rust method per R
-//! function, with the same argument structure (`hardware = list(...)`,
-//! `optimization = list(clb, cub, tol, max_iters)`).
+//! The public API: the typed model layer ([`GeoModel`] /
+//! [`ModelBuilder`]) plus the ExaGeoStatR Table-II surface, one Rust
+//! method per R function with the same argument structure
+//! (`hardware = list(...)`, `optimization = list(clb, cub, tol,
+//! max_iters)`).
+//!
+//! The Table-II MLE entry points are retained as thin wrappers over the
+//! builder (parity-tested in `rust/tests/api_client.rs`); new code
+//! should build a [`GeoModel`] and either [`GeoModel::fit`] it directly
+//! or submit it asynchronously through a `coordinator::Client` — see
+//! the "API layers" section of DESIGN.md.
+
+pub mod error;
+pub mod model;
+
+pub use error::{is_cancelled, ApiError};
+pub use model::{GeoModel, ModelBuilder};
 
 use crate::backend::{self, ArcEngine, Backend, Engine as _};
 use crate::covariance::{kernel_by_name, CovKernel, DistanceMetric, Location};
-use crate::likelihood::{EvalSession, ExecCtx, Problem, Variant};
+use crate::likelihood::{EvalSession, ExecCtx, Variant};
 use crate::optimizer::{self, Bounds, Method, OptOptions};
 use crate::prediction::{self, FisherResult, MloeMmom, Prediction};
 use crate::scheduler::pool::Policy;
-use crate::scheduler::runtime::Runtime;
+use crate::scheduler::runtime::{CancelToken, Runtime};
 use crate::simulation::{self, GeoData};
 use std::sync::Arc;
 
@@ -160,18 +174,20 @@ impl ExaGeoStat {
             engine: self.engine.clone(),
             runtime: self.runtime.clone(),
             job_prio: 0,
+            cancel: CancelToken::new(),
         }
     }
 
+    #[cfg(test)]
     fn problem(
         &self,
         data: &GeoData,
         kernel: &str,
         dmetric: &str,
-    ) -> anyhow::Result<(Problem, Arc<dyn CovKernel>)> {
+    ) -> anyhow::Result<(crate::likelihood::Problem, Arc<dyn CovKernel>)> {
         let kernel: Arc<dyn CovKernel> = Arc::from(kernel_by_name(kernel)?);
         let metric = DistanceMetric::parse(dmetric)?;
-        let p = Problem {
+        let p = crate::likelihood::Problem {
             kernel: kernel.clone(),
             locs: Arc::new(data.locs.clone()),
             z: Arc::new(data.z.clone()),
@@ -215,7 +231,11 @@ impl ExaGeoStat {
         simulation::simulate_obs_exact(kernel, theta, locs, metric, seed, &self.ctx())
     }
 
-    /// Shared MLE driver over a likelihood variant.
+    /// Shared MLE driver over a likelihood variant: builds a
+    /// [`GeoModel`] (which validates the whole configuration up front,
+    /// with typed [`ApiError`]s — notably bounds arity and the DST/MP
+    /// band vs. the tile grid, *before* the O(n^2) session setup) and
+    /// fits it on this instance's persistent runtime.
     pub fn mle(
         &self,
         data: &GeoData,
@@ -224,24 +244,15 @@ impl ExaGeoStat {
         opt: &MleOptions,
         variant: Variant,
     ) -> anyhow::Result<MleResult> {
-        let (problem, k) = self.problem(data, kernel, dmetric)?;
-        // Cheap arity check first: session construction below does the
-        // O(n^2) distance-cache work, which malformed bounds should not
-        // pay for (mle_with_session re-checks for its other callers).
-        anyhow::ensure!(
-            opt.clb.len() == k.nparams() && opt.cub.len() == k.nparams(),
-            "{} expects {} parameters in clb/cub",
-            k.name(),
-            k.nparams()
-        );
-        let ctx = self.ctx();
-        // One evaluation session per MLE run: the Morton ordering, the
-        // per-tile distance cache and the factor/solve workspaces are
-        // resolved here, once, and every optimizer iteration below reuses
-        // them (the iteration-aware hot loop — see DESIGN.md §"Evaluation
-        // sessions and caching").
-        let mut session = EvalSession::new(&problem, variant, &ctx)?;
-        mle_with_session(&mut session, opt)
+        GeoModel::builder()
+            .data(data.clone())
+            .kernel(kernel)
+            .metric(dmetric)
+            .variant(variant)
+            .options(opt.clone())
+            .tile_size(self.hw.ts)
+            .build()?
+            .fit(self)
     }
 
     /// `exact_mle(data, kernel, dmetric, optimization)`.
@@ -354,14 +365,23 @@ impl ExaGeoStat {
 /// calls it directly with sessions from its cache, so repeated MLE
 /// requests on the same dataset skip the Morton/distance/workspace
 /// setup entirely and only pay warm iterations.
+///
+/// The session's cancellation token (see [`EvalSession::set_cancel`])
+/// is honoured between objective evaluations: when it fires, the
+/// optimizer stops at its next iteration boundary and this function
+/// returns [`ApiError::Cancelled`].
 pub fn mle_with_session(session: &mut EvalSession, opt: &MleOptions) -> anyhow::Result<MleResult> {
     let nparams = session.kernel().nparams();
-    anyhow::ensure!(
-        opt.clb.len() == nparams && opt.cub.len() == nparams,
-        "{} expects {} parameters in clb/cub",
-        session.kernel().name(),
-        nparams
-    );
+    if opt.clb.len() != nparams || opt.cub.len() != nparams {
+        return Err(ApiError::BoundsArity {
+            kernel: session.kernel().name().to_string(),
+            expected: nparams,
+            got_clb: opt.clb.len(),
+            got_cub: opt.cub.len(),
+        }
+        .into());
+    }
+    let cancel = session.cancel_token().clone();
     // Optimize in log-parameter space: Matérn parameters are positive
     // and the (sigma_sq, beta) profile is banana-shaped in linear
     // scale; the log transform conditions it (standard practice, and
@@ -382,6 +402,7 @@ pub fn mle_with_session(session: &mut EvalSession, opt: &MleOptions) -> anyhow::
         tol: opt.tol,
         max_iters: opt.max_iters,
         init,
+        stop: Some(cancel.clone()),
     };
     let back = |x: &[f64]| -> Vec<f64> {
         if log_ok {
@@ -402,6 +423,11 @@ pub fn mle_with_session(session: &mut EvalSession, opt: &MleOptions) -> anyhow::
         bounds,
         &opts,
     );
+    if cancel.is_cancelled() {
+        // The search stopped early; whatever iterate it holds is not an
+        // MLE.  Report the cancellation as a typed, downcastable error.
+        return Err(ApiError::Cancelled.into());
+    }
     anyhow::ensure!(
         r.fx.is_finite(),
         "MLE failed: no positive-definite covariance found within bounds"
@@ -545,12 +571,51 @@ mod tests {
     }
 
     #[test]
-    fn wrong_param_count_rejected() {
+    fn wrong_param_count_rejected_with_typed_error() {
         let exa = ExaGeoStat::init(small_hw(32));
         let data = exa
             .simulate_data_exact("ugsm-s", &[1.0, 0.1, 0.5], "euclidean", 30, 3)
             .unwrap();
         let opt = MleOptions::new(vec![0.01; 2], vec![5.0; 2], 1e-4, 10);
-        assert!(exa.exact_mle(&data, "ugsm-s", "euclidean", &opt).is_err());
+        // Legacy Table-II wrappers surface the builder's typed error.
+        let err = exa
+            .exact_mle(&data, "ugsm-s", "euclidean", &opt)
+            .unwrap_err();
+        assert!(
+            matches!(
+                err.downcast_ref::<ApiError>(),
+                Some(ApiError::BoundsArity {
+                    expected: 3,
+                    got_clb: 2,
+                    ..
+                })
+            ),
+            "{err:#}"
+        );
+    }
+
+    #[test]
+    fn builder_fit_matches_legacy_wrapper() {
+        let exa = ExaGeoStat::init(small_hw(32));
+        let data = exa
+            .simulate_data_exact("ugsm-s", &[1.0, 0.1, 0.5], "euclidean", 80, 6)
+            .unwrap();
+        let opt = MleOptions::new(vec![0.01; 3], vec![5.0; 3], 1e-3, 15);
+        let legacy = exa
+            .dst_mle(&data, "ugsm-s", "euclidean", &opt, 1)
+            .unwrap();
+        let model = GeoModel::builder()
+            .data(data)
+            .variant(Variant::Dst { band: 1 })
+            .options(opt)
+            .tile_size(32)
+            .build()
+            .unwrap();
+        let fit = model.fit(&exa).unwrap();
+        assert_eq!(legacy.loglik.to_bits(), fit.loglik.to_bits());
+        assert_eq!(legacy.iters, fit.iters);
+        for (a, b) in legacy.theta.iter().zip(&fit.theta) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 }

@@ -1,0 +1,445 @@
+//! Typed model layer: [`GeoModel`] + [`ModelBuilder`].
+//!
+//! The paper's Table-II surface is a family of positionally-parallel
+//! entry points (`exact_mle` / `dst_mle` / `tlr_mle` / `mp_mle`), each
+//! re-threading `clb`/`cub`/`tol`/`max_iters` plus variant-specific
+//! knobs.  The builder replaces that fan-out with one typed object:
+//!
+//! ```no_run
+//! # use exageostat::api::{ExaGeoStat, GeoModel, Hardware};
+//! # use exageostat::likelihood::Variant;
+//! # fn main() -> anyhow::Result<()> {
+//! let exa = ExaGeoStat::init(Hardware::default());
+//! let data = exa.simulate_data_exact("ugsm-s", &[1.0, 0.1, 0.5], "euclidean", 400, 0)?;
+//! let model = GeoModel::builder()
+//!     .data(data)
+//!     .kernel("ugsm-s")
+//!     .metric("euclidean")
+//!     .variant(Variant::Dst { band: 2 })
+//!     .bounds(vec![0.001; 3], vec![5.0; 3])
+//!     .tol(1e-5)
+//!     .build()?;
+//! let fit = model.fit(&exa)?;
+//! println!("theta_hat = {:?} ({} iters)", fit.theta, fit.iters);
+//! # Ok(()) }
+//! ```
+//!
+//! Everything is validated **once**, in [`ModelBuilder::build`] — bounds
+//! arity against the kernel's parameter count, lower < upper, variant
+//! knobs, and (when the tile size is known) the DST/MP band against the
+//! tile grid — with typed [`ApiError`]s, instead of surfacing deep
+//! inside the optimizer.  The legacy wrappers now route through this
+//! builder, so they inherit the same early, typed validation.
+//!
+//! A built model runs either **synchronously** ([`GeoModel::fit`] on an
+//! [`ExaGeoStat`] instance) or **asynchronously** through the serving
+//! stack (`coordinator::Request::mle_from_model` → `Client::submit` →
+//! `Ticket`); both routes drive the same [`EvalSession`] machinery and
+//! produce bit-identical results (see `rust/tests/api_client.rs`).
+
+use super::error::ApiError;
+use super::{mle_with_session, ExaGeoStat, MleOptions, MleResult};
+use crate::covariance::{kernel_by_name, CovKernel, DistanceMetric, Location};
+use crate::likelihood::{EvalSession, Problem, Variant};
+use crate::optimizer::{Bounds, Method};
+use crate::simulation::GeoData;
+use std::sync::Arc;
+
+/// A fully-validated Gaussian-process model specification: dataset,
+/// kernel, distance metric, likelihood variant and optimization
+/// settings.  Build one with [`GeoModel::builder`].
+///
+/// The dataset is held as `Arc`'d vectors so [`GeoModel::problem`] —
+/// and therefore every `fit` — shares it without copying (the builder
+/// split the `GeoData` it was given exactly once).
+#[derive(Clone)]
+pub struct GeoModel {
+    locs: Arc<Vec<Location>>,
+    z: Arc<Vec<f64>>,
+    kernel: Arc<dyn CovKernel>,
+    kernel_name: String,
+    metric: DistanceMetric,
+    metric_name: String,
+    variant: Variant,
+    opt: MleOptions,
+}
+
+impl GeoModel {
+    /// Start building a model (see the module docs for the flow).
+    pub fn builder() -> ModelBuilder {
+        ModelBuilder::default()
+    }
+
+    /// Observation sites (shared).
+    pub fn locs(&self) -> &Arc<Vec<Location>> {
+        &self.locs
+    }
+
+    /// Observation vector (shared; length `p * n` for p-variate kernels).
+    pub fn z(&self) -> &Arc<Vec<f64>> {
+        &self.z
+    }
+
+    /// Number of observation sites.
+    pub fn n(&self) -> usize {
+        self.locs.len()
+    }
+
+    /// Kernel name as registered with `kernel_by_name`.
+    pub fn kernel_name(&self) -> &str {
+        &self.kernel_name
+    }
+
+    /// Distance-metric name (`"euclidean"` / `"great-circle"` form).
+    pub fn metric_name(&self) -> &str {
+        &self.metric_name
+    }
+
+    /// The likelihood variant (with its configuration).
+    pub fn variant(&self) -> Variant {
+        self.variant
+    }
+
+    /// The validated optimization settings.
+    pub fn options(&self) -> &MleOptions {
+        &self.opt
+    }
+
+    /// The model as a likelihood [`Problem`] (zero-copy: the `Arc`'d
+    /// data vectors are shared).
+    pub fn problem(&self) -> Problem {
+        Problem {
+            kernel: self.kernel.clone(),
+            locs: self.locs.clone(),
+            z: self.z.clone(),
+            metric: self.metric,
+        }
+    }
+
+    /// Re-check the DST/MP band against the tile grid implied by `ts`
+    /// (the one `build` could not fix if no tile size was given).
+    pub fn validate_tile_grid(&self, ts: usize) -> anyhow::Result<()> {
+        let dim = self.kernel.nvariates() * self.locs.len();
+        let ntiles = dim.div_ceil(ts.max(1)).max(1);
+        if let Variant::Dst { band } | Variant::Mp { band } = self.variant {
+            if band >= ntiles {
+                return Err(ApiError::BandTooLarge { band, ntiles }.into());
+            }
+        }
+        Ok(())
+    }
+
+    /// Fit the model by maximum likelihood on `exa`'s persistent
+    /// runtime (the synchronous route; submit through a
+    /// `coordinator::Client` for the asynchronous one).
+    pub fn fit(&self, exa: &ExaGeoStat) -> anyhow::Result<MleResult> {
+        self.validate_tile_grid(exa.hw.ts)?;
+        let ctx = exa.ctx();
+        let mut session = EvalSession::new(&self.problem(), self.variant, &ctx)?;
+        mle_with_session(&mut session, &self.opt)
+    }
+}
+
+impl std::fmt::Debug for GeoModel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("GeoModel")
+            .field("n", &self.locs.len())
+            .field("kernel", &self.kernel_name)
+            .field("metric", &self.metric_name)
+            .field("variant", &self.variant)
+            .field("opt", &self.opt)
+            .finish()
+    }
+}
+
+/// Builder for [`GeoModel`] — every setter is optional except
+/// [`ModelBuilder::data`]; [`ModelBuilder::build`] validates the whole
+/// configuration at once (typed [`ApiError`]s for the machine-matchable
+/// cases).
+#[derive(Clone, Debug, Default)]
+pub struct ModelBuilder {
+    data: Option<GeoData>,
+    kernel: Option<String>,
+    metric: Option<String>,
+    variant: Option<Variant>,
+    clb: Option<Vec<f64>>,
+    cub: Option<Vec<f64>>,
+    tol: Option<f64>,
+    max_iters: Option<usize>,
+    method: Option<Method>,
+    tile_size: Option<usize>,
+}
+
+impl ModelBuilder {
+    /// The dataset to fit (required; taken by value — the builder
+    /// `Arc`s it once at `build`, and no further copy ever happens).
+    pub fn data(mut self, data: GeoData) -> Self {
+        self.data = Some(data);
+        self
+    }
+
+    /// Like [`ModelBuilder::data`] from a shared allocation (unwrapped
+    /// without copying when this is the only reference).
+    pub fn data_arc(mut self, data: Arc<GeoData>) -> Self {
+        self.data = Some(Arc::try_unwrap(data).unwrap_or_else(|a| (*a).clone()));
+        self
+    }
+
+    /// Covariance kernel by registry name (default `"ugsm-s"`).
+    pub fn kernel(mut self, name: &str) -> Self {
+        self.kernel = Some(name.to_string());
+        self
+    }
+
+    /// Distance metric by name (default `"euclidean"`).
+    pub fn metric(mut self, name: &str) -> Self {
+        self.metric = Some(name.to_string());
+        self
+    }
+
+    /// Likelihood variant (default [`Variant::Exact`]).
+    pub fn variant(mut self, v: Variant) -> Self {
+        self.variant = Some(v);
+        self
+    }
+
+    /// Optimization box constraints, one entry per kernel parameter
+    /// (default `0.001..=5.0` per parameter, the serving defaults).
+    pub fn bounds(mut self, clb: Vec<f64>, cub: Vec<f64>) -> Self {
+        self.clb = Some(clb);
+        self.cub = Some(cub);
+        self
+    }
+
+    /// Objective tolerance (default `1e-4`).
+    pub fn tol(mut self, tol: f64) -> Self {
+        self.tol = Some(tol);
+        self
+    }
+
+    /// Max objective evaluations, `0` = run to convergence (default).
+    pub fn max_iters(mut self, max_iters: usize) -> Self {
+        self.max_iters = Some(max_iters);
+        self
+    }
+
+    /// Optimizer choice (default [`Method::Bobyqa`]).
+    pub fn method(mut self, m: Method) -> Self {
+        self.method = Some(m);
+        self
+    }
+
+    /// Adopt a whole legacy `optimization = list(...)` block at once
+    /// (how the Table-II wrappers route through the builder).
+    pub fn options(mut self, opt: MleOptions) -> Self {
+        self.clb = Some(opt.clb);
+        self.cub = Some(opt.cub);
+        self.tol = Some(opt.tol);
+        self.max_iters = Some(opt.max_iters);
+        self.method = Some(opt.method);
+        self
+    }
+
+    /// Tile size the model will execute with.  When set, `build` also
+    /// validates the DST/MP band against the tile grid; when not,
+    /// that check is deferred to [`GeoModel::fit`] / the coordinator,
+    /// which know the hardware configuration.
+    pub fn tile_size(mut self, ts: usize) -> Self {
+        self.tile_size = Some(ts);
+        self
+    }
+
+    /// Validate the configuration and produce the immutable model.
+    pub fn build(self) -> anyhow::Result<GeoModel> {
+        let GeoData { locs, z } = self.data.ok_or(ApiError::BuilderIncomplete("data"))?;
+        let kernel_name = self.kernel.unwrap_or_else(|| "ugsm-s".to_string());
+        let kernel: Arc<dyn CovKernel> = Arc::from(kernel_by_name(&kernel_name)?);
+        let metric_name = self.metric.unwrap_or_else(|| "euclidean".to_string());
+        let metric = DistanceMetric::parse(&metric_name)?;
+        let variant = self.variant.unwrap_or(Variant::Exact);
+
+        let nparams = kernel.nparams();
+        let dim = kernel.nvariates() * locs.len();
+        anyhow::ensure!(
+            z.len() == dim,
+            "z has length {} but kernel/locations imply {}",
+            z.len(),
+            dim
+        );
+
+        let clb = self.clb.unwrap_or_else(|| vec![0.001; nparams]);
+        let cub = self.cub.unwrap_or_else(|| vec![5.0; nparams]);
+        if clb.len() != nparams || cub.len() != nparams {
+            return Err(ApiError::BoundsArity {
+                kernel: kernel_name,
+                expected: nparams,
+                got_clb: clb.len(),
+                got_cub: cub.len(),
+            }
+            .into());
+        }
+        // lower < upper, per coordinate (same rule the optimizer
+        // enforces — just hoisted to construction time).
+        Bounds::new(clb.clone(), cub.clone())?;
+
+        match variant {
+            Variant::Tlr { tol, max_rank } => {
+                anyhow::ensure!(
+                    tol.is_finite() && tol > 0.0,
+                    "TLR tolerance must be finite and positive, got {tol}"
+                );
+                anyhow::ensure!(max_rank >= 1, "TLR max_rank must be >= 1");
+            }
+            Variant::Dst { band } | Variant::Mp { band } => {
+                if let Some(ts) = self.tile_size {
+                    let ntiles = dim.div_ceil(ts.max(1)).max(1);
+                    if band >= ntiles {
+                        return Err(ApiError::BandTooLarge { band, ntiles }.into());
+                    }
+                }
+            }
+            Variant::Exact => {}
+        }
+
+        let opt = MleOptions {
+            clb,
+            cub,
+            tol: self.tol.unwrap_or(1e-4),
+            max_iters: self.max_iters.unwrap_or(0),
+            method: self.method.unwrap_or(Method::Bobyqa),
+        };
+        Ok(GeoModel {
+            locs: Arc::new(locs),
+            z: Arc::new(z),
+            kernel,
+            kernel_name,
+            metric,
+            metric_name,
+            variant,
+            opt,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::covariance::Location;
+    use crate::rng::Pcg64;
+
+    fn toy_data(n: usize, seed: u64) -> GeoData {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        GeoData {
+            locs: (0..n)
+                .map(|_| Location::new(rng.next_f64(), rng.next_f64()))
+                .collect(),
+            z: (0..n).map(|_| rng.normal()).collect(),
+        }
+    }
+
+    #[test]
+    fn builder_defaults_and_overrides() {
+        let m = GeoModel::builder().data(toy_data(20, 0)).build().unwrap();
+        assert_eq!(m.kernel_name(), "ugsm-s");
+        assert_eq!(m.metric_name(), "euclidean");
+        assert_eq!(m.variant(), Variant::Exact);
+        assert_eq!(m.options().clb, vec![0.001; 3]);
+        assert_eq!(m.options().max_iters, 0);
+
+        let m = GeoModel::builder()
+            .data(toy_data(20, 0))
+            .variant(Variant::Tlr {
+                tol: 1e-7,
+                max_rank: 16,
+            })
+            .bounds(vec![0.01; 3], vec![2.0; 3])
+            .tol(1e-6)
+            .max_iters(50)
+            .method(Method::NelderMead)
+            .build()
+            .unwrap();
+        assert_eq!(m.options().cub, vec![2.0; 3]);
+        assert_eq!(m.options().tol, 1e-6);
+        assert_eq!(m.options().max_iters, 50);
+        assert_eq!(m.options().method, Method::NelderMead);
+    }
+
+    #[test]
+    fn builder_rejects_missing_data_and_bad_kernel() {
+        let err = GeoModel::builder().build().unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<ApiError>(),
+            Some(ApiError::BuilderIncomplete("data"))
+        ));
+        assert!(GeoModel::builder()
+            .data(toy_data(10, 1))
+            .kernel("no-such-kernel")
+            .build()
+            .is_err());
+    }
+
+    #[test]
+    fn builder_rejects_bounds_arity_with_typed_error() {
+        let err = GeoModel::builder()
+            .data(toy_data(10, 2))
+            .bounds(vec![0.01; 2], vec![5.0; 3])
+            .build()
+            .unwrap_err();
+        match err.downcast_ref::<ApiError>() {
+            Some(ApiError::BoundsArity {
+                expected, got_clb, ..
+            }) => {
+                assert_eq!(*expected, 3);
+                assert_eq!(*got_clb, 2);
+            }
+            other => panic!("wrong error: {other:?} ({err:#})"),
+        }
+        // inverted bounds rejected too
+        assert!(GeoModel::builder()
+            .data(toy_data(10, 2))
+            .bounds(vec![5.0; 3], vec![0.01; 3])
+            .build()
+            .is_err());
+    }
+
+    #[test]
+    fn builder_rejects_band_covering_the_tile_grid() {
+        // 40 points, ts 16 -> 3x3 tile grid; band 3 covers everything.
+        let err = GeoModel::builder()
+            .data(toy_data(40, 3))
+            .variant(Variant::Dst { band: 3 })
+            .tile_size(16)
+            .build()
+            .unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<ApiError>(),
+            Some(ApiError::BandTooLarge { band: 3, ntiles: 3 })
+        ));
+        // band 2 (= ntiles - 1, the exact-equivalent limit) is fine
+        assert!(GeoModel::builder()
+            .data(toy_data(40, 3))
+            .variant(Variant::Dst { band: 2 })
+            .tile_size(16)
+            .build()
+            .is_ok());
+        // without a tile size the check defers to fit/coordinator
+        let m = GeoModel::builder()
+            .data(toy_data(40, 3))
+            .variant(Variant::Mp { band: 3 })
+            .build()
+            .unwrap();
+        assert!(m.validate_tile_grid(16).is_err());
+        assert!(m.validate_tile_grid(8).is_ok()); // 5x5 grid
+    }
+
+    #[test]
+    fn builder_rejects_bad_tlr_knobs() {
+        for (tol, max_rank) in [(0.0, 8), (f64::NAN, 8), (1e-7, 0)] {
+            assert!(GeoModel::builder()
+                .data(toy_data(10, 4))
+                .variant(Variant::Tlr { tol, max_rank })
+                .build()
+                .is_err());
+        }
+    }
+}

@@ -8,7 +8,7 @@
 //! * [`native::NativeEngine`] — pure Rust (Matérn tiles via
 //!   `covariance::kernels`, dense log-likelihood via `linalg::cholesky`);
 //!   always available, no external dependencies, the default.
-//! * [`pjrt::PjrtBackend`] (cargo feature `pjrt`, off by default) — the
+//! * `pjrt::PjrtBackend` (cargo feature `pjrt`, off by default) — the
 //!   AOT-compiled JAX/Pallas artifacts executed through the PJRT client in
 //!   [`crate::runtime`], falling back to the native kernels for any shape
 //!   or parameter the artifacts don't cover.

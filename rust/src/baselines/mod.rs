@@ -81,6 +81,7 @@ pub fn georlike_mle(
         tol,
         max_iters,
         init: clb.to_vec(),
+        stop: None,
     };
     let r = optimizer::minimize(
         Method::NelderMead,
@@ -117,6 +118,7 @@ pub fn fieldslike_mle(
         tol,
         max_iters,
         init: clb[..2].to_vec(),
+        stop: None,
     };
     let r = optimizer::minimize(
         Method::Bfgs,

@@ -1,0 +1,319 @@
+//! Async job layer: [`Client`] wraps a [`Coordinator`] with
+//! non-blocking `submit(Request) -> Ticket`.
+//!
+//! [`Coordinator::run`] is synchronous — it occupies the caller's
+//! thread for the whole request.  A [`Client`] owns a small pool of
+//! request-runner threads (cheap drivers; the heavy tile work still
+//! runs on the coordinator's shared worker runtime) and hands back a
+//! [`Ticket`] per submission:
+//!
+//! * [`Ticket::wait`] blocks for the outcome ([`Completion`]);
+//! * [`Ticket::try_wait`] polls without blocking;
+//! * [`Ticket::cancel`] fires the request's [`CancelToken`] —
+//!   a still-queued request is skipped entirely, a running one stops
+//!   between optimizer evaluations and its not-yet-started runtime
+//!   tasks are skipped by the workers (see
+//!   `scheduler::runtime::Runtime::submit_job`), and `wait` reports
+//!   [`Completion::Cancelled`].
+//!
+//! Every later scale-out (distributed coordinator, GPU worker class —
+//! see ROADMAP.md) slots in as a new backend behind this same
+//! submit/ticket surface.
+
+use super::{Coordinator, Request, Response};
+use crate::api::is_cancelled;
+use crate::scheduler::runtime::CancelToken;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Final outcome of a submitted request.
+#[derive(Clone, Debug)]
+pub enum Completion {
+    /// The request ran to completion.
+    Done(Response),
+    /// The request was cancelled (before or during execution).
+    Cancelled,
+    /// The request failed; the formatted error chain.
+    Failed(String),
+}
+
+struct TicketState {
+    cancel: CancelToken,
+    slot: Mutex<Option<Completion>>,
+    cv: Condvar,
+}
+
+/// Handle to one in-flight request (see module docs).
+pub struct Ticket {
+    id: u64,
+    state: Arc<TicketState>,
+}
+
+impl Ticket {
+    /// Client-local submission id (ordering of `submit` calls).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Request cancellation (idempotent; losing the race against
+    /// completion is fine — the outcome is whatever landed first).
+    pub fn cancel(&self) {
+        self.state.cancel.cancel();
+    }
+
+    /// Has [`Ticket::cancel`] been called?
+    pub fn is_cancelled(&self) -> bool {
+        self.state.cancel.is_cancelled()
+    }
+
+    /// Non-blocking poll: `Some(outcome)` once the request finished.
+    pub fn try_wait(&self) -> Option<Completion> {
+        self.state.slot.lock().unwrap().clone()
+    }
+
+    /// Block until the request finishes and return its outcome.
+    pub fn wait(&self) -> Completion {
+        let mut slot = self.state.slot.lock().unwrap();
+        while slot.is_none() {
+            slot = self.state.cv.wait(slot).unwrap();
+        }
+        slot.clone().expect("slot filled")
+    }
+}
+
+struct Submission {
+    state: Arc<TicketState>,
+    req: Request,
+}
+
+/// Non-blocking submit/ticket front-end over a shared [`Coordinator`]
+/// (see module docs).
+pub struct Client {
+    coord: Arc<Coordinator>,
+    tx: Option<Sender<Submission>>,
+    runners: Vec<std::thread::JoinHandle<()>>,
+    next_id: AtomicU64,
+}
+
+impl Client {
+    /// Spawn `runners.max(1)` request-runner threads over `coord`.
+    /// The runner count bounds how many requests *drive* concurrently;
+    /// their task graphs all interleave on the coordinator's runtime.
+    pub fn new(coord: Arc<Coordinator>, runners: usize) -> Client {
+        let (tx, rx) = channel::<Submission>();
+        let rx = Arc::new(Mutex::new(rx));
+        let handles = (0..runners.max(1))
+            .map(|i| {
+                let rx = rx.clone();
+                let coord = coord.clone();
+                std::thread::Builder::new()
+                    .name(format!("exa-client-{i}"))
+                    .spawn(move || runner_loop(&coord, &rx))
+                    .expect("spawn client runner")
+            })
+            .collect();
+        Client {
+            coord,
+            tx: Some(tx),
+            runners: handles,
+            next_id: AtomicU64::new(0),
+        }
+    }
+
+    /// The coordinator this client submits to.
+    pub fn coordinator(&self) -> &Arc<Coordinator> {
+        &self.coord
+    }
+
+    /// Enqueue a request and return its ticket immediately.
+    ///
+    /// # Panics
+    /// Panics if called after [`Client::shutdown`].
+    pub fn submit(&self, req: Request) -> Ticket {
+        let state = Arc::new(TicketState {
+            cancel: CancelToken::new(),
+            slot: Mutex::new(None),
+            cv: Condvar::new(),
+        });
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.tx
+            .as_ref()
+            .expect("Client::submit after shutdown")
+            .send(Submission {
+                state: state.clone(),
+                req,
+            })
+            .expect("client runners alive");
+        Ticket { id, state }
+    }
+
+    /// Submit a built [`crate::api::GeoModel`] as an MLE request — the
+    /// asynchronous twin of [`crate::api::GeoModel::fit`].
+    pub fn submit_model(&self, model: &crate::api::GeoModel, priority: u8) -> Ticket {
+        self.submit(Request::mle_from_model(model, priority))
+    }
+
+    /// Drain the queue and join the runner threads.  Does **not** shut
+    /// down the coordinator (other clients may share it); already-issued
+    /// tickets complete first.
+    pub fn shutdown(mut self) {
+        self.close();
+    }
+
+    fn close(&mut self) {
+        self.tx.take(); // runners' recv() errors out once drained
+        for h in self.runners.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Client {
+    fn drop(&mut self) {
+        self.close();
+    }
+}
+
+fn runner_loop(coord: &Coordinator, rx: &Mutex<Receiver<Submission>>) {
+    loop {
+        // Hold the lock only for the recv, not while serving.
+        let sub = match rx.lock().unwrap().recv() {
+            Ok(sub) => sub,
+            Err(_) => break, // channel closed and drained
+        };
+        let Submission { state, req } = sub;
+        let outcome = if state.cancel.is_cancelled() {
+            // Cancelled while queued: never reaches the coordinator.
+            Completion::Cancelled
+        } else {
+            // A panicking request (e.g. a task panic re-raised by
+            // JobHandle::wait) must not kill the runner: the ticket's
+            // slot would never fill and its waiter would hang forever.
+            // AssertUnwindSafe: the request is consumed either way and a
+            // failed outcome is never retried on shared state.
+            let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                coord.run_with_cancel(req, &state.cancel)
+            }));
+            match run {
+                Ok(Ok(resp)) => Completion::Done(resp),
+                Ok(Err(e)) if is_cancelled(&e) => Completion::Cancelled,
+                Ok(Err(e)) => Completion::Failed(format!("{e:#}")),
+                Err(p) => Completion::Failed(format!(
+                    "request panicked: {}",
+                    crate::scheduler::runtime::panic_message(p.as_ref())
+                )),
+            }
+        };
+        let mut slot = state.slot.lock().unwrap();
+        *slot = Some(outcome);
+        state.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::{Hardware, MleOptions};
+    use crate::coordinator::{DataSpec, Outcome, RequestKind};
+    use crate::likelihood::Variant;
+    use crate::scheduler::pool::Policy;
+
+    fn hw(ncores: usize, ts: usize) -> Hardware {
+        Hardware {
+            ncores,
+            ts,
+            policy: Policy::Prio,
+            ..Hardware::default()
+        }
+    }
+
+    fn sim_req(n: usize, seed: u64) -> Request {
+        Request {
+            data: DataSpec {
+                n,
+                seed,
+                ..DataSpec::default()
+            }
+            .into(),
+            kind: RequestKind::Simulate,
+            priority: 0,
+        }
+    }
+
+    #[test]
+    fn tickets_resolve_out_of_submission_order() {
+        let coord = Arc::new(Coordinator::new(hw(2, 32)));
+        let client = Client::new(coord.clone(), 3);
+        let tickets: Vec<Ticket> = (0..6).map(|i| client.submit(sim_req(60, i))).collect();
+        for (i, t) in tickets.iter().enumerate() {
+            assert_eq!(t.id(), i as u64);
+            match t.wait() {
+                Completion::Done(r) => {
+                    assert!(matches!(r.outcome, Outcome::Simulated { n: 60 }))
+                }
+                other => panic!("ticket {i}: {other:?}"),
+            }
+            // wait() is idempotent; try_wait agrees afterwards
+            assert!(t.try_wait().is_some());
+        }
+        client.shutdown();
+        coord.shutdown();
+    }
+
+    #[test]
+    fn failed_requests_report_through_tickets() {
+        let coord = Arc::new(Coordinator::new(hw(1, 16)));
+        let client = Client::new(coord.clone(), 1);
+        let mut bad = sim_req(30, 0);
+        if let crate::coordinator::DataSource::Spec(spec) = &mut bad.data {
+            spec.kernel = "no-such-kernel".into();
+        }
+        let t = client.submit(bad);
+        match t.wait() {
+            Completion::Failed(msg) => assert!(msg.contains("no-such-kernel"), "{msg}"),
+            other => panic!("{other:?}"),
+        }
+        // the client keeps serving after a failure
+        let ok = client.submit(sim_req(30, 1));
+        assert!(matches!(ok.wait(), Completion::Done(_)));
+        client.shutdown();
+        coord.shutdown();
+    }
+
+    #[test]
+    fn cancel_while_queued_skips_the_request_entirely() {
+        let coord = Arc::new(Coordinator::new(hw(1, 32)));
+        // One runner: the MLE occupies it while we cancel the queued one.
+        let client = Client::new(coord.clone(), 1);
+        // Heavy enough that the runner is still on it long after the
+        // victim below is cancelled, even on a loaded machine.
+        let mle = Request {
+            data: DataSpec {
+                n: 200,
+                seed: 3,
+                ..DataSpec::default()
+            }
+            .into(),
+            kind: RequestKind::Mle {
+                variant: Variant::Exact,
+                opt: MleOptions::new(vec![0.01; 3], vec![5.0; 3], 1e-5, 40),
+            },
+            priority: 0,
+        };
+        let busy = client.submit(mle);
+        let victim = client.submit(sim_req(500, 9));
+        victim.cancel();
+        assert!(victim.is_cancelled());
+        assert!(matches!(victim.wait(), Completion::Cancelled));
+        assert!(matches!(busy.wait(), Completion::Done(_)));
+        // the victim never simulated: its dataset is not in the cache
+        let again = client.submit(sim_req(500, 9));
+        match again.wait() {
+            Completion::Done(r) => assert!(!r.data_cache_hit, "victim must not have run"),
+            other => panic!("{other:?}"),
+        }
+        client.shutdown();
+        coord.shutdown();
+    }
+}

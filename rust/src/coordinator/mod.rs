@@ -13,9 +13,9 @@
 //!
 //! Two caches keep repeated requests cheap:
 //!
-//! * **dataset cache** — simulated `GeoData` keyed by its generation
-//!   spec, so an MLE + predict pair over the same `(n, seed, kernel,
-//!   theta)` shares one simulation;
+//! * **dataset cache** — datasets keyed by their generation spec (or by
+//!   content hash for caller-provided inline data), so an MLE + predict
+//!   pair over the same dataset shares one simulation;
 //! * **session cache** — warm [`EvalSession`]s keyed by (dataset,
 //!   variant, tile size): a repeated MLE request skips the Morton /
 //!   distance-cache / workspace setup and starts on warm iterations.
@@ -23,74 +23,123 @@
 //!   session (they would race its workspaces otherwise); distinct
 //!   requests run fully concurrently.
 //!
-//! Both caches are FIFO-bounded ([`MAX_CACHED_DATASETS`] /
-//! [`MAX_CACHED_SESSIONS`]) so a long-running serve process cannot
-//! grow without bound — each session pins O(n^2) workspace.  Evicted
-//! entries stay alive for requests already holding their `Arc`.
+//! Both caches are **LRU, bounded by memory footprint** (doubles
+//! pinned: `3n + len(z)` per dataset, [`EvalSession::dist_storage_len`]
+//! per session), so a long-running serve process cannot grow without
+//! bound.
+//! Evicted entries stay alive for requests already holding their `Arc`;
+//! hit/miss/eviction counts are reported in [`CoordinatorStats`].
 //!
-//! The `exageostat serve --requests file.jsonl` subcommand drives this
-//! layer from the command line (one JSON object per line — see
-//! [`parse_request`]), and `rust/benches/serving_throughput.rs` measures
-//! it against sequential per-job pools.
+//! On top of [`Coordinator::run`] (synchronous, caller's thread) sit
+//! the async job layer — [`Client`] / [`Ticket`] with cancellation —
+//! and the streaming admission loop [`serve_stream`]; the
+//! `exageostat serve` subcommand drives the whole stack from a JSONL
+//! file, stdin or a unix socket (one JSON object per line — see
+//! [`parse_request`]), and `rust/benches/serving_throughput.rs`
+//! measures it against sequential per-job pools.
 
-use crate::api::{mle_with_session, Hardware, MleOptions, MleResult};
+pub mod client;
+pub mod serve;
+
+pub use client::{Client, Completion, Ticket};
+pub use serve::{serve_stream, ServeOptions, ServeSummary};
+
+use crate::api::{is_cancelled, mle_with_session, ApiError, Hardware, MleOptions, MleResult};
 use crate::backend::{self, ArcEngine};
 use crate::covariance::{kernel_by_name, CovKernel, DistanceMetric, Location};
 use crate::likelihood::{EvalSession, ExecCtx, Problem, Variant};
 use crate::optimizer::Method;
-use crate::prediction;
-use crate::scheduler::runtime::Runtime;
-use crate::simulation::{self, GeoData};
+use crate::prediction::{self, Prediction};
+use crate::scheduler::runtime::{CancelToken, Runtime};
+use crate::simulation;
 use anyhow::Context as _;
-use std::collections::{HashMap, VecDeque};
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-/// Cache capacity bounds (FIFO eviction; an evicted entry stays alive
-/// for any request already holding its `Arc`).  A proper
-/// memory-footprint LRU is a ROADMAP open item.
-const MAX_CACHED_DATASETS: usize = 32;
-const MAX_CACHED_SESSIONS: usize = 8;
+/// Default cache budgets, in doubles pinned (×8 for bytes): 32 MB of
+/// datasets, 256 MB of session distance caches.  Override with
+/// [`Coordinator::with_cache_budgets`].
+const DATA_CACHE_BUDGET: usize = 4 << 20;
+const SESSION_CACHE_BUDGET: usize = 32 << 20;
 
-/// A FIFO-bounded keyed cache: the minimal eviction policy that keeps
-/// a long-running serve process from growing without bound (each
-/// session entry pins O(n^2) workspace).
-struct BoundedCache<V> {
-    map: HashMap<String, V>,
-    order: VecDeque<String>,
-    cap: usize,
+/// One cached value with its footprint and recency stamp.
+struct LruEntry<V> {
+    value: V,
+    cost: usize,
+    last_used: u64,
 }
 
-impl<V: Clone> BoundedCache<V> {
-    fn new(cap: usize) -> Self {
-        BoundedCache {
+/// A keyed LRU cache bounded by total *cost* (memory footprint in
+/// doubles), not entry count: one n=10k session weighs as much as a
+/// hundred n=1k ones, which is what actually matters for a long-running
+/// serve process.  `get` and re-`insert` both refresh recency.
+///
+/// Recency is a monotone stamp per entry, so `get` is O(1) — these
+/// calls run under the coordinator's cache mutex on every request, so
+/// they must not scan.  Eviction scans for the minimum stamp, which is
+/// O(entries) but only runs when an insert exceeds the budget.
+struct LruCache<V> {
+    map: HashMap<String, LruEntry<V>>,
+    budget: usize,
+    used: usize,
+    tick: u64,
+    evictions: u64,
+}
+
+impl<V: Clone> LruCache<V> {
+    fn new(budget: usize) -> Self {
+        LruCache {
             map: HashMap::new(),
-            order: VecDeque::new(),
-            cap,
+            budget,
+            used: 0,
+            tick: 0,
+            evictions: 0,
         }
     }
 
-    fn get(&self, key: &str) -> Option<V> {
-        self.map.get(key).cloned()
+    fn get(&mut self, key: &str) -> Option<V> {
+        self.tick += 1;
+        let now = self.tick;
+        self.map.get_mut(key).map(|e| {
+            e.last_used = now;
+            e.value.clone()
+        })
     }
 
     /// Insert unless the key raced in already; returns the cached value
-    /// (the winner's, so concurrent requests share one `Arc`).
-    fn insert(&mut self, key: String, value: V) -> V {
-        if let Some(existing) = self.map.get(&key) {
-            return existing.clone();
+    /// (the winner's, so concurrent requests share one `Arc`).  Evicts
+    /// least-recently-used entries until `cost` fits the budget; an
+    /// entry larger than the whole budget still caches (alone) rather
+    /// than thrash on every request.
+    fn insert(&mut self, key: String, value: V, cost: usize) -> V {
+        self.tick += 1;
+        let now = self.tick;
+        if let Some(e) = self.map.get_mut(&key) {
+            e.last_used = now;
+            return e.value.clone();
         }
-        while self.map.len() >= self.cap {
-            match self.order.pop_front() {
-                Some(old) => {
-                    self.map.remove(&old);
-                }
-                None => break,
-            }
+        while self.used + cost > self.budget && !self.map.is_empty() {
+            let victim = self
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone())
+                .expect("non-empty map");
+            let e = self.map.remove(&victim).expect("victim present");
+            self.used -= e.cost;
+            self.evictions += 1;
         }
-        self.map.insert(key.clone(), value.clone());
-        self.order.push_back(key);
+        self.used += cost;
+        self.map.insert(
+            key,
+            LruEntry {
+                value: value.clone(),
+                cost,
+                last_used: now,
+            },
+        );
         value
     }
 }
@@ -129,6 +178,85 @@ impl DataSpec {
     }
 }
 
+/// The coordinator's shared dataset form: `Arc`'d site and observation
+/// vectors, so cache entries, sessions and kriging all share one
+/// allocation.
+pub type DataArc = (Arc<Vec<Location>>, Arc<Vec<f64>>);
+
+/// FNV-1a over the raw f64 bits — the content hash keying inline
+/// datasets, so two requests built from equal data share cache entries.
+fn content_hash(locs: &[Location], z: &[f64]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    let mut eat = |v: f64| {
+        for b in v.to_bits().to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    };
+    for l in locs {
+        eat(l.x);
+        eat(l.y);
+        eat(l.t);
+    }
+    for &v in z {
+        eat(v);
+    }
+    h
+}
+
+/// Where a request's dataset comes from.
+#[derive(Clone, Debug)]
+pub enum DataSource {
+    /// Simulate from a [`DataSpec`] (the JSONL serving workload).
+    Spec(DataSpec),
+    /// Caller-provided data (the `GeoModel` / [`Client`] route), cached
+    /// under a content-hash key.  The vectors are shared with the
+    /// `GeoModel` that built the request — no copy on submit.
+    Inline {
+        /// Cache key (content hash — see [`Request::mle_from_model`]).
+        key: String,
+        /// Observation sites, shared with the caller.
+        locs: Arc<Vec<Location>>,
+        /// Observation vector, shared with the caller.
+        z: Arc<Vec<f64>>,
+        /// Kernel registry name for sessions over this data.
+        kernel: String,
+        /// Distance-metric name for sessions over this data.
+        dmetric: String,
+    },
+}
+
+impl DataSource {
+    /// Kernel registry name.
+    pub fn kernel(&self) -> &str {
+        match self {
+            DataSource::Spec(s) => &s.kernel,
+            DataSource::Inline { kernel, .. } => kernel,
+        }
+    }
+
+    /// Distance-metric name.
+    pub fn dmetric(&self) -> &str {
+        match self {
+            DataSource::Spec(s) => &s.dmetric,
+            DataSource::Inline { dmetric, .. } => dmetric,
+        }
+    }
+
+    fn key(&self) -> String {
+        match self {
+            DataSource::Spec(s) => s.key(),
+            DataSource::Inline { key, .. } => key.clone(),
+        }
+    }
+}
+
+impl From<DataSpec> for DataSource {
+    fn from(spec: DataSpec) -> DataSource {
+        DataSource::Spec(spec)
+    }
+}
+
 /// What to do with the dataset.
 #[derive(Clone, Debug)]
 pub enum RequestKind {
@@ -137,17 +265,83 @@ pub enum RequestKind {
     /// Fit the variant's MLE on the dataset.
     Mle { variant: Variant, opt: MleOptions },
     /// Krige a `grid x grid` lattice over the unit square from the
-    /// dataset at its generating `theta`.
+    /// dataset at its generating `theta` (spec-backed datasets only).
     Predict { grid: usize },
+    /// Krige explicit target locations at an explicit `theta` (the
+    /// typed `exact_predict` route; works for inline data too).
+    PredictAt {
+        /// Target locations to predict at.
+        new_locs: Vec<Location>,
+        /// Covariance parameters to krige under.
+        theta: Vec<f64>,
+        /// Also compute per-point kriging variance?
+        with_variance: bool,
+    },
 }
 
 /// One client request.
 #[derive(Clone, Debug)]
 pub struct Request {
-    pub data: DataSpec,
+    pub data: DataSource,
     pub kind: RequestKind,
     /// Job-priority tie-break under the `prio` policy (higher = sooner).
     pub priority: u8,
+}
+
+impl Request {
+    /// An MLE request over a built [`crate::api::GeoModel`]: the
+    /// asynchronous twin of [`crate::api::GeoModel::fit`], carrying the
+    /// model's data inline (content-hash cached).
+    pub fn mle_from_model(model: &crate::api::GeoModel, priority: u8) -> Request {
+        Request {
+            data: Request::inline_source(model),
+            kind: RequestKind::Mle {
+                variant: model.variant(),
+                opt: model.options().clone(),
+            },
+            priority,
+        }
+    }
+
+    /// A kriging request over a model's dataset at explicit targets and
+    /// `theta` (the asynchronous `exact_predict`).
+    pub fn predict_at(
+        model: &crate::api::GeoModel,
+        new_locs: Vec<Location>,
+        theta: Vec<f64>,
+        with_variance: bool,
+        priority: u8,
+    ) -> Request {
+        Request {
+            data: Request::inline_source(model),
+            kind: RequestKind::PredictAt {
+                new_locs,
+                theta,
+                with_variance,
+            },
+            priority,
+        }
+    }
+
+    fn inline_source(model: &crate::api::GeoModel) -> DataSource {
+        // Kernel and metric are part of the key: the session cache key
+        // derives from this one, and a session's distance cache is
+        // resolved for one (kernel, metric) pair — two models over the
+        // same data but different metrics must never share a session.
+        DataSource::Inline {
+            key: format!(
+                "inline|{}|{}|{}|{:016x}",
+                model.kernel_name(),
+                model.metric_name(),
+                model.n(),
+                content_hash(model.locs(), model.z())
+            ),
+            locs: model.locs().clone(),
+            z: model.z().clone(),
+            kernel: model.kernel_name().to_string(),
+            dmetric: model.metric_name().to_string(),
+        }
+    }
 }
 
 /// Request outcome payload.
@@ -156,6 +350,8 @@ pub enum Outcome {
     Simulated { n: usize },
     Mle(MleResult),
     Predicted { npoints: usize, mean_abs: f64 },
+    /// Full kriging output (the [`RequestKind::PredictAt`] result).
+    Prediction(Prediction),
 }
 
 /// Per-request result + stats.
@@ -176,8 +372,14 @@ pub struct Response {
 pub struct CoordinatorStats {
     pub requests: u64,
     pub errors: u64,
+    /// Requests that ended in cancellation (not counted as errors).
+    pub cancelled: u64,
     pub data_cache_hits: u64,
+    pub data_cache_misses: u64,
+    pub data_cache_evictions: u64,
     pub session_cache_hits: u64,
+    pub session_cache_misses: u64,
+    pub session_cache_evictions: u64,
     /// Tasks executed by the shared runtime (all jobs, all requests).
     pub tasks_executed: u64,
     pub worker_threads: usize,
@@ -188,31 +390,48 @@ pub struct Coordinator {
     hw: Hardware,
     engine: ArcEngine,
     runtime: Arc<Runtime>,
-    data_cache: Mutex<BoundedCache<Arc<GeoData>>>,
-    sessions: Mutex<BoundedCache<Arc<Mutex<EvalSession>>>>,
+    data_cache: Mutex<LruCache<DataArc>>,
+    sessions: Mutex<LruCache<Arc<Mutex<EvalSession>>>>,
     next_id: AtomicU64,
     requests: AtomicU64,
     errors: AtomicU64,
+    cancelled: AtomicU64,
     data_hits: AtomicU64,
+    data_misses: AtomicU64,
     session_hits: AtomicU64,
+    session_misses: AtomicU64,
 }
 
 impl Coordinator {
-    /// Spawn the shared runtime (`hw.ncores` workers, `hw.policy`) and an
-    /// empty cache.
+    /// Spawn the shared runtime (`hw.ncores` workers, `hw.policy`) and
+    /// empty caches at the default memory budgets.
     pub fn new(hw: Hardware) -> Coordinator {
+        Coordinator::with_cache_budgets(hw, DATA_CACHE_BUDGET, SESSION_CACHE_BUDGET)
+    }
+
+    /// [`Coordinator::new`] with explicit cache budgets, in doubles
+    /// pinned (a dataset costs `3n + len(z)`, a session costs its
+    /// [`EvalSession::dist_storage_len`]).
+    pub fn with_cache_budgets(
+        hw: Hardware,
+        data_budget: usize,
+        session_budget: usize,
+    ) -> Coordinator {
         let runtime = Arc::new(Runtime::new(hw.ncores.max(1), hw.policy));
         Coordinator {
             hw,
             engine: backend::default_engine(),
             runtime,
-            data_cache: Mutex::new(BoundedCache::new(MAX_CACHED_DATASETS)),
-            sessions: Mutex::new(BoundedCache::new(MAX_CACHED_SESSIONS)),
+            data_cache: Mutex::new(LruCache::new(data_budget)),
+            sessions: Mutex::new(LruCache::new(session_budget)),
             next_id: AtomicU64::new(0),
             requests: AtomicU64::new(0),
             errors: AtomicU64::new(0),
+            cancelled: AtomicU64::new(0),
             data_hits: AtomicU64::new(0),
+            data_misses: AtomicU64::new(0),
             session_hits: AtomicU64::new(0),
+            session_misses: AtomicU64::new(0),
         }
     }
 
@@ -229,22 +448,38 @@ impl Coordinator {
         ctx
     }
 
-    /// Fetch (or simulate-and-cache) the dataset of `spec`.  Returns the
-    /// data and whether it was a cache hit.
-    fn dataset(&self, spec: &DataSpec, ctx: &ExecCtx) -> anyhow::Result<(Arc<GeoData>, bool)> {
-        let key = spec.key();
+    /// Fetch (or produce-and-cache) the dataset of `src`.  Returns the
+    /// shared data vectors and whether it was a cache hit.
+    fn dataset(&self, src: &DataSource, ctx: &ExecCtx) -> anyhow::Result<(DataArc, bool)> {
+        let key = src.key();
         if let Some(d) = self.data_cache.lock().unwrap().get(&key) {
             self.data_hits.fetch_add(1, Ordering::Relaxed);
             return Ok((d, true));
         }
+        self.data_misses.fetch_add(1, Ordering::Relaxed);
         // Simulate outside the lock (it is the expensive part); if two
         // requests race, the first insert wins and both share it.
-        let kernel: Arc<dyn CovKernel> = Arc::from(kernel_by_name(&spec.kernel)?);
-        let metric = DistanceMetric::parse(&spec.dmetric)?;
-        let data = Arc::new(simulation::simulate_data_exact(
-            kernel, &spec.theta, spec.n, metric, spec.seed, ctx,
-        )?);
-        let entry = self.data_cache.lock().unwrap().insert(key, data);
+        let data: DataArc = match src {
+            DataSource::Spec(spec) => {
+                let kernel: Arc<dyn CovKernel> = Arc::from(kernel_by_name(&spec.kernel)?);
+                let metric = DistanceMetric::parse(&spec.dmetric)?;
+                let sim = simulation::simulate_data_exact(
+                    kernel, &spec.theta, spec.n, metric, spec.seed, ctx,
+                )?;
+                // A token fired mid-simulation skipped tasks: the buffer
+                // is garbage and must not be cached.
+                if ctx.cancel.is_cancelled() {
+                    return Err(ApiError::Cancelled.into());
+                }
+                (Arc::new(sim.locs), Arc::new(sim.z))
+            }
+            DataSource::Inline { locs, z, .. } => (locs.clone(), z.clone()),
+        };
+        // Pinned footprint in doubles: x, y, t per site plus the
+        // observation vector (which is longer than n for multivariate
+        // kernels).
+        let cost = (3 * data.0.len() + data.1.len()).max(1);
+        let entry = self.data_cache.lock().unwrap().insert(key, data, cost);
         Ok((entry, false))
     }
 
@@ -252,38 +487,72 @@ impl Coordinator {
     /// request.
     fn session_for(
         &self,
-        spec: &DataSpec,
+        src: &DataSource,
         variant: Variant,
-        data: &Arc<GeoData>,
+        data: &DataArc,
         ctx: &ExecCtx,
     ) -> anyhow::Result<(Arc<Mutex<EvalSession>>, bool)> {
-        let key = format!("{}|{:?}|ts{}", spec.key(), variant, self.hw.ts);
+        let key = format!("{}|{:?}|ts{}", src.key(), variant, self.hw.ts);
         if let Some(s) = self.sessions.lock().unwrap().get(&key) {
             self.session_hits.fetch_add(1, Ordering::Relaxed);
             return Ok((s, true));
         }
-        let kernel: Arc<dyn CovKernel> = Arc::from(kernel_by_name(&spec.kernel)?);
-        let metric = DistanceMetric::parse(&spec.dmetric)?;
+        self.session_misses.fetch_add(1, Ordering::Relaxed);
+        let kernel: Arc<dyn CovKernel> = Arc::from(kernel_by_name(src.kernel())?);
+        let metric = DistanceMetric::parse(src.dmetric())?;
         let problem = Problem {
             kernel,
-            locs: Arc::new(data.locs.clone()),
-            z: Arc::new(data.z.clone()),
+            locs: data.0.clone(),
+            z: data.1.clone(),
             metric,
         };
-        let session = Arc::new(Mutex::new(EvalSession::new(&problem, variant, ctx)?));
-        let entry = self.sessions.lock().unwrap().insert(key, session);
+        let session = EvalSession::new(&problem, variant, ctx)?;
+        // Memory-footprint cost: the distance cache dominates a warm
+        // session's pinned memory (ROADMAP "cache eviction" item).
+        let cost = session.dist_storage_len().max(1);
+        let session = Arc::new(Mutex::new(session));
+        let entry = self.sessions.lock().unwrap().insert(key, session, cost);
         Ok((entry, false))
     }
 
     /// Serve one request.  Safe to call from many threads concurrently;
     /// each request's task graphs interleave on the shared workers.
     pub fn run(&self, req: Request) -> anyhow::Result<Response> {
+        self.run_with_cancel(req, &CancelToken::new())
+    }
+
+    /// [`Coordinator::run`] bound to a cancellation token (what
+    /// [`Client`] tickets use).  When the token fires, not-yet-started
+    /// runtime tasks of this request are skipped, the optimizer stops
+    /// between evaluations, and the request reports
+    /// [`ApiError::Cancelled`] (counted in `stats().cancelled`, not as
+    /// an error).
+    pub fn run_with_cancel(&self, req: Request, cancel: &CancelToken) -> anyhow::Result<Response> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         self.requests.fetch_add(1, Ordering::Relaxed);
         let t0 = Instant::now();
-        let r = self.dispatch(&req);
-        if r.is_err() {
-            self.errors.fetch_add(1, Ordering::Relaxed);
+        let r = if cancel.is_cancelled() {
+            // Cancelled while queued: skip the work entirely.
+            Err(ApiError::Cancelled.into())
+        } else {
+            match self.dispatch(&req, cancel) {
+                // A token that fired mid-request may have skipped tasks
+                // of in-flight graphs: an Ok result is built on garbage
+                // and an Err (e.g. "not positive definite" from a
+                // half-generated matrix) is a symptom, not the story —
+                // both report as the cancellation they are.
+                _ if cancel.is_cancelled() => Err(ApiError::Cancelled.into()),
+                other => other,
+            }
+        };
+        match &r {
+            Err(e) if is_cancelled(e) => {
+                self.cancelled.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(_) => {
+                self.errors.fetch_add(1, Ordering::Relaxed);
+            }
+            Ok(_) => {}
         }
         let (kind, data_cache_hit, session_cache_hit, outcome) = r?;
         Ok(Response {
@@ -296,24 +565,36 @@ impl Coordinator {
         })
     }
 
-    fn dispatch(&self, req: &Request) -> anyhow::Result<(&'static str, bool, bool, Outcome)> {
-        let ctx = self.ctx_with_priority(req.priority);
+    fn dispatch(
+        &self,
+        req: &Request,
+        cancel: &CancelToken,
+    ) -> anyhow::Result<(&'static str, bool, bool, Outcome)> {
+        let mut ctx = self.ctx_with_priority(req.priority);
+        ctx.cancel = cancel.clone();
         match &req.kind {
             RequestKind::Simulate => {
                 let (d, hit) = self.dataset(&req.data, &ctx)?;
-                Ok(("simulate", hit, false, Outcome::Simulated { n: d.n() }))
+                Ok(("simulate", hit, false, Outcome::Simulated { n: d.0.len() }))
             }
             RequestKind::Mle { variant, opt } => {
                 let (d, hit) = self.dataset(&req.data, &ctx)?;
                 let (session, shit) = self.session_for(&req.data, *variant, &d, &ctx)?;
                 let mut s = session.lock().unwrap();
-                // A cached session captured the priority of the request
-                // that built it; this request's priority wins.
+                // A cached session captured the priority and token of
+                // the request that built it; this request's win.
                 s.set_job_prio(req.priority);
+                s.set_cancel(cancel.clone());
                 let r = mle_with_session(&mut s, opt)?;
                 Ok(("mle", hit, shit, Outcome::Mle(r)))
             }
             RequestKind::Predict { grid } => {
+                let DataSource::Spec(spec) = &req.data else {
+                    anyhow::bail!(
+                        "grid predict needs a simulated dataset spec (its generating theta); \
+                         use PredictAt for inline data"
+                    );
+                };
                 let (d, hit) = self.dataset(&req.data, &ctx)?;
                 let g = (*grid).max(1);
                 let new_locs: Vec<Location> = (0..g * g)
@@ -324,13 +605,13 @@ impl Coordinator {
                         )
                     })
                     .collect();
-                let kernel: Arc<dyn CovKernel> = Arc::from(kernel_by_name(&req.data.kernel)?);
-                let metric = DistanceMetric::parse(&req.data.dmetric)?;
+                let kernel: Arc<dyn CovKernel> = Arc::from(kernel_by_name(&spec.kernel)?);
+                let metric = DistanceMetric::parse(&spec.dmetric)?;
                 let p = prediction::exact_predict_ctx(
                     kernel,
-                    &req.data.theta,
-                    &d.locs,
-                    &d.z,
+                    &spec.theta,
+                    &d.0,
+                    &d.1,
                     &new_locs,
                     metric,
                     true,
@@ -348,16 +629,45 @@ impl Coordinator {
                     },
                 ))
             }
+            RequestKind::PredictAt {
+                new_locs,
+                theta,
+                with_variance,
+            } => {
+                let (d, hit) = self.dataset(&req.data, &ctx)?;
+                let kernel: Arc<dyn CovKernel> = Arc::from(kernel_by_name(req.data.kernel())?);
+                let metric = DistanceMetric::parse(req.data.dmetric())?;
+                let p = prediction::exact_predict_ctx(
+                    kernel,
+                    theta,
+                    &d.0,
+                    &d.1,
+                    new_locs,
+                    metric,
+                    *with_variance,
+                    &ctx,
+                )?;
+                Ok(("predict_at", hit, false, Outcome::Prediction(p)))
+            }
         }
     }
 
     /// Aggregate serving stats so far.
     pub fn stats(&self) -> CoordinatorStats {
+        let (data_ev, session_ev) = (
+            self.data_cache.lock().unwrap().evictions,
+            self.sessions.lock().unwrap().evictions,
+        );
         CoordinatorStats {
             requests: self.requests.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
+            cancelled: self.cancelled.load(Ordering::Relaxed),
             data_cache_hits: self.data_hits.load(Ordering::Relaxed),
+            data_cache_misses: self.data_misses.load(Ordering::Relaxed),
+            data_cache_evictions: data_ev,
             session_cache_hits: self.session_hits.load(Ordering::Relaxed),
+            session_cache_misses: self.session_misses.load(Ordering::Relaxed),
+            session_cache_evictions: session_ev,
             tasks_executed: self.runtime.tasks_executed(),
             worker_threads: self.runtime.nworkers(),
         }
@@ -678,7 +988,7 @@ pub fn parse_request(line: &str) -> anyhow::Result<Request> {
         other => anyhow::bail!("unknown request type {other:?} (mle|predict|simulate)"),
     };
     Ok(Request {
-        data,
+        data: data.into(),
         kind,
         priority,
     })
@@ -731,8 +1041,11 @@ mod tests {
     #[test]
     fn request_lines_parse_with_defaults() {
         let r = parse_request(r#"{"type":"mle","n":100,"variant":"dst","band":2}"#).unwrap();
-        assert_eq!(r.data.n, 100);
-        assert_eq!(r.data.kernel, "ugsm-s");
+        let DataSource::Spec(spec) = &r.data else {
+            panic!("jsonl requests are spec-backed");
+        };
+        assert_eq!(spec.n, 100);
+        assert_eq!(spec.kernel, "ugsm-s");
         match r.kind {
             RequestKind::Mle { variant, ref opt } => {
                 assert_eq!(variant, Variant::Dst { band: 2 });
@@ -764,7 +1077,7 @@ mod tests {
             ..DataSpec::default()
         };
         let sim = Request {
-            data: data.clone(),
+            data: data.clone().into(),
             kind: RequestKind::Simulate,
             priority: 0,
         };
@@ -774,7 +1087,7 @@ mod tests {
         assert!(r1.data_cache_hit);
 
         let mle = Request {
-            data: data.clone(),
+            data: data.clone().into(),
             kind: RequestKind::Mle {
                 variant: Variant::Exact,
                 opt: MleOptions::new(vec![0.01; 3], vec![5.0; 3], 1e-3, 8),
@@ -801,18 +1114,57 @@ mod tests {
     }
 
     #[test]
-    fn bounded_cache_evicts_fifo_and_dedups_racers() {
-        let mut c: BoundedCache<Arc<usize>> = BoundedCache::new(2);
-        let a = c.insert("a".into(), Arc::new(1));
+    fn lru_cache_evicts_by_cost_and_recency() {
+        // budget 10: "a"(4) + "b"(4) fit; "c"(4) must evict the LRU.
+        let mut c: LruCache<Arc<usize>> = LruCache::new(10);
+        let a = c.insert("a".into(), Arc::new(1), 4);
         assert_eq!(*a, 1);
         // racing insert under the same key keeps the winner
-        let a2 = c.insert("a".into(), Arc::new(99));
+        let a2 = c.insert("a".into(), Arc::new(99), 4);
         assert_eq!(*a2, 1);
-        c.insert("b".into(), Arc::new(2));
-        c.insert("c".into(), Arc::new(3)); // evicts "a" (oldest)
-        assert!(c.get("a").is_none());
-        assert!(c.get("b").is_some() && c.get("c").is_some());
-        assert!(c.map.len() <= 2);
+        c.insert("b".into(), Arc::new(2), 4);
+        // touch "a" so "b" becomes least-recently used
+        assert!(c.get("a").is_some());
+        c.insert("c".into(), Arc::new(3), 4); // evicts "b", not "a"
+        assert!(c.get("b").is_none());
+        assert!(c.get("a").is_some() && c.get("c").is_some());
+        assert_eq!(c.evictions, 1);
+        assert!(c.used <= 10);
+
+        // an entry bigger than the whole budget still caches, alone
+        c.insert("huge".into(), Arc::new(7), 100);
+        assert!(c.get("huge").is_some());
+        assert!(c.get("a").is_none() && c.get("c").is_none());
+        assert_eq!(c.map.len(), 1);
+        assert_eq!(c.evictions, 3);
+    }
+
+    #[test]
+    fn coordinator_session_cache_evicts_by_footprint() {
+        // Session budget far below one session's distance cache: every
+        // MLE misses and the previous session is evicted.
+        let coord = Coordinator::with_cache_budgets(hw(1, 16), DATA_CACHE_BUDGET, 1);
+        let mle = |seed: u64| Request {
+            data: DataSpec {
+                n: 40,
+                seed,
+                ..DataSpec::default()
+            }
+            .into(),
+            kind: RequestKind::Mle {
+                variant: Variant::Exact,
+                opt: MleOptions::new(vec![0.01; 3], vec![5.0; 3], 1e-2, 4),
+            },
+            priority: 0,
+        };
+        coord.run(mle(1)).unwrap();
+        coord.run(mle(2)).unwrap();
+        coord.run(mle(1)).unwrap(); // would hit under an unbounded cache
+        let st = coord.stats();
+        assert_eq!(st.session_cache_hits, 0);
+        assert_eq!(st.session_cache_misses, 3);
+        assert!(st.session_cache_evictions >= 2, "{st:?}");
+        coord.shutdown();
     }
 
     #[test]
@@ -830,7 +1182,8 @@ mod tests {
             data: DataSpec {
                 kernel: "no-such-kernel".into(),
                 ..DataSpec::default()
-            },
+            }
+            .into(),
             kind: RequestKind::Simulate,
             priority: 0,
         };
@@ -839,7 +1192,8 @@ mod tests {
             data: DataSpec {
                 n: 40,
                 ..DataSpec::default()
-            },
+            }
+            .into(),
             kind: RequestKind::Predict { grid: 3 },
             priority: 0,
         };

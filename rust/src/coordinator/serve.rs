@@ -1,0 +1,299 @@
+//! Streaming serve loop: read JSONL requests **incrementally** — from a
+//! file, a pipe/stdin, or a unix socket — and admit them as they
+//! arrive, under a bounded in-flight window with runtime-queue-depth
+//! backpressure.
+//!
+//! The pre-streaming `serve` read the whole request file up front; a
+//! pipe had to reach EOF before the first request even started.  This
+//! loop instead:
+//!
+//! 1. reads one line, parses it, and **admits** it through a
+//!    [`Client`] ticket (non-blocking submit);
+//! 2. before each admission, if the in-flight window is full *or* the
+//!    runtime's ready-task queue is deeper than `depth_limit`
+//!    (tasks already outnumber what the workers can start — admitting
+//!    more only grows latency), blocks on the oldest ticket first;
+//! 3. emits every completion through the caller's callback as soon as
+//!    it is reaped — long before EOF on a live stream.
+//!
+//! The returned [`ServeSummary`] carries ok/failed/cancelled counts and
+//! the completed-request latencies (sorted, for percentile reporting).
+
+use super::client::{Client, Completion};
+use super::parse_request;
+use std::collections::VecDeque;
+use std::io::BufRead;
+
+/// Admission-control knobs for [`serve_stream`].
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// Max requests in flight at once (ticketed but not reaped).
+    pub window: usize,
+    /// Hold admissions while the runtime has more than this many ready
+    /// tasks queued; `None` derives `4 * workers` from the runtime.
+    pub depth_limit: Option<usize>,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            window: 8,
+            depth_limit: None,
+        }
+    }
+}
+
+/// Outcome counts + latency telemetry of one [`serve_stream`] run.
+#[derive(Clone, Debug, Default)]
+pub struct ServeSummary {
+    /// Requests admitted (parsed and submitted).
+    pub submitted: usize,
+    /// Requests that completed successfully.
+    pub ok: usize,
+    /// Requests that failed.
+    pub failed: usize,
+    /// Requests that ended cancelled.
+    pub cancelled: usize,
+    /// Lines that did not parse as a request (skipped, not fatal).
+    pub parse_errors: usize,
+    /// Wall-clock latencies (seconds) of the successful requests,
+    /// sorted ascending — feed to `testkit::percentile`.
+    pub latencies_s: Vec<f64>,
+}
+
+/// Drive a [`Client`] from an incremental JSONL stream (see module
+/// docs).  Blank lines and `#` comments are skipped; unparsable lines
+/// are counted and skipped.  `on_done(submission_index, completion)`
+/// fires for every reaped request, in reap order.
+///
+/// Errors only on transport failure (`reader` I/O); request-level
+/// failures are reported through the callback and the summary.
+pub fn serve_stream(
+    client: &Client,
+    reader: &mut dyn BufRead,
+    opts: &ServeOptions,
+    mut on_done: impl FnMut(u64, &Completion),
+) -> anyhow::Result<ServeSummary> {
+    let window = opts.window.max(1);
+    let depth_limit = opts
+        .depth_limit
+        .unwrap_or_else(|| 4 * client.coordinator().runtime().nworkers());
+    let mut inflight: VecDeque<super::Ticket> = VecDeque::new();
+    let mut summary = ServeSummary::default();
+    let mut line = String::new();
+
+    let mut reap = |summary: &mut ServeSummary,
+                    inflight: &mut VecDeque<super::Ticket>,
+                    on_done: &mut dyn FnMut(u64, &Completion)| {
+        if let Some(t) = inflight.pop_front() {
+            let done = t.wait();
+            match &done {
+                Completion::Done(r) => {
+                    summary.ok += 1;
+                    summary.latencies_s.push(r.wall_s);
+                }
+                Completion::Cancelled => summary.cancelled += 1,
+                Completion::Failed(_) => summary.failed += 1,
+            }
+            on_done(t.id(), &done);
+        }
+    };
+
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            break; // EOF
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() || trimmed.starts_with('#') {
+            continue;
+        }
+        let req = match parse_request(trimmed) {
+            Ok(r) => r,
+            Err(e) => {
+                summary.parse_errors += 1;
+                eprintln!("serve: skipping unparsable request: {e:#}");
+                continue;
+            }
+        };
+        // Admission control: the window bounds client-side in-flight
+        // requests; the queue-depth check holds admissions while the
+        // workers are already saturated with ready tasks.
+        while inflight.len() >= window
+            || (!inflight.is_empty()
+                && client.coordinator().runtime().queue_depth() > depth_limit)
+        {
+            reap(&mut summary, &mut inflight, &mut on_done);
+        }
+        inflight.push_back(client.submit(req));
+        summary.submitted += 1;
+    }
+    while !inflight.is_empty() {
+        reap(&mut summary, &mut inflight, &mut on_done);
+    }
+    summary.latencies_s.sort_by(f64::total_cmp);
+    Ok(summary)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::Hardware;
+    use crate::coordinator::Coordinator;
+    use crate::scheduler::pool::Policy;
+    use std::io::{BufReader, Read};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+    use std::time::{Duration, Instant};
+
+    fn hw(ncores: usize, ts: usize) -> Hardware {
+        Hardware {
+            ncores,
+            ts,
+            policy: Policy::Prio,
+            ..Hardware::default()
+        }
+    }
+
+    #[test]
+    fn stream_processes_all_lines_with_mixed_outcomes() {
+        let coord = Arc::new(Coordinator::new(hw(2, 32)));
+        let client = Client::new(coord.clone(), 2);
+        let jsonl = "\
+# comment line
+{\"type\":\"simulate\",\"n\":60,\"seed\":1}
+
+{\"type\":\"mle\",\"n\":60,\"seed\":1,\"max_iters\":4,\"tol\":1e-2}
+{\"type\":\"predict\",\"n\":60,\"seed\":1,\"grid\":3}
+this is not json
+{\"type\":\"simulate\",\"n\":60,\"seed\":2}
+";
+        let mut reader = BufReader::new(jsonl.as_bytes());
+        let seen = std::cell::Cell::new(0usize);
+        let summary = serve_stream(
+            &client,
+            &mut reader,
+            &ServeOptions {
+                window: 2,
+                depth_limit: None,
+            },
+            |_, _| seen.set(seen.get() + 1),
+        )
+        .unwrap();
+        assert_eq!(summary.submitted, 4);
+        assert_eq!(summary.ok, 4);
+        assert_eq!(summary.failed, 0);
+        assert_eq!(summary.cancelled, 0);
+        assert_eq!(summary.parse_errors, 1);
+        assert_eq!(summary.latencies_s.len(), 4);
+        assert!(summary.latencies_s.windows(2).all(|w| w[0] <= w[1]));
+        assert_eq!(seen.get(), 4);
+        client.shutdown();
+        coord.shutdown();
+    }
+
+    /// A reader that refuses to serve its final line until at least one
+    /// completion has been observed: if the serve loop required EOF
+    /// before producing its first response, this would deadlock (the
+    /// 20s cap turns that bug into a loud failure instead).
+    struct GatedReader {
+        parts: Vec<Vec<u8>>,
+        next: usize,
+        gate_at: usize,
+        completions: Arc<AtomicUsize>,
+        timed_out: bool,
+    }
+
+    impl Read for GatedReader {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            if self.next >= self.parts.len() {
+                return Ok(0); // EOF
+            }
+            if self.next == self.gate_at {
+                let t0 = Instant::now();
+                while self.completions.load(Ordering::SeqCst) == 0 {
+                    if t0.elapsed() > Duration::from_secs(20) {
+                        self.timed_out = true;
+                        break;
+                    }
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+            }
+            let part = &self.parts[self.next];
+            assert!(buf.len() >= part.len(), "test parts are line-sized");
+            buf[..part.len()].copy_from_slice(part);
+            self.next += 1;
+            Ok(part.len())
+        }
+    }
+
+    #[test]
+    fn first_response_arrives_before_eof() {
+        let coord = Arc::new(Coordinator::new(hw(2, 32)));
+        let client = Client::new(coord.clone(), 2);
+        let completions = Arc::new(AtomicUsize::new(0));
+        let lines = [
+            "{\"type\":\"simulate\",\"n\":50,\"seed\":1}\n",
+            "{\"type\":\"simulate\",\"n\":50,\"seed\":2}\n",
+            "{\"type\":\"simulate\",\"n\":50,\"seed\":3}\n",
+        ];
+        let gated = GatedReader {
+            parts: lines.iter().map(|l| l.as_bytes().to_vec()).collect(),
+            next: 0,
+            gate_at: 2, // the last line waits for a completion
+            completions: completions.clone(),
+            timed_out: false,
+        };
+        let mut reader = BufReader::new(gated);
+        let completions_cb = completions.clone();
+        // window 1 forces a reap (and therefore a response) between
+        // admissions — the streaming property under test.
+        let summary = serve_stream(
+            &client,
+            &mut reader,
+            &ServeOptions {
+                window: 1,
+                depth_limit: None,
+            },
+            move |_, _| {
+                completions_cb.fetch_add(1, Ordering::SeqCst);
+            },
+        )
+        .unwrap();
+        assert!(
+            !reader.into_inner().timed_out,
+            "no response was produced before EOF — serve is not streaming"
+        );
+        assert_eq!(summary.submitted, 3);
+        assert_eq!(summary.ok, 3);
+        client.shutdown();
+        coord.shutdown();
+    }
+
+    #[test]
+    fn deep_queue_holds_admissions() {
+        // depth_limit 0 + an in-flight request forces the loop down the
+        // backpressure path (reap before admit) whenever any ready task
+        // is queued; with window 4 the summary still completes fully.
+        let coord = Arc::new(Coordinator::new(hw(1, 16)));
+        let client = Client::new(coord.clone(), 2);
+        let jsonl = (0..6)
+            .map(|i| format!("{{\"type\":\"simulate\",\"n\":80,\"seed\":{i}}}\n"))
+            .collect::<String>();
+        let mut reader = BufReader::new(jsonl.as_bytes());
+        let summary = serve_stream(
+            &client,
+            &mut reader,
+            &ServeOptions {
+                window: 4,
+                depth_limit: Some(0),
+            },
+            |_, _| {},
+        )
+        .unwrap();
+        assert_eq!(summary.submitted, 6);
+        assert_eq!(summary.ok, 6);
+        client.shutdown();
+        coord.shutdown();
+    }
+}

@@ -23,7 +23,7 @@ use crate::backend::{ArcEngine, Engine as _};
 use crate::covariance::{CovKernel, DistanceMetric, Location};
 use crate::scheduler::pool::Policy;
 use crate::scheduler::profile::Profile;
-use crate::scheduler::runtime::{JobHandle, Runtime};
+use crate::scheduler::runtime::{CancelToken, JobHandle, Runtime};
 use crate::scheduler::TaskGraph;
 use std::sync::Arc;
 
@@ -66,6 +66,11 @@ pub struct ExecCtx {
     /// Job priority for graphs submitted through this context: the
     /// coordinator's per-request fairness tie-break (0 = default).
     pub job_prio: u8,
+    /// Cancellation token carried into every job submitted through this
+    /// context: once fired, workers skip this context's not-yet-started
+    /// tasks and the MLE driver stops between objective evaluations.
+    /// Defaults to a fresh (never-fired) token.
+    pub cancel: CancelToken,
 }
 
 impl ExecCtx {
@@ -84,6 +89,7 @@ impl ExecCtx {
             engine,
             runtime: Arc::new(Runtime::new(ncores, policy)),
             job_prio: 0,
+            cancel: CancelToken::new(),
         }
     }
 
@@ -97,12 +103,14 @@ impl ExecCtx {
             engine,
             runtime,
             job_prio: 0,
+            cancel: CancelToken::new(),
         }
     }
 
-    /// Submit a task graph as one job on this context's runtime.
+    /// Submit a task graph as one job on this context's runtime,
+    /// carrying the context's job priority and cancellation token.
     pub fn submit(&self, g: TaskGraph) -> JobHandle {
-        self.runtime.submit_with_priority(g, self.job_prio)
+        self.runtime.submit_job(g, self.job_prio, self.cancel.clone())
     }
 
     /// Submit a task graph and block until it completes.

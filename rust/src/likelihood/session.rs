@@ -208,6 +208,21 @@ impl EvalSession {
         self.ctx.job_prio = prio;
     }
 
+    /// The cancellation token this session's submissions carry (the
+    /// MLE driver polls it between objective evaluations).
+    pub fn cancel_token(&self) -> &crate::scheduler::runtime::CancelToken {
+        &self.ctx.cancel
+    }
+
+    /// Bind this session to `token` from now on: like
+    /// [`EvalSession::set_job_prio`], the coordinator rebinds a cached
+    /// session to the *current* request's token (the captured context
+    /// would otherwise keep — possibly already-fired — the token of the
+    /// request that built it).
+    pub fn set_cancel(&mut self, token: crate::scheduler::runtime::CancelToken) {
+        self.ctx.cancel = token;
+    }
+
     /// The variant this session evaluates.
     pub fn variant(&self) -> Variant {
         self.variant

@@ -12,6 +12,8 @@
 //! exageostat sst --days 4
 //! exageostat structures --n 1024 --ts 128
 //! exageostat serve --requests requests.jsonl --clients 4 --ncores 4
+//! tail -f requests.jsonl | exageostat serve --stdin --clients 4
+//! exageostat serve --socket /tmp/exa.sock --window 8
 //! ```
 
 use anyhow::Context;
@@ -247,99 +249,133 @@ fn cmd_sst(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
-    use exageostat::coordinator::{parse_requests_jsonl, Coordinator, Response};
+    use exageostat::coordinator::{serve_stream, Client, Completion, Coordinator, ServeOptions};
     use exageostat::testkit::percentile;
-    use std::sync::atomic::{AtomicUsize, Ordering};
-    use std::sync::Mutex;
+    use std::io::BufReader;
+    use std::sync::Arc;
 
     let hw = hardware(args)?;
-    let path = args
-        .get("requests")
-        .context("serve requires --requests <file.jsonl>")?
-        .to_string();
-    let text =
-        std::fs::read_to_string(&path).with_context(|| format!("reading {path}"))?;
-    let reqs = parse_requests_jsonl(&text)?;
-    anyhow::ensure!(!reqs.is_empty(), "no requests in {path}");
-    let clients = args.get_usize("clients", reqs.len().min(4))?.max(1);
+    let clients = args.get_usize("clients", 4)?.max(1);
+    let opts = ServeOptions {
+        window: args.get_usize("window", 2 * clients)?.max(1),
+        depth_limit: match args.get("depth-limit") {
+            Some(_) => Some(args.get_usize("depth-limit", 0)?),
+            None => None,
+        },
+    };
     println!(
-        "serving {} requests with {clients} client threads on {} workers ({:?}, ts {})",
-        reqs.len(),
+        "serving with {clients} client runners, window {} on {} workers ({:?}, ts {})",
+        opts.window,
         hw.ncores.max(1),
         hw.policy,
         hw.ts
     );
 
-    let coord = Coordinator::new(hw);
-    let next = AtomicUsize::new(0);
-    let responses: Mutex<Vec<Response>> = Mutex::new(Vec::new());
-    let failures: Mutex<Vec<String>> = Mutex::new(Vec::new());
-    let t0 = std::time::Instant::now();
-    std::thread::scope(|s| {
-        for _ in 0..clients {
-            s.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= reqs.len() {
-                    break;
-                }
-                match coord.run(reqs[i].clone()) {
-                    Ok(r) => {
-                        println!(
-                            "  [{:>3}] {:<8} {:>8.3}s{}{}",
-                            r.id,
-                            r.kind,
-                            r.wall_s,
-                            if r.data_cache_hit { "  data*" } else { "" },
-                            if r.session_cache_hit { "  session*" } else { "" },
-                        );
-                        responses.lock().unwrap().push(r);
-                    }
-                    Err(e) => failures.lock().unwrap().push(format!("request {i}: {e:#}")),
-                }
-            });
-        }
-    });
-    let total_s = t0.elapsed().as_secs_f64();
+    let coord = Arc::new(Coordinator::new(hw));
+    let client = Client::new(coord.clone(), clients);
+    let on_done = |id: u64, c: &Completion| match c {
+        Completion::Done(r) => println!(
+            "  [{id:>3}] {:<10} {:>8.3}s{}{}",
+            r.kind,
+            r.wall_s,
+            if r.data_cache_hit { "  data*" } else { "" },
+            if r.session_cache_hit { "  session*" } else { "" },
+        ),
+        Completion::Cancelled => println!("  [{id:>3}] cancelled"),
+        Completion::Failed(msg) => eprintln!("  [{id:>3}] error: {msg}"),
+    };
 
-    let responses = responses.into_inner().unwrap();
-    let failures = failures.into_inner().unwrap();
-    let mut lat: Vec<f64> = responses.iter().map(|r| r.wall_s).collect();
-    lat.sort_by(f64::total_cmp);
+    let t0 = std::time::Instant::now();
+    let summary = if args.has("stdin") {
+        // Incremental: each line is admitted as it arrives on the pipe;
+        // responses stream back long before EOF.
+        let mut reader = std::io::stdin().lock();
+        serve_stream(&client, &mut reader, &opts, on_done)?
+    } else if let Some(sock) = args.get("socket") {
+        let sock = sock.to_string();
+        let _ = std::fs::remove_file(&sock); // stale socket from a previous run
+        let listener = std::os::unix::net::UnixListener::bind(&sock)
+            .with_context(|| format!("binding unix socket {sock}"))?;
+        println!("listening on unix socket {sock} (serving one connection to EOF)");
+        let (conn, _) = listener.accept().context("accepting connection")?;
+        let mut reader = BufReader::new(conn);
+        let s = serve_stream(&client, &mut reader, &opts, on_done)?;
+        let _ = std::fs::remove_file(&sock);
+        s
+    } else {
+        let path = args
+            .get("requests")
+            .context("serve needs --requests <file.jsonl>, --stdin, or --socket <path>")?
+            .to_string();
+        let file =
+            std::fs::File::open(&path).with_context(|| format!("reading {path}"))?;
+        let mut reader = BufReader::new(file);
+        serve_stream(&client, &mut reader, &opts, on_done)?
+    };
+    let total_s = t0.elapsed().as_secs_f64();
+    anyhow::ensure!(
+        summary.submitted > 0,
+        "no requests in the stream ({} unparsable)",
+        summary.parse_errors
+    );
+
+    let lat = &summary.latencies_s; // sorted by serve_stream
     let st = coord.stats();
     println!(
-        "{} ok, {} failed in {total_s:.3}s — {:.2} req/s, latency p50 {:.3}s / p95 {:.3}s",
-        responses.len(),
-        failures.len(),
-        responses.len() as f64 / total_s.max(1e-9),
-        percentile(&lat, 0.50),
-        percentile(&lat, 0.95),
+        "{} ok, {} failed, {} cancelled in {total_s:.3}s — {:.2} req/s, \
+         latency p50 {:.3}s / p95 {:.3}s / p99 {:.3}s",
+        summary.ok,
+        summary.failed,
+        summary.cancelled,
+        summary.ok as f64 / total_s.max(1e-9),
+        percentile(lat, 0.50),
+        percentile(lat, 0.95),
+        percentile(lat, 0.99),
     );
     println!(
-        "cache hits: {} data, {} session; {} tasks on {} workers",
-        st.data_cache_hits, st.session_cache_hits, st.tasks_executed, st.worker_threads
+        "cache: data {}/{} hit ({} evicted), session {}/{} hit ({} evicted); \
+         {} tasks on {} workers",
+        st.data_cache_hits,
+        st.data_cache_hits + st.data_cache_misses,
+        st.data_cache_evictions,
+        st.session_cache_hits,
+        st.session_cache_hits + st.session_cache_misses,
+        st.session_cache_evictions,
+        st.tasks_executed,
+        st.worker_threads
     );
-    for f in &failures {
-        eprintln!("error: {f}");
-    }
     if let Some(out) = args.get("out") {
         let json = format!(
             "{{\n  \"requests\": {},\n  \"ok\": {},\n  \"failed\": {},\n  \
+             \"cancelled\": {},\n  \"parse_errors\": {},\n  \
              \"total_s\": {total_s},\n  \"req_per_s\": {},\n  \"p50_s\": {},\n  \
-             \"p95_s\": {},\n  \"data_cache_hits\": {},\n  \"session_cache_hits\": {}\n}}\n",
-            reqs.len(),
-            responses.len(),
-            failures.len(),
-            responses.len() as f64 / total_s.max(1e-9),
-            percentile(&lat, 0.50),
-            percentile(&lat, 0.95),
+             \"p95_s\": {},\n  \"p99_s\": {},\n  \"data_cache_hits\": {},\n  \
+             \"data_cache_evictions\": {},\n  \"session_cache_hits\": {},\n  \
+             \"session_cache_evictions\": {}\n}}\n",
+            summary.submitted,
+            summary.ok,
+            summary.failed,
+            summary.cancelled,
+            summary.parse_errors,
+            summary.ok as f64 / total_s.max(1e-9),
+            percentile(lat, 0.50),
+            percentile(lat, 0.95),
+            percentile(lat, 0.99),
             st.data_cache_hits,
+            st.data_cache_evictions,
             st.session_cache_hits,
+            st.session_cache_evictions,
         );
         std::fs::write(out, json).with_context(|| format!("writing {out}"))?;
         println!("stats written to {out}");
     }
+    client.shutdown();
     coord.shutdown();
-    anyhow::ensure!(failures.is_empty(), "{} request(s) failed", failures.len());
+    anyhow::ensure!(
+        summary.failed == 0,
+        "{} request(s) failed",
+        summary.failed
+    );
     Ok(())
 }
 
@@ -366,7 +402,8 @@ fn main() {
             eprintln!(
                 "usage: exageostat <simulate|mle|predict|fisher|mloe-mmom|structures|sst|serve> [--flags]\n\
                  common flags: --ncores N --ts N --sched eager|prio|lws|random\n\
-                 serve flags:  --requests file.jsonl --clients K [--out stats.json]\n\
+                 serve input:  --requests file.jsonl | --stdin | --socket path.sock\n\
+                 serve flags:  --clients K --window W [--depth-limit D] [--out stats.json]\n\
                  see rust/src/main.rs header for examples"
             );
             std::process::exit(2);

@@ -17,6 +17,7 @@ pub fn minimize(
     assert_eq!(opts.init.len(), d, "init dimension mismatch");
     let max_evals = opts.effective_max();
     let mut obj = Instrumented::new(f, bounds);
+    obj.stop = opts.stop.clone();
 
     let mut x = opts.init.clone();
     obj.bounds.clamp(&mut x);
@@ -47,7 +48,7 @@ pub fn minimize(
     };
 
     let mut g = fd_grad(&mut obj, &x, fx);
-    while obj.evals < max_evals {
+    while obj.evals < max_evals && !obj.stop_requested() {
         // direction p = -H g
         let mut p = vec![0.0; d];
         for i in 0..d {
@@ -133,6 +134,7 @@ mod tests {
                 tol: 1e-14,
                 max_iters: 0,
                 init: vec![5.0, 5.0],
+                stop: None,
             },
         );
         assert!(r.fx < 1e-6, "fx {}", r.fx);
@@ -149,6 +151,7 @@ mod tests {
                 tol: 1e-12,
                 max_iters: 0,
                 init: vec![0.001, 0.001],
+                stop: None,
             },
         );
         assert!((r.x[0] - 2.0).abs() < 1e-3 && (r.x[1] - 3.0).abs() < 1e-3, "{:?}", r.x);

@@ -223,6 +223,7 @@ pub fn minimize(
     assert_eq!(opts.init.len(), d, "init dimension mismatch");
     let max_evals = opts.effective_max();
     let mut obj = Instrumented::new(f, bounds);
+    obj.stop = opts.stop.clone();
 
     let mut x0 = opts.init.clone();
     obj.bounds.clamp(&mut x0);
@@ -239,7 +240,10 @@ pub fn minimize(
         trust_region_round(&mut obj, &x0, round_frac, round_delta, opts, max_evals);
         let improved = f_before - obj.best;
         x0 = obj.best_x.clone();
-        if obj.evals >= max_evals || (improved.abs() < opts.tol && _round > 0) {
+        if obj.evals >= max_evals
+            || obj.stop_requested()
+            || (improved.abs() < opts.tol && _round > 0)
+        {
             break;
         }
         round_frac *= 0.1;
@@ -264,7 +268,7 @@ fn trust_region_round(
     let min_delta = (opts.tol.max(1e-14)).sqrt() * 1e-4;
     let max_pts = 2 * basis_len(d);
     let mut geom_counter: u64 = 0x9E3779B97F4A7C15;
-    while obj.evals < max_evals && delta > min_delta {
+    while obj.evals < max_evals && delta > min_delta && !obj.stop_requested() {
         let (bi, _) = pts
             .iter()
             .enumerate()
@@ -436,6 +440,7 @@ mod tests {
                 tol: 1e-12,
                 max_iters: 0,
                 init: vec![0.001, 0.001, 0.001],
+                stop: None,
             },
         );
         for (got, want) in r.x.iter().zip(&[1.0, 0.1, 0.5]) {

@@ -16,6 +16,7 @@ pub mod bfgs;
 pub mod bobyqa;
 pub mod nelder_mead;
 
+use crate::scheduler::runtime::CancelToken;
 use std::time::Instant;
 
 /// Box constraints (the `clb` / `cub` vectors of the R API).
@@ -62,6 +63,12 @@ pub struct OptOptions {
     /// Starting point; the R package starts at `clb` — callers replicate
     /// that by passing `lo.clone()`.
     pub init: Vec<f64>,
+    /// External stop signal, checked between objective evaluations: the
+    /// serving layer's job-cancellation token.  `None` = never stops
+    /// early.  Once fired, the loops exit at their next iteration check
+    /// and any further [`Instrumented::eval`] returns `+inf` without
+    /// touching the objective.
+    pub stop: Option<CancelToken>,
 }
 
 impl OptOptions {
@@ -71,6 +78,11 @@ impl OptOptions {
         } else {
             self.max_iters
         }
+    }
+
+    /// Has the external stop signal fired?
+    pub fn stopped(&self) -> bool {
+        self.stop.as_ref().is_some_and(|t| t.is_cancelled())
     }
 }
 
@@ -95,6 +107,9 @@ pub struct Instrumented<'a> {
     pub best: f64,
     pub best_x: Vec<f64>,
     pub history: Vec<f64>,
+    /// External stop signal (from [`OptOptions::stop`]): when fired,
+    /// `eval` stops invoking the wrapped objective.
+    pub stop: Option<CancelToken>,
     started: Instant,
 }
 
@@ -108,12 +123,25 @@ impl<'a> Instrumented<'a> {
             best: f64::INFINITY,
             best_x: vec![f64::NAN; d],
             history: Vec::new(),
+            stop: None,
             started: Instant::now(),
         }
     }
 
-    /// Evaluate at `x` (clamped into bounds first).
+    /// Has the external stop signal fired?
+    pub fn stop_requested(&self) -> bool {
+        self.stop.as_ref().is_some_and(|t| t.is_cancelled())
+    }
+
+    /// Evaluate at `x` (clamped into bounds first).  A fired stop
+    /// signal short-circuits to `+inf` without calling the objective
+    /// (uncounted), so in-flight batches of evaluations — interpolation
+    /// set builds, simplex shrinks, gradient stencils — cost nothing
+    /// past the cancellation point.
     pub fn eval(&mut self, x: &[f64]) -> f64 {
+        if self.stop_requested() {
+            return f64::INFINITY;
+        }
         let mut xc = x.to_vec();
         self.bounds.clamp(&mut xc);
         let v = (self.f)(&xc);
@@ -208,6 +236,7 @@ mod tests {
             tol: 1e-10,
             max_iters: 0,
             init,
+            stop: None,
         }
     }
 
@@ -255,6 +284,7 @@ mod tests {
                     tol: 1e-12,
                     max_iters: 5000,
                     init: vec![-1.2, 1.0],
+                    stop: None,
                 },
             );
             assert!(
@@ -292,6 +322,7 @@ mod tests {
                     tol: 1e-16,
                     max_iters: 25,
                     init: vec![-1.2, 1.0],
+                    stop: None,
                 },
             );
             assert!(r.iters <= 30, "{m:?}: {} evals", r.iters); // small slack for gradient stencils
@@ -311,6 +342,36 @@ mod tests {
         };
         let r = minimize(Method::Bobyqa, f, unit_bounds(2), &opts(vec![2.0, 2.0]));
         assert!(r.fx < 1e-4, "fx {}", r.fx);
+    }
+
+    #[test]
+    fn stop_token_halts_between_evaluations() {
+        // The token fires inside the third objective call; every method
+        // must stop without evaluating the objective again.
+        for m in [Method::Bobyqa, Method::NelderMead, Method::Bfgs] {
+            let token = CancelToken::new();
+            let fire = token.clone();
+            let calls = std::cell::Cell::new(0usize);
+            let r = minimize(
+                m,
+                |x| {
+                    calls.set(calls.get() + 1);
+                    if calls.get() == 3 {
+                        fire.cancel();
+                    }
+                    x.iter().map(|v| v * v).sum()
+                },
+                unit_bounds(2),
+                &OptOptions {
+                    tol: 1e-12,
+                    max_iters: 0,
+                    init: vec![4.0, 4.0],
+                    stop: Some(token),
+                },
+            );
+            assert_eq!(calls.get(), 3, "{m:?}: objective called after stop");
+            assert_eq!(r.iters, 3, "{m:?}");
+        }
     }
 
     #[test]

@@ -13,6 +13,7 @@ pub fn minimize(
     assert_eq!(opts.init.len(), d, "init dimension mismatch");
     let max_evals = opts.effective_max();
     let mut obj = Instrumented::new(f, bounds);
+    obj.stop = opts.stop.clone();
 
     // Initial simplex: init + per-coordinate offsets (5% of box width).
     let mut x0 = opts.init.clone();
@@ -33,7 +34,7 @@ pub fn minimize(
         simplex.push((xi, v));
     }
 
-    while obj.evals < max_evals {
+    while obj.evals < max_evals && !obj.stop_requested() {
         simplex.sort_by(|a, b| a.1.total_cmp(&b.1));
         let fbest = simplex[0].1;
         let fworst = simplex[d].1;
@@ -125,6 +126,7 @@ mod tests {
                 tol: 1e-12,
                 max_iters: 0,
                 init: vec![0.0], // starts at the lower bound like the R API
+                stop: None,
             },
         );
         assert!((r.x[0] - 3.0).abs() < 1e-5, "{:?}", r.x);
@@ -140,6 +142,7 @@ mod tests {
                 tol: 1e-10,
                 max_iters: 0,
                 init: vec![0.9, 0.9],
+                stop: None,
             },
         );
         assert!(r.iters > 5);

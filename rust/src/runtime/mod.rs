@@ -8,7 +8,7 @@
 //!
 //! The artifact *discovery* helpers ([`default_artifact_dir`],
 //! [`artifacts_available`]) are always compiled — tests and examples gate
-//! on them. The execution engine ([`PjrtEngine`]) needs the `xla` crate
+//! on them. The execution engine (`PjrtEngine`) needs the `xla` crate
 //! and therefore lives behind the `pjrt` cargo feature (off by default);
 //! likelihood code should not use it directly but go through the
 //! [`crate::backend`] `Engine` trait, which falls back to the native

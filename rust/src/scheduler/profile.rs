@@ -24,6 +24,9 @@ pub struct Profile {
     pub nworkers: usize,
     pub records: Vec<TaskRecord>,
     pub wall: Duration,
+    /// Tasks retired without executing because their job was cancelled
+    /// (`records` holds only tasks that actually ran).
+    pub tasks_skipped: usize,
 }
 
 impl Profile {
@@ -32,6 +35,7 @@ impl Profile {
             nworkers,
             records: Vec::new(),
             wall: Duration::ZERO,
+            tasks_skipped: 0,
         }
     }
 

@@ -51,6 +51,48 @@ pub fn worker_threads_spawned() -> u64 {
     WORKER_THREADS_SPAWNED.load(Ordering::SeqCst)
 }
 
+/// Best-effort extraction of a panic payload's message.  Every place
+/// that catches a panic to report it later — the workers here, the
+/// client runners, `testkit::forall` — goes through this one helper so
+/// panic reporting stays consistent.
+pub fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    p.downcast_ref::<String>()
+        .cloned()
+        .or_else(|| p.downcast_ref::<&str>().map(|s| s.to_string()))
+        .unwrap_or_else(|| "<non-string panic>".into())
+}
+
+/// Cooperative cancellation token shared between a job's submitter and
+/// the workers (and, higher up the stack, between a serving client and
+/// the optimizer loop — see `api::mle_with_session`).
+///
+/// Cancellation is *advisory and monotonic*: once cancelled, a token
+/// stays cancelled.  Workers consult the token before starting each
+/// task of a cancelled job and skip the not-yet-started ones (already
+/// running tasks finish — tile kernels are short); the optimizer
+/// consults it between objective evaluations.  Cloning shares the flag.
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    /// A fresh, un-cancelled token.
+    pub fn new() -> CancelToken {
+        CancelToken::default()
+    }
+
+    /// Request cancellation (idempotent, takes effect at the next
+    /// task/iteration boundary).
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::SeqCst);
+    }
+
+    /// Has [`CancelToken::cancel`] been called on this token (or any
+    /// clone of it)?
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::SeqCst)
+    }
+}
+
 /// Executable metadata of one task within a submitted job.
 struct JobTask {
     kind: TaskKind,
@@ -75,6 +117,11 @@ struct JobInner {
     /// Job-level priority: tie-break between jobs under the `prio`
     /// policy (higher runs first at equal task priority).
     priority: u8,
+    /// Cancellation flag: workers skip (but still retire) every task
+    /// they pop after the token fires.
+    cancel: CancelToken,
+    /// Tasks popped after cancellation and therefore never executed.
+    skipped: AtomicUsize,
     tasks: Vec<JobTask>,
     /// Each closure is taken exactly once; the lock is uncontended.
     cells: Vec<Mutex<Option<Box<dyn FnOnce() + Send>>>>,
@@ -212,31 +259,37 @@ impl Shared {
 /// panic message is recorded and re-raised by [`JobHandle::wait`].
 fn execute(shared: &Arc<Shared>, r: Ready, w: usize) {
     let Ready { job, task } = r;
+    // Take the closure either way: a skipped task must still drop its
+    // captures (e.g. Arc'd operands) so storage is released.
     let run = job.cells[task].lock().unwrap().take();
-    let t0 = Instant::now();
-    if let Some(f) = run {
-        // AssertUnwindSafe: the only state f touches is job-owned tile
-        // storage, and a panicked job is reported, never reused.
-        if let Err(p) = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f)) {
-            let msg = p
-                .downcast_ref::<String>()
-                .cloned()
-                .or_else(|| p.downcast_ref::<&str>().map(|s| s.to_string()))
-                .unwrap_or_else(|| "<non-string panic>".into());
-            let mut st = job.state.lock().unwrap();
-            if st.panic.is_none() {
-                st.panic = Some(msg);
+    if job.cancel.is_cancelled() {
+        // Cancelled job: retire the task without running it.  The
+        // successor release / remaining bookkeeping below still happens
+        // so the job drains and its waiter wakes.
+        drop(run);
+        job.skipped.fetch_add(1, Ordering::Relaxed);
+    } else {
+        let t0 = Instant::now();
+        if let Some(f) = run {
+            // AssertUnwindSafe: the only state f touches is job-owned tile
+            // storage, and a panicked job is reported, never reused.
+            if let Err(p) = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f)) {
+                let msg = panic_message(p.as_ref());
+                let mut st = job.state.lock().unwrap();
+                if st.panic.is_none() {
+                    st.panic = Some(msg);
+                }
             }
         }
+        let dur = t0.elapsed();
+        shared.tasks_executed.fetch_add(1, Ordering::Relaxed);
+        *job.records[task].lock().unwrap() = Some(TaskRecord {
+            worker: w,
+            kind: job.tasks[task].kind,
+            dur,
+            bytes: job.tasks[task].bytes,
+        });
     }
-    let dur = t0.elapsed();
-    shared.tasks_executed.fetch_add(1, Ordering::Relaxed);
-    *job.records[task].lock().unwrap() = Some(TaskRecord {
-        worker: w,
-        kind: job.tasks[task].kind,
-        dur,
-        bytes: job.tasks[task].bytes,
-    });
     for &s in &job.tasks[task].succs {
         if job.preds[s].fetch_sub(1, Ordering::AcqRel) == 1 {
             shared.push(
@@ -368,6 +421,13 @@ impl Runtime {
         self.shared.tasks_executed.load(Ordering::Relaxed)
     }
 
+    /// Ready tasks currently queued but not yet picked up by a worker —
+    /// the backpressure signal the streaming serve loop admits requests
+    /// against (`coordinator::serve_stream`).
+    pub fn queue_depth(&self) -> usize {
+        self.shared.pending.load(Ordering::Acquire)
+    }
+
     /// Has [`Runtime::shutdown`] run?
     pub fn is_shut_down(&self) -> bool {
         self.shared.shutdown.load(Ordering::Acquire)
@@ -385,7 +445,21 @@ impl Runtime {
     /// # Panics
     /// Panics if the runtime has been shut down — submitting after
     /// `finalize` is a caller bug, not a recoverable condition.
-    pub fn submit_with_priority(&self, mut graph: TaskGraph, priority: u8) -> JobHandle {
+    pub fn submit_with_priority(&self, graph: TaskGraph, priority: u8) -> JobHandle {
+        self.submit_job(graph, priority, CancelToken::new())
+    }
+
+    /// Submit a job bound to an external [`CancelToken`] (the full form
+    /// of [`Runtime::submit_with_priority`]).  Firing the token — from
+    /// [`JobHandle::cancel`] or any clone held elsewhere, e.g. a serving
+    /// client's ticket — makes workers skip every task of this job they
+    /// have not started yet; the job still drains (skipped tasks retire
+    /// and release their successors) so waiting on the handle never
+    /// hangs.
+    ///
+    /// # Panics
+    /// Panics if the runtime has been shut down, as above.
+    pub fn submit_job(&self, mut graph: TaskGraph, priority: u8, cancel: CancelToken) -> JobHandle {
         // Held for the whole submission (incl. seeding): shutdown takes
         // the write side before joining workers, so a job that passes
         // the check below is fully enqueued while workers still live.
@@ -412,6 +486,8 @@ impl Runtime {
         let job = Arc::new(JobInner {
             seq: self.next_seq.fetch_add(1, Ordering::Relaxed),
             priority,
+            cancel,
+            skipped: AtomicUsize::new(0),
             tasks,
             cells,
             records,
@@ -520,6 +596,32 @@ impl JobHandle {
         self.job.state.lock().unwrap().done
     }
 
+    /// Cancel the job: workers skip every task they have not started
+    /// yet (already-running tasks finish).  The job still drains, so a
+    /// subsequent [`JobHandle::wait`] returns promptly; its profile
+    /// reports only the tasks that actually executed, with the skipped
+    /// count in [`Profile::tasks_skipped`].
+    pub fn cancel(&self) {
+        self.job.cancel.cancel();
+    }
+
+    /// Has this job's cancellation token fired?
+    pub fn is_cancelled(&self) -> bool {
+        self.job.cancel.is_cancelled()
+    }
+
+    /// The job's cancellation token (cloneable; firing any clone
+    /// cancels the job).
+    pub fn cancel_token(&self) -> &CancelToken {
+        &self.job.cancel
+    }
+
+    /// Tasks retired without executing because the job was cancelled
+    /// (final once the job is done).
+    pub fn tasks_skipped(&self) -> usize {
+        self.job.skipped.load(Ordering::Relaxed)
+    }
+
     fn wait_ref(&self) -> (Profile, Option<String>) {
         let (wall, panic) = {
             let mut st = self.job.state.lock().unwrap();
@@ -535,6 +637,7 @@ impl JobHandle {
             }
         }
         p.wall = wall;
+        p.tasks_skipped = self.job.skipped.load(Ordering::Relaxed);
         (p, panic)
     }
 }
@@ -681,6 +784,92 @@ mod tests {
         rt.submit(counting_graph(10, &counter)).wait();
         assert_eq!(counter.load(Ordering::SeqCst), 10);
         assert_eq!(rt.threads_spawned(), 2);
+    }
+
+    #[test]
+    fn cancelled_job_skips_not_yet_started_tasks() {
+        // Single worker pinned inside a stall task: everything queued
+        // behind it is provably not-yet-started when we cancel.
+        let rt = Runtime::new(1, Policy::Eager);
+        let gate = Arc::new(AtomicUsize::new(0));
+        let started = Arc::new(AtomicUsize::new(0));
+        let mut stall = TaskGraph::new();
+        let h = stall.register();
+        {
+            let gate = gate.clone();
+            let started = started.clone();
+            stall.submit(TaskKind::OTHER, &[(h, Access::RW)], 0, move || {
+                started.store(1, Ordering::SeqCst);
+                while gate.load(Ordering::SeqCst) == 0 {
+                    std::thread::yield_now();
+                }
+            });
+        }
+        let stall_h = rt.submit(stall);
+        while started.load(Ordering::SeqCst) == 0 {
+            std::thread::yield_now();
+        }
+
+        // 25 independent tasks: all seeded ready, none can start while
+        // the worker stalls.
+        let counter = Arc::new(AtomicUsize::new(0));
+        let independent = |counter: &Arc<AtomicUsize>| {
+            let mut g = TaskGraph::new();
+            let hs = g.register_many(25);
+            for h in hs {
+                let c = counter.clone();
+                g.submit(TaskKind::GEMM, &[(h, Access::RW)], 0, move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            g
+        };
+        let victim = rt.submit(independent(&counter));
+        assert!(victim.tasks_skipped() == 0 && !victim.is_cancelled());
+        assert!(rt.queue_depth() >= 25, "queued behind the stall");
+        victim.cancel();
+        gate.store(1, Ordering::SeqCst);
+        stall_h.wait();
+        let prof = victim.wait();
+        // Strictly fewer tasks executed than a completed run of the
+        // same graph, and every skipped task accounted for.
+        assert_eq!(counter.load(Ordering::SeqCst), 0);
+        assert_eq!(prof.total_tasks(), 0);
+        assert_eq!(prof.tasks_skipped, 25);
+        // The runtime survives and a fresh identical job completes.
+        let done = rt.submit(independent(&counter)).wait();
+        assert_eq!(done.total_tasks(), 25);
+        assert_eq!(done.tasks_skipped, 0);
+        assert!(prof.total_tasks() < done.total_tasks());
+        rt.shutdown();
+    }
+
+    #[test]
+    fn mid_job_cancel_executes_prefix_only() {
+        // RW chain: tasks run strictly in order on one worker; cancel
+        // fires from inside task 5, so tasks 6.. are skipped.
+        let rt = Runtime::new(1, Policy::Eager);
+        let token = CancelToken::new();
+        let ran = Arc::new(AtomicUsize::new(0));
+        let mut g = TaskGraph::new();
+        let h = g.register();
+        for i in 0..20 {
+            let ran = ran.clone();
+            let token = token.clone();
+            g.submit(TaskKind::OTHER, &[(h, Access::RW)], 0, move || {
+                ran.fetch_add(1, Ordering::SeqCst);
+                if i == 5 {
+                    token.cancel();
+                }
+            });
+        }
+        let handle = rt.submit_job(g, 0, token.clone());
+        let prof = handle.wait();
+        assert_eq!(ran.load(Ordering::SeqCst), 6);
+        assert_eq!(prof.total_tasks(), 6);
+        assert_eq!(prof.tasks_skipped, 14);
+        assert!(token.is_cancelled());
+        rt.shutdown();
     }
 
     #[test]

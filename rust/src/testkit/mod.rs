@@ -50,11 +50,7 @@ pub fn forall<T: std::fmt::Debug>(
         let input = gen(&mut case_rng);
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&input)));
         if let Err(e) = result {
-            let msg = e
-                .downcast_ref::<String>()
-                .cloned()
-                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
-                .unwrap_or_else(|| "<non-string panic>".into());
+            let msg = crate::scheduler::runtime::panic_message(e.as_ref());
             panic!(
                 "property failed at case {case}/{cases} (seed {seed:#x}):\n  input: {input:?}\n  cause: {msg}"
             );

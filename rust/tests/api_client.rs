@@ -1,0 +1,263 @@
+//! ISSUE 4 acceptance: the unified async job API.
+//!
+//! * **Back-compat parity** — every legacy Table-II wrapper
+//!   (`exact_mle`, `dst_mle`, `tlr_mle`, `mp_mle`, `exact_predict`) is
+//!   bit-identical to the equivalent `ModelBuilder` + `Client::submit`
+//!   route;
+//! * **cancellation** — a cancelled job executes strictly fewer runtime
+//!   tasks than a completed run of the same request, and
+//!   `Ticket::wait` reports `Cancelled`;
+//! * **typed errors** — misconfiguration surfaces as `ApiError`
+//!   variants from both the builder and the legacy wrappers.
+
+use exageostat::api::{ApiError, ExaGeoStat, GeoModel, Hardware, MleOptions};
+use exageostat::coordinator::{Client, Completion, Coordinator, Outcome, Request};
+use exageostat::likelihood::Variant;
+use exageostat::scheduler::pool::Policy;
+use exageostat::simulation::GeoData;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn hw(ncores: usize, ts: usize) -> Hardware {
+    Hardware {
+        ncores,
+        ts,
+        policy: Policy::Prio,
+        ..Hardware::default()
+    }
+}
+
+fn assert_bits_eq(a: &[f64], b: &[f64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{what}[{i}]: {x} vs {y} differ in bits"
+        );
+    }
+}
+
+#[test]
+fn legacy_mle_wrappers_bit_match_builder_client_route() {
+    let exa = ExaGeoStat::init(hw(2, 32));
+    let data = exa
+        .simulate_data_exact("ugsm-s", &[1.0, 0.1, 0.5], "euclidean", 96, 5)
+        .unwrap();
+    let opt = MleOptions::new(vec![0.01; 3], vec![5.0; 3], 1e-3, 10);
+    let coord = Arc::new(Coordinator::new(hw(2, 32)));
+    let client = Client::new(coord.clone(), 2);
+
+    let variants: [(&str, Variant); 4] = [
+        ("exact", Variant::Exact),
+        ("dst", Variant::Dst { band: 1 }),
+        (
+            "tlr",
+            Variant::Tlr {
+                tol: 1e-7,
+                max_rank: usize::MAX,
+            },
+        ),
+        ("mp", Variant::Mp { band: 1 }),
+    ];
+    for (name, variant) in variants {
+        let legacy = match variant {
+            Variant::Exact => exa.exact_mle(&data, "ugsm-s", "euclidean", &opt),
+            Variant::Dst { band } => exa.dst_mle(&data, "ugsm-s", "euclidean", &opt, band),
+            Variant::Tlr { tol, max_rank } => {
+                exa.tlr_mle(&data, "ugsm-s", "euclidean", &opt, tol, max_rank)
+            }
+            Variant::Mp { band } => exa.mp_mle(&data, "ugsm-s", "euclidean", &opt, band),
+        }
+        .unwrap();
+
+        let model = GeoModel::builder()
+            .data(data.clone())
+            .kernel("ugsm-s")
+            .metric("euclidean")
+            .variant(variant)
+            .options(opt.clone())
+            .tile_size(32)
+            .build()
+            .unwrap();
+        let ticket = client.submit(Request::mle_from_model(&model, 0));
+        let Completion::Done(resp) = ticket.wait() else {
+            panic!("{name}: client route did not complete");
+        };
+        let Outcome::Mle(m) = resp.outcome else {
+            panic!("{name}: wrong outcome");
+        };
+        assert_eq!(
+            legacy.loglik.to_bits(),
+            m.loglik.to_bits(),
+            "{name}: loglik {} vs {}",
+            legacy.loglik,
+            m.loglik
+        );
+        assert_eq!(legacy.iters, m.iters, "{name}: iteration count");
+        assert_bits_eq(&legacy.theta, &m.theta, name);
+    }
+    client.shutdown();
+    coord.shutdown();
+    exa.finalize();
+}
+
+#[test]
+fn legacy_exact_predict_bit_matches_predict_at_route() {
+    let exa = ExaGeoStat::init(hw(2, 32));
+    let data = exa
+        .simulate_data_exact("ugsm-s", &[1.0, 0.2, 1.0], "euclidean", 110, 7)
+        .unwrap();
+    let train = GeoData {
+        locs: data.locs[..100].to_vec(),
+        z: data.z[..100].to_vec(),
+    };
+    let target = data.locs[100..].to_vec();
+    let theta = vec![1.0, 0.2, 1.0];
+    let legacy = exa
+        .exact_predict(&train, &target, "ugsm-s", "euclidean", &theta, true)
+        .unwrap();
+
+    let coord = Arc::new(Coordinator::new(hw(2, 32)));
+    let client = Client::new(coord.clone(), 1);
+    let model = GeoModel::builder()
+        .data(train)
+        .kernel("ugsm-s")
+        .metric("euclidean")
+        .build()
+        .unwrap();
+    let ticket = client.submit(Request::predict_at(
+        &model,
+        target.clone(),
+        theta.clone(),
+        true,
+        0,
+    ));
+    let Completion::Done(resp) = ticket.wait() else {
+        panic!("predict_at did not complete");
+    };
+    let Outcome::Prediction(p) = resp.outcome else {
+        panic!("wrong outcome kind {:?}", resp.kind);
+    };
+    assert_bits_eq(&legacy.mean, &p.mean, "kriging mean");
+    let (lv, cv) = (legacy.variance.unwrap(), p.variance.unwrap());
+    assert_bits_eq(&lv, &cv, "kriging variance");
+    client.shutdown();
+    coord.shutdown();
+    exa.finalize();
+}
+
+fn mle_request(n: usize, seed: u64, max_iters: usize) -> Request {
+    let mut req = exageostat::coordinator::parse_request(&format!(
+        "{{\"type\":\"mle\",\"n\":{n},\"seed\":{seed},\"max_iters\":{max_iters},\
+         \"clb\":[0.01,0.01,0.01],\"tol\":1e-9}}"
+    ))
+    .unwrap();
+    req.priority = 0;
+    req
+}
+
+#[test]
+fn cancelled_job_runs_fewer_tasks_and_wait_reports_cancelled() {
+    let n = 400;
+    let iters = 80;
+    // Baseline: the same request run to completion on a fresh stack.
+    let full_tasks = {
+        let coord = Arc::new(Coordinator::new(hw(2, 32)));
+        let client = Client::new(coord.clone(), 1);
+        let t = client.submit(mle_request(n, 1, iters));
+        assert!(matches!(t.wait(), Completion::Done(_)));
+        let tasks = coord.runtime().tasks_executed();
+        client.shutdown();
+        coord.shutdown();
+        tasks
+    };
+    assert!(full_tasks > 0);
+
+    // Cancelled: identical request, token fired ~120ms in (an n=400
+    // 80-iteration exact MLE takes far longer than that).
+    let coord = Arc::new(Coordinator::new(hw(2, 32)));
+    let client = Client::new(coord.clone(), 1);
+    let t = client.submit(mle_request(n, 1, iters));
+    std::thread::sleep(Duration::from_millis(120));
+    t.cancel();
+    match t.wait() {
+        Completion::Cancelled => {}
+        other => panic!("expected Cancelled, got {other:?}"),
+    }
+    let cancelled_tasks = coord.runtime().tasks_executed();
+    assert!(
+        cancelled_tasks < full_tasks,
+        "cancelled run executed {cancelled_tasks} tasks, completed run {full_tasks}"
+    );
+    let st = coord.stats();
+    assert_eq!(st.cancelled, 1, "{st:?}");
+    assert_eq!(st.errors, 0, "{st:?}");
+
+    // The coordinator stays healthy: the same request completes
+    // afterwards (rebinding the cached session to a fresh token).
+    let t2 = client.submit(mle_request(n, 1, iters));
+    assert!(matches!(t2.wait(), Completion::Done(_)));
+    client.shutdown();
+    coord.shutdown();
+}
+
+#[test]
+fn precancelled_session_reports_cancelled_without_work() {
+    // Deterministic cancellation path: the token is already fired when
+    // the MLE starts, so zero objective evaluations (and zero runtime
+    // tasks) happen and the typed error surfaces.
+    use exageostat::api::mle_with_session;
+    use exageostat::covariance::{kernel_by_name, DistanceMetric};
+    use exageostat::likelihood::{EvalSession, ExecCtx, Problem};
+    use exageostat::rng::Pcg64;
+    use exageostat::scheduler::runtime::CancelToken;
+
+    let mut rng = Pcg64::seed_from_u64(11);
+    let problem = Problem {
+        kernel: kernel_by_name("ugsm-s").unwrap().into(),
+        locs: Arc::new(exageostat::testkit::gen::locations(&mut rng, 40)),
+        z: Arc::new(exageostat::testkit::gen::normals(&mut rng, 40)),
+        metric: DistanceMetric::Euclidean,
+    };
+    let ctx = ExecCtx::new(1, 16, Policy::Eager);
+    let mut session = EvalSession::new(&problem, Variant::Exact, &ctx).unwrap();
+    let token = CancelToken::new();
+    token.cancel();
+    session.set_cancel(token);
+    let tasks_before = ctx.runtime.tasks_executed();
+    let err = mle_with_session(
+        &mut session,
+        &MleOptions::new(vec![0.01; 3], vec![5.0; 3], 1e-4, 20),
+    )
+    .unwrap_err();
+    assert!(
+        matches!(err.downcast_ref::<ApiError>(), Some(ApiError::Cancelled)),
+        "{err:#}"
+    );
+    assert_eq!(session.evals(), 0, "no objective evaluation may run");
+    assert_eq!(ctx.runtime.tasks_executed(), tasks_before);
+}
+
+#[test]
+fn band_too_large_rejected_by_wrapper_and_parse_route_still_works() {
+    let exa = ExaGeoStat::init(hw(1, 32));
+    let data = exa
+        .simulate_data_exact("ugsm-s", &[1.0, 0.1, 0.5], "euclidean", 64, 2)
+        .unwrap();
+    // 64 points at ts=32 -> 2x2 tile grid: band 2 covers everything.
+    let opt = MleOptions::new(vec![0.01; 3], vec![5.0; 3], 1e-3, 5);
+    let err = exa
+        .dst_mle(&data, "ugsm-s", "euclidean", &opt, 2)
+        .unwrap_err();
+    assert!(
+        matches!(
+            err.downcast_ref::<ApiError>(),
+            Some(ApiError::BandTooLarge { band: 2, ntiles: 2 })
+        ),
+        "{err:#}"
+    );
+    // band 1 (= full off-diagonal coverage on a 2x2 grid) still works
+    assert!(exa.dst_mle(&data, "ugsm-s", "euclidean", &opt, 1).is_ok());
+    exa.finalize();
+}

@@ -195,7 +195,7 @@ fn coordinator_serves_concurrent_clients_with_caching() {
     };
     // Warm the dataset cache deterministically, then fan out.
     let sim = Request {
-        data: data.clone(),
+        data: data.clone().into(),
         kind: RequestKind::Simulate,
         priority: 0,
     };
@@ -203,7 +203,7 @@ fn coordinator_serves_concurrent_clients_with_caching() {
     assert!(matches!(r0.outcome, Outcome::Simulated { n: 90 }));
 
     let mle = |priority: u8| Request {
-        data: data.clone(),
+        data: data.clone().into(),
         kind: RequestKind::Mle {
             variant: Variant::Exact,
             opt: MleOptions::new(vec![0.01; 3], vec![5.0; 3], 1e-3, 12),
@@ -211,7 +211,7 @@ fn coordinator_serves_concurrent_clients_with_caching() {
         priority,
     };
     let predict = Request {
-        data: data.clone(),
+        data: data.clone().into(),
         kind: RequestKind::Predict { grid: 5 },
         priority: 2,
     };
