@@ -12,7 +12,7 @@ PYTHON ?= python3
 
 BENCHES = fig3_shared_memory fig5_scaling_n fig6_accelerated \
           fig7_distributed table5_time_per_iter ablation_variants \
-          serving_throughput
+          serving_throughput kernel_roofline
 
 .PHONY: all test artifacts bench-smoke fmt lint doc python-test clean
 
@@ -34,8 +34,11 @@ artifacts:
 # table5_time_per_iter also refreshes BENCH_mle_iter.json (per-variant
 # time/iteration + EvalSession warm-vs-cold speedup telemetry);
 # serving_throughput refreshes BENCH_serving.json (shared-runtime vs
-# per-job-pool requests/sec + latency percentiles).  Ends with a smoke
-# invocation of the `exageostat serve` subcommand.
+# per-job-pool requests/sec + latency percentiles); kernel_roofline
+# refreshes BENCH_kernels.json (per-kernel GFLOP/s, dispatched-SIMD vs
+# forced-scalar, MP-vs-exact time/eval — EXPERIMENTS.md §Kernel
+# roofline).  CI uploads the BENCH_*.json files as artifacts.  Ends
+# with a smoke invocation of the `exageostat serve` subcommand.
 bench-smoke:
 	@for b in $(BENCHES); do \
 		echo "== bench $$b (quick) =="; \

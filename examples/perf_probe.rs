@@ -1,5 +1,7 @@
 //! Perf probe: micro-benchmarks of the hot paths for the EXPERIMENTS.md
-//! §Perf iteration log.  Not a paper figure; a tuning instrument.
+//! §Perf iteration log.  Not a paper figure; a tuning instrument — the
+//! tracked, JSON-emitting equivalent is `rust/benches/kernel_roofline.rs`
+//! (EXPERIMENTS.md §Kernel roofline).
 use exageostat::covariance::{kernel_by_name, DistanceMetric};
 use exageostat::likelihood::{ExecCtx, Problem, Variant};
 use exageostat::linalg::blas::{dgemm_raw, dpotrf_raw, Trans};

@@ -1,0 +1,289 @@
+//! **Kernel roofline** — GFLOP/s of the BLAS-3 building blocks
+//! (gemm / syrk / trsm / potrf) at tile-relevant sizes, f64 and f32,
+//! dispatched-SIMD vs forced-scalar, plus end-to-end exact-MLE
+//! evaluation time under both dispatch paths and the MP-vs-exact
+//! time per evaluation.
+//!
+//! Emits `BENCH_kernels.json` (override with `BENCH_OUT`); schema and
+//! expectations in EXPERIMENTS.md §Kernel roofline.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+use bench_util::*;
+
+use exageostat::covariance::{kernel_by_name, DistanceMetric, Location};
+use exageostat::likelihood::{EvalSession, ExecCtx, Problem, Variant};
+use exageostat::linalg::blas::{
+    detected_simd, dgemm_raw_at, dpotrf_raw, dsyrk_ln_raw, dtrsm_rltn_raw, gemm_mp_at,
+    set_simd_override, simd_level, MatMut, MatRef, SimdLevel, Trans,
+};
+use exageostat::rng::Pcg64;
+use exageostat::scheduler::pool::Policy;
+use std::sync::Arc;
+
+/// One kernel measurement at a fixed dispatch level.
+fn time_op(reps: usize, k: usize, mut f: impl FnMut()) -> f64 {
+    time_median(k, || {
+        for _ in 0..reps {
+            f();
+        }
+    })
+}
+
+struct KernelRow {
+    op: &'static str,
+    prec: &'static str,
+    b: usize,
+    gflops_dispatch: f64,
+    gflops_scalar: f64,
+}
+
+fn main() {
+    let quick = quick();
+    let sizes: &[usize] = if quick { &[64, 128] } else { &[64, 128, 256] };
+    let medians = if quick { 3 } else { 5 };
+    let mut rng = Pcg64::seed_from_u64(0xBEEF);
+    let mut rows: Vec<KernelRow> = Vec::new();
+
+    println!(
+        "Kernel roofline — simd detected: {}, active: {}",
+        detected_simd().name(),
+        simd_level().name()
+    );
+    header(&["op", "prec", "b", "GF/s simd", "GF/s scalar", "ratio"]);
+
+    for &b in sizes {
+        let reps = (256 / b).pow(3).max(1);
+        let a: Vec<f64> = (0..b * b).map(|_| rng.normal()).collect();
+        let bb: Vec<f64> = (0..b * b).map(|_| rng.normal()).collect();
+        let mut c = vec![0.0f64; b * b];
+        // SPD matrix + factor for trsm/potrf.
+        let mut spd = vec![0.0f64; b * b];
+        dgemm_raw_at(
+            SimdLevel::Scalar,
+            Trans::N,
+            Trans::T,
+            b,
+            b,
+            b,
+            1.0,
+            &a,
+            b,
+            &a,
+            b,
+            0.0,
+            &mut spd,
+            b,
+        );
+        for i in 0..b {
+            spd[i + i * b] += b as f64;
+        }
+        let mut lfac = spd.clone();
+        dpotrf_raw(b, &mut lfac, b).unwrap();
+
+        // The per-op measurement under an explicit level: gemm/syrk/trsm
+        // take the level via the `_at` APIs where available, the rest via
+        // the process-wide override.
+        let mut measure = |level: SimdLevel| -> [f64; 4] {
+            assert!(set_simd_override(Some(level)));
+            let t_gemm = time_op(reps, medians, || {
+                dgemm_raw_at(
+                    level,
+                    Trans::N,
+                    Trans::T,
+                    b,
+                    b,
+                    b,
+                    -1.0,
+                    &a,
+                    b,
+                    &bb,
+                    b,
+                    1.0,
+                    &mut c,
+                    b,
+                );
+            });
+            let t_syrk = time_op(reps, medians, || {
+                dsyrk_ln_raw(b, b, -1.0, &a, b, 1.0, &mut c, b);
+            });
+            // Restore the right-hand side every rep: repeated in-place
+            // L^{-T} applications would shrink it toward denormals and
+            // trip the kernels' nonzero short-circuits.
+            let mut bt = bb.clone();
+            let t_trsm = time_op(reps, medians, || {
+                bt.copy_from_slice(&bb);
+                dtrsm_rltn_raw(b, b, &lfac, b, &mut bt, b);
+            });
+            // Pre-allocated scratch: only the restore copy stays inside
+            // the timing (cheap O(b²) next to the O(b³/3) factorization);
+            // no per-iteration heap traffic skews the GFLOP/s telemetry.
+            let mut scratch = spd.clone();
+            let t_potrf = time_op(reps, medians, || {
+                scratch.copy_from_slice(&spd);
+                dpotrf_raw(b, &mut scratch, b).unwrap();
+            });
+            assert!(set_simd_override(None));
+            let fb = b as f64;
+            [
+                2.0 * fb * fb * fb / t_gemm * reps as f64 / 1e9,
+                fb * fb * fb / t_syrk * reps as f64 / 1e9,
+                fb * fb * fb / t_trsm * reps as f64 / 1e9,
+                fb * fb * fb / 3.0 / t_potrf * reps as f64 / 1e9,
+            ]
+        };
+        let simd = measure(detected_simd());
+        let scal = measure(SimdLevel::Scalar);
+        for (i, op) in ["gemm", "syrk", "trsm", "potrf"].into_iter().enumerate() {
+            rows.push(KernelRow {
+                op,
+                prec: "f64",
+                b,
+                gflops_dispatch: simd[i],
+                gflops_scalar: scal[i],
+            });
+        }
+
+        // f32 gemm through the mixed-precision path (f32 operands and
+        // destination): the MP variant's off-band compute kernel.
+        let a32: Vec<f32> = a.iter().map(|&v| v as f32).collect();
+        let b32: Vec<f32> = bb.iter().map(|&v| v as f32).collect();
+        let mut c32 = vec![0.0f32; b * b];
+        let mut measure32 = |level: SimdLevel| -> f64 {
+            let t = time_op(reps, medians, || {
+                gemm_mp_at(
+                    level,
+                    Trans::N,
+                    Trans::T,
+                    b,
+                    b,
+                    b,
+                    -1.0,
+                    MatRef::F32(&a32),
+                    b,
+                    MatRef::F32(&b32),
+                    b,
+                    1.0,
+                    MatMut::F32(&mut c32),
+                    b,
+                );
+            });
+            2.0 * (b as f64).powi(3) / t * reps as f64 / 1e9
+        };
+        rows.push(KernelRow {
+            op: "gemm",
+            prec: "f32",
+            b,
+            gflops_dispatch: measure32(detected_simd()),
+            gflops_scalar: measure32(SimdLevel::Scalar),
+        });
+
+        for r in rows.iter().filter(|r| r.b == b) {
+            row(&[
+                r.op.into(),
+                r.prec.into(),
+                format!("{}", r.b),
+                s2(r.gflops_dispatch),
+                s2(r.gflops_scalar),
+                s2(r.gflops_dispatch / r.gflops_scalar),
+            ]);
+        }
+    }
+
+    // -----------------------------------------------------------------
+    // End-to-end: warm exact-session evaluation, dispatch vs scalar,
+    // and the MP (band 1) evaluation under dispatch.
+    // -----------------------------------------------------------------
+    let n = if quick { 240 } else { 600 };
+    // Keep several tile rows so MP band=1 really has f32 off-band tiles.
+    let ts = if quick { 64 } else { 128 };
+    let theta = [1.0, 0.1, 0.5];
+    let locs: Vec<Location> = (0..n)
+        .map(|_| Location::new(rng.next_f64(), rng.next_f64()))
+        .collect();
+    let z: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let problem = Problem {
+        kernel: kernel_by_name("ugsm-s").unwrap().into(),
+        locs: Arc::new(locs),
+        z: Arc::new(z),
+        metric: DistanceMetric::Euclidean,
+    };
+    let ctx = ExecCtx::new(2, ts, Policy::Prio);
+    let k = if quick { 2 } else { 4 };
+
+    let mut exact = EvalSession::new(&problem, Variant::Exact, &ctx).unwrap();
+    exact.eval(&theta).unwrap(); // warm caches + workspaces
+    assert!(set_simd_override(Some(SimdLevel::Scalar)));
+    let t_scalar = time_median(k, || {
+        exact.eval(&theta).unwrap();
+    });
+    assert!(set_simd_override(None));
+    let t_dispatch = time_median(k, || {
+        exact.eval(&theta).unwrap();
+    });
+
+    let mut mp = EvalSession::new(&problem, Variant::Mp { band: 1 }, &ctx).unwrap();
+    mp.eval(&theta).unwrap();
+    let t_mp = time_median(k, || {
+        mp.eval(&theta).unwrap();
+    });
+
+    println!(
+        "\nexact warm eval n={n} ts={ts}: scalar {:.4}s, dispatch {:.4}s ({:.2}x); \
+         mp band=1 {:.4}s (exact/mp {:.2}x)",
+        t_scalar,
+        t_dispatch,
+        t_scalar / t_dispatch,
+        t_mp,
+        t_dispatch / t_mp
+    );
+
+    // -----------------------------------------------------------------
+    // BENCH_kernels.json
+    // -----------------------------------------------------------------
+    let jnum = |v: f64| -> String {
+        if v.is_finite() {
+            format!("{v}")
+        } else {
+            "null".into()
+        }
+    };
+    let kernel_rows: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "    {{\"op\": \"{}\", \"prec\": \"{}\", \"b\": {}, \
+                 \"gflops_dispatch\": {}, \"gflops_scalar\": {}, \"ratio\": {}}}",
+                r.op,
+                r.prec,
+                r.b,
+                jnum(r.gflops_dispatch),
+                jnum(r.gflops_scalar),
+                jnum(r.gflops_dispatch / r.gflops_scalar)
+            )
+        })
+        .collect();
+    let mut json = String::from("{\n");
+    json.push_str("  \"bench\": \"kernel_roofline\",\n");
+    json.push_str(&format!(
+        "  \"simd_detected\": \"{}\",\n  \"simd_active\": \"{}\",\n",
+        detected_simd().name(),
+        simd_level().name()
+    ));
+    json.push_str(&format!("  \"kernels\": [\n{}\n  ],\n", kernel_rows.join(",\n")));
+    json.push_str(&format!(
+        "  \"mle\": {{\n    \"n\": {n}, \"ts\": {ts},\n    \
+         \"exact_eval_scalar_s\": {},\n    \"exact_eval_dispatch_s\": {},\n    \
+         \"dispatch_speedup\": {},\n    \"mp_eval_dispatch_s\": {},\n    \
+         \"mp_vs_exact\": {}\n  }}\n",
+        jnum(t_scalar),
+        jnum(t_dispatch),
+        jnum(t_scalar / t_dispatch),
+        jnum(t_mp),
+        jnum(t_dispatch / t_mp)
+    ));
+    json.push_str("}\n");
+    let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_kernels.json".into());
+    std::fs::write(&out, &json).unwrap_or_else(|e| eprintln!("cannot write {out}: {e}"));
+    println!("telemetry written to {out}");
+}

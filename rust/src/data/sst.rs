@@ -12,8 +12,8 @@
 //! field plus an exactly-sampled Matérn GRF, masked by procedural land /
 //! orbital-wedge / cloud processes.  The default grid is scaled down from
 //! 72 x 240 so the exact `O(n^3)` fits of the tutorial run in seconds on
-//! this testbed (documented in EXPERIMENTS.md); the full paper shape is a
-//! config change.
+//! this testbed (documented in EXPERIMENTS.md §SST workload scaling); the
+//! full paper shape is a config change.
 
 use crate::covariance::{DistanceMetric, Location};
 use crate::likelihood::ExecCtx;

@@ -16,7 +16,9 @@
 //!   pure-Rust engine and PJRT at context construction).
 //!
 //! See `DESIGN.md` for the full system inventory and the experiment index,
-//! and `EXPERIMENTS.md` for reproduced paper results.
+//! and `EXPERIMENTS.md` for the benchmark telemetry schemas
+//! (§Kernel roofline, §Time per iteration, §Serving) and what "good"
+//! looks like for each reproduced result.
 
 pub mod api;
 pub mod backend;

@@ -33,7 +33,9 @@ pub fn submit_generation(
 /// likelihood hot path passes `ctx.engine`).  `dist` is the per-tile
 /// distance cache of a warm [`super::EvalSession`] iteration; each task
 /// captures its tile's `Arc`-shared block so the engine can skip the
-/// metric work.
+/// metric work.  `a` must be all-f64 storage — the MP variant, whose
+/// off-band tiles are f32-stored, generates through its own
+/// `submit_generation_mp` (demote-on-store via a reusable f64 stage).
 #[allow(clippy::too_many_arguments)]
 pub fn submit_generation_with(
     g: &mut TaskGraph,
@@ -47,13 +49,13 @@ pub fn submit_generation_with(
 ) {
     let nt = a.nt();
     let ts = a.ts();
-    let bytes = a.tile_bytes();
     let theta: Arc<Vec<f64>> = Arc::new(theta.to_vec());
     for i in 0..nt {
         for j in 0..=i {
             if !in_band(band, i, j) {
                 continue;
             }
+            let bytes = a.tile_bytes_at(i, j);
             let h = a.tile_rows(i);
             let w = a.tile_cols(j);
             let ptr = a.tile_ptr(i, j);

@@ -2,16 +2,20 @@
 //!
 //! Like DST, tiles far from the diagonal are treated specially — but
 //! instead of being annihilated they are *demoted to single precision*:
-//! their entries are rounded through f32 at generation time and their GEMM
-//! updates execute through an f32 accumulate path.  Near-diagonal tiles
-//! (within `band`) stay fully double precision.  This reproduces the
-//! accuracy behaviour (f32 rounding of weak interactions) and the
-//! performance model (half-width arithmetic on the off-band bulk) of the
-//! paper's MP variant.
+//! off-band tiles are **stored as f32** ([`TileMatrix::zeros_mp`]) and
+//! every factorization update touching them executes through the f32
+//! micro-kernel path (`linalg::blas::gemm_mp` and friends — operands
+//! demoted while packing, f64 accumulation at tile boundaries).
+//! Near-diagonal tiles (within `band`) stay fully double precision.
+//! This reproduces both the accuracy behaviour (f32 rounding of weak
+//! interactions) and the performance behaviour (half-width storage and
+//! arithmetic on the off-band bulk) of the paper's MP variant — a
+//! measured speedup, not a simulated rounding.
 
 use super::{ExecCtx, LogLik, Problem};
 use crate::backend::{ArcEngine, Engine as _};
 use crate::covariance::DistCache;
+use crate::linalg::blas::{with_stage_f64, MatMut};
 use crate::linalg::cholesky::{
     check_fail, new_fail_flag, submit_tiled_forward_solve_banded, submit_tiled_potrf, TileHandles,
 };
@@ -19,21 +23,25 @@ use crate::linalg::tile::{TileMatrix, TileVector};
 use crate::scheduler::{Access, TaskGraph, TaskKind};
 use std::sync::Arc;
 
-/// Is tile (i, j) kept in full precision?
+/// Is tile (i, j) kept in full precision?  Delegates to the single
+/// storage-rule predicate next to [`TileMatrix::zeros_mp`], so the MP
+/// semantics and the workspace layout cannot drift apart.
 #[inline]
 pub fn is_f64_tile(band: usize, i: usize, j: usize) -> bool {
-    i - j <= band
+    crate::linalg::tile::mp_tile_is_f64(band, i, j)
 }
 
-/// Round a buffer through f32 (the MP storage demotion).
+/// Round a buffer through f32 (the MP storage demotion — what storing a
+/// tile as f32 does value-wise; kept for tests and oracles).
 pub fn demote_f32(buf: &mut [f64]) {
     for v in buf.iter_mut() {
         *v = *v as f32 as f64;
     }
 }
 
-/// Submit MP generation tasks: every lower tile is generated; off-band
-/// tiles are rounded through f32.
+/// Submit MP generation tasks: every lower tile is generated; f32-stored
+/// off-band tiles are evaluated into a reusable thread-local f64 stage
+/// (the covariance kernels are f64 code) and demoted on store.
 #[allow(clippy::too_many_arguments)]
 fn submit_generation_mp(
     g: &mut TaskGraph,
@@ -41,16 +49,15 @@ fn submit_generation_mp(
     hs: &TileHandles,
     problem: &Problem,
     theta: &[f64],
-    band: usize,
     engine: &ArcEngine,
     dist: Option<&DistCache>,
 ) {
     let nt = a.nt();
     let ts = a.ts();
-    let bytes = a.tile_bytes();
     let theta: Arc<Vec<f64>> = Arc::new(theta.to_vec());
     for i in 0..nt {
         for j in 0..=i {
+            let bytes = a.tile_bytes_at(i, j);
             let h = a.tile_rows(i);
             let w = a.tile_cols(j);
             let ptr = a.tile_ptr(i, j);
@@ -61,24 +68,42 @@ fn submit_generation_mp(
             let engine = engine.clone();
             let block = dist.and_then(|c| c.block(i, j));
             let (row0, col0) = (i * ts, j * ts);
-            let demote = !is_f64_tile(band, i, j);
             g.submit(TaskKind::DCMG, &[(hs.at(i, j), Access::W)], bytes, move || {
                 // SAFETY: STF ordering gives exclusive access to the tile.
-                let out = unsafe { ptr.as_mut() };
-                engine.fill_tile(
-                    kernel.as_ref(),
-                    &theta,
-                    &locs,
-                    metric,
-                    row0,
-                    col0,
-                    h,
-                    w,
-                    block.as_deref(),
-                    out,
-                );
-                if demote {
-                    demote_f32(out);
+                match unsafe { ptr.mat_mut() } {
+                    MatMut::F64(out) => {
+                        engine.fill_tile(
+                            kernel.as_ref(),
+                            &theta,
+                            &locs,
+                            metric,
+                            row0,
+                            col0,
+                            h,
+                            w,
+                            block.as_deref(),
+                            out,
+                        );
+                    }
+                    MatMut::F32(out) => {
+                        with_stage_f64(h * w, |stage| {
+                            engine.fill_tile(
+                                kernel.as_ref(),
+                                &theta,
+                                &locs,
+                                metric,
+                                row0,
+                                col0,
+                                h,
+                                w,
+                                block.as_deref(),
+                                stage,
+                            );
+                            for (d, s) in out.iter_mut().zip(stage.iter()) {
+                                *d = *s as f32;
+                            }
+                        });
+                    }
                 }
             });
         }
@@ -94,13 +119,15 @@ pub fn loglik(
     ctx: &ExecCtx,
 ) -> anyhow::Result<LogLik> {
     let dim = problem.dim();
-    let a = TileMatrix::zeros(dim, ctx.ts);
+    let a = TileMatrix::zeros_mp(dim, ctx.ts, band);
     let y = TileVector::from_slice(&problem.z, ctx.ts);
     run_pipeline(problem, theta, band, ctx, None, &a, &y)
 }
 
 /// MP pipeline over caller-owned storage (see
 /// [`super::exact::run_pipeline`] for the workspace-reuse contract).
+/// `a` must be mixed-precision storage allocated with the same `band`
+/// ([`TileMatrix::zeros_mp`]).
 pub(crate) fn run_pipeline(
     problem: &Problem,
     theta: &[f64],
@@ -110,12 +137,14 @@ pub(crate) fn run_pipeline(
     a: &TileMatrix,
     y: &TileVector,
 ) -> anyhow::Result<LogLik> {
+    debug_assert_eq!(a.mp_band(), Some(band), "workspace band mismatch");
     let mut g = TaskGraph::new();
     let hs = TileHandles::register(&mut g, a.nt());
-    submit_generation_mp(&mut g, a, &hs, problem, theta, band, &ctx.engine, dist);
+    submit_generation_mp(&mut g, a, &hs, problem, theta, &ctx.engine, dist);
     let fail = new_fail_flag();
-    // Factorization is structurally dense (band = None): MP rounds values,
-    // it does not drop tiles.
+    // Factorization is structurally dense (band = None): MP demotes
+    // values and arithmetic, it does not drop tiles — the per-tile
+    // precision dispatch lives inside `submit_tiled_potrf`.
     submit_tiled_potrf(&mut g, a, &hs, None, &fail);
     let yh = g.register_many(y.nt());
     submit_tiled_forward_solve_banded(&mut g, a, &hs, y, &yh, None);
@@ -153,7 +182,7 @@ mod tests {
         let oracle = dense_oracle(&p, &theta);
         let mp = loglik(&p, &theta, 0, &ctx).unwrap();
         let rel = (mp.loglik - oracle.loglik).abs() / oracle.loglik.abs();
-        // f32 rounding of off-diagonal tiles: relative error well below
+        // f32 storage + f32 off-band compute: relative error well below
         // 1e-3 but (generically) nonzero.
         assert!(rel < 1e-3, "rel {rel}");
         assert!(rel > 0.0, "suspiciously exact");

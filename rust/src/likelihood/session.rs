@@ -17,10 +17,14 @@
 //!   from the cache through the [`crate::backend::Engine::fill_tile`]
 //!   fast path, and mirrors diagonal tiles instead of evaluating their
 //!   upper halves;
-//! * **workspace reuse**: the `TileMatrix` factor storage and the
-//!   `TileVector` solve vector are allocated once and reloaded per
-//!   iteration, so warm iterations perform zero large allocations
-//!   (guarded by the `tile_matrix_allocs` regression tests).
+//! * **workspace reuse**: the `TileMatrix` factor storage (mixed
+//!   precision for the MP variant) and the `TileVector` solve vector are
+//!   allocated once and reloaded per iteration, and the runtime workers'
+//!   thread-local pack buffers are pre-grown at session build
+//!   (`Runtime::prewarm_workers` → `blas::reserve_pack_workspaces`), so
+//!   warm iterations perform zero large allocations — on the submitting
+//!   thread *and* on the workers (guarded by the `tile_matrix_allocs`
+//!   and `pack_buffer_allocs` regression tests).
 //!
 //! `api::ExaGeoStat::mle` routes every optimizer objective evaluation
 //! through a session; one-shot callers can keep using `likelihood::loglik`.
@@ -105,11 +109,26 @@ impl EvalSession {
         ));
         let tiled = match variant {
             Variant::Tlr { .. } => None,
+            // MP stores off-band tiles as f32 — the workspace must carry
+            // the same per-tile precision layout the pipeline expects.
+            Variant::Mp { band } => Some(TiledWorkspace {
+                a: TileMatrix::zeros_mp(dim, ctx.ts, band),
+                y: TileVector::from_slice(&z, ctx.ts),
+            }),
             _ => Some(TiledWorkspace {
                 a: TileMatrix::zeros(dim, ctx.ts),
                 y: TileVector::from_slice(&z, ctx.ts),
             }),
         };
+        // Best-effort: grow every runtime worker's thread-local pack
+        // workspace up front, so even the first evaluation's tile kernels
+        // run allocation-free (warm iterations are guarded by the
+        // pack-buffer regression test either way).  Deduplicated per
+        // runtime by tile size: repeat session builds on a shared
+        // (coordinator) runtime skip it.
+        let ts = ctx.ts;
+        ctx.runtime
+            .prewarm_workers_once(ts, move || crate::linalg::blas::reserve_pack_workspaces(ts));
         Ok(EvalSession {
             variant,
             ctx: ctx.clone(),

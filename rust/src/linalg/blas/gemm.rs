@@ -1,0 +1,525 @@
+//! Packed-blocked GEMM: the one macro-kernel every BLAS-3 routine in the
+//! crate (SYRK, the blocked TRSMs, and through them tiled/blocked POTRF)
+//! funnels its bulk FLOPs through.
+//!
+//! `dgemm_raw` is the f64 entry point; `gemm_mp` is the mixed-precision
+//! entry point the MP variant's tile tasks use — any f32 operand routes
+//! the product through the f32 micro-kernel (operands demoted during
+//! packing, accumulation into an f64 destination happens in f64 at the
+//! micro-tile boundary).  Both dispatch to the micro-kernel selected by
+//! [`super::simd::simd_level`]; the `_at` forms take an explicit level
+//! for the conformance suite and the roofline bench.
+
+use super::pack::{self, MatMut, MatRef};
+use super::simd::{self, MR32, MR64, NR32, NR64, SimdLevel};
+use super::Trans;
+
+/// Cache blocking parameters (f64): KC*MR*8 ≈ L1-resident A strip,
+/// MC*KC*8 ≈ L2-resident A block.  Shared with the f32 path (whose
+/// footprint is half) and with the workspace-reserve sizing in `pack`.
+pub(super) const KC: usize = 256;
+pub(super) const MC: usize = 128;
+
+/// Below this `m*n*k` the naive triple loop beats packing overhead.
+const NAIVE_CUTOFF: usize = 16 * 16 * 16;
+
+/// General matrix multiply on raw column-major buffers:
+/// `C <- alpha * op(A) * op(B) + beta * C` where `op(A)` is `m x k` and
+/// `op(B)` is `k x n`.  Dispatches to the process-wide SIMD level.
+#[allow(clippy::too_many_arguments)]
+pub fn dgemm_raw(
+    ta: Trans,
+    tb: Trans,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f64,
+    a: &[f64],
+    lda: usize,
+    b: &[f64],
+    ldb: usize,
+    beta: f64,
+    c: &mut [f64],
+    ldc: usize,
+) {
+    dgemm_raw_at(simd::simd_level(), ta, tb, m, n, k, alpha, a, lda, b, ldb, beta, c, ldc)
+}
+
+/// [`dgemm_raw`] at an explicit dispatch `level` (conformance/bench API:
+/// lets one process compare e.g. the AVX2 path against the scalar
+/// oracle without touching global state).
+#[allow(clippy::too_many_arguments)]
+pub fn dgemm_raw_at(
+    level: SimdLevel,
+    ta: Trans,
+    tb: Trans,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f64,
+    a: &[f64],
+    lda: usize,
+    b: &[f64],
+    ldb: usize,
+    beta: f64,
+    c: &mut [f64],
+    ldc: usize,
+) {
+    if m == 0 || n == 0 {
+        return;
+    }
+    // Scale C by beta first (packed kernel accumulates).
+    if beta == 0.0 {
+        for j in 0..n {
+            for v in &mut c[j * ldc..j * ldc + m] {
+                *v = 0.0;
+            }
+        }
+    } else if beta != 1.0 {
+        for j in 0..n {
+            for v in &mut c[j * ldc..j * ldc + m] {
+                *v *= beta;
+            }
+        }
+    }
+    if k == 0 || alpha == 0.0 {
+        return;
+    }
+
+    // Small problems: naive triple loop beats packing overhead.
+    if m * n * k <= NAIVE_CUTOFF {
+        dgemm_naive(ta, tb, m, n, k, alpha, a, lda, b, ldb, c, ldc);
+        return;
+    }
+
+    pack::with_ws(|ws| {
+        let ws = &mut *ws;
+        let mut p0 = 0;
+        while p0 < k {
+            let kc = KC.min(k - p0);
+            // B panel is packed once per (p0) and reused across A blocks.
+            let nstrips = n.div_ceil(NR64);
+            let pb = pack::grown(&mut ws.pb64, nstrips * kc * NR64);
+            pack::pack_b64(tb, b, ldb, p0, 0, kc, n, pb);
+            let mut i0 = 0;
+            while i0 < m {
+                let mc = MC.min(m - i0);
+                let mstrips = mc.div_ceil(MR64);
+                let pa = pack::grown(&mut ws.pa64, mstrips * kc * MR64);
+                pack::pack_a64(ta, a, lda, i0, p0, mc, kc, pa);
+                for js in 0..nstrips {
+                    let j = js * NR64;
+                    let nr = NR64.min(n - j);
+                    let pbs = &pb[js * kc * NR64..(js + 1) * kc * NR64];
+                    for is in 0..mstrips {
+                        let i = is * MR64;
+                        let mr = MR64.min(mc - i);
+                        let pas = &pa[is * kc * MR64..(is + 1) * kc * MR64];
+                        let coff = (i0 + i) + j * ldc;
+                        if mr == MR64 && nr == NR64 {
+                            simd::run_mk64(level, kc, alpha, pas, pbs, &mut c[coff..], ldc);
+                        } else {
+                            simd::mk64_edge(kc, alpha, pas, pbs, &mut c[coff..], ldc, mr, nr);
+                        }
+                    }
+                }
+                i0 += mc;
+            }
+            p0 += kc;
+        }
+    });
+}
+
+/// Reference triple-loop gemm (also the oracle in tests).
+#[allow(clippy::too_many_arguments)]
+pub fn dgemm_naive(
+    ta: Trans,
+    tb: Trans,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f64,
+    a: &[f64],
+    lda: usize,
+    b: &[f64],
+    ldb: usize,
+    c: &mut [f64],
+    ldc: usize,
+) {
+    let at = |i: usize, p: usize| -> f64 {
+        match ta {
+            Trans::N => a[i + p * lda],
+            Trans::T => a[p + i * lda],
+        }
+    };
+    let bt = |p: usize, j: usize| -> f64 {
+        match tb {
+            Trans::N => b[p + j * ldb],
+            Trans::T => b[j + p * ldb],
+        }
+    };
+    for j in 0..n {
+        for i in 0..m {
+            let mut acc = 0.0;
+            for p in 0..k {
+                acc += at(i, p) * bt(p, j);
+            }
+            c[i + j * ldc] += alpha * acc;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Mixed precision
+// ---------------------------------------------------------------------------
+
+/// Mixed-precision GEMM over tagged operands:
+/// `C <- alpha * op(A) * op(B) + beta * C`.
+///
+/// All-f64 operands take the plain [`dgemm_raw`] path.  If *any* operand
+/// is f32 (an MP off-band tile), the product runs through the f32
+/// micro-kernel: f64 sources are demoted while packing, the micro-tile
+/// product accumulates in f32 over `k`, and the merge into an f64
+/// destination happens in f64 — "f64 accumulate at tile boundaries".
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_mp(
+    ta: Trans,
+    tb: Trans,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f64,
+    a: MatRef<'_>,
+    lda: usize,
+    b: MatRef<'_>,
+    ldb: usize,
+    beta: f64,
+    c: MatMut<'_>,
+    ldc: usize,
+) {
+    gemm_mp_at(simd::simd_level(), ta, tb, m, n, k, alpha, a, lda, b, ldb, beta, c, ldc)
+}
+
+/// [`gemm_mp`] at an explicit dispatch level (conformance/bench API).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_mp_at(
+    level: SimdLevel,
+    ta: Trans,
+    tb: Trans,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f64,
+    a: MatRef<'_>,
+    lda: usize,
+    b: MatRef<'_>,
+    ldb: usize,
+    beta: f64,
+    c: MatMut<'_>,
+    ldc: usize,
+) {
+    match (a, b, c) {
+        (MatRef::F64(a), MatRef::F64(b), MatMut::F64(c)) => {
+            dgemm_raw_at(level, ta, tb, m, n, k, alpha, a, lda, b, ldb, beta, c, ldc)
+        }
+        (a, b, mut c) => {
+            if m == 0 || n == 0 {
+                return;
+            }
+            scale_beta_mp(&mut c, m, n, beta, ldc);
+            if k == 0 || alpha == 0.0 {
+                return;
+            }
+            if m * n * k <= NAIVE_CUTOFF {
+                gemm_mp_naive(ta, tb, m, n, k, alpha, a, lda, b, ldb, &mut c, ldc);
+                return;
+            }
+            pack::with_ws(|ws| {
+                let ws = &mut *ws;
+                let mut p0 = 0;
+                while p0 < k {
+                    let kc = KC.min(k - p0);
+                    let nstrips = n.div_ceil(NR32);
+                    let pb = pack::grown(&mut ws.pb32, nstrips * kc * NR32);
+                    pack::pack_b32(tb, b, ldb, p0, 0, kc, n, pb);
+                    let mut i0 = 0;
+                    while i0 < m {
+                        let mc = MC.min(m - i0);
+                        let mstrips = mc.div_ceil(MR32);
+                        let pa = pack::grown(&mut ws.pa32, mstrips * kc * MR32);
+                        pack::pack_a32(ta, a, lda, i0, p0, mc, kc, pa);
+                        for js in 0..nstrips {
+                            let j = js * NR32;
+                            let nr = NR32.min(n - j);
+                            let pbs = &pb[js * kc * NR32..(js + 1) * kc * NR32];
+                            for is in 0..mstrips {
+                                let i = is * MR32;
+                                let mr = MR32.min(mc - i);
+                                let pas = &pa[is * kc * MR32..(is + 1) * kc * MR32];
+                                let coff = (i0 + i) + j * ldc;
+                                let mut out = [0.0f32; MR32 * NR32];
+                                simd::run_mk32(level, kc, pas, pbs, &mut out);
+                                store_mp(&out, alpha, &mut c, coff, ldc, mr, nr);
+                            }
+                        }
+                        i0 += mc;
+                    }
+                    p0 += kc;
+                }
+            });
+        }
+    }
+}
+
+/// Scale the `m x n` destination by beta in its own precision
+/// (`beta == 0` overwrites, LAPACK convention — NaNs in C are ignored).
+fn scale_beta_mp(c: &mut MatMut<'_>, m: usize, n: usize, beta: f64, ldc: usize) {
+    if beta == 1.0 {
+        return;
+    }
+    match c {
+        MatMut::F64(s) => {
+            for j in 0..n {
+                for v in &mut s[j * ldc..j * ldc + m] {
+                    *v = if beta == 0.0 { 0.0 } else { *v * beta };
+                }
+            }
+        }
+        MatMut::F32(s) => {
+            let bt = beta as f32;
+            for j in 0..n {
+                for v in &mut s[j * ldc..j * ldc + m] {
+                    *v = if beta == 0.0 { 0.0 } else { *v * bt };
+                }
+            }
+        }
+    }
+}
+
+/// Merge one micro-tile product into the destination: the f64 arm is the
+/// "f64 accumulate at tile boundaries" step of the MP design.
+fn store_mp(
+    out: &[f32; MR32 * NR32],
+    alpha: f64,
+    c: &mut MatMut<'_>,
+    coff: usize,
+    ldc: usize,
+    mr: usize,
+    nr: usize,
+) {
+    match c {
+        MatMut::F64(s) => {
+            for j in 0..nr {
+                let cj = &mut s[coff + j * ldc..coff + j * ldc + mr];
+                let oj = &out[j * MR32..j * MR32 + mr];
+                for i in 0..mr {
+                    cj[i] += alpha * oj[i] as f64;
+                }
+            }
+        }
+        MatMut::F32(s) => {
+            let al = alpha as f32;
+            for j in 0..nr {
+                let cj = &mut s[coff + j * ldc..coff + j * ldc + mr];
+                let oj = &out[j * MR32..j * MR32 + mr];
+                for i in 0..mr {
+                    cj[i] += al * oj[i];
+                }
+            }
+        }
+    }
+}
+
+/// Naive mixed-precision triple loop (small problems + oracle): f32
+/// products and f32 accumulation over `k`, destination merge in its own
+/// precision — the same arithmetic the packed path performs.
+#[allow(clippy::too_many_arguments)]
+fn gemm_mp_naive(
+    ta: Trans,
+    tb: Trans,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f64,
+    a: MatRef<'_>,
+    lda: usize,
+    b: MatRef<'_>,
+    ldb: usize,
+    c: &mut MatMut<'_>,
+    ldc: usize,
+) {
+    let at = |i: usize, p: usize| -> f32 {
+        match ta {
+            Trans::N => a.get_f32(i + p * lda),
+            Trans::T => a.get_f32(p + i * lda),
+        }
+    };
+    let bt = |p: usize, j: usize| -> f32 {
+        match tb {
+            Trans::N => b.get_f32(p + j * ldb),
+            Trans::T => b.get_f32(j + p * ldb),
+        }
+    };
+    for j in 0..n {
+        for i in 0..m {
+            let mut acc = 0.0f32;
+            for p in 0..k {
+                acc += at(i, p) * bt(p, j);
+            }
+            match c {
+                MatMut::F64(s) => s[i + j * ldc] += alpha * acc as f64,
+                MatMut::F32(s) => s[i + j * ldc] += alpha as f32 * acc,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn rand_mat(rng: &mut Pcg64, m: usize, n: usize) -> Vec<f64> {
+        (0..m * n).map(|_| rng.uniform(-1.0, 1.0)).collect()
+    }
+
+    #[test]
+    fn mixed_path_matches_f64_at_f32_scale() {
+        let mut rng = Pcg64::seed_from_u64(41);
+        for &(m, n, k) in &[(5usize, 4usize, 3usize), (33, 29, 40), (64, 64, 64)] {
+            let a = rand_mat(&mut rng, m, k);
+            let b = rand_mat(&mut rng, k, n);
+            let a32: Vec<f32> = a.iter().map(|&v| v as f32).collect();
+            let c0 = rand_mat(&mut rng, m, n);
+            let mut cref = c0.clone();
+            dgemm_raw(Trans::N, Trans::N, m, n, k, 1.2, &a, m, &b, k, 0.5, &mut cref, m);
+            // f32 A against f64 B into f64 C: f32-scale agreement.
+            let mut cmp = c0.clone();
+            gemm_mp(
+                Trans::N,
+                Trans::N,
+                m,
+                n,
+                k,
+                1.2,
+                MatRef::F32(&a32),
+                m,
+                MatRef::F64(&b),
+                k,
+                0.5,
+                MatMut::F64(&mut cmp),
+                m,
+            );
+            let err = cmp
+                .iter()
+                .zip(&cref)
+                .map(|(x, y)| (x - y).abs())
+                .fold(0.0, f64::max);
+            assert!(err < 1e-4 * k as f64, "({m},{n},{k}) err {err}");
+            assert!(err > 0.0 || k == 0, "f32 path should not be bit-exact");
+        }
+    }
+
+    #[test]
+    fn mixed_all_f64_operands_take_exact_path() {
+        // Pinned to an explicit level: the implicit-dispatch entry points
+        // would race the process-global override another test may flip.
+        let mut rng = Pcg64::seed_from_u64(42);
+        let (m, n, k) = (23, 17, 31);
+        let a = rand_mat(&mut rng, m, k);
+        let b = rand_mat(&mut rng, n, k);
+        let c0 = rand_mat(&mut rng, m, n);
+        let mut c1 = c0.clone();
+        let mut c2 = c0.clone();
+        let level = SimdLevel::Scalar;
+        dgemm_raw_at(level, Trans::N, Trans::T, m, n, k, -1.0, &a, m, &b, n, 1.0, &mut c1, m);
+        gemm_mp_at(
+            level,
+            Trans::N,
+            Trans::T,
+            m,
+            n,
+            k,
+            -1.0,
+            MatRef::F64(&a),
+            m,
+            MatRef::F64(&b),
+            n,
+            1.0,
+            MatMut::F64(&mut c2),
+            m,
+        );
+        assert_eq!(c1, c2, "all-f64 mixed call must be bit-identical");
+    }
+
+    #[test]
+    fn mixed_beta_zero_overwrites_nan_f32_dest() {
+        let a32 = vec![1.0f32, 2.0, 3.0, 4.0];
+        let b32 = vec![1.0f32, 0.0, 0.0, 1.0];
+        let mut c = vec![f32::NAN; 4];
+        gemm_mp(
+            Trans::N,
+            Trans::N,
+            2,
+            2,
+            2,
+            1.0,
+            MatRef::F32(&a32),
+            2,
+            MatRef::F32(&b32),
+            2,
+            0.0,
+            MatMut::F32(&mut c),
+            2,
+        );
+        assert_eq!(c, a32);
+    }
+
+    #[test]
+    fn forced_levels_agree_on_mixed_path() {
+        // Packed-vs-packed across levels (scalar vs detected): exercises
+        // run_mk32 store layout; tight f32 tolerance since both paths do
+        // the identical f32 packing.
+        let mut rng = Pcg64::seed_from_u64(43);
+        let (m, n, k) = (47, 38, 52);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+        let mut c1 = vec![0.0f32; m * n];
+        let mut c2 = vec![0.0f32; m * n];
+        gemm_mp_at(
+            SimdLevel::Scalar,
+            Trans::N,
+            Trans::N,
+            m,
+            n,
+            k,
+            1.0,
+            MatRef::F32(&a),
+            m,
+            MatRef::F32(&b),
+            k,
+            0.0,
+            MatMut::F32(&mut c1),
+            m,
+        );
+        gemm_mp_at(
+            simd::detected_simd(),
+            Trans::N,
+            Trans::N,
+            m,
+            n,
+            k,
+            1.0,
+            MatRef::F32(&a),
+            m,
+            MatRef::F32(&b),
+            k,
+            0.0,
+            MatMut::F32(&mut c2),
+            m,
+        );
+        for (x, y) in c1.iter().zip(&c2) {
+            assert!((x - y).abs() <= 1e-4, "{x} vs {y}");
+        }
+    }
+}

@@ -1,0 +1,460 @@
+//! Operand packing and reusable per-thread pack workspaces.
+//!
+//! GotoBLAS-style GEMM re-lays blocks of A and B into strip-contiguous
+//! buffers so the micro-kernel streams them at unit stride.  The original
+//! implementation allocated those buffers with a fresh `Vec` inside every
+//! call — per *task* on the runtime workers, i.e. thousands of heap
+//! round-trips per MLE iteration.  Here the buffers live in a
+//! thread-local [`PackWs`]: the persistent `scheduler::Runtime` workers
+//! grow them once (or are pre-grown via
+//! `Runtime::prewarm_workers` + [`reserve_pack_workspaces`]) and every
+//! warm tile task after that packs into already-owned memory.
+//!
+//! Growth events are counted in a process-global counter
+//! ([`pack_buffer_allocs`], re-exported through `testkit`) — the
+//! telemetry behind the "warm iterations perform zero pack-buffer
+//! allocations" regression test, the pack-workspace sibling of the
+//! `tile_matrix_allocs` counter from the session layer.  The counter is
+//! global (not thread-local) because the allocations happen on worker
+//! threads while the asserting test observes from the submitting thread.
+
+use super::gemm::{KC, MC};
+use super::simd::{MR32, MR64, NR32, NR64};
+use super::Trans;
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Borrowed read-only matrix storage in either precision (the mixed-
+/// precision seam: MP off-band tiles are `F32`, everything else `F64`).
+#[derive(Copy, Clone)]
+pub enum MatRef<'a> {
+    /// Full-precision column-major storage.
+    F64(&'a [f64]),
+    /// Demoted column-major storage (MP off-band tiles).
+    F32(&'a [f32]),
+}
+
+impl<'a> MatRef<'a> {
+    /// Element at linear index `idx`, demoted to f32 (the MP compute
+    /// precision; exact for `F32`, a rounding for `F64`).
+    #[inline]
+    pub fn get_f32(&self, idx: usize) -> f32 {
+        match self {
+            MatRef::F64(s) => s[idx] as f32,
+            MatRef::F32(s) => s[idx],
+        }
+    }
+
+    /// Is this the demoted representation?
+    pub fn is_f32(&self) -> bool {
+        matches!(self, MatRef::F32(_))
+    }
+
+    /// The same matrix starting at linear offset `off` (column-major
+    /// sub-panel with unchanged leading dimension).
+    #[inline]
+    pub fn slice_from(self, off: usize) -> MatRef<'a> {
+        match self {
+            MatRef::F64(s) => MatRef::F64(&s[off..]),
+            MatRef::F32(s) => MatRef::F32(&s[off..]),
+        }
+    }
+}
+
+/// Borrowed mutable matrix storage in either precision.
+pub enum MatMut<'a> {
+    /// Full-precision column-major storage.
+    F64(&'a mut [f64]),
+    /// Demoted column-major storage (MP off-band tiles).
+    F32(&'a mut [f32]),
+}
+
+impl<'a> MatMut<'a> {
+    /// Reborrow (so a `MatMut` can be handed to a callee and used again).
+    #[inline]
+    pub fn rb(&mut self) -> MatMut<'_> {
+        match self {
+            MatMut::F64(s) => MatMut::F64(s),
+            MatMut::F32(s) => MatMut::F32(s),
+        }
+    }
+
+    /// The same matrix starting at linear offset `off`.
+    #[inline]
+    pub fn slice_from(self, off: usize) -> MatMut<'a> {
+        match self {
+            MatMut::F64(s) => MatMut::F64(&mut s[off..]),
+            MatMut::F32(s) => MatMut::F32(&mut s[off..]),
+        }
+    }
+
+    /// Shared view of the same storage.
+    #[inline]
+    pub fn view(&self) -> MatRef<'_> {
+        match self {
+            MatMut::F64(s) => MatRef::F64(s),
+            MatMut::F32(s) => MatRef::F32(s),
+        }
+    }
+
+    /// Is this the demoted representation?
+    pub fn is_f32(&self) -> bool {
+        matches!(self, MatMut::F32(_))
+    }
+}
+
+/// Process-global count of pack/stage buffer growth events (heap
+/// allocations performed by [`grown`]); see the module docs.
+static PACK_BUFFER_ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+thread_local! {
+    /// Same events, counted per thread (for tests whose kernel calls all
+    /// run on the asserting thread — immune to concurrent test threads).
+    static PACK_BUFFER_ALLOCS_LOCAL: std::cell::Cell<u64> = std::cell::Cell::new(0);
+}
+
+/// Pack/stage buffer allocations performed by the whole process so far.
+/// Global on purpose: the allocations of interest happen on runtime
+/// *worker* threads while the regression test observes from the
+/// submitting thread (run it in a dedicated test binary — concurrent
+/// kernel-running tests in the same process would perturb the count).
+pub fn pack_buffer_allocs() -> u64 {
+    PACK_BUFFER_ALLOCS.load(Ordering::SeqCst)
+}
+
+/// Pack/stage buffer allocations performed by the current thread.
+pub fn pack_buffer_allocs_this_thread() -> u64 {
+    PACK_BUFFER_ALLOCS_LOCAL.with(|c| c.get())
+}
+
+/// Per-thread reusable buffers for packing and precision staging.
+#[derive(Default)]
+pub(super) struct PackWs {
+    /// Packed A block, f64 path.
+    pub pa64: Vec<f64>,
+    /// Packed B panel, f64 path.
+    pub pb64: Vec<f64>,
+    /// Packed A block, f32 path.
+    pub pa32: Vec<f32>,
+    /// Packed B panel, f32 path.
+    pub pb32: Vec<f32>,
+    /// f64 staging area (MP tile generation before demotion).
+    pub stage64: Vec<f64>,
+    /// f32 staging area (triangular-factor demotion for MP TRSM).
+    pub stage32: Vec<f32>,
+}
+
+thread_local! {
+    static WS: RefCell<PackWs> = RefCell::new(PackWs::default());
+}
+
+/// Run `f` with this thread's pack workspace.  Re-entrant calls (which
+/// the current kernels never make — packing callers do not nest) fall
+/// back to a fresh, uncounted-after-drop workspace rather than panicking.
+pub(super) fn with_ws<R>(f: impl FnOnce(&mut PackWs) -> R) -> R {
+    WS.with(|cell| match cell.try_borrow_mut() {
+        Ok(mut ws) => f(&mut ws),
+        Err(_) => f(&mut PackWs::default()),
+    })
+}
+
+/// Make `v` at least `len` elements long, counting real reallocations in
+/// [`pack_buffer_allocs`].  Contents beyond the previous length are
+/// unspecified — every consumer fully overwrites the region it reads.
+pub(super) fn grown<T: Copy + Default>(v: &mut Vec<T>, len: usize) -> &mut [T] {
+    if v.len() < len {
+        if v.capacity() < len {
+            PACK_BUFFER_ALLOCS.fetch_add(1, Ordering::SeqCst);
+            PACK_BUFFER_ALLOCS_LOCAL.with(|c| c.set(c.get() + 1));
+        }
+        v.resize(len, T::default());
+    }
+    &mut v[..len]
+}
+
+/// Grow the *current thread's* pack and stage buffers to the worst-case
+/// footprint of tile-level kernels at tile size `ts`.  Called through
+/// `Runtime::prewarm_workers` when an `EvalSession` is built, so warm
+/// iterations start with fully-grown worker workspaces.
+pub fn reserve_pack_workspaces(ts: usize) {
+    let ts = ts.max(1);
+    let kc = KC.min(ts);
+    let pa64_cap = MC.min(ts).div_ceil(MR64) * MR64 * kc;
+    let pb64_cap = ts.div_ceil(NR64) * NR64 * kc;
+    let pa32_cap = MC.min(ts).div_ceil(MR32) * MR32 * kc;
+    let pb32_cap = ts.div_ceil(NR32) * NR32 * kc;
+    with_ws(|ws| {
+        let _ = grown(&mut ws.pa64, pa64_cap);
+        let _ = grown(&mut ws.pb64, pb64_cap);
+        let _ = grown(&mut ws.pa32, pa32_cap);
+        let _ = grown(&mut ws.pb32, pb32_cap);
+        let _ = grown(&mut ws.stage64, ts * ts);
+        let _ = grown(&mut ws.stage32, ts * ts);
+    });
+}
+
+/// Run `f` with a reusable f64 staging buffer of `len` elements (zero
+/// warm allocations; contents on entry are unspecified).  Used by the MP
+/// generation tasks to evaluate the covariance kernel in f64 before
+/// demoting into an f32-stored tile.
+pub fn with_stage_f64<R>(len: usize, f: impl FnOnce(&mut [f64]) -> R) -> R {
+    with_ws(|ws| f(grown(&mut ws.stage64, len)))
+}
+
+// ---------------------------------------------------------------------------
+// Packing
+// ---------------------------------------------------------------------------
+
+/// Pack an `mc x kc` block of op(A) into MR64-row strips, zero padded.
+/// `op(A)[i, p]` with `i` in `[i0, i0+mc)`, `p` in `[p0, p0+kc)`.
+/// `out` must hold `mc.div_ceil(MR64) * kc * MR64` elements.
+#[allow(clippy::too_many_arguments)]
+pub(super) fn pack_a64(
+    ta: Trans,
+    a: &[f64],
+    lda: usize,
+    i0: usize,
+    p0: usize,
+    mc: usize,
+    kc: usize,
+    out: &mut [f64],
+) {
+    let strips = mc.div_ceil(MR64);
+    for s in 0..strips {
+        let ib = s * MR64;
+        let mr = MR64.min(mc - ib);
+        let dst_base = s * kc * MR64;
+        for p in 0..kc {
+            let dst = &mut out[dst_base + p * MR64..dst_base + p * MR64 + MR64];
+            match ta {
+                Trans::N => {
+                    let col = p0 + p;
+                    for i in 0..mr {
+                        dst[i] = a[(i0 + ib + i) + col * lda];
+                    }
+                }
+                Trans::T => {
+                    for i in 0..mr {
+                        dst[i] = a[(p0 + p) + (i0 + ib + i) * lda];
+                    }
+                }
+            }
+            for i in mr..MR64 {
+                dst[i] = 0.0;
+            }
+        }
+    }
+}
+
+/// Pack a `kc x nc` block of op(B) into NR64-column strips, zero padded.
+/// `out` must hold `nc.div_ceil(NR64) * kc * NR64` elements.
+#[allow(clippy::too_many_arguments)]
+pub(super) fn pack_b64(
+    tb: Trans,
+    b: &[f64],
+    ldb: usize,
+    p0: usize,
+    j0: usize,
+    kc: usize,
+    nc: usize,
+    out: &mut [f64],
+) {
+    let strips = nc.div_ceil(NR64);
+    for s in 0..strips {
+        let jb = s * NR64;
+        let nr = NR64.min(nc - jb);
+        let dst_base = s * kc * NR64;
+        for p in 0..kc {
+            let dst = &mut out[dst_base + p * NR64..dst_base + p * NR64 + NR64];
+            match tb {
+                Trans::N => {
+                    for j in 0..nr {
+                        dst[j] = b[(p0 + p) + (j0 + jb + j) * ldb];
+                    }
+                }
+                Trans::T => {
+                    for j in 0..nr {
+                        dst[j] = b[(j0 + jb + j) + (p0 + p) * ldb];
+                    }
+                }
+            }
+            for j in nr..NR64 {
+                dst[j] = 0.0;
+            }
+        }
+    }
+}
+
+/// f32-path `pack_a64` analogue (MR32 strips); the source may be either
+/// precision — f64 sources are demoted during the copy, which is where
+/// the MP path's in-band operands get rounded for an off-band product.
+#[allow(clippy::too_many_arguments)]
+pub(super) fn pack_a32(
+    ta: Trans,
+    a: MatRef<'_>,
+    lda: usize,
+    i0: usize,
+    p0: usize,
+    mc: usize,
+    kc: usize,
+    out: &mut [f32],
+) {
+    match a {
+        MatRef::F64(s) => pack_a32_from(s, |v| v as f32, ta, lda, i0, p0, mc, kc, out),
+        MatRef::F32(s) => pack_a32_from(s, |v| v, ta, lda, i0, p0, mc, kc, out),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn pack_a32_from<S: Copy>(
+    a: &[S],
+    conv: impl Fn(S) -> f32,
+    ta: Trans,
+    lda: usize,
+    i0: usize,
+    p0: usize,
+    mc: usize,
+    kc: usize,
+    out: &mut [f32],
+) {
+    let strips = mc.div_ceil(MR32);
+    for s in 0..strips {
+        let ib = s * MR32;
+        let mr = MR32.min(mc - ib);
+        let dst_base = s * kc * MR32;
+        for p in 0..kc {
+            let dst = &mut out[dst_base + p * MR32..dst_base + p * MR32 + MR32];
+            match ta {
+                Trans::N => {
+                    let col = p0 + p;
+                    for i in 0..mr {
+                        dst[i] = conv(a[(i0 + ib + i) + col * lda]);
+                    }
+                }
+                Trans::T => {
+                    for i in 0..mr {
+                        dst[i] = conv(a[(p0 + p) + (i0 + ib + i) * lda]);
+                    }
+                }
+            }
+            for i in mr..MR32 {
+                dst[i] = 0.0;
+            }
+        }
+    }
+}
+
+/// f32-path `pack_b64` analogue (NR32 strips), mixed-precision source.
+#[allow(clippy::too_many_arguments)]
+pub(super) fn pack_b32(
+    tb: Trans,
+    b: MatRef<'_>,
+    ldb: usize,
+    p0: usize,
+    j0: usize,
+    kc: usize,
+    nc: usize,
+    out: &mut [f32],
+) {
+    match b {
+        MatRef::F64(s) => pack_b32_from(s, |v| v as f32, tb, ldb, p0, j0, kc, nc, out),
+        MatRef::F32(s) => pack_b32_from(s, |v| v, tb, ldb, p0, j0, kc, nc, out),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn pack_b32_from<S: Copy>(
+    b: &[S],
+    conv: impl Fn(S) -> f32,
+    tb: Trans,
+    ldb: usize,
+    p0: usize,
+    j0: usize,
+    kc: usize,
+    nc: usize,
+    out: &mut [f32],
+) {
+    let strips = nc.div_ceil(NR32);
+    for s in 0..strips {
+        let jb = s * NR32;
+        let nr = NR32.min(nc - jb);
+        let dst_base = s * kc * NR32;
+        for p in 0..kc {
+            let dst = &mut out[dst_base + p * NR32..dst_base + p * NR32 + NR32];
+            match tb {
+                Trans::N => {
+                    for j in 0..nr {
+                        dst[j] = conv(b[(p0 + p) + (j0 + jb + j) * ldb]);
+                    }
+                }
+                Trans::T => {
+                    for j in 0..nr {
+                        dst[j] = conv(b[(j0 + jb + j) + (p0 + p) * ldb]);
+                    }
+                }
+            }
+            for j in nr..NR32 {
+                dst[j] = 0.0;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grown_counts_only_reallocations() {
+        // Thread-local counter: concurrent test threads cannot perturb it.
+        let before = pack_buffer_allocs_this_thread();
+        let global_before = pack_buffer_allocs();
+        let mut v: Vec<f64> = Vec::new();
+        let _ = grown(&mut v, 100);
+        assert_eq!(pack_buffer_allocs_this_thread(), before + 1, "cold growth counted");
+        let _ = grown(&mut v, 64);
+        let _ = grown(&mut v, 100);
+        assert_eq!(pack_buffer_allocs_this_thread(), before + 1, "warm reuse uncounted");
+        let _ = grown(&mut v, 1000);
+        assert!(pack_buffer_allocs_this_thread() >= before + 2, "re-growth counted");
+        assert!(pack_buffer_allocs() >= global_before + 2, "global mirror advanced");
+    }
+
+    #[test]
+    fn reserve_makes_tile_packs_warm() {
+        // After reserving for ts, packing any block that fits a ts-tile
+        // op must not grow the workspace.
+        reserve_pack_workspaces(96);
+        let before = pack_buffer_allocs_this_thread();
+        with_ws(|ws| {
+            let _ = grown(&mut ws.pa64, MC.min(96).div_ceil(MR64) * MR64 * KC.min(96));
+            let _ = grown(&mut ws.pb64, 96usize.div_ceil(NR64) * NR64 * KC.min(96));
+            let _ = grown(&mut ws.stage64, 96 * 96);
+            let _ = grown(&mut ws.stage32, 96 * 96);
+        });
+        assert_eq!(pack_buffer_allocs_this_thread(), before);
+    }
+
+    #[test]
+    fn pack32_demotes_f64_sources() {
+        // 3x2 col-major matrix, N-trans pack of the whole block.
+        let a = [1.0f64 + 1e-12, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let mut out = vec![7.0f32; MR32 * 2];
+        pack_a32(Trans::N, MatRef::F64(&a), 3, 0, 0, 3, 2, &mut out);
+        assert_eq!(out[0], 1.0f32, "f64 value rounded through f32");
+        assert_eq!(out[1], 2.0);
+        assert_eq!(out[2], 3.0);
+        assert_eq!(out[3], 0.0, "zero padded to MR32");
+        assert_eq!(out[MR32], 4.0, "second k-slice");
+    }
+
+    #[test]
+    fn mat_ref_get_f32_both_precisions() {
+        let a64 = [std::f64::consts::PI];
+        let a32 = [std::f32::consts::PI];
+        assert_eq!(MatRef::F64(&a64).get_f32(0), std::f64::consts::PI as f32);
+        assert_eq!(MatRef::F32(&a32).get_f32(0), std::f32::consts::PI);
+        assert!(!MatRef::F64(&a64).is_f32());
+        assert!(MatRef::F32(&a32).is_f32());
+    }
+}

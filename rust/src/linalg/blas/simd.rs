@@ -1,0 +1,521 @@
+//! Runtime-dispatched SIMD micro-kernels.
+//!
+//! The packed GEMM macro-kernel (see `gemm.rs`) funnels every bulk FLOP of
+//! the crate through one of the register micro-kernels below.  Which
+//! implementation runs is decided **once per process** by CPU-feature
+//! detection ([`simd_level`]), overridable with
+//! `EXAGEOSTAT_SIMD=auto|avx2|neon|scalar` (surfaced exactly like
+//! `EXAGEOSTAT_BACKEND`) and, for benches/tests that need to compare paths
+//! in-process, with [`set_simd_override`].
+//!
+//! The scalar micro-kernel is kept unconditionally: it is the conformance
+//! oracle the SIMD paths are tested against (`rust/tests/simd_kernels.rs`,
+//! tolerance 1e-13 — the only permitted divergence is FMA vs separate
+//! multiply/add rounding), and the fallback on hardware without AVX2+FMA
+//! or NEON.
+//!
+//! Register-block geometry (shared by every implementation so packing and
+//! results are layout-identical across dispatch levels):
+//!
+//! * f64: `MR64 x NR64 = 8 x 6` — AVX2 keeps the 12 accumulators in ymm
+//!   registers (2 x 4 lanes per column), NEON in 24 `float64x2_t`.
+//! * f32: `MR32 x NR32 = 16 x 6` — twice the lane width at the same
+//!   register budget; this is what makes the MP compute path pay off.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+/// f64 micro-tile rows (A-panel strip height).
+pub(super) const MR64: usize = 8;
+/// f64 micro-tile columns (B-panel strip width).
+pub(super) const NR64: usize = 6;
+/// f32 micro-tile rows.
+pub(super) const MR32: usize = 16;
+/// f32 micro-tile columns.
+pub(super) const NR32: usize = 6;
+
+/// Which micro-kernel implementation the dispatcher runs.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum SimdLevel {
+    /// Portable Rust loops — always available, the conformance oracle.
+    Scalar,
+    /// `std::arch::x86_64` AVX2 + FMA (requires both CPU features).
+    Avx2,
+    /// `std::arch::aarch64` NEON.
+    Neon,
+}
+
+impl SimdLevel {
+    /// Stable lowercase name (the `EXAGEOSTAT_SIMD` vocabulary).
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdLevel::Scalar => "scalar",
+            SimdLevel::Avx2 => "avx2",
+            SimdLevel::Neon => "neon",
+        }
+    }
+
+    /// Can this level execute on the current CPU?
+    pub fn is_available(self) -> bool {
+        match self {
+            SimdLevel::Scalar => true,
+            SimdLevel::Avx2 => {
+                #[cfg(target_arch = "x86_64")]
+                {
+                    is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+                }
+                #[cfg(not(target_arch = "x86_64"))]
+                {
+                    false
+                }
+            }
+            SimdLevel::Neon => {
+                #[cfg(target_arch = "aarch64")]
+                {
+                    std::arch::is_aarch64_feature_detected!("neon")
+                }
+                #[cfg(not(target_arch = "aarch64"))]
+                {
+                    false
+                }
+            }
+        }
+    }
+}
+
+/// Best level the current CPU supports (ignores env and override).
+pub fn detected_simd() -> SimdLevel {
+    if SimdLevel::Avx2.is_available() {
+        SimdLevel::Avx2
+    } else if SimdLevel::Neon.is_available() {
+        SimdLevel::Neon
+    } else {
+        SimdLevel::Scalar
+    }
+}
+
+/// Resolve `EXAGEOSTAT_SIMD` once.  Unknown names warn and fall back to
+/// auto-detection; a named level the CPU cannot run warns and falls back
+/// to scalar (never to an illegal-instruction crash).
+fn base_level() -> SimdLevel {
+    static BASE: OnceLock<SimdLevel> = OnceLock::new();
+    *BASE.get_or_init(|| match std::env::var("EXAGEOSTAT_SIMD") {
+        Err(_) => detected_simd(),
+        Ok(v) => match v.as_str() {
+            "auto" => detected_simd(),
+            "scalar" => SimdLevel::Scalar,
+            "avx2" => checked_request(SimdLevel::Avx2),
+            "neon" => checked_request(SimdLevel::Neon),
+            other => {
+                eprintln!(
+                    "warning: EXAGEOSTAT_SIMD={other:?} not recognized \
+                     (auto|avx2|neon|scalar); auto-detecting"
+                );
+                detected_simd()
+            }
+        },
+    })
+}
+
+fn checked_request(level: SimdLevel) -> SimdLevel {
+    if level.is_available() {
+        level
+    } else {
+        eprintln!(
+            "warning: EXAGEOSTAT_SIMD={} requested but this CPU does not \
+             support it; falling back to the scalar kernels",
+            level.name()
+        );
+        SimdLevel::Scalar
+    }
+}
+
+/// In-process override (0 = none); lets benches and the conformance suite
+/// compare dispatch paths without re-exec'ing under a different env.
+static OVERRIDE: AtomicU8 = AtomicU8::new(0);
+
+/// Force a dispatch level for the whole process (benches / tests only —
+/// production selection is `EXAGEOSTAT_SIMD`).  Requests for a level the
+/// CPU cannot run are ignored; returns whether the override (or reset,
+/// for `None`) was applied.
+pub fn set_simd_override(level: Option<SimdLevel>) -> bool {
+    let code = match level {
+        None => 0,
+        Some(l) if !l.is_available() => return false,
+        Some(SimdLevel::Scalar) => 1,
+        Some(SimdLevel::Avx2) => 2,
+        Some(SimdLevel::Neon) => 3,
+    };
+    OVERRIDE.store(code, Ordering::SeqCst);
+    true
+}
+
+/// The micro-kernel level every BLAS-3 call in this process dispatches to.
+#[inline]
+pub fn simd_level() -> SimdLevel {
+    match OVERRIDE.load(Ordering::Relaxed) {
+        1 => SimdLevel::Scalar,
+        2 => SimdLevel::Avx2,
+        3 => SimdLevel::Neon,
+        _ => base_level(),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// f64 micro-kernels: C(MR64 x NR64) += alpha * PA(MR64 x k) * PB(k x NR64)
+// ---------------------------------------------------------------------------
+
+/// Portable full-tile f64 micro-kernel (also the conformance oracle).
+fn mk64_scalar(k: usize, alpha: f64, pa: &[f64], pb: &[f64], c: &mut [f64], ldc: usize) {
+    // Accumulate in registers; `ab[j*MR64 + i]` = C(i, j).
+    let mut ab = [0.0f64; MR64 * NR64];
+    let mut pa_off = 0;
+    let mut pb_off = 0;
+    for _ in 0..k {
+        let a = &pa[pa_off..pa_off + MR64];
+        let b = &pb[pb_off..pb_off + NR64];
+        // Fully unrolled so LLVM vectorizes to the widest baseline lanes.
+        for j in 0..NR64 {
+            let bj = b[j];
+            let abj = &mut ab[j * MR64..(j + 1) * MR64];
+            for i in 0..MR64 {
+                abj[i] += a[i] * bj;
+            }
+        }
+        pa_off += MR64;
+        pb_off += NR64;
+    }
+    for j in 0..NR64 {
+        let cj = &mut c[j * ldc..j * ldc + MR64];
+        let abj = &ab[j * MR64..(j + 1) * MR64];
+        for i in 0..MR64 {
+            cj[i] += alpha * abj[i];
+        }
+    }
+}
+
+/// Like the full kernel but writes only the valid `mr x nr` corner (edge
+/// strips).  Edges are O(perimeter) work, so they always run this scalar
+/// path regardless of dispatch level — the levels therefore differ only
+/// on full tiles.
+#[allow(clippy::too_many_arguments)]
+pub(super) fn mk64_edge(
+    k: usize,
+    alpha: f64,
+    pa: &[f64],
+    pb: &[f64],
+    c: &mut [f64],
+    ldc: usize,
+    mr: usize,
+    nr: usize,
+) {
+    let mut ab = [0.0f64; MR64 * NR64];
+    let mut pa_off = 0;
+    let mut pb_off = 0;
+    for _ in 0..k {
+        let a = &pa[pa_off..pa_off + MR64];
+        let b = &pb[pb_off..pb_off + NR64];
+        for j in 0..NR64 {
+            let bj = b[j];
+            let abj = &mut ab[j * MR64..(j + 1) * MR64];
+            for i in 0..MR64 {
+                abj[i] += a[i] * bj;
+            }
+        }
+        pa_off += MR64;
+        pb_off += NR64;
+    }
+    for j in 0..nr {
+        for i in 0..mr {
+            c[i + j * ldc] += alpha * ab[j * MR64 + i];
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn mk64_avx2(k: usize, alpha: f64, pa: &[f64], pb: &[f64], c: &mut [f64], ldc: usize) {
+    use std::arch::x86_64::*;
+    debug_assert!(pa.len() >= k * MR64 && pb.len() >= k * NR64);
+    debug_assert!(c.len() >= (NR64 - 1) * ldc + MR64);
+    // 12 ymm accumulators: two 4-lane halves per column.
+    let mut acc = [_mm256_setzero_pd(); 2 * NR64];
+    let mut ap = pa.as_ptr();
+    let mut bp = pb.as_ptr();
+    for _ in 0..k {
+        let a0 = _mm256_loadu_pd(ap);
+        let a1 = _mm256_loadu_pd(ap.add(4));
+        for j in 0..NR64 {
+            let b = _mm256_set1_pd(*bp.add(j));
+            acc[2 * j] = _mm256_fmadd_pd(a0, b, acc[2 * j]);
+            acc[2 * j + 1] = _mm256_fmadd_pd(a1, b, acc[2 * j + 1]);
+        }
+        ap = ap.add(MR64);
+        bp = bp.add(NR64);
+    }
+    let va = _mm256_set1_pd(alpha);
+    for j in 0..NR64 {
+        let cp = c.as_mut_ptr().add(j * ldc);
+        _mm256_storeu_pd(cp, _mm256_fmadd_pd(va, acc[2 * j], _mm256_loadu_pd(cp)));
+        let cp4 = cp.add(4);
+        _mm256_storeu_pd(cp4, _mm256_fmadd_pd(va, acc[2 * j + 1], _mm256_loadu_pd(cp4)));
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn mk64_neon(k: usize, alpha: f64, pa: &[f64], pb: &[f64], c: &mut [f64], ldc: usize) {
+    use std::arch::aarch64::*;
+    debug_assert!(pa.len() >= k * MR64 && pb.len() >= k * NR64);
+    debug_assert!(c.len() >= (NR64 - 1) * ldc + MR64);
+    // 24 q-register accumulators: four 2-lane quarters per column.
+    let mut acc = [vdupq_n_f64(0.0); 4 * NR64];
+    let mut ap = pa.as_ptr();
+    let mut bp = pb.as_ptr();
+    for _ in 0..k {
+        let a0 = vld1q_f64(ap);
+        let a1 = vld1q_f64(ap.add(2));
+        let a2 = vld1q_f64(ap.add(4));
+        let a3 = vld1q_f64(ap.add(6));
+        for j in 0..NR64 {
+            let b = vdupq_n_f64(*bp.add(j));
+            acc[4 * j] = vfmaq_f64(acc[4 * j], a0, b);
+            acc[4 * j + 1] = vfmaq_f64(acc[4 * j + 1], a1, b);
+            acc[4 * j + 2] = vfmaq_f64(acc[4 * j + 2], a2, b);
+            acc[4 * j + 3] = vfmaq_f64(acc[4 * j + 3], a3, b);
+        }
+        ap = ap.add(MR64);
+        bp = bp.add(NR64);
+    }
+    let va = vdupq_n_f64(alpha);
+    for j in 0..NR64 {
+        let cp = c.as_mut_ptr().add(j * ldc);
+        for q in 0..4 {
+            let p = cp.add(2 * q);
+            vst1q_f64(p, vfmaq_f64(vld1q_f64(p), acc[4 * j + q], va));
+        }
+    }
+}
+
+/// Dispatch one full f64 micro-tile at `level`.
+///
+/// `c` must hold at least `(NR64 - 1) * ldc + MR64` elements.
+#[inline]
+pub(super) fn run_mk64(
+    level: SimdLevel,
+    k: usize,
+    alpha: f64,
+    pa: &[f64],
+    pb: &[f64],
+    c: &mut [f64],
+    ldc: usize,
+) {
+    match level {
+        SimdLevel::Scalar => mk64_scalar(k, alpha, pa, pb, c, ldc),
+        SimdLevel::Avx2 => {
+            // SAFETY: `Avx2` is only reachable through `simd_level()` /
+            // `set_simd_override`, both of which verify CPU support.
+            #[cfg(target_arch = "x86_64")]
+            unsafe {
+                mk64_avx2(k, alpha, pa, pb, c, ldc)
+            };
+            #[cfg(not(target_arch = "x86_64"))]
+            mk64_scalar(k, alpha, pa, pb, c, ldc);
+        }
+        SimdLevel::Neon => {
+            // SAFETY: as above — `Neon` implies NEON support was detected.
+            #[cfg(target_arch = "aarch64")]
+            unsafe {
+                mk64_neon(k, alpha, pa, pb, c, ldc)
+            };
+            #[cfg(not(target_arch = "aarch64"))]
+            mk64_scalar(k, alpha, pa, pb, c, ldc);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// f32 micro-kernels: OUT(MR32 x NR32) = PA(MR32 x k) * PB(k x NR32)
+//
+// Compute-only: the product is written (not accumulated) into a stack
+// tile; the caller applies alpha and merges into the destination, which
+// is how the MP path accumulates f32 products into f64 tiles at tile
+// boundaries.
+// ---------------------------------------------------------------------------
+
+fn mk32_scalar(k: usize, pa: &[f32], pb: &[f32], out: &mut [f32; MR32 * NR32]) {
+    let mut ab = [0.0f32; MR32 * NR32];
+    let mut pa_off = 0;
+    let mut pb_off = 0;
+    for _ in 0..k {
+        let a = &pa[pa_off..pa_off + MR32];
+        let b = &pb[pb_off..pb_off + NR32];
+        for j in 0..NR32 {
+            let bj = b[j];
+            let abj = &mut ab[j * MR32..(j + 1) * MR32];
+            for i in 0..MR32 {
+                abj[i] += a[i] * bj;
+            }
+        }
+        pa_off += MR32;
+        pb_off += NR32;
+    }
+    *out = ab;
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn mk32_avx2(k: usize, pa: &[f32], pb: &[f32], out: &mut [f32; MR32 * NR32]) {
+    use std::arch::x86_64::*;
+    debug_assert!(pa.len() >= k * MR32 && pb.len() >= k * NR32);
+    let mut acc = [_mm256_setzero_ps(); 2 * NR32];
+    let mut ap = pa.as_ptr();
+    let mut bp = pb.as_ptr();
+    for _ in 0..k {
+        let a0 = _mm256_loadu_ps(ap);
+        let a1 = _mm256_loadu_ps(ap.add(8));
+        for j in 0..NR32 {
+            let b = _mm256_set1_ps(*bp.add(j));
+            acc[2 * j] = _mm256_fmadd_ps(a0, b, acc[2 * j]);
+            acc[2 * j + 1] = _mm256_fmadd_ps(a1, b, acc[2 * j + 1]);
+        }
+        ap = ap.add(MR32);
+        bp = bp.add(NR32);
+    }
+    for j in 0..NR32 {
+        let op = out.as_mut_ptr().add(j * MR32);
+        _mm256_storeu_ps(op, acc[2 * j]);
+        _mm256_storeu_ps(op.add(8), acc[2 * j + 1]);
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn mk32_neon(k: usize, pa: &[f32], pb: &[f32], out: &mut [f32; MR32 * NR32]) {
+    use std::arch::aarch64::*;
+    debug_assert!(pa.len() >= k * MR32 && pb.len() >= k * NR32);
+    let mut acc = [vdupq_n_f32(0.0); 4 * NR32];
+    let mut ap = pa.as_ptr();
+    let mut bp = pb.as_ptr();
+    for _ in 0..k {
+        let a0 = vld1q_f32(ap);
+        let a1 = vld1q_f32(ap.add(4));
+        let a2 = vld1q_f32(ap.add(8));
+        let a3 = vld1q_f32(ap.add(12));
+        for j in 0..NR32 {
+            let b = vdupq_n_f32(*bp.add(j));
+            acc[4 * j] = vfmaq_f32(acc[4 * j], a0, b);
+            acc[4 * j + 1] = vfmaq_f32(acc[4 * j + 1], a1, b);
+            acc[4 * j + 2] = vfmaq_f32(acc[4 * j + 2], a2, b);
+            acc[4 * j + 3] = vfmaq_f32(acc[4 * j + 3], a3, b);
+        }
+        ap = ap.add(MR32);
+        bp = bp.add(NR32);
+    }
+    for j in 0..NR32 {
+        let op = out.as_mut_ptr().add(j * MR32);
+        for q in 0..4 {
+            vst1q_f32(op.add(4 * q), acc[4 * j + q]);
+        }
+    }
+}
+
+/// Dispatch one full f32 micro-tile at `level` (compute-only; see above).
+#[inline]
+pub(super) fn run_mk32(
+    level: SimdLevel,
+    k: usize,
+    pa: &[f32],
+    pb: &[f32],
+    out: &mut [f32; MR32 * NR32],
+) {
+    match level {
+        SimdLevel::Scalar => mk32_scalar(k, pa, pb, out),
+        SimdLevel::Avx2 => {
+            // SAFETY: `Avx2` implies detection succeeded (see run_mk64).
+            #[cfg(target_arch = "x86_64")]
+            unsafe {
+                mk32_avx2(k, pa, pb, out)
+            };
+            #[cfg(not(target_arch = "x86_64"))]
+            mk32_scalar(k, pa, pb, out);
+        }
+        SimdLevel::Neon => {
+            // SAFETY: `Neon` implies detection succeeded (see run_mk64).
+            #[cfg(target_arch = "aarch64")]
+            unsafe {
+                mk32_neon(k, pa, pb, out)
+            };
+            #[cfg(not(target_arch = "aarch64"))]
+            mk32_scalar(k, pa, pb, out);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn detected_level_is_available() {
+        assert!(detected_simd().is_available());
+        assert!(SimdLevel::Scalar.is_available());
+    }
+
+    #[test]
+    fn override_rejects_unavailable_levels_without_mutating() {
+        // Exactly one of Avx2/Neon can be available on any one arch, so
+        // at least one of these requests must be rejected — and a
+        // rejected request must not change dispatch.  The accept/reset
+        // path (which mutates process-global state and would race other
+        // lib tests' implicit-dispatch calls) is exercised in the
+        // dedicated integration binary `rust/tests/simd_kernels.rs`.
+        let a = SimdLevel::Avx2;
+        let n = SimdLevel::Neon;
+        assert!(!(a.is_available() && n.is_available()));
+        for l in [a, n] {
+            if !l.is_available() {
+                let before = simd_level();
+                assert!(!set_simd_override(Some(l)));
+                assert_eq!(simd_level(), before);
+                assert_ne!(simd_level(), l);
+            }
+        }
+        // The un-overridden level is the env/detection resolution.
+        assert!(base_level().is_available());
+    }
+
+    #[test]
+    fn names_round_trip_the_env_vocabulary() {
+        assert_eq!(SimdLevel::Scalar.name(), "scalar");
+        assert_eq!(SimdLevel::Avx2.name(), "avx2");
+        assert_eq!(SimdLevel::Neon.name(), "neon");
+    }
+
+    #[test]
+    fn micro_kernels_agree_full_tile() {
+        // Direct micro-kernel-level parity at the detected level (the
+        // integration suite covers the whole gemm; this pins the kernel
+        // itself).
+        let k = 37;
+        let pa: Vec<f64> = (0..k * MR64).map(|i| ((i * 7) % 13) as f64 / 13.0 - 0.5).collect();
+        let pb: Vec<f64> = (0..k * NR64).map(|i| ((i * 5) % 11) as f64 / 11.0 - 0.5).collect();
+        let mut c1 = vec![0.25f64; MR64 * NR64];
+        let mut c2 = c1.clone();
+        mk64_scalar(k, 1.5, &pa, &pb, &mut c1, MR64);
+        run_mk64(detected_simd(), k, 1.5, &pa, &pb, &mut c2, MR64);
+        for (x, y) in c1.iter().zip(&c2) {
+            assert!((x - y).abs() < 1e-13, "{x} vs {y}");
+        }
+
+        let pa: Vec<f32> = (0..k * MR32).map(|i| ((i * 7) % 13) as f32 / 13.0 - 0.5).collect();
+        let pb: Vec<f32> = (0..k * NR32).map(|i| ((i * 5) % 11) as f32 / 11.0 - 0.5).collect();
+        let mut o1 = [0.0f32; MR32 * NR32];
+        let mut o2 = [0.0f32; MR32 * NR32];
+        mk32_scalar(k, &pa, &pb, &mut o1);
+        run_mk32(detected_simd(), k, &pa, &pb, &mut o2);
+        for (x, y) in o1.iter().zip(&o2) {
+            assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+        }
+    }
+}

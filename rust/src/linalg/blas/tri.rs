@@ -1,0 +1,670 @@
+//! Triangular and symmetric kernels: SYRK, the TRSM family, POTRF,
+//! GEMV/TRMV/TRSV — plus the mixed-precision variants the MP tile tasks
+//! dispatch to.
+//!
+//! The blocked TRSM/SYRK routines delegate their bulk FLOPs to the packed
+//! [`super::gemm::dgemm_raw`] macro-kernel (and therefore to the dispatched
+//! SIMD micro-kernels); only O(block²·NB) work remains in the
+//! column-oriented diagonal solves.  The previous column-at-a-time
+//! implementations are retained as `*_naive` — they are the conformance
+//! oracles in `rust/tests/simd_kernels.rs` and the small-problem paths.
+
+use super::gemm::{dgemm_raw, gemm_mp};
+use super::pack::{self, MatMut, MatRef};
+use super::Trans;
+
+/// Column block width of the blocked triangular solves; below this the
+/// naive routine runs directly.
+const TRSM_NB: usize = 64;
+
+// ---------------------------------------------------------------------------
+// syrk
+// ---------------------------------------------------------------------------
+
+/// Symmetric rank-k update, lower, no-trans:
+/// `C <- alpha * A * A^T + beta * C` touching only the lower triangle.
+/// `A` is `n x k`, `C` is `n x n`.  Bulk FLOPs (the below-diagonal
+/// panels) run through the packed gemm; only the `NB x NB` diagonal
+/// blocks use the naive symmetric update.
+#[allow(clippy::too_many_arguments)]
+pub fn dsyrk_ln_raw(
+    n: usize,
+    k: usize,
+    alpha: f64,
+    a: &[f64],
+    lda: usize,
+    beta: f64,
+    c: &mut [f64],
+    ldc: usize,
+) {
+    const NB: usize = 32;
+    if beta != 1.0 {
+        for j in 0..n {
+            for i in j..n {
+                let v = &mut c[i + j * ldc];
+                *v = if beta == 0.0 { 0.0 } else { *v * beta };
+            }
+        }
+    }
+    let mut j0 = 0;
+    while j0 < n {
+        let nb = NB.min(n - j0);
+        // Diagonal block: naive symmetric update (small).
+        for j in j0..j0 + nb {
+            for i in j..j0 + nb {
+                let mut acc = 0.0;
+                for p in 0..k {
+                    acc += a[i + p * lda] * a[j + p * lda];
+                }
+                c[i + j * ldc] += alpha * acc;
+            }
+        }
+        // Below-diagonal panel: gemm (i in [j0+nb, n), columns j0..j0+nb).
+        let m = n - (j0 + nb);
+        if m > 0 {
+            // C[j0+nb.., j0..j0+nb] += alpha * A[j0+nb..,:] * A[j0..j0+nb,:]^T
+            let coff = (j0 + nb) + j0 * ldc;
+            dgemm_raw(
+                Trans::N,
+                Trans::T,
+                m,
+                nb,
+                k,
+                alpha,
+                &a[j0 + nb..],
+                lda,
+                &a[j0..],
+                lda,
+                1.0,
+                &mut c[coff..],
+                ldc,
+            );
+        }
+        j0 += nb;
+    }
+}
+
+/// Reference triple-loop SYRK (lower): the conformance oracle for
+/// [`dsyrk_ln_raw`], with identical beta semantics.
+#[allow(clippy::too_many_arguments)]
+pub fn dsyrk_ln_naive(
+    n: usize,
+    k: usize,
+    alpha: f64,
+    a: &[f64],
+    lda: usize,
+    beta: f64,
+    c: &mut [f64],
+    ldc: usize,
+) {
+    for j in 0..n {
+        for i in j..n {
+            let mut acc = 0.0;
+            for p in 0..k {
+                acc += a[i + p * lda] * a[j + p * lda];
+            }
+            let v = &mut c[i + j * ldc];
+            *v = if beta == 0.0 { 0.0 } else { *v * beta };
+            *v += alpha * acc;
+        }
+    }
+}
+
+/// Mixed-precision SYRK: `C <- alpha * A * A^T + beta * C` (lower) where
+/// either side may be f32.  Products and `k`-accumulation run in f32
+/// (f64 sources demoted on read), the merge into C happens in C's own
+/// precision — used by the MP tiled Cholesky's diagonal updates, whose
+/// panel operand is an f32 off-band tile while C is the f64 diagonal.
+#[allow(clippy::too_many_arguments)]
+pub fn syrk_ln_mp(
+    n: usize,
+    k: usize,
+    alpha: f64,
+    a: MatRef<'_>,
+    lda: usize,
+    beta: f64,
+    mut c: MatMut<'_>,
+    ldc: usize,
+) {
+    if let (MatRef::F64(af), MatMut::F64(cf)) = (a, c.rb()) {
+        return dsyrk_ln_raw(n, k, alpha, af, lda, beta, cf, ldc);
+    }
+    const NB: usize = 32;
+    // Beta-scale the lower triangle in C's precision.
+    if beta != 1.0 {
+        match &mut c {
+            MatMut::F64(s) => {
+                for j in 0..n {
+                    for i in j..n {
+                        let v = &mut s[i + j * ldc];
+                        *v = if beta == 0.0 { 0.0 } else { *v * beta };
+                    }
+                }
+            }
+            MatMut::F32(s) => {
+                let bt = beta as f32;
+                for j in 0..n {
+                    for i in j..n {
+                        let v = &mut s[i + j * ldc];
+                        *v = if beta == 0.0 { 0.0 } else { *v * bt };
+                    }
+                }
+            }
+        }
+    }
+    let mut j0 = 0;
+    while j0 < n {
+        let nb = NB.min(n - j0);
+        // Diagonal block: naive mixed update (f32 products, merge in C's
+        // precision).
+        for j in j0..j0 + nb {
+            for i in j..j0 + nb {
+                let mut acc = 0.0f32;
+                for p in 0..k {
+                    acc += a.get_f32(i + p * lda) * a.get_f32(j + p * lda);
+                }
+                match &mut c {
+                    MatMut::F64(s) => s[i + j * ldc] += alpha * acc as f64,
+                    MatMut::F32(s) => s[i + j * ldc] += alpha as f32 * acc,
+                }
+            }
+        }
+        // Below-diagonal panel through the mixed packed gemm.
+        let m = n - (j0 + nb);
+        if m > 0 {
+            let coff = (j0 + nb) + j0 * ldc;
+            gemm_mp(
+                Trans::N,
+                Trans::T,
+                m,
+                nb,
+                k,
+                alpha,
+                a.slice_from(j0 + nb),
+                lda,
+                a.slice_from(j0),
+                lda,
+                1.0,
+                c.rb().slice_from(coff),
+                ldc,
+            );
+        }
+        j0 += nb;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// trsm / trsv
+// ---------------------------------------------------------------------------
+
+/// `B <- B * L^{-T}` (Right, Lower, Transpose, Non-unit), column at a
+/// time: the small-problem path and the conformance oracle of the
+/// blocked [`dtrsm_rltn_raw`].
+pub fn dtrsm_rltn_naive(m: usize, n: usize, l: &[f64], ldl: usize, b: &mut [f64], ldb: usize) {
+    // Column j of X: X[:,j] = (B[:,j] - sum_{k<j} X[:,k] * L[j,k]) / L[j,j]
+    for j in 0..n {
+        for kk in 0..j {
+            let ljk = l[j + kk * ldl];
+            if ljk != 0.0 {
+                let (head, tail) = b.split_at_mut(j * ldb);
+                let xk = &head[kk * ldb..kk * ldb + m];
+                let xj = &mut tail[..m];
+                for i in 0..m {
+                    xj[i] -= xk[i] * ljk;
+                }
+            }
+        }
+        let inv = 1.0 / l[j + j * ldl];
+        for v in &mut b[j * ldb..j * ldb + m] {
+            *v *= inv;
+        }
+    }
+}
+
+/// `B <- B * L^{-T}` (Right, Lower, Transpose, Non-unit), blocked.
+/// This is the TRSM used by the tiled Cholesky panel update.
+/// `B` is `m x n`, `L` is `n x n` lower triangular.
+///
+/// Column blocks of X are solved left to right; the bulk update
+/// `B_J -= X[:, <J] * L[J, <J]^T` is one packed gemm per block, so the
+/// O(m n²) FLOPs ride the SIMD micro-kernel and only the O(m n NB)
+/// diagonal solves stay column-oriented.
+pub fn dtrsm_rltn_raw(m: usize, n: usize, l: &[f64], ldl: usize, b: &mut [f64], ldb: usize) {
+    if n <= TRSM_NB {
+        return dtrsm_rltn_naive(m, n, l, ldl, b, ldb);
+    }
+    let mut j0 = 0;
+    while j0 < n {
+        let nb = TRSM_NB.min(n - j0);
+        if j0 > 0 {
+            // B[:, j0..j0+nb] -= X[:, 0..j0] * (L[j0..j0+nb, 0..j0])^T
+            let (head, tail) = b.split_at_mut(j0 * ldb);
+            dgemm_raw(
+                Trans::N,
+                Trans::T,
+                m,
+                nb,
+                j0,
+                -1.0,
+                head,
+                ldb,
+                &l[j0..],
+                ldl,
+                1.0,
+                tail,
+                ldb,
+            );
+        }
+        dtrsm_rltn_naive(m, nb, &l[j0 + j0 * ldl..], ldl, &mut b[j0 * ldb..], ldb);
+        j0 += nb;
+    }
+}
+
+/// Mixed-precision RLTN TRSM for the MP tiled Cholesky panel: the
+/// off-band panel tile `B` is stored f32 while the factored diagonal `L`
+/// is f64.  Blocked like [`dtrsm_rltn_raw`]: the bulk update runs through
+/// the mixed packed gemm (f32 micro-kernel, `L` demoted while packing) —
+/// MP's half-width arithmetic on the off-band bulk — and only the
+/// diagonal-block solves use the column-oriented f32 loop below.
+pub fn trsm_rltn_mp(m: usize, n: usize, l: &[f64], ldl: usize, b: &mut [f32], ldb: usize) {
+    if n <= TRSM_NB {
+        return trsm_rltn_mp_unblocked(m, n, l, ldl, b, ldb);
+    }
+    let mut j0 = 0;
+    while j0 < n {
+        let nb = TRSM_NB.min(n - j0);
+        if j0 > 0 {
+            // B[:, j0..j0+nb] -= X[:, 0..j0] * (L[j0..j0+nb, 0..j0])^T
+            let (head, tail) = b.split_at_mut(j0 * ldb);
+            gemm_mp(
+                Trans::N,
+                Trans::T,
+                m,
+                nb,
+                j0,
+                -1.0,
+                MatRef::F32(head),
+                ldb,
+                MatRef::F64(&l[j0..]),
+                ldl,
+                1.0,
+                MatMut::F32(tail),
+                ldb,
+            );
+        }
+        trsm_rltn_mp_unblocked(m, nb, &l[j0 + j0 * ldl..], ldl, &mut b[j0 * ldb..], ldb);
+        j0 += nb;
+    }
+}
+
+/// Diagonal-block solve of [`trsm_rltn_mp`]: `L`'s lower triangle is
+/// demoted once into the thread-local stage buffer, then the
+/// column-oriented solve runs in f32.
+fn trsm_rltn_mp_unblocked(m: usize, n: usize, l: &[f64], ldl: usize, b: &mut [f32], ldb: usize) {
+    pack::with_ws(|ws| {
+        let l32 = pack::grown(&mut ws.stage32, n * n);
+        for j in 0..n {
+            for i in j..n {
+                l32[i + j * n] = l[i + j * ldl] as f32;
+            }
+        }
+        // Column solve in f32 (upper triangle of l32 is unspecified and
+        // never read).
+        for j in 0..n {
+            for kk in 0..j {
+                let ljk = l32[j + kk * n];
+                if ljk != 0.0 {
+                    let (head, tail) = b.split_at_mut(j * ldb);
+                    let xk = &head[kk * ldb..kk * ldb + m];
+                    let xj = &mut tail[..m];
+                    for i in 0..m {
+                        xj[i] -= xk[i] * ljk;
+                    }
+                }
+            }
+            let inv = 1.0 / l32[j + j * n];
+            for v in &mut b[j * ldb..j * ldb + m] {
+                *v *= inv;
+            }
+        }
+    })
+}
+
+/// `B <- L^{-1} * B` (Left, Lower, No-trans, Non-unit), column at a
+/// time: small-problem path and conformance oracle of
+/// [`dtrsm_llnn_raw`].  `L` is `m x m`, `B` is `m x n`.
+pub fn dtrsm_llnn_naive(m: usize, n: usize, l: &[f64], ldl: usize, b: &mut [f64], ldb: usize) {
+    for j in 0..n {
+        let col = &mut b[j * ldb..j * ldb + m];
+        for kk in 0..m {
+            let xk = col[kk] / l[kk + kk * ldl];
+            col[kk] = xk;
+            if xk != 0.0 {
+                for i in kk + 1..m {
+                    col[i] -= xk * l[i + kk * ldl];
+                }
+            }
+        }
+    }
+}
+
+/// `B <- L^{-1} * B` (Left, Lower, No-trans, Non-unit), blocked forward
+/// substitution: after each `NB`-row diagonal solve, the trailing rows
+/// are updated with one packed gemm.  Used by the tiled forward solve.
+pub fn dtrsm_llnn_raw(m: usize, n: usize, l: &[f64], ldl: usize, b: &mut [f64], ldb: usize) {
+    if m <= TRSM_NB {
+        return dtrsm_llnn_naive(m, n, l, ldl, b, ldb);
+    }
+    let mut k0 = 0;
+    while k0 < m {
+        let nb = TRSM_NB.min(m - k0);
+        dtrsm_llnn_naive(nb, n, &l[k0 + k0 * ldl..], ldl, &mut b[k0..], ldb);
+        let k1 = k0 + nb;
+        if k1 < m {
+            // B[k1.., :] -= L[k1.., k0..k1] * B[k0..k1, :]
+            // SAFETY: gemm reads rows [k0, k1) and writes rows [k1, m)
+            // of `b` — disjoint row ranges of the same buffer.
+            let (bk, brest) = unsafe { split_rows(b, k0, k1) };
+            dgemm_raw(
+                Trans::N,
+                Trans::N,
+                m - k1,
+                n,
+                nb,
+                -1.0,
+                &l[k1 + k0 * ldl..],
+                ldl,
+                bk,
+                ldb,
+                1.0,
+                brest,
+                ldb,
+            );
+        }
+        k0 = k1;
+    }
+}
+
+/// `B <- L^{-T} * B` (Left, Lower, Transpose, Non-unit), column at a
+/// time: small-problem path and conformance oracle of
+/// [`dtrsm_lltn_raw`].
+pub fn dtrsm_lltn_naive(m: usize, n: usize, l: &[f64], ldl: usize, b: &mut [f64], ldb: usize) {
+    for j in 0..n {
+        let col = &mut b[j * ldb..j * ldb + m];
+        for kk in (0..m).rev() {
+            let mut acc = col[kk];
+            for i in kk + 1..m {
+                acc -= l[i + kk * ldl] * col[i];
+            }
+            col[kk] = acc / l[kk + kk * ldl];
+        }
+    }
+}
+
+/// `B <- L^{-T} * B` (Left, Lower, Transpose, Non-unit), blocked backward
+/// substitution (bottom block first; the bulk update of each block above
+/// is one packed gemm against the already-solved rows below).
+pub fn dtrsm_lltn_raw(m: usize, n: usize, l: &[f64], ldl: usize, b: &mut [f64], ldb: usize) {
+    if m <= TRSM_NB {
+        return dtrsm_lltn_naive(m, n, l, ldl, b, ldb);
+    }
+    let nblocks = m.div_ceil(TRSM_NB);
+    for blk in (0..nblocks).rev() {
+        let k0 = blk * TRSM_NB;
+        let nb = TRSM_NB.min(m - k0);
+        let k1 = k0 + nb;
+        if k1 < m {
+            // B[k0..k1, :] -= (L[k1.., k0..k1])^T * B[k1.., :]
+            // SAFETY: gemm reads rows [k1, m) and writes rows [k0, k1)
+            // of `b` — disjoint row ranges of the same buffer.
+            let (blow, bk) = unsafe { split_rows(b, k1, k0) };
+            dgemm_raw(
+                Trans::T,
+                Trans::N,
+                nb,
+                n,
+                m - k1,
+                -1.0,
+                &l[k1 + k0 * ldl..],
+                ldl,
+                blow,
+                ldb,
+                1.0,
+                bk,
+                ldb,
+            );
+        }
+        dtrsm_lltn_naive(nb, n, &l[k0 + k0 * ldl..], ldl, &mut b[k0..], ldb);
+    }
+}
+
+/// Aliased row split of a column-major buffer: a shared view starting at
+/// row offset `r_off` and a mutable view starting at row offset `w_off`.
+///
+/// # Safety
+/// The caller must only read rows the mutable side never writes (the
+/// trsm updates touch disjoint row ranges; columns interleave in memory,
+/// which is why `split_at_mut` cannot express this).  Like
+/// [`split_panel`] (the same pattern, predating this routine), the two
+/// slices overlap in extent even though every element access is
+/// disjoint — accepted here for parity with the crate's established
+/// aliasing style (see also `TilePtr`); a strict-provenance rewrite
+/// would thread raw pointers into the gemm kernels instead.
+unsafe fn split_rows(b: &mut [f64], r_off: usize, w_off: usize) -> (&[f64], &mut [f64]) {
+    let base = b.as_mut_ptr();
+    let len = b.len();
+    let r = std::slice::from_raw_parts(base.add(r_off), len - r_off);
+    let w = std::slice::from_raw_parts_mut(base.add(w_off), len - w_off);
+    (r, w)
+}
+
+/// Triangular matrix-vector product `x <- L x` (lower, no-trans, non-unit),
+/// used by the exact GRF sampler (`z = L e`).
+pub fn dtrmv_ln(n: usize, l: &[f64], ldl: usize, x: &mut [f64]) {
+    for i in (0..n).rev() {
+        let mut acc = 0.0;
+        for k in 0..=i {
+            acc += l[i + k * ldl] * x[k];
+        }
+        x[i] = acc;
+    }
+}
+
+/// Triangular solve with a single vector: `x <- L^{-1} x`.  Vector
+/// solves are memory-bound; the column-oriented naive routine is the
+/// right tool (no packing win at n = 1).
+pub fn dtrsv_ln(n: usize, l: &[f64], ldl: usize, x: &mut [f64]) {
+    dtrsm_llnn_naive(n, 1, l, ldl, x, n);
+}
+
+/// Triangular solve with a single vector: `x <- L^{-T} x`.
+pub fn dtrsv_lt(n: usize, l: &[f64], ldl: usize, x: &mut [f64]) {
+    dtrsm_lltn_naive(n, 1, l, ldl, x, n);
+}
+
+// ---------------------------------------------------------------------------
+// gemv
+// ---------------------------------------------------------------------------
+
+/// `y <- alpha * op(A) x + beta * y` for col-major `A (m x n)`.
+#[allow(clippy::too_many_arguments)]
+pub fn dgemv_raw(
+    ta: Trans,
+    m: usize,
+    n: usize,
+    alpha: f64,
+    a: &[f64],
+    lda: usize,
+    x: &[f64],
+    beta: f64,
+    y: &mut [f64],
+) {
+    let (ylen, _xlen) = match ta {
+        Trans::N => (m, n),
+        Trans::T => (n, m),
+    };
+    if beta == 0.0 {
+        for v in &mut y[..ylen] {
+            *v = 0.0;
+        }
+    } else if beta != 1.0 {
+        for v in &mut y[..ylen] {
+            *v *= beta;
+        }
+    }
+    match ta {
+        Trans::N => {
+            for j in 0..n {
+                let xj = alpha * x[j];
+                if xj != 0.0 {
+                    let col = &a[j * lda..j * lda + m];
+                    for i in 0..m {
+                        y[i] += col[i] * xj;
+                    }
+                }
+            }
+        }
+        Trans::T => {
+            for j in 0..n {
+                let col = &a[j * lda..j * lda + m];
+                let mut acc = 0.0;
+                for i in 0..m {
+                    acc += col[i] * x[i];
+                }
+                y[j] += alpha * acc;
+            }
+        }
+    }
+}
+
+/// `y <- y + alpha * A x` with an f32-stored `A` (m x n, col-major) and
+/// f64 vectors: the MP forward solve's off-band update (promotion to f64
+/// per element is free relative to the memory traffic).
+pub fn dgemv_f32a(m: usize, n: usize, alpha: f64, a: &[f32], lda: usize, x: &[f64], y: &mut [f64]) {
+    for j in 0..n {
+        let xj = alpha * x[j];
+        if xj != 0.0 {
+            let col = &a[j * lda..j * lda + m];
+            for i in 0..m {
+                y[i] += col[i] as f64 * xj;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// potrf
+// ---------------------------------------------------------------------------
+
+/// Error from a failed Cholesky factorization (matrix not SPD at pivot `k`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NotSpd {
+    /// Index of the first non-positive pivot.
+    pub pivot: usize,
+}
+
+impl std::fmt::Display for NotSpd {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "matrix is not positive definite (non-positive pivot at {})",
+            self.pivot
+        )
+    }
+}
+impl std::error::Error for NotSpd {}
+
+/// Unblocked lower Cholesky on an `n x n` column-major buffer.
+pub fn dpotrf_unblocked(n: usize, a: &mut [f64], lda: usize) -> Result<(), NotSpd> {
+    for j in 0..n {
+        // a[j,j] -= sum_{k<j} a[j,k]^2
+        let mut d = a[j + j * lda];
+        for k in 0..j {
+            let v = a[j + k * lda];
+            d -= v * v;
+        }
+        if d <= 0.0 || !d.is_finite() {
+            return Err(NotSpd { pivot: j });
+        }
+        let dj = d.sqrt();
+        a[j + j * lda] = dj;
+        let inv = 1.0 / dj;
+        // Column update: a[i,j] = (a[i,j] - sum_k a[i,k] a[j,k]) / dj
+        for k in 0..j {
+            let ajk = a[j + k * lda];
+            if ajk != 0.0 {
+                let (c_k, c_j) = {
+                    // split borrows: column k is before column j
+                    let (head, tail) = a.split_at_mut(j * lda);
+                    (&head[k * lda..k * lda + n], &mut tail[..n])
+                };
+                for i in j + 1..n {
+                    c_j[i] -= c_k[i] * ajk;
+                }
+            }
+        }
+        for i in j + 1..n {
+            a[i + j * lda] *= inv;
+        }
+    }
+    Ok(())
+}
+
+/// Blocked lower Cholesky (right-looking) on a column-major buffer.  The
+/// panel and trailing updates ride the blocked [`dtrsm_rltn_raw`] /
+/// [`dsyrk_ln_raw`] and therefore the packed, SIMD-dispatched gemm.
+pub fn dpotrf_raw(n: usize, a: &mut [f64], lda: usize) -> Result<(), NotSpd> {
+    const NB: usize = 64;
+    if n <= NB {
+        return dpotrf_unblocked(n, a, lda);
+    }
+    let mut k = 0;
+    while k < n {
+        let nb = NB.min(n - k);
+        // Factor diagonal block.
+        dpotrf_unblocked_at(a, lda, k, nb).map_err(|e| NotSpd { pivot: k + e.pivot })?;
+        let rest = n - (k + nb);
+        if rest > 0 {
+            // Panel: A[k+nb.., k..k+nb] <- A[k+nb.., k..k+nb] * L_kk^{-T}
+            {
+                let (lcol, bcol) = split_panel(a, lda, k, nb);
+                dtrsm_rltn_raw(rest, nb, lcol, lda, bcol, lda);
+            }
+            // Trailing update: A[k+nb.., k+nb..] -= P * P^T (lower).
+            let poff = (k + nb) + k * lda;
+            let coff = (k + nb) + (k + nb) * lda;
+            // Safety note: syrk reads the panel and writes the trailing
+            // sub-matrix; they do not overlap (different column ranges,
+            // and within shared columns syrk only touches cols >= k+nb).
+            let (pan, trail) = a.split_at_mut(coff);
+            dsyrk_ln_raw(rest, nb, -1.0, &pan[poff..], lda, 1.0, trail, lda);
+        }
+        k += nb;
+    }
+    Ok(())
+}
+
+/// Unblocked potrf on the `nb x nb` diagonal block starting at `(k, k)`.
+fn dpotrf_unblocked_at(a: &mut [f64], lda: usize, k: usize, nb: usize) -> Result<(), NotSpd> {
+    // Work on the sub-buffer starting at (k,k) with the same lda.
+    let off = k + k * lda;
+    dpotrf_unblocked(nb, &mut a[off..], lda)
+}
+
+/// Split borrows for the panel TRSM: returns (L_kk block cols, panel cols),
+/// both starting at row offsets appropriate for `lda` indexing.
+fn split_panel(a: &mut [f64], lda: usize, k: usize, nb: usize) -> (&[f64], &mut [f64]) {
+    // L_kk lives at (k, k); the panel at (k+nb, k).  Same columns k..k+nb,
+    // different rows, so we cannot split by column.  Use raw pointers with
+    // disjoint-row access (the TRSM reads rows [k, k+nb) and writes rows
+    // [k+nb, ...)).
+    let base = a.as_mut_ptr();
+    unsafe {
+        let l = std::slice::from_raw_parts(base.add(k + k * lda), a.len() - (k + k * lda));
+        let b = std::slice::from_raw_parts_mut(
+            base.add((k + nb) + k * lda),
+            a.len() - ((k + nb) + k * lda),
+        );
+        (l, b)
+    }
+}

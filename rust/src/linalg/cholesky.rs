@@ -7,7 +7,8 @@
 //! which is exactly the Diagonal-Super-Tile (DST) approximation of Fig 1(b).
 
 use super::blas::{
-    dgemm_raw, dgemv_raw, dpotrf_raw, dsyrk_ln_raw, dtrsm_rltn_raw, dtrsv_ln, Trans,
+    dgemv_f32a, dgemv_raw, dpotrf_raw, dtrsm_rltn_raw, dtrsv_ln, gemm_mp, syrk_ln_mp,
+    trsm_rltn_mp, MatMut, MatRef, Trans,
 };
 use super::tile::{TileMatrix, TileVector};
 use crate::scheduler::{Access, Handle, TaskGraph, TaskKind};
@@ -71,6 +72,14 @@ pub fn in_band(band: Option<usize>, i: usize, j: usize) -> bool {
 /// in place.  On a non-SPD pivot the fail flag records the global pivot
 /// index; downstream tasks still run (NaNs propagate harmlessly) and the
 /// caller checks the flag after execution.
+///
+/// Tiles are dispatched on their **storage precision**: an all-f64
+/// matrix takes exactly the plain kernel paths, while a mixed-precision
+/// matrix ([`TileMatrix::zeros_mp`]) routes every task touching an
+/// f32-stored off-band tile through the f32 compute kernels
+/// (`gemm_mp` / `syrk_ln_mp` / `trsm_rltn_mp`) — the MP variant's
+/// half-width arithmetic on the off-band bulk.  Diagonal tiles are
+/// always f64, so POTRF itself is unchanged.
 pub fn submit_tiled_potrf(
     g: &mut TaskGraph,
     a: &TileMatrix,
@@ -80,7 +89,6 @@ pub fn submit_tiled_potrf(
 ) {
     let nt = a.nt();
     let ts = a.ts();
-    let bytes = a.tile_bytes();
     for k in 0..nt {
         let hk = a.tile_rows(k);
         // POTRF on diagonal tile (k, k)
@@ -91,7 +99,7 @@ pub fn submit_tiled_potrf(
             g.submit(
                 TaskKind::POTRF,
                 &[(hs.at(k, k), Access::RW)],
-                bytes,
+                a.tile_bytes_at(k, k),
                 move || {
                     // SAFETY: STF ordering gives exclusive access.
                     let t = unsafe { p.as_mut() };
@@ -117,12 +125,15 @@ pub fn submit_tiled_potrf(
             g.submit(
                 TaskKind::TRSM,
                 &[(hs.at(k, k), Access::R), (hs.at(i, k), Access::RW)],
-                2 * bytes,
+                a.tile_bytes_at(k, k) + a.tile_bytes_at(i, k),
                 move || {
-                    // SAFETY: STF ordering.
+                    // SAFETY: STF ordering.  Diagonal factors are always
+                    // f64; the panel tile may be an MP off-band f32 tile.
                     let lt = unsafe { l.as_ref() };
-                    let bt = unsafe { b.as_mut() };
-                    dtrsm_rltn_raw(hi, hk, lt, hk, bt, hi);
+                    match unsafe { b.mat_mut() } {
+                        MatMut::F64(bt) => dtrsm_rltn_raw(hi, hk, lt, hk, bt, hi),
+                        MatMut::F32(bt) => trsm_rltn_mp(hi, hk, lt, hk, bt, hi),
+                    }
                 },
             );
         }
@@ -139,12 +150,14 @@ pub fn submit_tiled_potrf(
                 g.submit(
                     TaskKind::SYRK,
                     &[(hs.at(i, k), Access::R), (hs.at(i, i), Access::RW)],
-                    2 * bytes,
+                    a.tile_bytes_at(i, k) + a.tile_bytes_at(i, i),
                     move || {
-                        // SAFETY: STF ordering.
-                        let s = unsafe { src.as_ref() };
-                        let d = unsafe { dst.as_mut() };
-                        dsyrk_ln_raw(hi, hk, -1.0, s, hi, 1.0, d, hi);
+                        // SAFETY: STF ordering.  syrk_ln_mp fast-paths
+                        // the all-f64 case to dsyrk_ln_raw itself; an
+                        // f32 panel source (MP) takes the mixed kernels.
+                        let s = unsafe { src.mat_ref() };
+                        let d = unsafe { dst.mat_mut() };
+                        syrk_ln_mp(hi, hk, -1.0, s, hi, 1.0, d, hi);
                     },
                 );
             }
@@ -164,27 +177,16 @@ pub fn submit_tiled_potrf(
                         (hs.at(j, k), Access::R),
                         (hs.at(i, j), Access::RW),
                     ],
-                    3 * bytes,
+                    a.tile_bytes_at(i, k) + a.tile_bytes_at(j, k) + a.tile_bytes_at(i, j),
                     move || {
-                        // SAFETY: STF ordering.
-                        let a_ = unsafe { ai.as_ref() };
-                        let b_ = unsafe { aj.as_ref() };
-                        let c_ = unsafe { c.as_mut() };
-                        dgemm_raw(
-                            Trans::N,
-                            Trans::T,
-                            hi,
-                            hj,
-                            hk,
-                            -1.0,
-                            a_,
-                            hi,
-                            b_,
-                            hj,
-                            1.0,
-                            c_,
-                            hi,
-                        );
+                        // SAFETY: STF ordering.  gemm_mp fast-paths the
+                        // all-f64 case to dgemm_raw itself; any f32
+                        // operand (MP off-band tile) routes the product
+                        // through the f32 micro-kernel path.
+                        let a_ = unsafe { ai.mat_ref() };
+                        let b_ = unsafe { aj.mat_ref() };
+                        let c_ = unsafe { c.mat_mut() };
+                        gemm_mp(Trans::N, Trans::T, hi, hj, hk, -1.0, a_, hi, b_, hj, 1.0, c_, hi);
                     },
                 );
             }
@@ -215,7 +217,6 @@ pub fn submit_tiled_forward_solve_banded(
     band: Option<usize>,
 ) {
     let nt = l.nt();
-    let bytes = l.tile_bytes();
     for i in 0..nt {
         let hi = l.tile_rows(i);
         for j in 0..i {
@@ -233,13 +234,20 @@ pub fn submit_tiled_forward_solve_banded(
                     (yh[j], Access::R),
                     (yh[i], Access::RW),
                 ],
-                bytes,
+                l.tile_bytes_at(i, j),
                 move || {
-                    // SAFETY: STF ordering.
-                    let lt = unsafe { lij.as_ref() };
+                    // SAFETY: STF ordering.  Off-band factor tiles may
+                    // be f32-stored (MP); vector segments are f64.
                     let yjs = unsafe { yj.as_ref() };
                     let yis = unsafe { yi.as_mut() };
-                    dgemv_raw(Trans::N, hi, wj, -1.0, lt, hi, yjs, 1.0, yis);
+                    match unsafe { lij.mat_ref() } {
+                        MatRef::F64(lt) => {
+                            dgemv_raw(Trans::N, hi, wj, -1.0, lt, hi, yjs, 1.0, yis);
+                        }
+                        MatRef::F32(lt) => {
+                            dgemv_f32a(hi, wj, -1.0, lt, hi, yjs, yis);
+                        }
+                    }
                 },
             );
         }
@@ -248,7 +256,7 @@ pub fn submit_tiled_forward_solve_banded(
         g.submit(
             TaskKind::TRSM,
             &[(hs.at(i, i), Access::R), (yh[i], Access::RW)],
-            bytes,
+            l.tile_bytes_at(i, i),
             move || {
                 // SAFETY: STF ordering.
                 let lt = unsafe { lii.as_ref() };
@@ -414,6 +422,45 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn mp_storage_factors_at_f32_scale() {
+        // A mixed-precision tile matrix (off-band tiles stored f32, their
+        // updates running the f32 compute kernels) must reproduce the
+        // dense f64 factor to f32-scale accuracy — and diagonal tiles
+        // must stay genuinely f64.
+        let mut rng = Pcg64::seed_from_u64(35);
+        let n = 48;
+        let ts = 8;
+        let a = rand_spd(&mut rng, n);
+        let mut dense = a.clone();
+        crate::linalg::blas::dpotrf(&mut dense).unwrap();
+        dense.zero_upper();
+
+        let mut tm = TileMatrix::zeros_mp(n, ts, 0);
+        for gi in 0..n {
+            for gj in 0..=gi {
+                tm.set(gi, gj, a[(gi, gj)]);
+            }
+        }
+        assert!(tm.tile_is_f32(2, 0) && !tm.tile_is_f32(1, 1));
+        let mut g = TaskGraph::new();
+        let hs = TileHandles::register(&mut g, tm.nt());
+        let fail = new_fail_flag();
+        submit_tiled_potrf(&mut g, &tm, &hs, None, &fail);
+        pool::run(&mut g, 2, Policy::Lws);
+        check_fail(&fail).unwrap();
+
+        let lt = tm.to_dense_lower();
+        let scale = dense
+            .as_slice()
+            .iter()
+            .map(|v| v.abs())
+            .fold(1.0, f64::max);
+        let err = lt.max_abs_diff(&dense);
+        assert!(err / scale < 1e-4, "rel err {}", err / scale);
+        assert!(err > 0.0, "f32 path should not be bit-exact");
     }
 
     #[test]

@@ -3,7 +3,15 @@
 //! `nt x nt` tiles of size `ts` (edge tiles are smaller); only the lower
 //! triangle of tiles is stored.  Each tile is a contiguous column-major
 //! buffer — one scheduler data handle per tile.
+//!
+//! Tiles carry a **storage precision**: ordinarily every tile is f64, but
+//! a mixed-precision matrix ([`TileMatrix::zeros_mp`]) stores its off-band
+//! tiles as genuine f32 buffers — half the memory traffic, and the tiled
+//! Cholesky routes their updates through the f32 micro-kernel path
+//! (`linalg::blas::gemm_mp`), which is what makes the MP variant of
+//! Fig 1(d) a measured speedup rather than a simulated rounding.
 
+use crate::linalg::blas::{MatMut, MatRef};
 use crate::linalg::matrix::Matrix;
 use std::cell::Cell;
 
@@ -22,7 +30,24 @@ pub fn tile_matrix_allocs() -> u64 {
     TILE_MATRIX_ALLOCS.with(|c| c.get())
 }
 
-/// Raw pointer to a tile buffer that tasks capture.
+/// The mixed-precision storage rule, in one place: is lower tile
+/// (i, j), `i >= j`, kept in full precision under `band`?
+/// [`TileMatrix::zeros_mp`] allocates by this predicate and
+/// `likelihood::mp::is_f64_tile` delegates to it, so the workspace
+/// layout and the MP variant's semantics cannot drift apart.
+#[inline]
+pub fn mp_tile_is_f64(band: usize, i: usize, j: usize) -> bool {
+    i - j <= band
+}
+
+/// One tile's storage, in its precision.
+enum TileBuf {
+    F64(Box<[f64]>),
+    F32(Box<[f32]>),
+}
+
+/// Raw pointer to a tile buffer that tasks capture, tagged with the
+/// tile's storage precision.
 ///
 /// SAFETY: the scheduler's STF dependency inference guarantees that a
 /// writer has exclusive access and readers never overlap a writer, so
@@ -31,32 +56,96 @@ pub fn tile_matrix_allocs() -> u64 {
 /// waits on its `JobHandle` before the storage goes out of scope (the
 /// handle also waits on `Drop` — see `scheduler::runtime`).
 #[derive(Copy, Clone)]
-pub struct TilePtr {
-    ptr: *mut f64,
-    len: usize,
+pub enum TilePtr {
+    /// Full-precision tile.
+    F64 {
+        /// Base pointer of the column-major buffer.
+        ptr: *mut f64,
+        /// Buffer length in elements.
+        len: usize,
+    },
+    /// Demoted (MP off-band) tile.
+    F32 {
+        /// Base pointer of the column-major buffer.
+        ptr: *mut f32,
+        /// Buffer length in elements.
+        len: usize,
+    },
 }
 
 unsafe impl Send for TilePtr {}
 unsafe impl Sync for TilePtr {}
 
 impl TilePtr {
+    /// Borrow as a mutable f64 slice (the common, all-f64 paths).
+    ///
+    /// # Panics
+    /// Panics on an f32-stored tile — precision-aware tasks use
+    /// [`TilePtr::mat_mut`] instead.
+    ///
     /// # Safety
     /// Caller must guarantee exclusive access for the duration of the
     /// borrow (the scheduler provides this via dependency ordering).
     #[allow(clippy::mut_from_ref)]
     pub unsafe fn as_mut(&self) -> &mut [f64] {
-        std::slice::from_raw_parts_mut(self.ptr, self.len)
+        match *self {
+            TilePtr::F64 { ptr, len } => std::slice::from_raw_parts_mut(ptr, len),
+            TilePtr::F32 { .. } => panic!("TilePtr::as_mut on an f32-stored tile"),
+        }
     }
+
+    /// Borrow as a shared f64 slice.
+    ///
+    /// # Panics
+    /// Panics on an f32-stored tile — see [`TilePtr::mat_ref`].
+    ///
     /// # Safety
     /// Caller must guarantee no concurrent writer (scheduler-provided).
     pub unsafe fn as_ref(&self) -> &[f64] {
-        std::slice::from_raw_parts(self.ptr, self.len)
+        match *self {
+            TilePtr::F64 { ptr, len } => std::slice::from_raw_parts(ptr, len),
+            TilePtr::F32 { .. } => panic!("TilePtr::as_ref on an f32-stored tile"),
+        }
     }
+
+    /// Precision-tagged shared borrow (the MP-aware task bodies).
+    ///
+    /// # Safety
+    /// Caller must guarantee no concurrent writer (scheduler-provided).
+    pub unsafe fn mat_ref(&self) -> MatRef<'_> {
+        match *self {
+            TilePtr::F64 { ptr, len } => MatRef::F64(std::slice::from_raw_parts(ptr, len)),
+            TilePtr::F32 { ptr, len } => MatRef::F32(std::slice::from_raw_parts(ptr, len)),
+        }
+    }
+
+    /// Precision-tagged mutable borrow (the MP-aware task bodies).
+    ///
+    /// # Safety
+    /// Caller must guarantee exclusive access (scheduler-provided).
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn mat_mut(&self) -> MatMut<'_> {
+        match *self {
+            TilePtr::F64 { ptr, len } => MatMut::F64(std::slice::from_raw_parts_mut(ptr, len)),
+            TilePtr::F32 { ptr, len } => MatMut::F32(std::slice::from_raw_parts_mut(ptr, len)),
+        }
+    }
+
+    /// Buffer length in elements.
     pub fn len(&self) -> usize {
-        self.len
+        match *self {
+            TilePtr::F64 { len, .. } | TilePtr::F32 { len, .. } => len,
+        }
     }
+
+    /// Is the buffer empty?
     pub fn is_empty(&self) -> bool {
-        self.len == 0
+        self.len() == 0
+    }
+
+    /// Is this an f32-stored (MP off-band) tile?
+    pub fn is_f32(&self) -> bool {
+        matches!(self, TilePtr::F32 { .. })
     }
 }
 
@@ -65,14 +154,28 @@ pub struct TileMatrix {
     n: usize,
     ts: usize,
     nt: usize,
+    /// `Some(band)` for mixed-precision storage: tiles with
+    /// `i - j > band` are f32.  `None` = every tile f64.
+    mp_band: Option<usize>,
     /// Lower tiles, indexed by `tri_index(i, j)` for `i >= j`.
-    tiles: Vec<Box<[f64]>>,
+    tiles: Vec<TileBuf>,
 }
 
 impl TileMatrix {
     /// Allocate a zeroed tile matrix for an `n x n` symmetric matrix with
-    /// tile size `ts`.
+    /// tile size `ts`.  Every tile is f64.
     pub fn zeros(n: usize, ts: usize) -> Self {
+        Self::zeros_with(n, ts, None)
+    }
+
+    /// Allocate a zeroed **mixed-precision** tile matrix: tiles within
+    /// `band` of the diagonal (`i - j <= band`) are f64, the rest are
+    /// stored as f32 (`likelihood::mp::is_f64_tile` is the same rule).
+    pub fn zeros_mp(n: usize, ts: usize, band: usize) -> Self {
+        Self::zeros_with(n, ts, Some(band))
+    }
+
+    fn zeros_with(n: usize, ts: usize, mp_band: Option<usize>) -> Self {
         assert!(n > 0 && ts > 0);
         TILE_MATRIX_ALLOCS.with(|c| c.set(c.get() + 1));
         let nt = n.div_ceil(ts);
@@ -81,10 +184,24 @@ impl TileMatrix {
             for j in 0..=i {
                 let h = Self::dim_at(n, ts, i);
                 let w = Self::dim_at(n, ts, j);
-                tiles.push(vec![0.0; h * w].into_boxed_slice());
+                let f32_tile = match mp_band {
+                    Some(band) => !mp_tile_is_f64(band, i, j),
+                    None => false,
+                };
+                tiles.push(if f32_tile {
+                    TileBuf::F32(vec![0.0f32; h * w].into_boxed_slice())
+                } else {
+                    TileBuf::F64(vec![0.0f64; h * w].into_boxed_slice())
+                });
             }
         }
-        TileMatrix { n, ts, nt, tiles }
+        TileMatrix {
+            n,
+            ts,
+            nt,
+            mp_band,
+            tiles,
+        }
     }
 
     #[inline]
@@ -92,10 +209,12 @@ impl TileMatrix {
         ts.min(n - i * ts)
     }
 
+    /// Matrix dimension.
     #[inline]
     pub fn n(&self) -> usize {
         self.n
     }
+    /// Tile size.
     #[inline]
     pub fn ts(&self) -> usize {
         self.ts
@@ -104,6 +223,12 @@ impl TileMatrix {
     #[inline]
     pub fn nt(&self) -> usize {
         self.nt
+    }
+    /// Mixed-precision band this matrix was allocated with (`None` for
+    /// all-f64 storage).
+    #[inline]
+    pub fn mp_band(&self) -> Option<usize> {
+        self.mp_band
     }
     /// Height (= local leading dimension) of tile row `i`.
     #[inline]
@@ -123,46 +248,82 @@ impl TileMatrix {
         i * (i + 1) / 2 + j
     }
 
-    /// Borrow tile (i, j), i >= j.
-    pub fn tile(&self, i: usize, j: usize) -> &[f64] {
-        &self.tiles[self.tri_index(i, j)]
+    /// Is tile (i, j) stored in f32?
+    pub fn tile_is_f32(&self, i: usize, j: usize) -> bool {
+        matches!(self.tiles[self.tri_index(i, j)], TileBuf::F32(_))
     }
 
-    /// Mutably borrow tile (i, j), i >= j.
+    /// Borrow f64 tile (i, j), i >= j.  Panics on an f32-stored tile
+    /// (use [`TileMatrix::tile_f32`]).
+    pub fn tile(&self, i: usize, j: usize) -> &[f64] {
+        match &self.tiles[self.tri_index(i, j)] {
+            TileBuf::F64(t) => t,
+            TileBuf::F32(_) => panic!("tile ({i},{j}) is f32-stored; use tile_f32"),
+        }
+    }
+
+    /// Borrow f32 tile (i, j).  Panics on an f64-stored tile.
+    pub fn tile_f32(&self, i: usize, j: usize) -> &[f32] {
+        match &self.tiles[self.tri_index(i, j)] {
+            TileBuf::F32(t) => t,
+            TileBuf::F64(_) => panic!("tile ({i},{j}) is f64-stored; use tile"),
+        }
+    }
+
+    /// Mutably borrow f64 tile (i, j), i >= j.  Panics on an f32 tile.
     pub fn tile_mut(&mut self, i: usize, j: usize) -> &mut [f64] {
         let idx = self.tri_index(i, j);
-        &mut self.tiles[idx]
+        match &mut self.tiles[idx] {
+            TileBuf::F64(t) => t,
+            TileBuf::F32(_) => panic!("tile ({i},{j}) is f32-stored; use tile_f32"),
+        }
     }
 
-    /// Raw pointer for task capture.
+    /// Raw pointer for task capture (precision-tagged).
     pub fn tile_ptr(&self, i: usize, j: usize) -> TilePtr {
         let idx = self.tri_index(i, j);
-        let t = &self.tiles[idx];
-        TilePtr {
-            ptr: t.as_ptr() as *mut f64,
-            len: t.len(),
+        match &self.tiles[idx] {
+            TileBuf::F64(t) => TilePtr::F64 {
+                ptr: t.as_ptr() as *mut f64,
+                len: t.len(),
+            },
+            TileBuf::F32(t) => TilePtr::F32 {
+                ptr: t.as_ptr() as *mut f32,
+                len: t.len(),
+            },
         }
     }
 
     /// Element access (symmetric: (i, j) with i < j reads the mirrored
-    /// lower entry).  For tests and small-scale assembly only.
+    /// lower entry; f32 tiles are promoted).  For tests and small-scale
+    /// assembly only.
     pub fn get(&self, gi: usize, gj: usize) -> f64 {
         let (gi, gj) = if gi >= gj { (gi, gj) } else { (gj, gi) };
         let (ti, li) = (gi / self.ts, gi % self.ts);
         let (tj, lj) = (gj / self.ts, gj % self.ts);
         let h = self.tile_rows(ti);
-        self.tile(ti, tj)[li + lj * h]
+        match &self.tiles[self.tri_index(ti, tj)] {
+            TileBuf::F64(t) => t[li + lj * h],
+            TileBuf::F32(t) => t[li + lj * h] as f64,
+        }
     }
 
+    /// Set an element (mirrored into the lower triangle; demoted on an
+    /// f32 tile).
     pub fn set(&mut self, gi: usize, gj: usize, v: f64) {
         let (gi, gj) = if gi >= gj { (gi, gj) } else { (gj, gi) };
         let (ti, li) = (gi / self.ts, gi % self.ts);
         let (tj, lj) = (gj / self.ts, gj % self.ts);
         let h = self.tile_rows(ti);
-        self.tile_mut(ti, tj)[li + lj * h] = v;
+        let idx = self.tri_index(ti, tj);
+        match &mut self.tiles[idx] {
+            TileBuf::F64(t) => t[li + lj * h] = v,
+            TileBuf::F32(t) => t[li + lj * h] = v as f32,
+        }
     }
 
-    /// Import the lower triangle of a dense symmetric matrix.
+    /// Import the lower triangle of a dense symmetric matrix (all-f64
+    /// storage).
     pub fn from_dense_lower(m: &Matrix, ts: usize) -> Self {
         assert!(m.is_square());
         let n = m.rows();
@@ -172,7 +333,9 @@ impl TileMatrix {
                 let h = tm.tile_rows(ti);
                 let w = tm.tile_cols(tj);
                 let idx = tm.tri_index(ti, tj);
-                let tile = &mut tm.tiles[idx];
+                let TileBuf::F64(tile) = &mut tm.tiles[idx] else {
+                    unreachable!("zeros() allocates f64 tiles only");
+                };
                 for lj in 0..w {
                     for li in 0..h {
                         let gi = ti * ts + li;
@@ -217,20 +380,36 @@ impl TileMatrix {
         (0..self.n).map(|i| f(self.get(i, i))).sum()
     }
 
-    /// Total bytes of one tile (for the DES transfer model).
+    /// Total bytes of one full-size f64 tile (the legacy uniform cost
+    /// hint; for precision-aware per-tile costs use
+    /// [`TileMatrix::tile_bytes_at`]).
     pub fn tile_bytes(&self) -> usize {
         self.ts * self.ts * std::mem::size_of::<f64>()
+    }
+
+    /// Bytes of tile (i, j)'s actual storage — f32 tiles are half-width,
+    /// so MP task cost hints and the DES transfer model see the variant's
+    /// real (halved) off-band memory traffic.
+    pub fn tile_bytes_at(&self, i: usize, j: usize) -> usize {
+        let elems = self.tile_rows(i) * self.tile_cols(j);
+        match &self.tiles[self.tri_index(i, j)] {
+            TileBuf::F64(_) => elems * std::mem::size_of::<f64>(),
+            TileBuf::F32(_) => elems * std::mem::size_of::<f32>(),
+        }
     }
 }
 
 /// A vector split into `ts`-sized segments aligned with a [`TileMatrix`].
 pub struct TileVector {
+    /// Total length.
     pub n: usize,
+    /// Segment size (matches the tile size of the paired matrix).
     pub ts: usize,
     segs: Vec<Box<[f64]>>,
 }
 
 impl TileVector {
+    /// Split `x` into `ts`-sized segments.
     pub fn from_slice(x: &[f64], ts: usize) -> Self {
         let n = x.len();
         let nt = n.div_ceil(ts);
@@ -244,6 +423,7 @@ impl TileVector {
         TileVector { n, ts, segs }
     }
 
+    /// Number of segments.
     pub fn nt(&self) -> usize {
         self.segs.len()
     }
@@ -256,18 +436,22 @@ impl TileVector {
             s.copy_from_slice(&x[lo..lo + s.len()]);
         }
     }
+    /// Borrow segment `i`.
     pub fn seg(&self, i: usize) -> &[f64] {
         &self.segs[i]
     }
+    /// Mutably borrow segment `i`.
     pub fn seg_mut(&mut self, i: usize) -> &mut [f64] {
         &mut self.segs[i]
     }
+    /// Raw pointer to segment `i` for task capture (always f64).
     pub fn seg_ptr(&self, i: usize) -> TilePtr {
-        TilePtr {
+        TilePtr::F64 {
             ptr: self.segs[i].as_ptr() as *mut f64,
             len: self.segs[i].len(),
         }
     }
+    /// Concatenate back into one vector.
     pub fn to_vec(&self) -> Vec<f64> {
         let mut out = Vec::with_capacity(self.n);
         for s in &self.segs {
@@ -275,6 +459,7 @@ impl TileVector {
         }
         out
     }
+    /// Squared Euclidean norm.
     pub fn dot_self(&self) -> f64 {
         self.segs
             .iter()
@@ -297,6 +482,7 @@ mod tests {
         assert_eq!(tm.tile_rows(2), 2);
         assert_eq!(tm.tile(2, 1).len(), 2 * 4);
         assert_eq!(tm.tile(2, 2).len(), 4);
+        assert_eq!(tm.mp_band(), None);
     }
 
     #[test]
@@ -359,7 +545,7 @@ mod tests {
     fn alloc_counter_tracks_this_thread() {
         let before = tile_matrix_allocs();
         let _a = TileMatrix::zeros(8, 4);
-        let _b = TileMatrix::zeros(8, 4);
+        let _b = TileMatrix::zeros_mp(8, 4, 0);
         assert_eq!(tile_matrix_allocs(), before + 2);
     }
 
@@ -367,10 +553,57 @@ mod tests {
     fn tile_ptr_round_trip() {
         let tm = TileMatrix::zeros(4, 2);
         let p = tm.tile_ptr(1, 0);
+        assert!(!p.is_f32());
         unsafe {
             p.as_mut()[0] = 3.5;
         }
         assert_eq!(tm.tile(1, 0)[0], 3.5);
         assert_eq!(tm.get(2, 0), 3.5);
+    }
+
+    #[test]
+    fn mp_layout_demotes_off_band_tiles_only() {
+        // 4 tile rows, band 1: tiles with i - j > 1 are f32.
+        let tm = TileMatrix::zeros_mp(16, 4, 1);
+        assert_eq!(tm.mp_band(), Some(1));
+        for i in 0..tm.nt() {
+            for j in 0..=i {
+                assert_eq!(tm.tile_is_f32(i, j), i - j > 1, "({i},{j})");
+            }
+        }
+        // Full band: no tile demoted, equivalent to zeros() layout.
+        let full = TileMatrix::zeros_mp(16, 4, 3);
+        for i in 0..full.nt() {
+            for j in 0..=i {
+                assert!(!full.tile_is_f32(i, j));
+            }
+        }
+    }
+
+    #[test]
+    fn mp_get_set_round_through_f32() {
+        let mut tm = TileMatrix::zeros_mp(16, 4, 0);
+        let v = 1.0 + 1e-12; // not representable in f32
+        tm.set(12, 1, v); // far off-band tile (3,0): f32
+        assert_eq!(tm.get(12, 1), 1.0, "stored through f32");
+        tm.set(1, 2, v); // diagonal tile: f64
+        assert_eq!(tm.get(1, 2), v);
+    }
+
+    #[test]
+    fn mp_tile_ptr_mat_mut_round_trip() {
+        let tm = TileMatrix::zeros_mp(16, 4, 0);
+        let p = tm.tile_ptr(2, 0);
+        assert!(p.is_f32());
+        match unsafe { p.mat_mut() } {
+            MatMut::F32(s) => s[0] = 2.5,
+            MatMut::F64(_) => panic!("expected f32 tile"),
+        }
+        assert_eq!(tm.tile_f32(2, 0)[0], 2.5);
+        assert_eq!(tm.get(8, 0), 2.5);
+        match unsafe { p.mat_ref() } {
+            MatRef::F32(s) => assert_eq!(s[0], 2.5),
+            MatRef::F64(_) => panic!("expected f32 tile"),
+        }
     }
 }

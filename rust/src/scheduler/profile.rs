@@ -2,8 +2,9 @@
 //!
 //! StarPU records execution times per codelet and hardware to build the
 //! cost models its schedulers use; we do the same.  The profile drives
-//! (a) the EXPERIMENTS.md §Perf numbers, and (b) the discrete-event
-//! simulator for the GPU / distributed studies (Figs 6–7).
+//! (a) the per-kernel timings behind EXPERIMENTS.md §Kernel roofline and
+//! §Time per iteration, and (b) the discrete-event simulator for the
+//! GPU / distributed studies (Figs 6–7).
 
 use super::TaskKind;
 use std::collections::HashMap;

@@ -35,7 +35,7 @@
 
 use super::pool::Policy;
 use super::profile::{Profile, TaskRecord};
-use super::{TaskGraph, TaskKind};
+use super::{Access, TaskGraph, TaskKind};
 use std::collections::{BinaryHeap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, RwLock};
@@ -356,6 +356,10 @@ pub struct Runtime {
     workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
     spawned: AtomicU64,
     next_seq: AtomicU64,
+    /// High-water mark of [`Runtime::prewarm_workers_once`] keys already
+    /// served (worker-local state persists for the process, so repeat
+    /// prewarms at the same or smaller key are pure overhead).
+    prewarm_mark: AtomicUsize,
 }
 
 impl Runtime {
@@ -382,6 +386,7 @@ impl Runtime {
             workers: Mutex::new(Vec::with_capacity(nworkers)),
             spawned: AtomicU64::new(0),
             next_seq: AtomicU64::new(0),
+            prewarm_mark: AtomicUsize::new(0),
         };
         {
             let mut ws = rt.workers.lock().unwrap();
@@ -525,6 +530,55 @@ impl Runtime {
     /// Park-proof convenience: submit and wait.
     pub fn run(&self, graph: TaskGraph) -> Profile {
         self.submit(graph).wait()
+    }
+
+    /// Run `f` once per worker, **best effort** on distribution: one
+    /// independent task per worker is submitted, and each task spin-waits
+    /// (bounded) until all of them have started, so on an idle runtime
+    /// every worker executes exactly one.  On a busy runtime the barrier
+    /// times out and some workers may run `f` more than once or not at
+    /// all — acceptable for its purpose: growing worker-local state ahead
+    /// of time (e.g. `linalg::blas::reserve_pack_workspaces`, called by
+    /// `EvalSession::new` so tile kernels start allocation-free).
+    /// Blocks until the prewarm job completes.
+    pub fn prewarm_workers(&self, f: impl Fn() + Send + Sync + 'static) {
+        let n = self.shared.nworkers;
+        let f = Arc::new(f);
+        let arrived = Arc::new(AtomicUsize::new(0));
+        // One shared deadline from submission time: on a busy runtime the
+        // whole prewarm costs at most this bound, it never serializes
+        // per-task waits.  Kept short — on an idle runtime the barrier
+        // completes in microseconds, and under contention distribution
+        // is best-effort anyway; the spin only burns otherwise-idle
+        // workers until then.
+        let deadline = Instant::now() + Duration::from_millis(50);
+        let mut g = TaskGraph::new();
+        let hs = g.register_many(n);
+        for h in hs {
+            let f = f.clone();
+            let arrived = arrived.clone();
+            g.submit(TaskKind::OTHER, &[(h, Access::RW)], 0, move || {
+                arrived.fetch_add(1, Ordering::SeqCst);
+                while arrived.load(Ordering::SeqCst) < n && Instant::now() < deadline {
+                    std::thread::yield_now();
+                }
+                f();
+            });
+        }
+        self.submit(g).wait();
+    }
+
+    /// [`Runtime::prewarm_workers`], deduplicated by a monotone `key`:
+    /// runs only if no earlier call used a key `>= key` on this runtime.
+    /// Worker-local workspaces persist for the process, so e.g. session
+    /// builds pass their tile size — the first build (per tile-size
+    /// high-water mark) pays the prewarm, later ones skip it entirely
+    /// (the serving path builds a session on every cache miss).
+    pub fn prewarm_workers_once(&self, key: usize, f: impl Fn() + Send + Sync + 'static) {
+        if self.prewarm_mark.fetch_max(key, Ordering::SeqCst) >= key {
+            return;
+        }
+        self.prewarm_workers(f);
     }
 
     /// Stop accepting jobs, drain queued work, join all workers.
@@ -869,6 +923,53 @@ mod tests {
         assert_eq!(prof.total_tasks(), 6);
         assert_eq!(prof.tasks_skipped, 14);
         assert!(token.is_cancelled());
+        rt.shutdown();
+    }
+
+    #[test]
+    fn prewarm_runs_once_per_worker_when_idle() {
+        let rt = Runtime::new(3, Policy::Lws);
+        let runs = Arc::new(AtomicUsize::new(0));
+        let threads = Arc::new(Mutex::new(std::collections::HashSet::new()));
+        {
+            let runs = runs.clone();
+            let threads = threads.clone();
+            rt.prewarm_workers(move || {
+                runs.fetch_add(1, Ordering::SeqCst);
+                threads.lock().unwrap().insert(std::thread::current().id());
+            });
+        }
+        // Exactly nworkers executions; thread distribution is
+        // best-effort (barrier-gated, so ≥1 and usually all 3).
+        assert_eq!(runs.load(Ordering::SeqCst), 3);
+        assert!(!threads.lock().unwrap().is_empty());
+        // The keyed variant runs once per high-water mark: a repeat at
+        // the same key is a no-op, a larger key runs again.
+        {
+            let runs = runs.clone();
+            rt.prewarm_workers_once(16, move || {
+                runs.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        assert_eq!(runs.load(Ordering::SeqCst), 6);
+        {
+            let runs = runs.clone();
+            rt.prewarm_workers_once(16, move || {
+                runs.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        assert_eq!(runs.load(Ordering::SeqCst), 6, "same key skips");
+        {
+            let runs = runs.clone();
+            rt.prewarm_workers_once(32, move || {
+                runs.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        assert_eq!(runs.load(Ordering::SeqCst), 9, "larger key reruns");
+        // The runtime stays fully usable afterwards.
+        let counter = Arc::new(AtomicUsize::new(0));
+        rt.submit(counting_graph(12, &counter)).wait();
+        assert_eq!(counter.load(Ordering::SeqCst), 12);
         rt.shutdown();
     }
 

@@ -17,6 +17,15 @@ use crate::rng::Pcg64;
 /// [`crate::likelihood::EvalSession`]'s workspace-reuse invariant.
 pub use crate::linalg::tile::tile_matrix_allocs;
 
+/// Process-global pack/stage buffer allocation counter from the BLAS
+/// packing layer — the telemetry behind the "warm iterations perform
+/// zero pack-buffer allocations on runtime workers" regression test.
+/// Global because the allocations happen on worker threads while the
+/// test observes from the submitting thread: assert deltas only in a
+/// dedicated test binary (see `rust/tests/pack_alloc.rs`), where no
+/// concurrent test can run kernels.
+pub use crate::linalg::blas::pack_buffer_allocs;
+
 /// Process-wide count of worker threads spawned by
 /// [`crate::scheduler::runtime::Runtime`]s — the telemetry behind the
 /// runtime-lifecycle regression tests ("a full MLE run spawns exactly

@@ -122,3 +122,106 @@ fn mp_full_band_conforms_to_exact() {
         assert_conformance(case, Variant::Mp { band: nt }, 1e-8);
     });
 }
+
+/// The historical MP semantics ("demote-then-f64"): every tile generated
+/// in f64, off-band tiles rounded through f32, then a fully-f64 tiled
+/// factorization + forward solve.  The current MP path stores off-band
+/// tiles as real f32 and computes their updates through the f32
+/// micro-kernels, so it must track this oracle to f32-scale accuracy —
+/// same rounded matrix, half-width arithmetic.
+fn mp_demote_then_f64_oracle(
+    p: &Problem,
+    theta: &[f64],
+    band: usize,
+    ts: usize,
+) -> exageostat::likelihood::LogLik {
+    use exageostat::linalg::cholesky::{
+        check_fail, new_fail_flag, submit_tiled_forward_solve_banded, submit_tiled_potrf,
+        TileHandles,
+    };
+    use exageostat::linalg::tile::{TileMatrix, TileVector};
+    use exageostat::scheduler::pool;
+    use exageostat::scheduler::TaskGraph;
+
+    let n = p.dim();
+    let mut a = TileMatrix::zeros(n, ts);
+    for i in 0..a.nt() {
+        for j in 0..=i {
+            let h = a.tile_rows(i);
+            let w = a.tile_cols(j);
+            let mut buf = vec![0.0f64; h * w];
+            exageostat::covariance::fill_cov_tile(
+                p.kernel.as_ref(),
+                theta,
+                &p.locs,
+                p.metric,
+                i * ts,
+                j * ts,
+                h,
+                w,
+                &mut buf,
+            );
+            if i - j > band {
+                exageostat::likelihood::mp::demote_f32(&mut buf);
+            }
+            a.tile_mut(i, j).copy_from_slice(&buf);
+        }
+    }
+    let mut g = TaskGraph::new();
+    let hs = TileHandles::register(&mut g, a.nt());
+    let fail = new_fail_flag();
+    submit_tiled_potrf(&mut g, &a, &hs, None, &fail);
+    let y = TileVector::from_slice(&p.z, ts);
+    let yh = g.register_many(y.nt());
+    submit_tiled_forward_solve_banded(&mut g, &a, &hs, &y, &yh, None);
+    pool::run(&mut g, 2, exageostat::scheduler::pool::Policy::Lws);
+    check_fail(&fail).expect("oracle factorization SPD");
+    exageostat::likelihood::LogLik::assemble(2.0 * a.diag_sum(f64::ln), y.dot_self(), n)
+}
+
+#[test]
+fn mp_f32_compute_tracks_demote_then_f64_oracle() {
+    // Keep smoothness/range in the well-conditioned regime (as the TLR
+    // exact-limit test does): f32 rounding of off-band tiles perturbs
+    // eigenvalues by ~1e-7·σ², so a near-singular draw could lose
+    // positive definiteness in *both* paths and test nothing.
+    let gen_mp = |rng: &mut Pcg64| {
+        let n = 24 + rng.below(49); // 24..=72
+        let ts = [7usize, 11, 16, 24][rng.below(4)];
+        let theta = [
+            rng.uniform(0.5, 2.0),
+            rng.uniform(0.03, 0.15),
+            [0.5, 1.0][rng.below(2)],
+        ];
+        Case {
+            n,
+            ts,
+            locs: gen::locations(rng, n),
+            z: gen::normals(rng, n),
+            theta,
+        }
+    };
+    forall(0x3F_0004, 8, gen_mp, |case| {
+        let p = problem(case);
+        let nt = case.n.div_ceil(case.ts);
+        let band = if nt > 1 { (nt - 1).min(1) } else { 0 };
+        let oracle = mp_demote_then_f64_oracle(&p, &case.theta, band, case.ts);
+        let ctx = ExecCtx::new(2, case.ts, Policy::Lws);
+        let mut session = EvalSession::new(&p, Variant::Mp { band }, &ctx).unwrap();
+        let got = session.eval(&case.theta).unwrap();
+        // f32-scale agreement: identical rounded matrix, f32 vs f64
+        // factorization arithmetic on the off-band tiles.
+        let tol = 1e-3 * (1.0 + oracle.loglik.abs());
+        assert!(
+            (got.loglik - oracle.loglik).abs() <= tol,
+            "n={} ts={} band={band} theta={:?}: f32-path {} vs demote-then-f64 {}",
+            case.n,
+            case.ts,
+            case.theta,
+            got.loglik,
+            oracle.loglik
+        );
+        assert!((got.logdet - oracle.logdet).abs() <= tol, "logdet drift");
+        assert!((got.sse - oracle.sse).abs() <= tol, "sse drift");
+    });
+}

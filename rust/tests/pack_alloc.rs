@@ -1,0 +1,82 @@
+//! Pack-workspace allocation regression (dedicated binary).
+//!
+//! Warm `EvalSession` iterations must perform **zero pack-buffer
+//! allocations on the runtime workers**: the GEMM/SYRK/TRSM tile tasks
+//! pack into thread-local workspaces that persistent workers grow once
+//! (pre-grown via `Runtime::prewarm_workers` at session build) and then
+//! reuse for the rest of the process.
+//!
+//! This lives in its own integration-test binary on purpose: the
+//! counter (`testkit::pack_buffer_allocs`) is process-global because
+//! the allocations happen on worker threads while the assertion runs on
+//! the submitting thread — any concurrently running test that executes
+//! a kernel would perturb the count.  Cargo runs test binaries
+//! sequentially, and this binary contains only serialized assertions.
+
+use exageostat::covariance::{kernel_by_name, DistanceMetric, Location};
+use exageostat::likelihood::{EvalSession, ExecCtx, Problem, Variant};
+use exageostat::linalg::blas::{dgemm_raw, Trans};
+use exageostat::rng::Pcg64;
+use exageostat::scheduler::pool::Policy;
+use exageostat::testkit::pack_buffer_allocs;
+use std::sync::Arc;
+
+fn make_problem(n: usize, seed: u64) -> Problem {
+    let mut rng = Pcg64::seed_from_u64(seed);
+    let locs: Vec<Location> = (0..n)
+        .map(|_| Location::new(rng.next_f64(), rng.next_f64()))
+        .collect();
+    let z: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    Problem {
+        kernel: kernel_by_name("ugsm-s").unwrap().into(),
+        locs: Arc::new(locs),
+        z: Arc::new(z),
+        metric: DistanceMetric::Euclidean,
+    }
+}
+
+#[test]
+fn warm_iterations_allocate_zero_pack_buffers() {
+    // ts large enough that tile GEMMs take the packed path (the naive
+    // cutoff is m*n*k <= 4096), n spanning several tile rows so every
+    // kernel kind (GEMM/SYRK/TRSM + MP's mixed forms) is exercised.
+    let p = make_problem(120, 0x9ACC);
+    let ctx = ExecCtx::new(2, 32, Policy::Lws);
+    let thetas = [
+        [1.0, 0.08, 0.5],
+        [1.5, 0.12, 1.0],
+        [0.8, 0.1, 0.5],
+        [1.2, 0.09, 1.0],
+    ];
+    for variant in [Variant::Exact, Variant::Mp { band: 0 }] {
+        let mut s = EvalSession::new(&p, variant, &ctx).unwrap();
+        // Warm-up: lets every worker grow its workspace to the maximum
+        // tile footprint (prewarm at session build already reserved it;
+        // the extra evals make the invariant scheduling-independent).
+        s.eval(&thetas[0]).unwrap();
+        s.eval(&thetas[1]).unwrap();
+        let base = pack_buffer_allocs();
+        s.eval(&thetas[2]).unwrap();
+        s.eval(&thetas[3]).unwrap();
+        s.eval(&thetas[0]).unwrap();
+        assert_eq!(
+            pack_buffer_allocs(),
+            base,
+            "{variant:?}: warm iterations performed pack-buffer allocations"
+        );
+    }
+
+    // Control: the counter is live — a packed gemm on a fresh thread
+    // (whose thread-local workspace is cold) must allocate.
+    let before = pack_buffer_allocs();
+    std::thread::spawn(|| {
+        let n = 64;
+        let a = vec![1.0f64; n * n];
+        let b = vec![0.5f64; n * n];
+        let mut c = vec![0.0f64; n * n];
+        dgemm_raw(Trans::N, Trans::T, n, n, n, 1.0, &a, n, &b, n, 0.0, &mut c, n);
+    })
+    .join()
+    .unwrap();
+    assert!(pack_buffer_allocs() > before, "cold thread must allocate");
+}
