@@ -36,13 +36,15 @@ artifacts:
 # serving_throughput refreshes BENCH_serving.json (shared-runtime vs
 # per-job-pool requests/sec + latency percentiles); kernel_roofline
 # refreshes BENCH_kernels.json (per-kernel GFLOP/s, dispatched-SIMD vs
-# forced-scalar, MP-vs-exact time/eval — EXPERIMENTS.md §Kernel
-# roofline).  CI uploads the BENCH_*.json files as artifacts.  Ends
+# forced-scalar, fused-vs-unfused warm eval per variant, MP-vs-exact
+# time/eval — EXPERIMENTS.md §Kernel roofline).  BENCH_OUT pins every
+# bench's JSON to the repo root regardless of cargo's bench cwd, so the
+# CI artifact glob and the regression gate always find them.  Ends
 # with a smoke invocation of the `exageostat serve` subcommand.
 bench-smoke:
 	@for b in $(BENCHES); do \
 		echo "== bench $$b (quick) =="; \
-		BENCH_QUICK=1 cargo bench --bench $$b || exit 1; \
+		BENCH_QUICK=1 BENCH_OUT=$(abspath .) cargo bench --bench $$b || exit 1; \
 	done
 	@echo "== serve smoke (file) =="
 	@mkdir -p target

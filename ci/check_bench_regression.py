@@ -1,0 +1,154 @@
+#!/usr/bin/env python3
+"""Bench regression gate (CI `bench-gate` job).
+
+Compares the BENCH_*.json telemetry emitted by `make bench-smoke`
+against the committed baseline (`ci/bench_baseline.json`) and fails on
+regressions beyond the tolerance.
+
+Baseline schema::
+
+    {
+      "tolerance": 0.25,
+      "files": {
+        "BENCH_kernels.json": [
+          {"path": "mle.exact_eval_dispatch_s", "kind": "time",
+           "value": 2.0, "note": "..."},
+          {"path": "kernels[op=gemm,prec=f64,b=128].gflops_dispatch",
+           "kind": "throughput", "value": 0.4}
+        ]
+      }
+    }
+
+* ``kind: "time"`` — lower is better; regression when
+  ``current > value * (1 + tolerance)``.
+* ``kind: "throughput"`` — higher is better (GFLOP/s, speedup ratios);
+  regression when ``current < value * (1 - tolerance)``.
+* A metric may carry its own ``tolerance`` overriding the global one.
+
+Paths are dotted keys with optional list selectors:
+``kernels[op=gemm,prec=f64,b=128].gflops_dispatch`` selects the unique
+element of the ``kernels`` array whose fields match every ``k=v`` pair
+(compared as strings).  A missing path or a ``null`` value is a skip
+with a warning, not a failure: benches null out non-finite samples
+(see ``jnum`` in the bench sources), and a flaky sample must not wedge
+CI.  A missing *file* is a hard failure — the gate exists to ensure
+the benches keep emitting their telemetry.
+
+Usage: check_bench_regression.py [--baseline ci/bench_baseline.json]
+                                 [--dir .]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+from pathlib import Path
+
+TOKEN = re.compile(r"^(\w+)(?:\[([^\]]*)\])?$")
+
+
+def resolve(doc, path):
+    """Walk ``doc`` along ``path``; returns the value or raises KeyError."""
+    for tok in path.split("."):
+        m = TOKEN.match(tok)
+        if not m:
+            raise KeyError(f"malformed path token {tok!r}")
+        name, selector = m.group(1), m.group(2)
+        if not isinstance(doc, dict) or name not in doc:
+            raise KeyError(f"no key {name!r}")
+        doc = doc[name]
+        if selector is not None:
+            if not isinstance(doc, list):
+                raise KeyError(f"{name!r} is not a list")
+            pairs = [kv.split("=", 1) for kv in selector.split(",")]
+            matches = [
+                el
+                for el in doc
+                if isinstance(el, dict)
+                and all(str(el.get(k)) == v for k, v in pairs)
+            ]
+            if len(matches) != 1:
+                raise KeyError(
+                    f"selector [{selector}] matched {len(matches)} "
+                    f"elements of {name!r} (want exactly 1)"
+                )
+            doc = matches[0]
+    return doc
+
+
+def check_metric(doc, metric, global_tol):
+    """Returns (status, message); status in {'ok', 'skip', 'fail'}."""
+    path = metric["path"]
+    kind = metric["kind"]
+    base = metric["value"]
+    tol = metric.get("tolerance", global_tol)
+    try:
+        cur = resolve(doc, path)
+    except KeyError as e:
+        return "skip", f"{path}: not found ({e})"
+    if cur is None:
+        return "skip", f"{path}: null (non-finite sample) — skipped"
+    if not isinstance(cur, (int, float)):
+        return "fail", f"{path}: non-numeric value {cur!r}"
+    if kind == "time":
+        limit = base * (1.0 + tol)
+        ok = cur <= limit
+        detail = f"{cur:.4g}s vs baseline {base:.4g}s (limit {limit:.4g}s)"
+    elif kind == "throughput":
+        limit = base * (1.0 - tol)
+        ok = cur >= limit
+        detail = f"{cur:.4g} vs baseline {base:.4g} (floor {limit:.4g})"
+    else:
+        return "fail", f"{path}: unknown kind {kind!r}"
+    return ("ok" if ok else "fail"), f"{path}: {detail}"
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", default="ci/bench_baseline.json")
+    ap.add_argument(
+        "--dir", default=".", help="directory holding the BENCH_*.json files"
+    )
+    args = ap.parse_args(argv)
+
+    baseline = json.loads(Path(args.baseline).read_text())
+    global_tol = baseline.get("tolerance", 0.25)
+    failures, skips, passes = [], [], []
+
+    for fname, metrics in baseline["files"].items():
+        fpath = Path(args.dir) / fname
+        if not fpath.exists():
+            failures.append(f"{fname}: file missing (bench did not emit it)")
+            continue
+        try:
+            doc = json.loads(fpath.read_text())
+        except json.JSONDecodeError as e:
+            failures.append(f"{fname}: invalid JSON ({e})")
+            continue
+        for metric in metrics:
+            status, msg = check_metric(doc, metric, global_tol)
+            label = f"{fname} :: {msg}"
+            if status == "fail":
+                failures.append(label)
+            elif status == "skip":
+                skips.append(label)
+            else:
+                passes.append(label)
+
+    for p in passes:
+        print(f"  ok   {p}")
+    for s in skips:
+        print(f"  SKIP {s}")
+    for f in failures:
+        print(f"  FAIL {f}")
+    print(
+        f"bench gate: {len(passes)} ok, {len(skips)} skipped, "
+        f"{len(failures)} failed (tolerance {global_tol:.0%})"
+    )
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

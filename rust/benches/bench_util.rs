@@ -32,6 +32,20 @@ pub fn row(cells: &[String]) {
     println!("{}", row.join(" "));
 }
 
+/// Resolve the output path for a bench's JSON telemetry under the
+/// `BENCH_OUT` override.  A value ending in `.json` names the file
+/// directly (single-bench back-compat); anything else is a directory the
+/// bench writes its default-named file into — so CI exports one
+/// directory for the whole suite and the artifact glob no longer
+/// depends on cargo's bench working directory.
+pub fn bench_out_path(default_name: &str) -> std::path::PathBuf {
+    match std::env::var("BENCH_OUT") {
+        Ok(v) if v.ends_with(".json") => std::path::PathBuf::from(v),
+        Ok(v) => std::path::Path::new(&v).join(default_name),
+        Err(_) => std::path::PathBuf::from(default_name),
+    }
+}
+
 /// `--quick` flag: benches honor it to shrink problem sizes under CI.
 pub fn quick() -> bool {
     std::env::args().any(|a| a == "--quick") || std::env::var("BENCH_QUICK").is_ok()

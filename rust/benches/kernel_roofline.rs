@@ -17,6 +17,7 @@ use exageostat::linalg::blas::{
     detected_simd, dgemm_raw_at, dpotrf_raw, dsyrk_ln_raw, dtrsm_rltn_raw, gemm_mp_at,
     set_simd_override, simd_level, MatMut, MatRef, SimdLevel, Trans,
 };
+use exageostat::pipeline::set_fuse_override;
 use exageostat::rng::Pcg64;
 use exageostat::scheduler::pool::Policy;
 use std::sync::Arc;
@@ -239,6 +240,79 @@ fn main() {
     );
 
     // -----------------------------------------------------------------
+    // Fusion planner: warm eval per variant, fused vs unfused plans over
+    // the same session.  The exact n=4096 case is the CI regression
+    // gate's wall (fused warm time must not exceed unfused) and runs at
+    // full size even under --quick; the other variants shrink.
+    // -----------------------------------------------------------------
+    struct FusionRow {
+        variant: &'static str,
+        n: usize,
+        ts: usize,
+        fused_s: f64,
+        unfused_s: f64,
+    }
+    let n_small = if quick { 480 } else { 960 };
+    let fusion_cases: [(&'static str, Variant, usize, usize); 4] = [
+        ("exact", Variant::Exact, 4096, 256),
+        ("dst", Variant::Dst { band: 1 }, n_small, 64),
+        ("mp", Variant::Mp { band: 1 }, n_small, 64),
+        (
+            "tlr",
+            Variant::Tlr {
+                tol: 1e-7,
+                max_rank: 48,
+            },
+            n_small,
+            64,
+        ),
+    ];
+    println!("\nFusion planner — warm eval per variant");
+    header(&["variant", "n", "ts", "fused s", "unfused s", "speedup"]);
+    let mut fusion_rows: Vec<FusionRow> = Vec::new();
+    for (name, variant, fn_, fts) in fusion_cases {
+        let locs: Vec<Location> = (0..fn_)
+            .map(|_| Location::new(rng.next_f64(), rng.next_f64()))
+            .collect();
+        let z: Vec<f64> = (0..fn_).map(|_| rng.normal()).collect();
+        let fproblem = Problem {
+            kernel: kernel_by_name("ugsm-s").unwrap().into(),
+            locs: Arc::new(locs),
+            z: Arc::new(z),
+            metric: DistanceMetric::Euclidean,
+        };
+        let fctx = ExecCtx::new(4, fts, Policy::Prio);
+        let mut sess = EvalSession::new(&fproblem, variant, &fctx).unwrap();
+        let mut timed = |fuse: bool| -> f64 {
+            set_fuse_override(Some(fuse));
+            sess.eval(&theta).unwrap(); // warm under this plan shape
+            time_median(k, || {
+                sess.eval(&theta).unwrap();
+            })
+        };
+        // Unfused first: any residual warm-up drift then favors neither
+        // side systematically (each mode gets its own warm eval).
+        let unfused_s = timed(false);
+        let fused_s = timed(true);
+        set_fuse_override(None);
+        row(&[
+            name.into(),
+            format!("{fn_}"),
+            format!("{fts}"),
+            s(fused_s),
+            s(unfused_s),
+            s2(unfused_s / fused_s),
+        ]);
+        fusion_rows.push(FusionRow {
+            variant: name,
+            n: fn_,
+            ts: fts,
+            fused_s,
+            unfused_s,
+        });
+    }
+
+    // -----------------------------------------------------------------
     // BENCH_kernels.json
     // -----------------------------------------------------------------
     let jnum = |v: f64| -> String {
@@ -271,6 +345,22 @@ fn main() {
         simd_level().name()
     ));
     json.push_str(&format!("  \"kernels\": [\n{}\n  ],\n", kernel_rows.join(",\n")));
+    let fusion_json: Vec<String> = fusion_rows
+        .iter()
+        .map(|r| {
+            format!(
+                "    {{\"variant\": \"{}\", \"n\": {}, \"ts\": {}, \
+                 \"fused_s\": {}, \"unfused_s\": {}, \"speedup\": {}}}",
+                r.variant,
+                r.n,
+                r.ts,
+                jnum(r.fused_s),
+                jnum(r.unfused_s),
+                jnum(r.unfused_s / r.fused_s)
+            )
+        })
+        .collect();
+    json.push_str(&format!("  \"fusion\": [\n{}\n  ],\n", fusion_json.join(",\n")));
     json.push_str(&format!(
         "  \"mle\": {{\n    \"n\": {n}, \"ts\": {ts},\n    \
          \"exact_eval_scalar_s\": {},\n    \"exact_eval_dispatch_s\": {},\n    \
@@ -283,7 +373,8 @@ fn main() {
         jnum(t_dispatch / t_mp)
     ));
     json.push_str("}\n");
-    let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_kernels.json".into());
-    std::fs::write(&out, &json).unwrap_or_else(|e| eprintln!("cannot write {out}: {e}"));
-    println!("telemetry written to {out}");
+    let out = bench_out_path("BENCH_kernels.json");
+    std::fs::write(&out, &json)
+        .unwrap_or_else(|e| eprintln!("cannot write {}: {e}", out.display()));
+    println!("telemetry written to {}", out.display());
 }

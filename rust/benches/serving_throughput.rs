@@ -257,7 +257,8 @@ fn main() {
          \"tasks_executed\": {can_tasks}}}\n}}\n",
         hw.ncores
     );
-    let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_serving.json".into());
-    std::fs::write(&out, &json).unwrap_or_else(|e| eprintln!("cannot write {out}: {e}"));
-    println!("telemetry written to {out}");
+    let out = bench_out_path("BENCH_serving.json");
+    std::fs::write(&out, &json)
+        .unwrap_or_else(|e| eprintln!("cannot write {}: {e}", out.display()));
+    println!("telemetry written to {}", out.display());
 }

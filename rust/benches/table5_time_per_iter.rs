@@ -193,8 +193,9 @@ fn main() {
         jnum(speedup)
     ));
     json.push_str("  }\n}\n");
-    let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_mle_iter.json".into());
-    std::fs::write(&out, &json).unwrap_or_else(|e| eprintln!("cannot write {out}: {e}"));
-    println!("telemetry written to {out}");
+    let out = bench_out_path("BENCH_mle_iter.json");
+    std::fs::write(&out, &json)
+        .unwrap_or_else(|e| eprintln!("cannot write {}: {e}", out.display()));
+    println!("telemetry written to {}", out.display());
     exa.finalize();
 }

@@ -423,9 +423,12 @@ pub fn mle_with_session(session: &mut EvalSession, opt: &MleOptions) -> anyhow::
         bounds,
         &opts,
     );
-    if cancel.is_cancelled() {
-        // The search stopped early; whatever iterate it holds is not an
-        // MLE.  Report the cancellation as a typed, downcastable error.
+    if r.stopped {
+        // The optimizer *observed* the stop signal and cut the search
+        // short; whatever iterate it holds is not an MLE.  Report the
+        // cancellation as a typed, downcastable error.  (Checking
+        // `r.stopped` rather than re-reading the token avoids mislabeling
+        // a run whose token fired only after the search converged.)
         return Err(ApiError::Cancelled.into());
     }
     anyhow::ensure!(

@@ -463,14 +463,13 @@ impl Coordinator {
             DataSource::Spec(spec) => {
                 let kernel: Arc<dyn CovKernel> = Arc::from(kernel_by_name(&spec.kernel)?);
                 let metric = DistanceMetric::parse(&spec.dmetric)?;
+                // A token fired mid-simulation skips runtime tasks; the
+                // pipeline detects that and reports `Cancelled` itself,
+                // so an `Ok` here is a fully-generated buffer, safe to
+                // cache — no racy re-read of the token needed.
                 let sim = simulation::simulate_data_exact(
                     kernel, &spec.theta, spec.n, metric, spec.seed, ctx,
                 )?;
-                // A token fired mid-simulation skipped tasks: the buffer
-                // is garbage and must not be cached.
-                if ctx.cancel.is_cancelled() {
-                    return Err(ApiError::Cancelled.into());
-                }
                 (Arc::new(sim.locs), Arc::new(sim.z))
             }
             DataSource::Inline { locs, z, .. } => (locs.clone(), z.clone()),
@@ -535,15 +534,13 @@ impl Coordinator {
             // Cancelled while queued: skip the work entirely.
             Err(ApiError::Cancelled.into())
         } else {
-            match self.dispatch(&req, cancel) {
-                // A token that fired mid-request may have skipped tasks
-                // of in-flight graphs: an Ok result is built on garbage
-                // and an Err (e.g. "not positive definite" from a
-                // half-generated matrix) is a symptom, not the story —
-                // both report as the cancellation they are.
-                _ if cancel.is_cancelled() => Err(ApiError::Cancelled.into()),
-                other => other,
-            }
+            // Whether the token interrupted the work is decided *inside*
+            // the layers that can observe it (the pipeline sees skipped
+            // tasks, the optimizer latches an observed stop) — never by
+            // re-reading the token here.  A token that fires after the
+            // request completed must leave its `Done` result alone, or
+            // `cancelled` double-counts against a successful response.
+            self.dispatch(&req, cancel)
         };
         match &r {
             Err(e) if is_cancelled(e) => {

@@ -30,6 +30,7 @@ pub mod data;
 pub mod likelihood;
 pub mod linalg;
 pub mod optimizer;
+pub mod pipeline;
 pub mod prediction;
 pub mod rng;
 pub mod runtime;

@@ -6,10 +6,7 @@
 use super::{ExecCtx, LogLik, Problem};
 use crate::backend::{ArcEngine, Engine as _};
 use crate::covariance::DistCache;
-use crate::linalg::cholesky::{
-    check_fail, in_band, new_fail_flag, submit_tiled_forward_solve_banded, submit_tiled_potrf,
-    TileHandles,
-};
+use crate::linalg::cholesky::{in_band, TileHandles};
 use crate::linalg::tile::{TileMatrix, TileVector};
 use crate::scheduler::{Access, TaskGraph, TaskKind};
 use std::sync::Arc;
@@ -34,8 +31,13 @@ pub fn submit_generation(
 /// distance cache of a warm [`super::EvalSession`] iteration; each task
 /// captures its tile's `Arc`-shared block so the engine can skip the
 /// metric work.  `a` must be all-f64 storage — the MP variant, whose
-/// off-band tiles are f32-stored, generates through its own
-/// `submit_generation_mp` (demote-on-store via a reusable f64 stage).
+/// off-band tiles are f32-stored, generates through the pipeline
+/// runner's precision-aware op (demote-on-store via a reusable f64
+/// stage).
+///
+/// This legacy STF emitter is no longer on the likelihood hot path
+/// (which lowers through `crate::pipeline`); it remains the reference
+/// layer the planner's task-count parity tests compare against.
 #[allow(clippy::too_many_arguments)]
 pub fn submit_generation_with(
     g: &mut TaskGraph,
@@ -139,25 +141,14 @@ pub(crate) fn run_pipeline(
     a: &TileMatrix,
     y: &TileVector,
 ) -> anyhow::Result<LogLik> {
-    let mut g = TaskGraph::new();
-    let hs = TileHandles::register(&mut g, a.nt());
-    submit_generation_with(&mut g, a, &hs, problem, theta, band, &ctx.engine, dist);
-    let fail = new_fail_flag();
-    submit_tiled_potrf(&mut g, a, &hs, band, &fail);
-    let yh = g.register_many(y.nt());
-    submit_tiled_forward_solve_banded(&mut g, a, &hs, y, &yh, band);
-    // One job on the context's persistent runtime: no threads are
-    // spawned here — warm MLE iterations reuse the parked workers.
-    ctx.run_graph(g);
-    check_fail(&fail).map_err(|e| {
-        anyhow::anyhow!(
-            "covariance not positive definite at pivot {} (theta = {theta:?})",
-            e.pivot
-        )
-    })?;
-    let logdet = 2.0 * a.diag_sum(f64::ln);
-    let sse = y.dot_self();
-    Ok(LogLik::assemble(logdet, sse, a.n()))
+    // Lower through the pipeline IR and the fusion planner; the plan
+    // runs as one job on the context's persistent runtime — no threads
+    // are spawned here, warm MLE iterations reuse the parked workers.
+    let out = crate::pipeline::run_tiled(problem, theta, ctx, dist, a, Some(y), band, true)?;
+    if let Some(pivot) = out.not_spd {
+        anyhow::bail!("covariance not positive definite at pivot {pivot} (theta = {theta:?})");
+    }
+    Ok(LogLik::assemble(out.logdet, y.dot_self(), a.n()))
 }
 
 /// Tile occupancy map for Fig 1 visualisation: returns, for each lower

@@ -13,15 +13,8 @@
 //! measured speedup, not a simulated rounding.
 
 use super::{ExecCtx, LogLik, Problem};
-use crate::backend::{ArcEngine, Engine as _};
 use crate::covariance::DistCache;
-use crate::linalg::blas::{with_stage_f64, MatMut};
-use crate::linalg::cholesky::{
-    check_fail, new_fail_flag, submit_tiled_forward_solve_banded, submit_tiled_potrf, TileHandles,
-};
 use crate::linalg::tile::{TileMatrix, TileVector};
-use crate::scheduler::{Access, TaskGraph, TaskKind};
-use std::sync::Arc;
 
 /// Is tile (i, j) kept in full precision?  Delegates to the single
 /// storage-rule predicate next to [`TileMatrix::zeros_mp`], so the MP
@@ -36,77 +29,6 @@ pub fn is_f64_tile(band: usize, i: usize, j: usize) -> bool {
 pub fn demote_f32(buf: &mut [f64]) {
     for v in buf.iter_mut() {
         *v = *v as f32 as f64;
-    }
-}
-
-/// Submit MP generation tasks: every lower tile is generated; f32-stored
-/// off-band tiles are evaluated into a reusable thread-local f64 stage
-/// (the covariance kernels are f64 code) and demoted on store.
-#[allow(clippy::too_many_arguments)]
-fn submit_generation_mp(
-    g: &mut TaskGraph,
-    a: &TileMatrix,
-    hs: &TileHandles,
-    problem: &Problem,
-    theta: &[f64],
-    engine: &ArcEngine,
-    dist: Option<&DistCache>,
-) {
-    let nt = a.nt();
-    let ts = a.ts();
-    let theta: Arc<Vec<f64>> = Arc::new(theta.to_vec());
-    for i in 0..nt {
-        for j in 0..=i {
-            let bytes = a.tile_bytes_at(i, j);
-            let h = a.tile_rows(i);
-            let w = a.tile_cols(j);
-            let ptr = a.tile_ptr(i, j);
-            let kernel = problem.kernel.clone();
-            let locs = problem.locs.clone();
-            let metric = problem.metric;
-            let theta = theta.clone();
-            let engine = engine.clone();
-            let block = dist.and_then(|c| c.block(i, j));
-            let (row0, col0) = (i * ts, j * ts);
-            g.submit(TaskKind::DCMG, &[(hs.at(i, j), Access::W)], bytes, move || {
-                // SAFETY: STF ordering gives exclusive access to the tile.
-                match unsafe { ptr.mat_mut() } {
-                    MatMut::F64(out) => {
-                        engine.fill_tile(
-                            kernel.as_ref(),
-                            &theta,
-                            &locs,
-                            metric,
-                            row0,
-                            col0,
-                            h,
-                            w,
-                            block.as_deref(),
-                            out,
-                        );
-                    }
-                    MatMut::F32(out) => {
-                        with_stage_f64(h * w, |stage| {
-                            engine.fill_tile(
-                                kernel.as_ref(),
-                                &theta,
-                                &locs,
-                                metric,
-                                row0,
-                                col0,
-                                h,
-                                w,
-                                block.as_deref(),
-                                stage,
-                            );
-                            for (d, s) in out.iter_mut().zip(stage.iter()) {
-                                *d = *s as f32;
-                            }
-                        });
-                    }
-                }
-            });
-        }
     }
 }
 
@@ -138,26 +60,14 @@ pub(crate) fn run_pipeline(
     y: &TileVector,
 ) -> anyhow::Result<LogLik> {
     debug_assert_eq!(a.mp_band(), Some(band), "workspace band mismatch");
-    let mut g = TaskGraph::new();
-    let hs = TileHandles::register(&mut g, a.nt());
-    submit_generation_mp(&mut g, a, &hs, problem, theta, &ctx.engine, dist);
-    let fail = new_fail_flag();
-    // Factorization is structurally dense (band = None): MP demotes
-    // values and arithmetic, it does not drop tiles — the per-tile
-    // precision dispatch lives inside `submit_tiled_potrf`.
-    submit_tiled_potrf(&mut g, a, &hs, None, &fail);
-    let yh = g.register_many(y.nt());
-    submit_tiled_forward_solve_banded(&mut g, a, &hs, y, &yh, None);
-    ctx.run_graph(g);
-    check_fail(&fail).map_err(|e| {
-        anyhow::anyhow!(
-            "MP covariance not positive definite at pivot {} (theta = {theta:?})",
-            e.pivot
-        )
-    })?;
-    let logdet = 2.0 * a.diag_sum(f64::ln);
-    let sse = y.dot_self();
-    Ok(LogLik::assemble(logdet, sse, a.n()))
+    // The *structural* band is None: MP demotes values and arithmetic,
+    // it does not drop tiles — the per-tile precision dispatch rides on
+    // `a`'s mixed-precision storage layout inside the pipeline runner.
+    let out = crate::pipeline::run_tiled(problem, theta, ctx, dist, a, Some(y), None, true)?;
+    if let Some(pivot) = out.not_spd {
+        anyhow::bail!("MP covariance not positive definite at pivot {pivot} (theta = {theta:?})");
+    }
+    Ok(LogLik::assemble(out.logdet, y.dot_self(), a.n()))
 }
 
 #[cfg(test)]

@@ -29,7 +29,7 @@
 //! `api::ExaGeoStat::mle` routes every optimizer objective evaluation
 //! through a session; one-shot callers can keep using `likelihood::loglik`.
 
-use super::{exact, mp, tlr, ExecCtx, LogLik, Problem, Variant};
+use super::{exact, mp, ExecCtx, LogLik, Problem, Variant};
 use crate::covariance::{morton_perm, DistCache};
 use crate::linalg::lowrank::LrOpts;
 use crate::linalg::tile::{TileMatrix, TileVector};
@@ -192,20 +192,21 @@ impl EvalSession {
 
     fn eval_tlr(&mut self, theta: &[f64], tol: f64, max_rank: usize) -> anyhow::Result<LogLik> {
         let opts = LrOpts { tol, max_rank };
-        let mut a = tlr::generate_with(
+        self.y_scratch.clear();
+        self.y_scratch.extend_from_slice(&self.problem.z);
+        let out = crate::pipeline::run_tlr(
             &self.problem,
             theta,
             opts,
-            self.ctx.ts,
-            &self.ctx.engine,
+            &self.ctx,
             Some(&*self.dist),
-        );
-        let logdet = tlr::tlr_potrf(&mut a, opts)?;
-        self.y_scratch.clear();
-        self.y_scratch.extend_from_slice(&self.problem.z);
-        tlr::tlr_forward_solve(&a, &mut self.y_scratch);
+            &mut self.y_scratch,
+        )?;
+        if let Some(pivot) = out.not_spd {
+            anyhow::bail!("TLR potrf failed at pivot {pivot}");
+        }
         let sse = self.y_scratch.iter().map(|v| v * v).sum();
-        Ok(LogLik::assemble(logdet, sse, self.problem.dim()))
+        Ok(LogLik::assemble(out.logdet, sse, self.problem.dim()))
     }
 
     /// Evaluations performed so far (successful or failed).

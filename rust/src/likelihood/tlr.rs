@@ -225,11 +225,12 @@ pub fn loglik(
         z: std::sync::Arc::new(Vec::new()),
         metric: problem.metric,
     };
-    let mut a = generate_with(&sorted, theta, opts, ctx.ts, &ctx.engine, None);
-    let logdet = tlr_potrf(&mut a, opts)?;
-    tlr_forward_solve(&a, &mut y);
+    let out = crate::pipeline::run_tlr(&sorted, theta, opts, ctx, None, &mut y)?;
+    if let Some(pivot) = out.not_spd {
+        anyhow::bail!("TLR potrf failed at pivot {pivot}");
+    }
     let sse = y.iter().map(|v| v * v).sum();
-    Ok(LogLik::assemble(logdet, sse, problem.dim()))
+    Ok(LogLik::assemble(out.logdet, sse, problem.dim()))
 }
 
 #[cfg(test)]

@@ -17,6 +17,7 @@ pub mod bobyqa;
 pub mod nelder_mead;
 
 use crate::scheduler::runtime::CancelToken;
+use std::cell::Cell;
 use std::time::Instant;
 
 /// Box constraints (the `clb` / `cub` vectors of the R API).
@@ -97,6 +98,12 @@ pub struct OptResult {
     pub time_per_iter: f64,
     /// Best objective value after each evaluation.
     pub history: Vec<f64>,
+    /// Whether the external stop signal was *observed* by the optimizer
+    /// loop (as opposed to firing after the last check).  Callers use
+    /// this — not a re-read of the token — to decide whether the run
+    /// was cancelled: re-reading races with tokens that fire just after
+    /// a run completes normally.
+    pub stopped: bool,
 }
 
 /// Wraps a raw objective with bounds clamping, counting and timing.
@@ -110,6 +117,8 @@ pub struct Instrumented<'a> {
     /// External stop signal (from [`OptOptions::stop`]): when fired,
     /// `eval` stops invoking the wrapped objective.
     pub stop: Option<CancelToken>,
+    /// Latched the first time `stop_requested` observes a fired token.
+    stop_seen: Cell<bool>,
     started: Instant,
 }
 
@@ -124,13 +133,19 @@ impl<'a> Instrumented<'a> {
             best_x: vec![f64::NAN; d],
             history: Vec::new(),
             stop: None,
+            stop_seen: Cell::new(false),
             started: Instant::now(),
         }
     }
 
-    /// Has the external stop signal fired?
+    /// Has the external stop signal fired?  Observing a fired token here
+    /// latches [`OptResult::stopped`].
     pub fn stop_requested(&self) -> bool {
-        self.stop.as_ref().is_some_and(|t| t.is_cancelled())
+        let fired = self.stop.as_ref().is_some_and(|t| t.is_cancelled());
+        if fired {
+            self.stop_seen.set(true);
+        }
+        fired
     }
 
     /// Evaluate at `x` (clamped into bounds first).  A fired stop
@@ -166,6 +181,7 @@ impl<'a> Instrumented<'a> {
             total_time: total,
             time_per_iter: total / iters as f64,
             history: self.history,
+            stopped: self.stop_seen.get(),
         }
     }
 }
@@ -371,7 +387,30 @@ mod tests {
             );
             assert_eq!(calls.get(), 3, "{m:?}: objective called after stop");
             assert_eq!(r.iters, 3, "{m:?}");
+            assert!(r.stopped, "{m:?}: observed stop must latch into result");
         }
+    }
+
+    #[test]
+    fn unstopped_runs_report_stopped_false() {
+        // Even with a token wired in, a run that converges before the
+        // token fires must not report `stopped` — and a token fired
+        // *after* the run must not retroactively flip it.
+        let token = CancelToken::new();
+        let r = minimize(
+            Method::Bobyqa,
+            sphere(&[0.0, 0.0]),
+            unit_bounds(2),
+            &OptOptions {
+                tol: 1e-10,
+                max_iters: 0,
+                init: vec![3.0, 3.0],
+                stop: Some(token.clone()),
+            },
+        );
+        token.cancel(); // too late: run already finished
+        assert!(!r.stopped);
+        assert!(r.fx < 1e-7);
     }
 
     #[test]

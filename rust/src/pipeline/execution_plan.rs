@@ -1,0 +1,93 @@
+//! The flattened output of the planner: an [`ExecutionPlan`] is a list
+//! of [`PlanTask`]s in topological order, each a fused group of IR ops
+//! executed back-to-back on one worker (the tile a producer writes is
+//! still hot when its consumer runs).
+//!
+//! The plan is runtime-agnostic data.  [`ExecutionPlan::instantiate`]
+//! lowers it onto the existing STF [`TaskGraph`] through an
+//! [`OpRunner`] — the object that knows how to execute a single IR op
+//! against concrete tile storage — so `ExecCtx::run_graph` and the
+//! whole scheduler stack (priorities, profiling, cancellation) apply
+//! unchanged.  Pipelines whose op bodies are not `Send` (TLR's
+//! rank-mutating tiles) instead walk `plan.tasks` serially in order,
+//! which is valid for the same reason `instantiate` is: `preds` only
+//! reference earlier plan positions.
+
+use super::ir::{Op, TaskIR};
+use crate::scheduler::{TaskGraph, TaskKind};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// One schedulable task: a fused group of IR ops.
+#[derive(Clone, Debug)]
+pub struct PlanTask {
+    /// IR node ids, ascending — a valid execution order within the
+    /// group because every IR edge ascends node ids.
+    pub ops: Vec<usize>,
+    /// Scheduler kind of the group: the highest-priority member's kind,
+    /// so a fused `generate+potrf` still sorts as a critical-path POTRF.
+    pub kind: TaskKind,
+    /// Total bytes moved by the group (sum of member estimates); feeds
+    /// the same locality heuristics as unfused tasks.
+    pub bytes: usize,
+    /// Indices of earlier plan tasks this one depends on (deduplicated,
+    /// ascending, all `<` this task's own index).
+    pub preds: Vec<usize>,
+}
+
+/// A topologically ordered, fused task list ready for the runtime.
+#[derive(Clone, Debug, Default)]
+pub struct ExecutionPlan {
+    pub tasks: Vec<PlanTask>,
+}
+
+/// Executes one IR op against concrete storage.  Implementations carry
+/// the tile pointers / buffers; the plan carries only op identities.
+pub trait OpRunner {
+    fn run_op(&self, op: Op);
+}
+
+impl ExecutionPlan {
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+
+    /// Per-kind task counts (the fused analogue of counting a
+    /// `TaskGraph`'s nodes by kind).
+    pub fn kind_counts(&self) -> HashMap<&'static str, usize> {
+        let mut m = HashMap::new();
+        for t in &self.tasks {
+            *m.entry(t.kind.name).or_insert(0) += 1;
+        }
+        m
+    }
+
+    /// Lower the plan onto an STF [`TaskGraph`]: one graph task per
+    /// plan task, dependence edges wired explicitly from `preds`
+    /// (the planner already resolved them from the IR, so no handle
+    /// re-inference is needed or wanted — fusion deliberately collapses
+    /// handles that STF would treat as distinct).
+    pub fn instantiate<R: OpRunner + Send + Sync + 'static>(
+        &self,
+        ir: &TaskIR,
+        runner: Arc<R>,
+    ) -> TaskGraph {
+        let mut g = TaskGraph::new();
+        let mut tid: Vec<usize> = Vec::with_capacity(self.tasks.len());
+        for t in &self.tasks {
+            let preds: Vec<usize> = t.preds.iter().map(|&p| tid[p]).collect();
+            let ops: Vec<Op> = t.ops.iter().map(|&o| ir.nodes[o].op).collect();
+            let r = runner.clone();
+            let id = g.submit_dep(t.kind, &preds, t.bytes, move || {
+                for op in &ops {
+                    r.run_op(*op);
+                }
+            });
+            tid.push(id);
+        }
+        g
+    }
+}

@@ -1,0 +1,491 @@
+//! Typed task-graph IR for the tiled likelihood pipelines.
+//!
+//! Every pipeline (exact / DST / MP / TLR, plus simulation and kriging)
+//! lowers into the same small vocabulary of tile operations with explicit
+//! data-dependence edges.  The IR is *semantic*: a node says "TRSM of
+//! panel tile (i, k) against diagonal factor k", not "run this closure" —
+//! which is what lets the planner fuse producer→consumer pairs and what
+//! will let the follow-on sharding passes reassign `owner`s without a new
+//! graph type.
+//!
+//! Edges are inferred exactly like the scheduler's sequential task flow
+//! (RAW / WAR / WAW over logical resources), so an unfused plan executes
+//! the same dependence structure the legacy emitters in
+//! [`crate::linalg::cholesky`] produced.
+
+use crate::scheduler::profile::CostModel;
+use crate::scheduler::TaskKind;
+use std::collections::HashMap;
+
+/// One typed tile operation.  Coordinates are tile indices (`i >= j`,
+/// `k` the panel); `Solve*` ops act on segments of the right-hand-side
+/// vector.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum Op {
+    /// Fill tile (i, j) from the covariance kernel (`dcmg`).
+    Generate { i: usize, j: usize },
+    /// Cholesky of diagonal tile k.
+    Potrf { k: usize },
+    /// Panel solve: tile (i, k) against the factor of diagonal k.
+    Trsm { k: usize, i: usize },
+    /// Trailing symmetric update of diagonal tile (i, i) by panel k.
+    Syrk { k: usize, i: usize },
+    /// Trailing update of tile (i, j) by panel k (`k < j < i`).
+    Gemm { k: usize, i: usize, j: usize },
+    /// Partial log-determinant of diagonal factor k (per-tile ln-sum;
+    /// the host adds the partials in `k` order, so fused and unfused
+    /// plans share one summation tree and stay bit-identical).
+    LogDetReduce { k: usize },
+    /// Forward-solve update: segment i -= L(i, j) * segment j.
+    SolveGemv { i: usize, j: usize },
+    /// Forward-solve triangular step on segment i.
+    SolveTrsv { i: usize },
+}
+
+impl Op {
+    /// Scheduler/profiler classification — the cost-model hook: a
+    /// planner pass prices a node via
+    /// [`CostModel::cost`]`(op.task_kind())`.
+    pub fn task_kind(&self) -> TaskKind {
+        match self {
+            Op::Generate { .. } => TaskKind::DCMG,
+            Op::Potrf { .. } => TaskKind::POTRF,
+            Op::Trsm { .. } => TaskKind::TRSM,
+            Op::Syrk { .. } => TaskKind::SYRK,
+            Op::Gemm { .. } => TaskKind::GEMM,
+            Op::LogDetReduce { .. } => TaskKind::LOGDET,
+            // Solve ops reuse the dense kinds, matching the legacy
+            // emitters (gemv submitted as GEMM, trsv as TRSM).
+            Op::SolveGemv { .. } => TaskKind::GEMM,
+            Op::SolveTrsv { .. } => TaskKind::TRSM,
+        }
+    }
+}
+
+/// Storage/compute precision of a node's output tile.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum Precision {
+    F64,
+    /// MP off-band tile: f32 storage, f32 micro-kernel compute.
+    F32,
+    /// TLR compressed tile (`U V^T`).
+    LowRank,
+}
+
+/// One IR node: a typed op plus placement metadata and explicit edges.
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub op: Op,
+    /// Precision of the output operand.
+    pub prec: Precision,
+    /// Placement domain of the output tile (worker class / shard id;
+    /// single-node plans put everything on owner 0).  Follow-on
+    /// sharding passes partition on this without a new graph type.
+    pub owner: usize,
+    /// Bytes touched (operand sizes, mirroring the legacy emitters) —
+    /// the DES transfer model's input.
+    pub bytes: usize,
+    /// Direct predecessors (ascending node ids).
+    pub preds: Vec<usize>,
+    /// Direct successors.
+    pub succs: Vec<usize>,
+}
+
+impl Node {
+    /// Modeled execution cost in seconds under a measured per-kind
+    /// cost model (the `scheduler::profile` hook).
+    pub fn cost(&self, model: &CostModel) -> f64 {
+        model.cost(self.op.task_kind())
+    }
+}
+
+/// The lowered graph.
+#[derive(Clone, Debug, Default)]
+pub struct TaskIR {
+    pub nodes: Vec<Node>,
+}
+
+impl TaskIR {
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Node count per task kind name (test/telemetry helper).
+    pub fn kind_counts(&self) -> HashMap<&'static str, usize> {
+        let mut m = HashMap::new();
+        for n in &self.nodes {
+            *m.entry(n.op.task_kind().name).or_insert(0) += 1;
+        }
+        m
+    }
+}
+
+/// Logical resources the STF-style edge inference runs over.
+#[derive(Copy, Clone, Debug, PartialEq, Eq, Hash)]
+enum Key {
+    /// Lower tile (i, j) of the factor matrix.
+    Tile(usize, usize),
+    /// Segment i of the solve vector.
+    Seg(usize),
+    /// Per-panel log-determinant slot.
+    Scalar(usize),
+}
+
+#[derive(Copy, Clone, PartialEq, Eq)]
+enum Mode {
+    R,
+    W,
+    Rw,
+}
+
+/// STF edge inference over logical keys: readers depend on the last
+/// writer; writers additionally on every reader since (WAR + WAW) —
+/// byte-for-byte the scheduler's `TaskGraph::submit` rule, applied at
+/// the IR level so plans can rewire execution without re-deriving
+/// hazards.
+#[derive(Default)]
+struct IrBuilder {
+    nodes: Vec<Node>,
+    last_writer: HashMap<Key, usize>,
+    readers: HashMap<Key, Vec<usize>>,
+}
+
+impl IrBuilder {
+    fn push(
+        &mut self,
+        op: Op,
+        prec: Precision,
+        owner: usize,
+        bytes: usize,
+        operands: &[(Key, Mode)],
+    ) -> usize {
+        let id = self.nodes.len();
+        let mut preds: Vec<usize> = Vec::new();
+        for &(key, mode) in operands {
+            match mode {
+                Mode::R => {
+                    if let Some(&w) = self.last_writer.get(&key) {
+                        preds.push(w);
+                    }
+                    self.readers.entry(key).or_default().push(id);
+                }
+                Mode::W | Mode::Rw => {
+                    if let Some(&w) = self.last_writer.get(&key) {
+                        preds.push(w);
+                    }
+                    if let Some(rs) = self.readers.remove(&key) {
+                        preds.extend(rs);
+                    }
+                    self.last_writer.insert(key, id);
+                }
+            }
+        }
+        preds.sort_unstable();
+        preds.dedup();
+        preds.retain(|&p| p != id);
+        for &p in &preds {
+            self.nodes[p].succs.push(id);
+        }
+        self.nodes.push(Node {
+            op,
+            prec,
+            owner,
+            bytes,
+            preds,
+            succs: Vec::new(),
+        });
+        id
+    }
+}
+
+/// What to lower.  Pure data: the same spec always produces the same
+/// IR, and planner unit tests build specs without touching any real
+/// tile storage.
+#[derive(Copy, Clone, Debug)]
+pub struct TiledSpec {
+    /// Matrix dimension.
+    pub n: usize,
+    /// Tile size.
+    pub ts: usize,
+    /// Structural band (DST): `None` keeps every lower tile; `Some(b)`
+    /// retains tiles with `i - j <= b` in generation and factorization.
+    pub band: Option<usize>,
+    /// MP storage band: tiles with `i - j > b` are f32-stored (their
+    /// nodes carry [`Precision::F32`] and half-width byte counts).
+    pub mp_band: Option<usize>,
+    /// Low-rank off-diagonal tiles (TLR): off-diagonal nodes carry
+    /// [`Precision::LowRank`]; byte counts stay the dense upper bound
+    /// (ranks are theta-dependent).
+    pub tlr: bool,
+    /// Lower a forward solve (`y <- L^{-1} y`) after the factorization.
+    pub with_solve: bool,
+    /// Lower per-panel [`Op::LogDetReduce`] nodes after each POTRF.
+    pub with_logdet: bool,
+    /// Placement domains for `owner` assignment (block-row cyclic);
+    /// single-node execution passes 1.
+    pub owners: usize,
+}
+
+impl TiledSpec {
+    fn nt(&self) -> usize {
+        self.n.div_ceil(self.ts)
+    }
+    fn dim(&self, i: usize) -> usize {
+        self.ts.min(self.n - i * self.ts)
+    }
+    fn in_band(&self, i: usize, j: usize) -> bool {
+        crate::linalg::cholesky::in_band(self.band, i, j)
+    }
+    fn prec(&self, i: usize, j: usize) -> Precision {
+        if self.tlr && i != j {
+            Precision::LowRank
+        } else if matches!(self.mp_band, Some(b) if !crate::linalg::tile::mp_tile_is_f64(b, i, j)) {
+            Precision::F32
+        } else {
+            Precision::F64
+        }
+    }
+    /// Bytes of tile (i, j), mirroring `TileMatrix::tile_bytes_at`
+    /// (f32-stored MP tiles count half-width).
+    fn tile_bytes(&self, i: usize, j: usize) -> usize {
+        let elems = self.dim(i) * self.dim(j);
+        match self.prec(i, j) {
+            Precision::F32 => elems * std::mem::size_of::<f32>(),
+            _ => elems * std::mem::size_of::<f64>(),
+        }
+    }
+    fn owner(&self, i: usize) -> usize {
+        if self.owners <= 1 {
+            0
+        } else {
+            i % self.owners
+        }
+    }
+}
+
+/// Lower a tiled pipeline into the IR.  Emission order follows the
+/// legacy STF program order exactly — generation sweep, then the
+/// right-looking Cholesky panels, then the forward solve — so node ids
+/// ascend topologically and an unfused plan reproduces the legacy task
+/// structure (plus the explicit [`Op::LogDetReduce`] nodes the legacy
+/// path computed host-side).
+pub fn lower_tiled(spec: &TiledSpec) -> TaskIR {
+    let nt = spec.nt();
+    let mut b = IrBuilder::default();
+
+    // Generation sweep (dcmg): every retained lower tile.
+    for i in 0..nt {
+        for j in 0..=i {
+            if !spec.in_band(i, j) {
+                continue;
+            }
+            b.push(
+                Op::Generate { i, j },
+                spec.prec(i, j),
+                spec.owner(i),
+                spec.tile_bytes(i, j),
+                &[(Key::Tile(i, j), Mode::W)],
+            );
+        }
+    }
+
+    // Right-looking tiled Cholesky, band-restricted like the legacy
+    // emitter (GEMM additionally requires both its operand tiles in
+    // band).
+    for k in 0..nt {
+        b.push(
+            Op::Potrf { k },
+            Precision::F64,
+            spec.owner(k),
+            spec.tile_bytes(k, k),
+            &[(Key::Tile(k, k), Mode::Rw)],
+        );
+        if spec.with_logdet {
+            b.push(
+                Op::LogDetReduce { k },
+                Precision::F64,
+                spec.owner(k),
+                spec.tile_bytes(k, k),
+                &[(Key::Tile(k, k), Mode::R), (Key::Scalar(k), Mode::W)],
+            );
+        }
+        for i in k + 1..nt {
+            if !spec.in_band(i, k) {
+                continue;
+            }
+            b.push(
+                Op::Trsm { k, i },
+                spec.prec(i, k),
+                spec.owner(i),
+                spec.tile_bytes(k, k) + spec.tile_bytes(i, k),
+                &[(Key::Tile(k, k), Mode::R), (Key::Tile(i, k), Mode::Rw)],
+            );
+        }
+        for i in k + 1..nt {
+            if !spec.in_band(i, k) {
+                continue;
+            }
+            b.push(
+                Op::Syrk { k, i },
+                spec.prec(i, i),
+                spec.owner(i),
+                spec.tile_bytes(i, k) + spec.tile_bytes(i, i),
+                &[(Key::Tile(i, k), Mode::R), (Key::Tile(i, i), Mode::Rw)],
+            );
+            for j in k + 1..i {
+                if !spec.in_band(i, j) || !spec.in_band(j, k) {
+                    continue;
+                }
+                b.push(
+                    Op::Gemm { k, i, j },
+                    spec.prec(i, j),
+                    spec.owner(i),
+                    spec.tile_bytes(i, k) + spec.tile_bytes(j, k) + spec.tile_bytes(i, j),
+                    &[
+                        (Key::Tile(i, k), Mode::R),
+                        (Key::Tile(j, k), Mode::R),
+                        (Key::Tile(i, j), Mode::Rw),
+                    ],
+                );
+            }
+        }
+    }
+
+    // Forward solve against the factor (band-aware, like the legacy
+    // `submit_tiled_forward_solve_banded`).
+    if spec.with_solve {
+        for i in 0..nt {
+            for j in 0..i {
+                if !spec.in_band(i, j) {
+                    continue;
+                }
+                b.push(
+                    Op::SolveGemv { i, j },
+                    Precision::F64,
+                    spec.owner(i),
+                    spec.tile_bytes(i, j),
+                    &[
+                        (Key::Tile(i, j), Mode::R),
+                        (Key::Seg(j), Mode::R),
+                        (Key::Seg(i), Mode::Rw),
+                    ],
+                );
+            }
+            b.push(
+                Op::SolveTrsv { i },
+                Precision::F64,
+                spec.owner(i),
+                spec.tile_bytes(i, i),
+                &[(Key::Tile(i, i), Mode::R), (Key::Seg(i), Mode::Rw)],
+            );
+        }
+    }
+
+    TaskIR { nodes: b.nodes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dense_spec(n: usize, ts: usize) -> TiledSpec {
+        TiledSpec {
+            n,
+            ts,
+            band: None,
+            mp_band: None,
+            tlr: false,
+            with_solve: true,
+            with_logdet: true,
+            owners: 1,
+        }
+    }
+
+    #[test]
+    fn dense_counts_match_closed_forms() {
+        // nt = 3: 6 generates, 3 potrf, 3 logdet, 3 trsm, 3 syrk,
+        // 1 gemm, 3 solve-gemv, 3 solve-trsv.
+        let ir = lower_tiled(&dense_spec(48, 16));
+        let c = ir.kind_counts();
+        assert_eq!(c.get("dcmg"), Some(&6));
+        assert_eq!(c.get("potrf"), Some(&3));
+        assert_eq!(c.get("logdet"), Some(&3));
+        // trsm kind covers panel trsm (3) + solve trsv (3)
+        assert_eq!(c.get("trsm"), Some(&6));
+        // gemm kind covers trailing gemm (1) + solve gemv (3)
+        assert_eq!(c.get("gemm"), Some(&4));
+        assert_eq!(c.get("syrk"), Some(&3));
+        assert_eq!(ir.len(), 25);
+    }
+
+    #[test]
+    fn edges_ascend_and_generates_have_one_successor() {
+        let ir = lower_tiled(&dense_spec(64, 16));
+        for (id, n) in ir.nodes.iter().enumerate() {
+            for &p in &n.preds {
+                assert!(p < id, "pred {p} !< node {id}");
+            }
+            if let Op::Generate { .. } = n.op {
+                assert!(n.preds.is_empty(), "generate {id} has preds");
+                assert_eq!(n.succs.len(), 1, "generate {id}: {:?}", n.succs);
+            }
+        }
+    }
+
+    #[test]
+    fn logdet_depends_only_on_its_potrf() {
+        let ir = lower_tiled(&dense_spec(48, 16));
+        for (id, n) in ir.nodes.iter().enumerate() {
+            if let Op::LogDetReduce { k } = n.op {
+                assert_eq!(n.preds.len(), 1, "node {id}");
+                assert_eq!(ir.nodes[n.preds[0]].op, Op::Potrf { k });
+            }
+        }
+    }
+
+    #[test]
+    fn dst_band_gates_offband_work() {
+        let mut spec = dense_spec(64, 16); // nt = 4
+        spec.band = Some(1);
+        let ir = lower_tiled(&spec);
+        for n in &ir.nodes {
+            let (i, j) = match n.op {
+                Op::Generate { i, j } | Op::SolveGemv { i, j } | Op::Gemm { i, j, .. } => (i, j),
+                Op::Trsm { k, i } | Op::Syrk { k, i } => (i, k),
+                _ => continue,
+            };
+            assert!(i - j <= 1, "off-band node {:?}", n.op);
+        }
+    }
+
+    #[test]
+    fn mp_band_tags_precision_and_halves_bytes() {
+        let mut spec = dense_spec(48, 16);
+        spec.mp_band = Some(0);
+        let ir = lower_tiled(&spec);
+        let gen = |i: usize, j: usize| {
+            ir.nodes
+                .iter()
+                .find(|n| n.op == Op::Generate { i, j })
+                .unwrap()
+        };
+        assert_eq!(gen(1, 1).prec, Precision::F64);
+        assert_eq!(gen(2, 0).prec, Precision::F32);
+        assert_eq!(gen(2, 0).bytes * 2, gen(1, 1).bytes);
+    }
+
+    #[test]
+    fn owners_assign_block_row_cyclic() {
+        let mut spec = dense_spec(64, 16);
+        spec.owners = 2;
+        let ir = lower_tiled(&spec);
+        for n in &ir.nodes {
+            if let Op::Generate { i, .. } = n.op {
+                assert_eq!(n.owner, i % 2);
+            }
+        }
+    }
+}

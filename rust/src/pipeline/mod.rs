@@ -1,0 +1,499 @@
+//! Pipeline lowering layer: every likelihood variant (exact / DST / MP /
+//! TLR), simulation and kriging lowers into one typed task-graph IR
+//! ([`ir`]), a pure planner pass fuses producer→consumer tile pairs
+//! ([`planner`], `EXAGEOSTAT_FUSE=on|off`), and the flattened
+//! [`ExecutionPlan`] executes on the existing runtime via
+//! `ExecCtx::run_graph` ([`execution_plan`]).  No pipeline emits raw
+//! `TaskGraph` nodes anymore; the legacy emitters in
+//! [`crate::linalg::cholesky`] remain as the reference/test layer the
+//! planner's parity suite compares against.
+//!
+//! Two executors share the IR:
+//!
+//! * [`run_tiled`] — dense-tile storage ([`TileMatrix`]): exact, DST
+//!   (structural band), MP (precision dispatch on the tile's storage),
+//!   simulation (factor only) and kriging (factor + solve).  Fused
+//!   groups run as single runtime tasks.
+//! * [`run_tlr`] — low-rank tiles mutate rank-adaptive heap storage, so
+//!   the plan executes serially on the calling thread in plan order
+//!   (valid because plans are topologically ordered), polling the
+//!   context's cancellation token between tasks.
+//!
+//! The log-determinant is an explicit [`Op::LogDetReduce`] node in both
+//! fused and unfused plans: each computes one diagonal tile's partial
+//! ln-sum, and the host adds the partials in panel order — one summation
+//! tree, so fused ≡ unfused bit-identically on f64 paths.
+
+pub mod execution_plan;
+pub mod ir;
+pub mod planner;
+
+pub use execution_plan::{ExecutionPlan, OpRunner, PlanTask};
+pub use ir::{lower_tiled, Op, Precision, TaskIR, TiledSpec};
+pub use planner::{fuse_enabled, plan, set_fuse_override, PlanKnobs};
+
+use crate::api::ApiError;
+use crate::backend::{ArcEngine, Engine as _};
+use crate::covariance::{CovKernel, DistBlock, DistCache, DistanceMetric, Location};
+use crate::likelihood::{ExecCtx, Problem};
+use crate::linalg::blas::{
+    dgemv_f32a, dgemv_raw, dpotrf_raw, dtrsm_rltn_raw, dtrsv_ln, gemm_mp, syrk_ln_mp,
+    trsm_rltn_mp, with_stage_f64, MatMut, MatRef, Trans,
+};
+use crate::linalg::cholesky::{check_fail, new_fail_flag, FailFlag};
+use crate::linalg::lowrank::{LrOpts, LrTile};
+use crate::linalg::matrix::Matrix;
+use crate::linalg::tile::{TileMatrix, TilePtr, TileVector};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Result of a tiled pipeline run.  A non-SPD pivot is a *value*, not an
+/// `Err` — callers format their variant-specific diagnostics; `Err` is
+/// reserved for cancellation.
+pub struct TiledOutcome {
+    /// Global pivot index of the first non-positive-definite pivot.
+    pub not_spd: Option<usize>,
+    /// `log det Sigma` (0.0 when lowered without log-det nodes).
+    pub logdet: f64,
+}
+
+#[inline]
+fn tri(i: usize, j: usize) -> usize {
+    i * (i + 1) / 2 + j
+}
+
+/// Executes IR ops against dense tile storage: one runner serves exact,
+/// DST, MP, simulation and kriging — MP needs no flag because every op
+/// body dispatches on the tile's storage precision, exactly like the
+/// legacy emitters did.
+struct TiledRunner {
+    n: usize,
+    ts: usize,
+    /// Lower-packed tile pointers (`tri(i, j)`).
+    ptrs: Vec<TilePtr>,
+    /// Per-tile distance blocks of a warm session (same packing).
+    blocks: Vec<Option<Arc<DistBlock>>>,
+    /// Solve-vector segment pointers (empty when no solve is lowered).
+    y: Vec<TilePtr>,
+    kernel: Arc<dyn CovKernel>,
+    locs: Arc<Vec<Location>>,
+    metric: DistanceMetric,
+    theta: Arc<Vec<f64>>,
+    engine: ArcEngine,
+    fail: FailFlag,
+    /// Per-panel log-det partials (f64 bits; each slot written by
+    /// exactly one `LogDetReduce` task).
+    logdet: Vec<AtomicU64>,
+}
+
+impl TiledRunner {
+    fn new(
+        problem: &Problem,
+        theta: &[f64],
+        engine: &ArcEngine,
+        dist: Option<&DistCache>,
+        a: &TileMatrix,
+        y: Option<&TileVector>,
+    ) -> TiledRunner {
+        let nt = a.nt();
+        let mut ptrs = Vec::with_capacity(nt * (nt + 1) / 2);
+        let mut blocks = Vec::with_capacity(nt * (nt + 1) / 2);
+        for i in 0..nt {
+            for j in 0..=i {
+                ptrs.push(a.tile_ptr(i, j));
+                blocks.push(dist.and_then(|c| c.block(i, j)));
+            }
+        }
+        let y = y
+            .map(|v| (0..v.nt()).map(|i| v.seg_ptr(i)).collect())
+            .unwrap_or_default();
+        TiledRunner {
+            n: a.n(),
+            ts: a.ts(),
+            ptrs,
+            blocks,
+            y,
+            kernel: problem.kernel.clone(),
+            locs: problem.locs.clone(),
+            metric: problem.metric,
+            theta: Arc::new(theta.to_vec()),
+            engine: engine.clone(),
+            fail: new_fail_flag(),
+            logdet: (0..nt).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    #[inline]
+    fn dim(&self, i: usize) -> usize {
+        self.ts.min(self.n - i * self.ts)
+    }
+
+    /// Host-side sum of the per-panel partials, in panel order (the one
+    /// summation tree both fused and unfused plans share).
+    fn logdet(&self) -> f64 {
+        2.0 * self
+            .logdet
+            .iter()
+            .map(|s| f64::from_bits(s.load(Ordering::Acquire)))
+            .sum::<f64>()
+    }
+}
+
+impl OpRunner for TiledRunner {
+    fn run_op(&self, op: Op) {
+        let ts = self.ts;
+        match op {
+            Op::Generate { i, j } => {
+                let (h, w) = (self.dim(i), self.dim(j));
+                let block = self.blocks[tri(i, j)].as_deref();
+                // SAFETY: plan ordering gives exclusive access to the tile.
+                match unsafe { self.ptrs[tri(i, j)].mat_mut() } {
+                    MatMut::F64(out) => {
+                        self.engine.fill_tile(
+                            self.kernel.as_ref(),
+                            &self.theta,
+                            &self.locs,
+                            self.metric,
+                            i * ts,
+                            j * ts,
+                            h,
+                            w,
+                            block,
+                            out,
+                        );
+                    }
+                    // MP off-band tile: evaluate into a reusable f64
+                    // stage (the kernels are f64 code), demote on store.
+                    MatMut::F32(out) => {
+                        with_stage_f64(h * w, |stage| {
+                            self.engine.fill_tile(
+                                self.kernel.as_ref(),
+                                &self.theta,
+                                &self.locs,
+                                self.metric,
+                                i * ts,
+                                j * ts,
+                                h,
+                                w,
+                                block,
+                                stage,
+                            );
+                            for (d, s) in out.iter_mut().zip(stage.iter()) {
+                                *d = *s as f32;
+                            }
+                        });
+                    }
+                }
+            }
+            Op::Potrf { k } => {
+                let hk = self.dim(k);
+                // SAFETY: plan ordering gives exclusive access; diagonal
+                // tiles are always f64.
+                let t = unsafe { self.ptrs[tri(k, k)].as_mut() };
+                if let Err(e) = dpotrf_raw(hk, t, hk) {
+                    let _ = self.fail.compare_exchange(
+                        0,
+                        (k * ts) as i64 + e.pivot as i64 + 1,
+                        Ordering::AcqRel,
+                        Ordering::Relaxed,
+                    );
+                }
+            }
+            Op::LogDetReduce { k } => {
+                let hk = self.dim(k);
+                // SAFETY: plan ordering — the factor of tile (k, k) is
+                // complete and no later writer exists.
+                let t = unsafe { self.ptrs[tri(k, k)].as_ref() };
+                let mut partial = 0.0;
+                for d in 0..hk {
+                    partial += t[d * hk + d].ln();
+                }
+                self.logdet[k].store(partial.to_bits(), Ordering::Release);
+            }
+            Op::Trsm { k, i } => {
+                let (hk, hi) = (self.dim(k), self.dim(i));
+                // SAFETY: plan ordering.  Diagonal factors are always
+                // f64; the panel tile may be an MP off-band f32 tile.
+                let lt = unsafe { self.ptrs[tri(k, k)].as_ref() };
+                match unsafe { self.ptrs[tri(i, k)].mat_mut() } {
+                    MatMut::F64(bt) => dtrsm_rltn_raw(hi, hk, lt, hk, bt, hi),
+                    MatMut::F32(bt) => trsm_rltn_mp(hi, hk, lt, hk, bt, hi),
+                }
+            }
+            Op::Syrk { k, i } => {
+                let (hk, hi) = (self.dim(k), self.dim(i));
+                // SAFETY: plan ordering.  syrk_ln_mp fast-paths all-f64.
+                let s = unsafe { self.ptrs[tri(i, k)].mat_ref() };
+                let d = unsafe { self.ptrs[tri(i, i)].mat_mut() };
+                syrk_ln_mp(hi, hk, -1.0, s, hi, 1.0, d, hi);
+            }
+            Op::Gemm { k, i, j } => {
+                let (hk, hi, hj) = (self.dim(k), self.dim(i), self.dim(j));
+                // SAFETY: plan ordering.  gemm_mp fast-paths all-f64.
+                let a_ = unsafe { self.ptrs[tri(i, k)].mat_ref() };
+                let b_ = unsafe { self.ptrs[tri(j, k)].mat_ref() };
+                let c_ = unsafe { self.ptrs[tri(i, j)].mat_mut() };
+                gemm_mp(Trans::N, Trans::T, hi, hj, hk, -1.0, a_, hi, b_, hj, 1.0, c_, hi);
+            }
+            Op::SolveGemv { i, j } => {
+                let (hi, wj) = (self.dim(i), self.dim(j));
+                // SAFETY: plan ordering.  Off-band factor tiles may be
+                // f32-stored (MP); vector segments are f64.
+                let yjs = unsafe { self.y[j].as_ref() };
+                let yis = unsafe { self.y[i].as_mut() };
+                match unsafe { self.ptrs[tri(i, j)].mat_ref() } {
+                    MatRef::F64(lt) => dgemv_raw(Trans::N, hi, wj, -1.0, lt, hi, yjs, 1.0, yis),
+                    MatRef::F32(lt) => dgemv_f32a(hi, wj, -1.0, lt, hi, yjs, yis),
+                }
+            }
+            Op::SolveTrsv { i } => {
+                let hi = self.dim(i);
+                // SAFETY: plan ordering.
+                let lt = unsafe { self.ptrs[tri(i, i)].as_ref() };
+                let ys = unsafe { self.y[i].as_mut() };
+                dtrsv_ln(hi, lt, hi, ys);
+            }
+        }
+    }
+}
+
+/// Lower → plan → execute a dense-tile pipeline on the context's runtime.
+///
+/// * `band` is the *structural* DST band (tiles outside it are never
+///   generated or updated); MP's precision band rides on `a`'s storage
+///   layout (`TileMatrix::zeros_mp`), not on this parameter.
+/// * `y = Some` lowers the forward solve `y <- L^{-1} y` after the
+///   factorization; `with_logdet` lowers the per-panel log-det nodes.
+///
+/// Returns `Err` only on cancellation (the context's token fired and the
+/// runtime skipped tasks); a non-SPD pivot comes back as a value for the
+/// caller to wrap in its variant-specific message.
+#[allow(clippy::too_many_arguments)]
+pub fn run_tiled(
+    problem: &Problem,
+    theta: &[f64],
+    ctx: &ExecCtx,
+    dist: Option<&DistCache>,
+    a: &TileMatrix,
+    y: Option<&TileVector>,
+    band: Option<usize>,
+    with_logdet: bool,
+) -> anyhow::Result<TiledOutcome> {
+    let spec = TiledSpec {
+        n: a.n(),
+        ts: a.ts(),
+        band,
+        mp_band: a.mp_band(),
+        tlr: false,
+        with_solve: y.is_some(),
+        with_logdet,
+        owners: 1,
+    };
+    let ir = lower_tiled(&spec);
+    let plan = planner::plan(&ir, &PlanKnobs::from_env());
+    let runner = Arc::new(TiledRunner::new(problem, theta, &ctx.engine, dist, a, y));
+    let g = plan.instantiate(&ir, runner.clone());
+    let prof = ctx.run_graph(g);
+    if prof.tasks_skipped > 0 {
+        // Cancelled mid-flight: the factor is incomplete, so neither the
+        // fail flag nor the log-det slots are meaningful.
+        return Err(ApiError::Cancelled.into());
+    }
+    let not_spd = check_fail(&runner.fail).err().map(|e| e.pivot);
+    let logdet = if with_logdet && not_spd.is_none() {
+        runner.logdet()
+    } else {
+        0.0
+    };
+    Ok(TiledOutcome { not_spd, logdet })
+}
+
+/// Result of a TLR pipeline run (same contract as [`TiledOutcome`]).
+pub struct TlrOutcome {
+    pub not_spd: Option<usize>,
+    pub logdet: f64,
+}
+
+/// Lower → plan → execute the TLR pipeline serially on the calling
+/// thread.  `problem` must already be Morton-permuted and `y` loaded
+/// with the (permuted) observations; on return `y` holds `L^{-1} y`.
+/// The context's cancellation token is polled between plan tasks.
+pub fn run_tlr(
+    problem: &Problem,
+    theta: &[f64],
+    opts: LrOpts,
+    ctx: &ExecCtx,
+    dist: Option<&DistCache>,
+    y: &mut [f64],
+) -> anyhow::Result<TlrOutcome> {
+    let n = problem.dim();
+    let ts = ctx.ts;
+    let nt = n.div_ceil(ts);
+    let dim = |i: usize| ts.min(n - i * ts);
+    let low_index = |i: usize, j: usize| i * (i - 1) / 2 + j;
+    let spec = TiledSpec {
+        n,
+        ts,
+        band: None,
+        mp_band: None,
+        tlr: true,
+        with_solve: true,
+        with_logdet: true,
+        owners: 1,
+    };
+    let ir = lower_tiled(&spec);
+    let plan = planner::plan(&ir, &PlanKnobs::from_env());
+
+    let mut diag: Vec<Matrix> = (0..nt).map(|i| Matrix::zeros(dim(i), dim(i))).collect();
+    let mut low: Vec<LrTile> = (0..nt)
+        .flat_map(|i| (0..i).map(move |j| (i, j)))
+        .map(|(i, j)| LrTile::zero(dim(i), dim(j)))
+        .collect();
+    let mut buf = vec![0.0f64; ts * ts];
+    let mut logdet_parts = vec![0.0f64; nt];
+    let mut pivot_err: Option<usize> = None;
+
+    'outer: for task in &plan.tasks {
+        if ctx.cancel.is_cancelled() {
+            return Err(ApiError::Cancelled.into());
+        }
+        for &id in &task.ops {
+            match ir.nodes[id].op {
+                Op::Generate { i, j } => {
+                    let (h, w) = (dim(i), dim(j));
+                    let block = dist.and_then(|c| c.block(i, j));
+                    ctx.engine.fill_tile(
+                        problem.kernel.as_ref(),
+                        theta,
+                        &problem.locs,
+                        problem.metric,
+                        i * ts,
+                        j * ts,
+                        h,
+                        w,
+                        block.as_deref(),
+                        &mut buf,
+                    );
+                    if i == j {
+                        diag[i] = Matrix::from_col_major(h, h, &buf[..h * h]);
+                    } else {
+                        low[low_index(i, j)] = LrTile::compress_aca(h, w, &buf[..h * w], opts);
+                    }
+                }
+                Op::Potrf { k } => {
+                    let d = &mut diag[k];
+                    let h = d.rows();
+                    if let Err(e) = dpotrf_raw(h, d.as_mut_slice(), h) {
+                        pivot_err = Some(k * ts + e.pivot);
+                        break 'outer;
+                    }
+                    d.zero_upper();
+                }
+                Op::LogDetReduce { k } => {
+                    let d = &diag[k];
+                    logdet_parts[k] = (0..d.rows()).map(|i| d[(i, i)].ln()).sum();
+                }
+                Op::Trsm { k, i } => {
+                    let (l, h) = (diag[k].as_slice(), diag[k].rows());
+                    low[low_index(i, k)].trsm_right_lt(l, h);
+                }
+                Op::Syrk { k, i } => {
+                    low[low_index(i, k)].syrk_into(&mut diag[i]);
+                }
+                Op::Gemm { k, i, j } => {
+                    let prod = LrTile::lr_abt(&low[low_index(i, k)], &low[low_index(j, k)]);
+                    low[low_index(i, j)].add_scaled(-1.0, &prod, opts);
+                }
+                Op::SolveGemv { i, j } => {
+                    let (lo, hi) = (i * ts, n.min(i * ts + ts));
+                    let (jlo, jhi) = (j * ts, n.min(j * ts + ts));
+                    // split-borrow y: [jlo..jhi] read, [lo..hi] written
+                    let (head, tail) = y.split_at_mut(lo);
+                    low[low_index(i, j)].gemv_sub(&head[jlo..jhi], &mut tail[..hi - lo]);
+                }
+                Op::SolveTrsv { i } => {
+                    let (lo, hi) = (i * ts, n.min(i * ts + ts));
+                    let d = &diag[i];
+                    dtrsv_ln(hi - lo, d.as_slice(), d.rows(), &mut y[lo..hi]);
+                }
+            }
+        }
+    }
+    Ok(TlrOutcome {
+        not_spd: pivot_err,
+        logdet: if pivot_err.is_none() {
+            2.0 * logdet_parts.iter().sum::<f64>()
+        } else {
+            0.0
+        },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::likelihood::testutil::{dense_oracle, small_problem};
+    use crate::scheduler::pool::Policy;
+
+    /// run_tiled under both planner modes, all dense knob combinations,
+    /// against the dense oracle — the in-crate half of the fused-vs-
+    /// unfused conformance wall (the cross-variant half lives in
+    /// `tests/conformance.rs`).
+    #[test]
+    fn fused_and_unfused_match_oracle_bit_identically() {
+        let _serial = planner::fuse_test_lock();
+        let p = small_problem(54, 41);
+        let theta = [1.2, 0.12, 0.5];
+        let ctx = ExecCtx::new(2, 16, Policy::Lws);
+        let oracle = dense_oracle(&p, &theta);
+        let mut results = Vec::new();
+        for fuse in [false, true] {
+            set_fuse_override(Some(fuse));
+            let a = TileMatrix::zeros(p.dim(), ctx.ts);
+            let y = TileVector::from_slice(&p.z, ctx.ts);
+            let out = run_tiled(&p, &theta, &ctx, None, &a, Some(&y), None, true).unwrap();
+            assert_eq!(out.not_spd, None);
+            results.push((out.logdet, y.dot_self()));
+        }
+        set_fuse_override(None);
+        assert!((results[0].0 - oracle.logdet).abs() < 1e-8);
+        assert!((results[0].1 - oracle.sse).abs() < 1e-8);
+        // f64 task bodies are identical closures over identical inputs:
+        // fused and unfused runs must agree to the bit.
+        assert_eq!(results[0].0.to_bits(), results[1].0.to_bits(), "logdet");
+        assert_eq!(results[0].1.to_bits(), results[1].1.to_bits(), "sse");
+    }
+
+    #[test]
+    fn non_spd_pivot_is_reported_as_value() {
+        // Duplicate locations without nugget => singular covariance.
+        let mut p = small_problem(12, 42);
+        let mut locs = (*p.locs).clone();
+        locs[5] = locs[4];
+        p.locs = Arc::new(locs);
+        let ctx = ExecCtx::new(1, 4, Policy::Eager);
+        let a = TileMatrix::zeros(p.dim(), ctx.ts);
+        let out = run_tiled(&p, &[1.0, 0.1, 0.5], &ctx, None, &a, None, None, false).unwrap();
+        assert!(out.not_spd.is_some());
+    }
+
+    #[test]
+    fn precancelled_context_reports_cancelled() {
+        let p = small_problem(32, 43);
+        let mut ctx = ExecCtx::new(1, 8, Policy::Eager);
+        ctx.cancel.cancel();
+        let a = TileMatrix::zeros(p.dim(), ctx.ts);
+        let err = run_tiled(&p, &[1.0, 0.1, 0.5], &ctx, None, &a, None, None, true).unwrap_err();
+        assert!(
+            matches!(err.downcast_ref::<ApiError>(), Some(ApiError::Cancelled)),
+            "{err:#}"
+        );
+        let mut y = (*p.z).clone();
+        let opts = LrOpts { tol: 1e-7, max_rank: usize::MAX };
+        let err = run_tlr(&p, &[1.0, 0.1, 0.5], opts, &ctx, None, &mut y).unwrap_err();
+        assert!(
+            matches!(err.downcast_ref::<ApiError>(), Some(ApiError::Cancelled)),
+            "{err:#}"
+        );
+    }
+}

@@ -1,0 +1,407 @@
+//! The fusion planner: a pure, deterministic function of the IR and the
+//! knobs.
+//!
+//! Three passes, in fixed order, each scanning nodes in ascending id:
+//!
+//! 1. **A — log-det into POTRF**: `LogDetReduce{k}` merges into the
+//!    group of its sole predecessor `Potrf{k}` (the diagonal factor is
+//!    hot in cache when the reduction runs).
+//! 2. **B — TRSM into its trailing update**: `Trsm{k,i}` merges into
+//!    `Syrk{k,i}`, the trailing consumer of the panel tile it just
+//!    wrote, so the tile never round-trips through the store.
+//! 3. **C — generation into the first consumer**: a `Generate` node has
+//!    exactly one successor under STF inference (the first read-write op
+//!    on its tile); the generate joins that group.
+//!
+//! **Legality.** Merging `u -> v` is safe iff no *other* path from `u`
+//! reaches `v`.  Emission order is topological (every edge ascends node
+//! ids), so anything reachable from a group has an id greater than the
+//! group's minimum member; pass B therefore requires every other
+//! predecessor group of `v` to sit entirely below `u`'s group
+//! (`max_id(pred group) < min_id(u's group)`), which makes an indirect
+//! path impossible.  Pass A's target has a single predecessor and pass
+//! C's sources have none, so both are unconditionally safe.
+//!
+//! The plan orders fused groups by Kahn's algorithm with a
+//! minimum-member-id heap tie-break: a pure function of the IR — two
+//! runs over the same graph and knobs produce byte-identical plans.
+
+use super::execution_plan::{ExecutionPlan, PlanTask};
+use super::ir::{Op, TaskIR};
+use std::collections::BinaryHeap;
+use std::cmp::Reverse;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+// ---------------------------------------------------------------------
+// The EXAGEOSTAT_FUSE knob (mirrors the SIMD dispatch override idiom:
+// environment default resolved once, in-process override on top for
+// fused-vs-unfused parity tests).
+// ---------------------------------------------------------------------
+
+/// 0 = no override, 1 = force off, 2 = force on.
+static FUSE_OVERRIDE: AtomicU8 = AtomicU8::new(0);
+static FUSE_ENV: OnceLock<bool> = OnceLock::new();
+
+/// Force fusion on/off in-process, overriding `EXAGEOSTAT_FUSE`; pass
+/// `None` to fall back to the environment.  Conformance tests toggle
+/// this around evaluations to compare fused and unfused plans without
+/// respawning the process.
+pub fn set_fuse_override(fuse: Option<bool>) {
+    let v = match fuse {
+        None => 0,
+        Some(false) => 1,
+        Some(true) => 2,
+    };
+    FUSE_OVERRIDE.store(v, Ordering::Relaxed);
+}
+
+/// Serializes tests that toggle the process-global override: without
+/// this, two tests in the same binary can interleave their
+/// `set_fuse_override` / evaluate windows and observe each other's mode.
+#[cfg(test)]
+pub(crate) fn fuse_test_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Is producer→consumer fusion enabled?  Override first, then
+/// `EXAGEOSTAT_FUSE=on|off` (default on).
+pub fn fuse_enabled() -> bool {
+    match FUSE_OVERRIDE.load(Ordering::Relaxed) {
+        1 => false,
+        2 => true,
+        _ => *FUSE_ENV.get_or_init(|| {
+            !matches!(
+                std::env::var("EXAGEOSTAT_FUSE").as_deref(),
+                Ok("off") | Ok("0") | Ok("false") | Ok("no")
+            )
+        }),
+    }
+}
+
+/// Planner knobs.  A plan is a pure function of `(IR, PlanKnobs)`.
+#[derive(Copy, Clone, Debug)]
+pub struct PlanKnobs {
+    pub fuse: bool,
+}
+
+impl PlanKnobs {
+    /// Resolve from the process environment / override.
+    pub fn from_env() -> PlanKnobs {
+        PlanKnobs {
+            fuse: fuse_enabled(),
+        }
+    }
+}
+
+/// Union-find with the group root pinned to the minimum member id and
+/// min/max member ids tracked per root (the legality certificate).
+struct Groups {
+    parent: Vec<usize>,
+    min_id: Vec<usize>,
+    max_id: Vec<usize>,
+}
+
+impl Groups {
+    fn new(n: usize) -> Groups {
+        Groups {
+            parent: (0..n).collect(),
+            min_id: (0..n).collect(),
+            max_id: (0..n).collect(),
+        }
+    }
+    fn find(&mut self, mut x: usize) -> usize {
+        while self.parent[x] != x {
+            self.parent[x] = self.parent[self.parent[x]];
+            x = self.parent[x];
+        }
+        x
+    }
+    fn union(&mut self, a: usize, b: usize) {
+        let (ra, rb) = (self.find(a), self.find(b));
+        if ra == rb {
+            return;
+        }
+        let (keep, drop) = if ra < rb { (ra, rb) } else { (rb, ra) };
+        self.parent[drop] = keep;
+        self.min_id[keep] = self.min_id[keep].min(self.min_id[drop]);
+        self.max_id[keep] = self.max_id[keep].max(self.max_id[drop]);
+    }
+}
+
+/// Plan the IR: fuse (when enabled), then flatten groups into a
+/// topologically ordered [`ExecutionPlan`].
+pub fn plan(ir: &TaskIR, knobs: &PlanKnobs) -> ExecutionPlan {
+    let n = ir.len();
+    let mut g = Groups::new(n);
+
+    if knobs.fuse {
+        // Pass A: LogDetReduce{k} -> Potrf{k} (sole predecessor).
+        for (id, node) in ir.nodes.iter().enumerate() {
+            if let Op::LogDetReduce { .. } = node.op {
+                if node.preds.len() == 1 {
+                    g.union(node.preds[0], id);
+                }
+            }
+        }
+        // Pass B: Trsm{k,i} -> Syrk{k,i}.
+        for (id, node) in ir.nodes.iter().enumerate() {
+            let Op::Trsm { k, i } = node.op else {
+                continue;
+            };
+            let Some(&v) = node
+                .succs
+                .iter()
+                .find(|&&s| ir.nodes[s].op == Op::Syrk { k, i })
+            else {
+                continue;
+            };
+            // Legality: every other predecessor group of the SYRK must
+            // lie entirely below this TRSM's group.
+            let u_min = {
+                let r = g.find(id);
+                g.min_id[r]
+            };
+            let legal = ir.nodes[v].preds.iter().all(|&p| {
+                if g.find(p) == g.find(id) {
+                    return true;
+                }
+                let rp = g.find(p);
+                g.max_id[rp] < u_min
+            });
+            if legal {
+                g.union(id, v);
+            }
+        }
+        // Pass C: Generate -> its sole successor (sources never create
+        // cycles).
+        for (id, node) in ir.nodes.iter().enumerate() {
+            if let Op::Generate { .. } = node.op {
+                if node.succs.len() == 1 {
+                    g.union(id, node.succs[0]);
+                }
+            }
+        }
+    }
+
+    // Collect members per group root, ascending ids (execution order
+    // within a fused task; valid because edges ascend ids).
+    let mut members: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for id in 0..n {
+        let r = g.find(id);
+        members[r].push(id);
+    }
+
+    // Group-level edges + Kahn with a min-member-id heap: deterministic
+    // topological emission.
+    let roots: Vec<usize> = (0..n).filter(|&id| g.find(id) == id).collect();
+    let mut indeg: Vec<usize> = vec![0; n];
+    let mut gsuccs: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for &r in &roots {
+        let mut preds: Vec<usize> = members[r]
+            .iter()
+            .flat_map(|&m| ir.nodes[m].preds.iter().map(|&p| g.find(p)))
+            .filter(|&pr| pr != r)
+            .collect();
+        preds.sort_unstable();
+        preds.dedup();
+        indeg[r] = preds.len();
+        for p in preds {
+            gsuccs[p].push(r);
+        }
+    }
+    let mut heap: BinaryHeap<Reverse<usize>> = roots
+        .iter()
+        .copied()
+        .filter(|&r| indeg[r] == 0)
+        .map(Reverse)
+        .collect();
+    let mut order: Vec<usize> = Vec::with_capacity(roots.len());
+    let mut pos: Vec<usize> = vec![usize::MAX; n];
+    while let Some(Reverse(r)) = heap.pop() {
+        pos[r] = order.len();
+        order.push(r);
+        for &s in &gsuccs[r] {
+            indeg[s] -= 1;
+            if indeg[s] == 0 {
+                heap.push(Reverse(s));
+            }
+        }
+    }
+    assert_eq!(order.len(), roots.len(), "fusion produced a cyclic plan");
+
+    // Flatten into PlanTasks.
+    let tasks: Vec<PlanTask> = order
+        .iter()
+        .map(|&r| {
+            let ops = members[r].clone();
+            let kind = ops
+                .iter()
+                .map(|&m| ir.nodes[m].op.task_kind())
+                .max_by_key(|k| k.priority)
+                .expect("non-empty group");
+            let bytes = ops.iter().map(|&m| ir.nodes[m].bytes).sum();
+            let mut preds: Vec<usize> = ops
+                .iter()
+                .flat_map(|&m| ir.nodes[m].preds.iter().map(|&p| pos[g.find(p)]))
+                .filter(|&p| p != pos[r])
+                .collect();
+            preds.sort_unstable();
+            preds.dedup();
+            PlanTask {
+                ops,
+                kind,
+                bytes,
+                preds,
+            }
+        })
+        .collect();
+    ExecutionPlan { tasks }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::ir::{lower_tiled, TiledSpec};
+    use std::collections::HashMap;
+
+    fn dense_spec(n: usize, ts: usize) -> TiledSpec {
+        TiledSpec {
+            n,
+            ts,
+            band: None,
+            mp_band: None,
+            tlr: false,
+            with_solve: true,
+            with_logdet: true,
+            owners: 1,
+        }
+    }
+
+    fn graph_kind_counts(g: &crate::scheduler::TaskGraph) -> HashMap<&'static str, usize> {
+        let mut m = HashMap::new();
+        for t in &g.tasks {
+            *m.entry(t.kind.name).or_insert(0) += 1;
+        }
+        m
+    }
+
+    #[test]
+    fn unfused_plan_is_one_task_per_node() {
+        let ir = lower_tiled(&dense_spec(48, 16));
+        let p = plan(&ir, &PlanKnobs { fuse: false });
+        assert_eq!(p.tasks.len(), ir.len());
+        assert!(p.tasks.iter().all(|t| t.ops.len() == 1));
+    }
+
+    #[test]
+    fn fused_counts_on_known_shape() {
+        // nt = 3 dense with solve: 25 IR nodes; fusion merges
+        // 3 logdet->potrf + 3 trsm->syrk + 6 generate->consumer = 12,
+        // leaving 13 tasks.
+        let ir = lower_tiled(&dense_spec(48, 16));
+        assert_eq!(ir.len(), 25);
+        let p = plan(&ir, &PlanKnobs { fuse: true });
+        assert_eq!(p.tasks.len(), 13);
+        let merged: usize = p.tasks.iter().map(|t| t.ops.len() - 1).sum();
+        assert_eq!(merged, 12);
+        // The densest group: Generate(1,0), Generate(1,1), Trsm{0,1},
+        // Syrk{0,1} execute as one task.
+        assert!(p.tasks.iter().any(|t| t.ops.len() == 4));
+    }
+
+    #[test]
+    fn plans_are_deterministic_and_topological() {
+        let ir = lower_tiled(&dense_spec(96, 16));
+        let knobs = PlanKnobs { fuse: true };
+        let p1 = plan(&ir, &knobs);
+        let p2 = plan(&ir, &knobs);
+        for (a, b) in p1.tasks.iter().zip(&p2.tasks) {
+            assert_eq!(a.ops, b.ops);
+            assert_eq!(a.preds, b.preds);
+        }
+        // preds reference earlier plan positions only, and every IR
+        // edge is honoured across groups.
+        let task_of: HashMap<usize, usize> = p1
+            .tasks
+            .iter()
+            .enumerate()
+            .flat_map(|(ti, t)| t.ops.iter().map(move |&o| (o, ti)))
+            .collect();
+        for (ti, t) in p1.tasks.iter().enumerate() {
+            for &p in &t.preds {
+                assert!(p < ti);
+            }
+            for &o in &t.ops {
+                for &pr in &ir.nodes[o].preds {
+                    let pt = task_of[&pr];
+                    assert!(
+                        pt == ti || t.preds.contains(&pt),
+                        "edge {pr}->{o} not honoured"
+                    );
+                }
+            }
+            // within-task order ascends (topological by construction)
+            assert!(t.ops.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+
+    #[test]
+    fn unfused_plan_reproduces_legacy_task_counts() {
+        // Build the legacy graph with the real emitters and compare
+        // per-kind counts: identical, except the IR makes the host-side
+        // log-det reduction explicit (+nt "logdet" nodes).
+        use crate::likelihood::exact::submit_generation_with;
+        use crate::likelihood::testutil::small_problem;
+        use crate::linalg::cholesky::{
+            new_fail_flag, submit_tiled_forward_solve_banded, submit_tiled_potrf, TileHandles,
+        };
+        use crate::linalg::tile::{TileMatrix, TileVector};
+        use crate::scheduler::TaskGraph;
+
+        let (n, ts) = (48, 16);
+        let p = small_problem(n, 5);
+        let theta = [1.0, 0.1, 0.5];
+        for band in [None, Some(1)] {
+            let a = TileMatrix::zeros(n, ts);
+            let y = TileVector::from_slice(&p.z, ts);
+            let mut g = TaskGraph::new();
+            let hs = TileHandles::register(&mut g, a.nt());
+            let engine = crate::backend::default_engine();
+            submit_generation_with(&mut g, &a, &hs, &p, &theta, band, &engine, None);
+            let fail = new_fail_flag();
+            submit_tiled_potrf(&mut g, &a, &hs, band, &fail);
+            let yh = g.register_many(y.nt());
+            submit_tiled_forward_solve_banded(&mut g, &a, &hs, &y, &yh, band);
+            let legacy = graph_kind_counts(&g);
+
+            let mut spec = dense_spec(n, ts);
+            spec.band = band;
+            let ir = lower_tiled(&spec);
+            let unfused = plan(&ir, &PlanKnobs { fuse: false });
+            let mut got: HashMap<&'static str, usize> = HashMap::new();
+            for t in &unfused.tasks {
+                assert_eq!(t.ops.len(), 1);
+                *got.entry(ir.nodes[t.ops[0]].op.task_kind().name).or_insert(0) += 1;
+            }
+            let nt = n.div_ceil(ts);
+            assert_eq!(got.remove("logdet"), Some(nt), "band {band:?}");
+            assert_eq!(got, legacy, "band {band:?}");
+            assert_eq!(unfused.tasks.len(), g.len() + nt, "band {band:?}");
+        }
+    }
+
+    #[test]
+    fn env_override_wins_over_default() {
+        let _serial = fuse_test_lock();
+        set_fuse_override(Some(false));
+        assert!(!fuse_enabled());
+        assert!(!PlanKnobs::from_env().fuse);
+        set_fuse_override(Some(true));
+        assert!(fuse_enabled());
+        set_fuse_override(None);
+        let _ = fuse_enabled(); // env default; value depends on process env
+        set_fuse_override(None);
+    }
+}

@@ -5,12 +5,8 @@
 use crate::covariance::{build_cov_dense, build_cross_cov, CovKernel, DistanceMetric, Location};
 use crate::likelihood::{ExecCtx, Problem};
 use crate::linalg::blas::{dpotrf, dtrsm_llnn_raw, dtrsv_ln, dtrsv_lt};
-use crate::linalg::cholesky::{
-    check_fail, new_fail_flag, submit_tiled_forward_solve, submit_tiled_potrf, TileHandles,
-};
 use crate::linalg::matrix::Matrix;
 use crate::linalg::tile::{TileMatrix, TileVector};
-use crate::scheduler::TaskGraph;
 use std::sync::Arc;
 
 /// Kriging output.
@@ -137,25 +133,12 @@ pub fn exact_predict_ctx(
     };
     let a = TileMatrix::zeros(n, ctx.ts);
     let y = TileVector::from_slice(obs_z, ctx.ts);
-    let mut g = TaskGraph::new();
-    let hs = TileHandles::register(&mut g, a.nt());
-    crate::likelihood::exact::submit_generation_with(
-        &mut g,
-        &a,
-        &hs,
-        &problem,
-        theta,
-        None,
-        &ctx.engine,
-        None,
-    );
-    let fail = new_fail_flag();
-    submit_tiled_potrf(&mut g, &a, &hs, None, &fail);
-    let yh = g.register_many(y.nt());
-    submit_tiled_forward_solve(&mut g, &a, &hs, &y, &yh);
-    ctx.run_graph(g);
-    check_fail(&fail)
-        .map_err(|e| anyhow::anyhow!("kriging covariance not SPD at pivot {}", e.pivot))?;
+    // Generate + factor + forward-solve through the pipeline IR (no
+    // log-det: kriging only needs the factor and w = L^{-1} z).
+    let out = crate::pipeline::run_tiled(&problem, theta, ctx, None, &a, Some(&y), None, false)?;
+    if let Some(pivot) = out.not_spd {
+        anyhow::bail!("kriging covariance not SPD at pivot {pivot}");
+    }
 
     // y now holds w = L^{-1} z; finish alpha = L^{-T} w densely.
     let l = a.to_dense_lower();

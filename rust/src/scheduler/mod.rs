@@ -62,6 +62,9 @@ impl TaskKind {
     pub const LR_SYRK: TaskKind = TaskKind { name: "lr_syrk", priority: 2 };
     pub const LR_GEMM: TaskKind = TaskKind { name: "lr_gemm", priority: 1 };
     pub const COMPRESS: TaskKind = TaskKind { name: "compress", priority: 5 };
+    /// Per-tile log-determinant reduction off POTRF's diagonal block
+    /// (pipeline IR); priority matches POTRF — it sits on the same tile.
+    pub const LOGDET: TaskKind = TaskKind { name: "logdet", priority: 4 };
 }
 
 /// A submitted task: closure + graph metadata.
@@ -159,6 +162,42 @@ impl TaskGraph {
             kind,
             bytes,
             out_handle,
+            run: Some(Box::new(run)),
+            succs: Vec::new(),
+            npred,
+        });
+        id
+    }
+
+    /// Submit a task with *explicit* predecessor task ids, bypassing
+    /// STF handle inference.  The pipeline planner uses this to lower a
+    /// fused [`crate::pipeline::ExecutionPlan`]: fusion merges nodes
+    /// whose handle sets STF would keep separate, so the planner's
+    /// already-resolved group edges are authoritative.  Predecessors
+    /// must be earlier task ids; later ones are dropped (defensively —
+    /// a plan never produces them).  `last_writer`/`readers` state is
+    /// untouched, so explicit-dep and STF submission must not be mixed
+    /// on the same handles within one graph.
+    pub fn submit_dep(
+        &mut self,
+        kind: TaskKind,
+        preds: &[usize],
+        bytes: usize,
+        run: impl FnOnce() + Send + 'static,
+    ) -> usize {
+        let id = self.tasks.len();
+        let mut preds: Vec<usize> = preds.to_vec();
+        preds.sort_unstable();
+        preds.dedup();
+        preds.retain(|&p| p < id);
+        let npred = preds.len();
+        for p in &preds {
+            self.tasks[*p].succs.push(id);
+        }
+        self.tasks.push(TaskNode {
+            kind,
+            bytes,
+            out_handle: None,
             run: Some(Box::new(run)),
             succs: Vec::new(),
             npred,

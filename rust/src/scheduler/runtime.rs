@@ -358,8 +358,11 @@ pub struct Runtime {
     next_seq: AtomicU64,
     /// High-water mark of [`Runtime::prewarm_workers_once`] keys already
     /// served (worker-local state persists for the process, so repeat
-    /// prewarms at the same or smaller key are pure overhead).
-    prewarm_mark: AtomicUsize,
+    /// prewarms at the same or smaller key are pure overhead).  A mutex —
+    /// held across the prewarm itself — not an atomic: the mark must not
+    /// advance before the warm-up actually completed, or a concurrent
+    /// caller at the same key returns onto cold workers.
+    prewarm_mark: Mutex<usize>,
 }
 
 impl Runtime {
@@ -386,7 +389,7 @@ impl Runtime {
             workers: Mutex::new(Vec::with_capacity(nworkers)),
             spawned: AtomicU64::new(0),
             next_seq: AtomicU64::new(0),
-            prewarm_mark: AtomicUsize::new(0),
+            prewarm_mark: Mutex::new(0),
         };
         {
             let mut ws = rt.workers.lock().unwrap();
@@ -575,10 +578,17 @@ impl Runtime {
     /// high-water mark) pays the prewarm, later ones skip it entirely
     /// (the serving path builds a session on every cache miss).
     pub fn prewarm_workers_once(&self, key: usize, f: impl Fn() + Send + Sync + 'static) {
-        if self.prewarm_mark.fetch_max(key, Ordering::SeqCst) >= key {
+        // The lock is held across the prewarm barrier: the previous
+        // `fetch_max` scheme advanced the mark *before* warming, so a
+        // concurrent caller at the same key could return — and start
+        // submitting real work — while the workers were still cold.
+        // Now losers block until the winner's barrier completes.
+        let mut mark = self.prewarm_mark.lock().unwrap();
+        if *mark >= key {
             return;
         }
         self.prewarm_workers(f);
+        *mark = key;
     }
 
     /// Stop accepting jobs, drain queued work, join all workers.

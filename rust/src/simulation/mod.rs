@@ -5,10 +5,8 @@
 use crate::covariance::{CovKernel, DistanceMetric, Location};
 use crate::likelihood::{ExecCtx, Problem};
 use crate::linalg::blas::{dgemv_raw, dtrmv_ln, Trans};
-use crate::linalg::cholesky::{check_fail, new_fail_flag, submit_tiled_potrf, TileHandles};
 use crate::linalg::tile::TileMatrix;
 use crate::rng::Pcg64;
-use crate::scheduler::TaskGraph;
 use std::sync::Arc;
 
 /// A simulated (or observed) geostatistical dataset:
@@ -109,25 +107,13 @@ pub fn simulate_obs_exact(
         z: Arc::new(Vec::new()),
         metric,
     };
-    // Generate + factor Sigma (tiled, parallel).
+    // Generate + factor Sigma (tiled, parallel) through the pipeline IR
+    // (no solve, no log-det: simulation only needs the factor).
     let a = TileMatrix::zeros(dim, ctx.ts);
-    let mut g = TaskGraph::new();
-    let hs = TileHandles::register(&mut g, a.nt());
-    crate::likelihood::exact::submit_generation_with(
-        &mut g,
-        &a,
-        &hs,
-        &problem,
-        theta,
-        None,
-        &ctx.engine,
-        None,
-    );
-    let fail = new_fail_flag();
-    submit_tiled_potrf(&mut g, &a, &hs, None, &fail);
-    ctx.run_graph(g);
-    check_fail(&fail)
-        .map_err(|e| anyhow::anyhow!("simulation covariance not SPD at pivot {}", e.pivot))?;
+    let out = crate::pipeline::run_tiled(&problem, theta, ctx, None, &a, None, None, false)?;
+    if let Some(pivot) = out.not_spd {
+        anyhow::bail!("simulation covariance not SPD at pivot {pivot}");
+    }
 
     // z = L e, computed tile-block-wise:
     // z_i = L_ii e_i (trmv) + sum_{j<i} L_ij e_j (gemv)

@@ -239,6 +239,62 @@ fn precancelled_session_reports_cancelled_without_work() {
     assert_eq!(ctx.runtime.tasks_executed(), tasks_before);
 }
 
+/// Regression: a cancel that lands only *after* a job completed must
+/// not rewrite its outcome or bump the cancelled counter.  The outcome
+/// is decided once, at completion, by the layers that can actually
+/// observe an interruption (skipped runtime tasks, an optimizer that
+/// latched its stop signal) — never by re-reading the token afterwards,
+/// which races against exactly this late-cancel pattern.
+#[test]
+fn cancel_after_completion_keeps_done_and_stats_clean() {
+    let coord = Arc::new(Coordinator::new(hw(2, 32)));
+    let client = Client::new(coord.clone(), 1);
+    let t = client.submit(mle_request(60, 5, 4));
+    assert!(matches!(t.wait(), Completion::Done(_)));
+    // The job is fully drained; now fire its token.
+    t.cancel();
+    assert!(t.is_cancelled());
+    assert!(
+        matches!(t.wait(), Completion::Done(_)),
+        "late cancel rewrote a completed outcome"
+    );
+    let st = coord.stats();
+    assert_eq!(st.cancelled, 0, "late cancel was counted: {st:?}");
+    assert_eq!(st.errors, 0, "{st:?}");
+    client.shutdown();
+    coord.shutdown();
+}
+
+/// Regression companion: a token fired *before* the request starts is
+/// a real cancellation — typed `ApiError::Cancelled`, counted exactly
+/// once in `stats().cancelled` (not as an error), and nothing half-done
+/// lands in the dataset cache.
+#[test]
+fn prefired_token_reports_typed_cancelled_and_caches_nothing() {
+    use exageostat::scheduler::runtime::CancelToken;
+    let coord = Coordinator::new(hw(1, 32));
+    let sim = |seed: u64| {
+        exageostat::coordinator::parse_request(&format!(
+            "{{\"type\":\"simulate\",\"n\":80,\"seed\":{seed}}}"
+        ))
+        .unwrap()
+    };
+    let token = CancelToken::new();
+    token.cancel();
+    let err = coord.run_with_cancel(sim(4), &token).unwrap_err();
+    assert!(
+        matches!(err.downcast_ref::<ApiError>(), Some(ApiError::Cancelled)),
+        "{err:#}"
+    );
+    let st = coord.stats();
+    assert_eq!(st.cancelled, 1, "{st:?}");
+    assert_eq!(st.errors, 0, "cancellation miscounted as error: {st:?}");
+    // The cancelled request must not have populated the dataset cache.
+    let resp = coord.run(sim(4)).unwrap();
+    assert!(!resp.data_cache_hit, "cancelled request leaked into the cache");
+    coord.shutdown();
+}
+
 #[test]
 fn band_too_large_rejected_by_wrapper_and_parse_route_still_works() {
     let exa = ExaGeoStat::init(hw(1, 32));

@@ -225,3 +225,61 @@ fn mp_f32_compute_tracks_demote_then_f64_oracle() {
         assert!((got.sse - oracle.sse).abs() <= tol, "sse drift");
     });
 }
+
+/// The fusion planner is a pure re-grouping of the task-graph IR: for
+/// every variant, a fused plan must reproduce the unfused plan's log-det
+/// and SSE — bit-identically where the arithmetic is all-f64 (exact,
+/// DST), and to 1e-13 relative otherwise (MP's f32 tiles, TLR's ACA
+/// compression — both still run the identical op stream, but asserting
+/// through the looser bound keeps the property honest if their kernels
+/// ever gain reduction-order freedom).
+#[test]
+fn fused_plans_reproduce_unfused_results() {
+    use exageostat::pipeline::set_fuse_override;
+    forall(0xF05E_0005, 6, gen_case, |case| {
+        let p = problem(case);
+        let ctx = ExecCtx::new(2, case.ts, Policy::Lws);
+        let nt = case.n.div_ceil(case.ts);
+        let variants = [
+            Variant::Exact,
+            Variant::Dst { band: nt - 1 },
+            Variant::Mp { band: 1 },
+            Variant::Tlr {
+                tol: 1e-9,
+                max_rank: usize::MAX,
+            },
+        ];
+        for variant in variants {
+            let mut session = EvalSession::new(&p, variant, &ctx).unwrap();
+            set_fuse_override(Some(false));
+            let unfused = session.eval(&case.theta).unwrap();
+            set_fuse_override(Some(true));
+            let fused = session.eval(&case.theta).unwrap();
+            set_fuse_override(None);
+            let all_f64 = matches!(variant, Variant::Exact | Variant::Dst { .. });
+            for (name, f, u) in [
+                ("logdet", fused.logdet, unfused.logdet),
+                ("sse", fused.sse, unfused.sse),
+                ("loglik", fused.loglik, unfused.loglik),
+            ] {
+                if all_f64 {
+                    assert_eq!(
+                        f.to_bits(),
+                        u.to_bits(),
+                        "{variant:?} n={} ts={}: fused {name} {f} != unfused {u}",
+                        case.n,
+                        case.ts
+                    );
+                } else {
+                    let tol = 1e-13 * (1.0 + u.abs());
+                    assert!(
+                        (f - u).abs() <= tol,
+                        "{variant:?} n={} ts={}: fused {name} {f} vs unfused {u}",
+                        case.n,
+                        case.ts
+                    );
+                }
+            }
+        }
+    });
+}
