@@ -15,9 +15,10 @@ use exageostat::covariance::{kernel_by_name, DistanceMetric};
 use exageostat::likelihood::{exact, ExecCtx, Problem};
 use exageostat::linalg::cholesky::{new_fail_flag, submit_tiled_potrf, TileHandles};
 use exageostat::linalg::tile::TileMatrix;
-use exageostat::scheduler::des::{cluster_machine, simulate, CommModel};
+use exageostat::pipeline::shard::ShardGrid;
+use exageostat::scheduler::des::{block_cyclic_owner, cluster_machine, simulate, CommModel};
 use exageostat::scheduler::pool::Policy;
-use exageostat::scheduler::{Handle, TaskGraph};
+use exageostat::scheduler::TaskGraph;
 use exageostat::simulation::simulate_data_exact;
 use std::sync::Arc;
 
@@ -78,10 +79,8 @@ fn main() {
             let (_a2, g2, coords) = build();
             let machine = cluster_machine(p, q, cores_per_node);
             // 2-D block-cyclic ownership, exactly the paper's distribution
-            let owner = move |h: Handle| -> usize {
-                let (i, j) = coords.get(h.0).copied().unwrap_or((0, 0));
-                (i % p) * q + (j % q)
-            };
+            // (the same ShardGrid the live sharding pass uses).
+            let owner = block_cyclic_owner(ShardGrid::new(p, q), Arc::new(coords));
             let r = simulate(&g2, &cm, &machine, &comm, Some(&owner));
             cells.push(s(r.makespan));
         }

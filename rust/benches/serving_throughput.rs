@@ -3,12 +3,15 @@
 //! MLE + predict + simulate workload to **one** shared `Runtime`
 //! (`Coordinator`), versus the pre-refactor serving model of one fresh
 //! worker pool per job, run sequentially — plus the **streaming** path
-//! (`serve_stream` over a JSONL pipe with a bounded in-flight window)
-//! and a cancellation round (every third ticket cancelled mid-flight).
+//! (`serve_stream` over a JSONL pipe with a bounded in-flight window),
+//! a cancellation round (every second ticket cancelled mid-flight), and
+//! a **shard-scaling** mode (`ShardedCoordinator` at 1/2/4 shards, one
+//! 2-worker runtime per shard).
 //!
 //! Emits `BENCH_serving.json` (override the path with `BENCH_OUT`):
-//! requests/sec, p50/p95/p99 latency per mode, and cancelled-request
-//! counts.  `BENCH_QUICK` (or `--quick`) shrinks the workload for CI.
+//! requests/sec, p50/p95/p99 latency per mode, cancelled-request
+//! counts, and req/s per shard count with its speedup over one shard.
+//! `BENCH_QUICK` (or `--quick`) shrinks the workload for CI.
 
 #[path = "bench_util.rs"]
 mod bench_util;
@@ -16,7 +19,8 @@ use bench_util::*;
 
 use exageostat::api::{Hardware, MleOptions};
 use exageostat::coordinator::{
-    serve_stream, Client, Completion, Coordinator, DataSpec, Request, RequestKind, ServeOptions,
+    serve_stream, Client, Completion, Coordinator, DataSpec, Dispatch, Request, RequestKind,
+    ServeOptions, ShardedCoordinator,
 };
 use exageostat::likelihood::Variant;
 use exageostat::scheduler::pool::Policy;
@@ -153,6 +157,68 @@ fn run_cancelling(hw: &Hardware, reqs: &[Request]) -> (usize, usize, u64) {
     (done, cancelled, tasks)
 }
 
+/// The request mix for the shard-scaling mode: 8 distinct datasets so
+/// the affinity router spreads work across up to 4 members (2+ datasets
+/// each) instead of serializing on one member's caches.
+fn workload_sharded(n: usize, count: usize, max_iters: usize) -> Vec<Request> {
+    (0..count)
+        .map(|i| {
+            let data = DataSpec {
+                n,
+                seed: (i % 8) as u64,
+                ..DataSpec::default()
+            };
+            let kind = match i % 3 {
+                0 => RequestKind::Mle {
+                    variant: Variant::Exact,
+                    opt: MleOptions::new(vec![0.01; 3], vec![5.0; 3], 1e-4, max_iters),
+                },
+                1 => RequestKind::Predict { grid: 6 },
+                _ => RequestKind::Simulate,
+            };
+            Request {
+                data: data.into(),
+                kind,
+                priority: 0,
+            }
+        })
+        .collect()
+}
+
+/// Shard-scaling mode: the same request mix against a
+/// [`ShardedCoordinator`] at growing shard counts.  Scale-OUT framing
+/// (the paper's per-node worker pools): every shard brings its own
+/// 2-worker runtime, so req/s should grow with the shard count while
+/// per-request latency stays flat.
+fn run_sharded(ts: usize, reqs: &[Request], clients: usize, nshards: usize) -> (f64, Vec<f64>) {
+    let hw = Hardware {
+        ncores: 2 * nshards,
+        ts,
+        policy: Policy::Lws,
+        ..Hardware::default()
+    };
+    let coord: Arc<dyn Dispatch> = if nshards > 1 {
+        Arc::new(ShardedCoordinator::new(hw, nshards))
+    } else {
+        Arc::new(Coordinator::new(hw))
+    };
+    let client = Client::from_dispatch(coord.clone(), clients);
+    let t0 = Instant::now();
+    let tickets: Vec<_> = reqs.iter().map(|r| client.submit(r.clone())).collect();
+    let mut lats = Vec::with_capacity(tickets.len());
+    for t in &tickets {
+        match t.wait() {
+            Completion::Done(r) => lats.push(r.wall_s),
+            Completion::Cancelled => {}
+            Completion::Failed(e) => panic!("sharded bench request failed: {e}"),
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    client.shutdown();
+    coord.shutdown_dispatch();
+    (wall, lats)
+}
+
 fn pct(lat: &mut [f64], p: f64) -> f64 {
     lat.sort_by(f64::total_cmp);
     exageostat::testkit::percentile(lat, p)
@@ -234,6 +300,40 @@ fn main() {
         "\ncancellation round: {can_done} completed, {can_cancelled} cancelled \
          (every 2nd ticket, mixed kinds), {can_tasks} tasks executed"
     );
+
+    // Shard-scaling mode: 1 / 2 / 4 member coordinators, 2 workers each.
+    let shard_reqs = workload_sharded(n, if quick { 12 } else { 24 }, max_iters);
+    println!("\nshard scaling — {} requests, 2 workers/shard", shard_reqs.len());
+    header(&["shards", "wall s", "req/s", "p50 s", "p95 s", "p99 s", "vs 1"]);
+    let mut base_rps = 0.0f64;
+    let mut shard_rows: Vec<String> = Vec::new();
+    for &k in &[1usize, 2, 4] {
+        let (wall, mut lat) = run_sharded(hw.ts, &shard_reqs, clients, k);
+        let rps = shard_reqs.len() as f64 / wall.max(1e-12);
+        if k == 1 {
+            base_rps = rps;
+        }
+        let speedup = rps / base_rps.max(1e-12);
+        let (p50, p95, p99) = (pct(&mut lat, 0.50), pct(&mut lat, 0.95), pct(&mut lat, 0.99));
+        row(&[
+            format!("{k}"),
+            s(wall),
+            s2(rps),
+            s(p50),
+            s(p95),
+            s(p99),
+            s2(speedup),
+        ]);
+        shard_rows.push(format!(
+            "{{\"shards\": {k}, \"ncores_per_shard\": 2, \"req_per_s\": {rps}, \
+             \"p50_s\": {p50}, \"p95_s\": {p95}, \"p99_s\": {p99}, \
+             \"speedup_vs_1\": {speedup}}}"
+        ));
+    }
+    println!(
+        "shape check: req/s grows with the shard count (each shard adds a\n\
+         2-worker runtime + private caches); 2 shards should clear 1.4x."
+    );
     println!(
         "shape check: the shared persistent runtime should serve at >= the\n\
          sequential per-job-pool rate (cache reuse + no spawn/join per job);\n\
@@ -254,8 +354,10 @@ fn main() {
          \"p50_s\": {str_p50}, \"p95_s\": {str_p95}, \"p99_s\": {str_p99}, \
          \"window\": {window}}},\n  \
          \"cancellation\": {{\"completed\": {can_done}, \"cancelled\": {can_cancelled}, \
-         \"tasks_executed\": {can_tasks}}}\n}}\n",
-        hw.ncores
+         \"tasks_executed\": {can_tasks}}},\n  \
+         \"shards\": [\n    {}\n  ]\n}}\n",
+        hw.ncores,
+        shard_rows.join(",\n    ")
     );
     let out = bench_out_path("BENCH_serving.json");
     std::fs::write(&out, &json)

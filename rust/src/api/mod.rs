@@ -175,6 +175,7 @@ impl ExaGeoStat {
             runtime: self.runtime.clone(),
             job_prio: 0,
             cancel: CancelToken::new(),
+            shards: None,
         }
     }
 

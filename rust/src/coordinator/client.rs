@@ -1,7 +1,9 @@
-//! Async job layer: [`Client`] wraps a [`Coordinator`] with
-//! non-blocking `submit(Request) -> Ticket`.
+//! Async job layer: [`Client`] wraps a [`Dispatch`]er (a
+//! [`crate::coordinator::Coordinator`], or the sharded fan-out
+//! [`crate::coordinator::ShardedCoordinator`]) with non-blocking
+//! `submit(Request) -> Ticket`.
 //!
-//! [`Coordinator::run`] is synchronous — it occupies the caller's
+//! [`crate::coordinator::Coordinator::run`] is synchronous — it occupies the caller's
 //! thread for the whole request.  A [`Client`] owns a small pool of
 //! request-runner threads (cheap drivers; the heavy tile work still
 //! runs on the coordinator's shared worker runtime) and hands back a
@@ -20,7 +22,7 @@
 //! see ROADMAP.md) slots in as a new backend behind this same
 //! submit/ticket surface.
 
-use super::{Coordinator, Request, Response};
+use super::{Dispatch, Request, Response};
 use crate::api::is_cancelled;
 use crate::scheduler::runtime::CancelToken;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -87,20 +89,29 @@ struct Submission {
     req: Request,
 }
 
-/// Non-blocking submit/ticket front-end over a shared [`Coordinator`]
+/// Non-blocking submit/ticket front-end over a shared [`Dispatch`]er
 /// (see module docs).
 pub struct Client {
-    coord: Arc<Coordinator>,
+    coord: Arc<dyn Dispatch>,
     tx: Option<Sender<Submission>>,
     runners: Vec<std::thread::JoinHandle<()>>,
     next_id: AtomicU64,
 }
 
 impl Client {
-    /// Spawn `runners.max(1)` request-runner threads over `coord`.
-    /// The runner count bounds how many requests *drive* concurrently;
-    /// their task graphs all interleave on the coordinator's runtime.
-    pub fn new(coord: Arc<Coordinator>, runners: usize) -> Client {
+    /// Spawn `runners.max(1)` request-runner threads over `coord` (a
+    /// [`crate::coordinator::Coordinator`] or any other
+    /// [`Dispatch`]er).  The runner count
+    /// bounds how many requests *drive* concurrently; their task graphs
+    /// all interleave on the coordinator's runtime(s).
+    pub fn new<D: Dispatch + 'static>(coord: Arc<D>, runners: usize) -> Client {
+        Client::from_dispatch(coord, runners)
+    }
+
+    /// [`Client::new`] over an already-erased dispatcher (what
+    /// `exageostat serve` builds when `--shards` picks the coordinator
+    /// flavor at runtime).
+    pub fn from_dispatch(coord: Arc<dyn Dispatch>, runners: usize) -> Client {
         let (tx, rx) = channel::<Submission>();
         let rx = Arc::new(Mutex::new(rx));
         let handles = (0..runners.max(1))
@@ -109,7 +120,7 @@ impl Client {
                 let coord = coord.clone();
                 std::thread::Builder::new()
                     .name(format!("exa-client-{i}"))
-                    .spawn(move || runner_loop(&coord, &rx))
+                    .spawn(move || runner_loop(&*coord, &rx))
                     .expect("spawn client runner")
             })
             .collect();
@@ -121,8 +132,8 @@ impl Client {
         }
     }
 
-    /// The coordinator this client submits to.
-    pub fn coordinator(&self) -> &Arc<Coordinator> {
+    /// The dispatcher this client submits to.
+    pub fn coordinator(&self) -> &Arc<dyn Dispatch> {
         &self.coord
     }
 
@@ -175,7 +186,7 @@ impl Drop for Client {
     }
 }
 
-fn runner_loop(coord: &Coordinator, rx: &Mutex<Receiver<Submission>>) {
+fn runner_loop(coord: &dyn Dispatch, rx: &Mutex<Receiver<Submission>>) {
     loop {
         // Hold the lock only for the recv, not while serving.
         let sub = match rx.lock().unwrap().recv() {
@@ -215,7 +226,7 @@ fn runner_loop(coord: &Coordinator, rx: &Mutex<Receiver<Submission>>) {
 mod tests {
     use super::*;
     use crate::api::{Hardware, MleOptions};
-    use crate::coordinator::{DataSpec, Outcome, RequestKind};
+    use crate::coordinator::{Coordinator, DataSpec, Outcome, RequestKind};
     use crate::likelihood::Variant;
     use crate::scheduler::pool::Policy;
 

@@ -40,23 +40,46 @@
 
 pub mod client;
 pub mod serve;
+pub mod sharded;
 
 pub use client::{Client, Completion, Ticket};
-pub use serve::{serve_stream, ServeOptions, ServeSummary};
+pub use serve::{serve_socket, serve_stream, ServeOptions, ServeSummary};
+pub use sharded::ShardedCoordinator;
 
 use crate::api::{is_cancelled, mle_with_session, ApiError, Hardware, MleOptions, MleResult};
 use crate::backend::{self, ArcEngine};
 use crate::covariance::{kernel_by_name, CovKernel, DistanceMetric, Location};
 use crate::likelihood::{EvalSession, ExecCtx, Problem, Variant};
 use crate::optimizer::Method;
+use crate::pipeline::shard::ShardSet;
 use crate::prediction::{self, Prediction};
 use crate::scheduler::runtime::{CancelToken, Runtime};
 use crate::simulation;
 use anyhow::Context as _;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::time::Instant;
+
+/// The request-dispatch surface [`Client`] and [`serve_stream`] sit on:
+/// one [`Coordinator`] and the sharded fan-out [`ShardedCoordinator`]
+/// both implement it, so every serving front-end (tickets, streams,
+/// sockets, benches) works unchanged across shard counts — the
+/// scale-out seam the ROADMAP names.
+pub trait Dispatch: Send + Sync {
+    /// Serve one request synchronously under a cancellation token
+    /// (see [`Coordinator::run_with_cancel`]).
+    fn run_with_cancel(&self, req: Request, cancel: &CancelToken) -> anyhow::Result<Response>;
+    /// Ready tasks currently queued across the dispatcher's runtimes
+    /// (the admission-control backpressure signal).
+    fn queue_depth(&self) -> usize;
+    /// Total worker threads across the dispatcher's runtimes.
+    fn nworkers(&self) -> usize;
+    /// Aggregate serving stats (field-wise summed across shards).
+    fn stats(&self) -> CoordinatorStats;
+    /// Drain in-flight jobs and join every runtime's workers.
+    fn shutdown_dispatch(&self);
+}
 
 /// Default cache budgets, in doubles pinned (×8 for bytes): 32 MB of
 /// datasets, 256 MB of session distance caches.  Override with
@@ -385,11 +408,34 @@ pub struct CoordinatorStats {
     pub worker_threads: usize,
 }
 
+impl CoordinatorStats {
+    /// Field-wise accumulate (how [`ShardedCoordinator`] aggregates its
+    /// members' stats).
+    pub fn accumulate(&mut self, o: &CoordinatorStats) {
+        self.requests += o.requests;
+        self.errors += o.errors;
+        self.cancelled += o.cancelled;
+        self.data_cache_hits += o.data_cache_hits;
+        self.data_cache_misses += o.data_cache_misses;
+        self.data_cache_evictions += o.data_cache_evictions;
+        self.session_cache_hits += o.session_cache_hits;
+        self.session_cache_misses += o.session_cache_misses;
+        self.session_cache_evictions += o.session_cache_evictions;
+        self.tasks_executed += o.tasks_executed;
+        self.worker_threads += o.worker_threads;
+    }
+}
+
 /// The serving coordinator (see module docs).
 pub struct Coordinator {
     hw: Hardware,
     engine: ArcEngine,
     runtime: Arc<Runtime>,
+    /// Set once by [`Coordinator::attach_shards`]: every request context
+    /// this coordinator hands out carries the shard set, so large tiled
+    /// pipelines partition across the member runtimes
+    /// (`pipeline::shard::execute_sharded`).
+    shards: OnceLock<Arc<ShardSet>>,
     data_cache: Mutex<LruCache<DataArc>>,
     sessions: Mutex<LruCache<Arc<Mutex<EvalSession>>>>,
     next_id: AtomicU64,
@@ -422,6 +468,7 @@ impl Coordinator {
             hw,
             engine: backend::default_engine(),
             runtime,
+            shards: OnceLock::new(),
             data_cache: Mutex::new(LruCache::new(data_budget)),
             sessions: Mutex::new(LruCache::new(session_budget)),
             next_id: AtomicU64::new(0),
@@ -440,11 +487,21 @@ impl Coordinator {
         &self.runtime
     }
 
+    /// Attach a shard set: from now on every request context carries it,
+    /// so tiled pipelines over enough tiles (`set.min_nt`) partition 2-D
+    /// block-cyclic across the set's runtimes.  One-shot — a second call
+    /// is ignored (the set is wired at construction by
+    /// [`ShardedCoordinator`]).
+    pub fn attach_shards(&self, set: Arc<ShardSet>) {
+        let _ = self.shards.set(set);
+    }
+
     /// Execution context bound to the shared runtime, with the request's
     /// priority as the job tie-break.
     fn ctx_with_priority(&self, priority: u8) -> ExecCtx {
         let mut ctx = ExecCtx::with_runtime(self.runtime.clone(), self.hw.ts, self.engine.clone());
         ctx.job_prio = priority;
+        ctx.shards = self.shards.get().cloned();
         ctx
     }
 
@@ -674,6 +731,24 @@ impl Coordinator {
     /// `exageostat_finalize` of the serving layer).
     pub fn shutdown(&self) {
         self.runtime.shutdown();
+    }
+}
+
+impl Dispatch for Coordinator {
+    fn run_with_cancel(&self, req: Request, cancel: &CancelToken) -> anyhow::Result<Response> {
+        Coordinator::run_with_cancel(self, req, cancel)
+    }
+    fn queue_depth(&self) -> usize {
+        self.runtime.queue_depth()
+    }
+    fn nworkers(&self) -> usize {
+        self.runtime.nworkers()
+    }
+    fn stats(&self) -> CoordinatorStats {
+        Coordinator::stats(self)
+    }
+    fn shutdown_dispatch(&self) {
+        self.shutdown();
     }
 }
 

@@ -77,7 +77,7 @@ pub fn serve_stream(
     let window = opts.window.max(1);
     let depth_limit = opts
         .depth_limit
-        .unwrap_or_else(|| 4 * client.coordinator().runtime().nworkers());
+        .unwrap_or_else(|| 4 * client.coordinator().nworkers());
     let mut inflight: VecDeque<super::Ticket> = VecDeque::new();
     let mut summary = ServeSummary::default();
     let mut line = String::new();
@@ -120,8 +120,7 @@ pub fn serve_stream(
         // requests; the queue-depth check holds admissions while the
         // workers are already saturated with ready tasks.
         while inflight.len() >= window
-            || (!inflight.is_empty()
-                && client.coordinator().runtime().queue_depth() > depth_limit)
+            || (!inflight.is_empty() && client.coordinator().queue_depth() > depth_limit)
         {
             reap(&mut summary, &mut inflight, &mut on_done);
         }
@@ -133,6 +132,85 @@ pub fn serve_stream(
     }
     summary.latencies_s.sort_by(f64::total_cmp);
     Ok(summary)
+}
+
+impl ServeSummary {
+    /// Fold another connection's summary into this one (counters sum,
+    /// latencies merge sorted) — how [`serve_socket`] aggregates across
+    /// its accept loop.
+    pub fn merge(&mut self, o: ServeSummary) {
+        self.submitted += o.submitted;
+        self.ok += o.ok;
+        self.failed += o.failed;
+        self.cancelled += o.cancelled;
+        self.parse_errors += o.parse_errors;
+        self.latencies_s.extend(o.latencies_s);
+        self.latencies_s.sort_by(f64::total_cmp);
+    }
+}
+
+/// Removes the bound socket path on drop, so *every* exit path — clean
+/// EOF, transport error mid-connection, panic unwinding — cleans up.
+/// (The pre-RAII serve leaked the path whenever `serve_stream` errored.)
+struct SocketGuard(std::path::PathBuf);
+
+impl Drop for SocketGuard {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.0);
+    }
+}
+
+/// Serve JSONL requests over a unix socket: bind `path`, then accept
+/// connections **in a loop** — each connection is one [`serve_stream`]
+/// to its EOF — until `max_conns` is reached (`None` = loop until the
+/// process is killed).  Per-connection summaries are merged.
+///
+/// Binding is careful about pre-existing paths:
+///
+/// * a **live** socket (something accepts our probe connection) is an
+///   error — silently stealing the path would orphan the running
+///   server's clients;
+/// * a **stale** socket (connect fails: the owner is gone) is removed
+///   and rebound — the normal recovery after a `kill -9`;
+/// * the bound path is removed on all exit paths via an RAII guard.
+pub fn serve_socket(
+    client: &Client,
+    path: &str,
+    opts: &ServeOptions,
+    max_conns: Option<usize>,
+    mut on_done: impl FnMut(u64, &Completion),
+) -> anyhow::Result<ServeSummary> {
+    use std::os::unix::net::{UnixListener, UnixStream};
+
+    if std::path::Path::new(path).exists() {
+        match UnixStream::connect(path) {
+            Ok(_) => anyhow::bail!(
+                "socket {path} is owned by a live server — refusing to steal it \
+                 (stop the other process or pick another path)"
+            ),
+            Err(_) => {
+                // Nobody accepts: a stale path from a killed process.
+                std::fs::remove_file(path)
+                    .map_err(|e| anyhow::anyhow!("removing stale socket {path}: {e}"))?;
+            }
+        }
+    }
+    let listener = UnixListener::bind(path)
+        .map_err(|e| anyhow::anyhow!("binding unix socket {path}: {e}"))?;
+    let _guard = SocketGuard(std::path::PathBuf::from(path));
+
+    let mut total = ServeSummary::default();
+    let mut served = 0usize;
+    while max_conns.map_or(true, |m| served < m) {
+        let (conn, _) = listener
+            .accept()
+            .map_err(|e| anyhow::anyhow!("accepting on {path}: {e}"))?;
+        let mut reader = std::io::BufReader::new(conn);
+        let s = serve_stream(client, &mut reader, opts, &mut on_done)?;
+        total.merge(s);
+        served += 1;
+    }
+    Ok(total)
 }
 
 #[cfg(test)]
@@ -266,6 +344,98 @@ this is not json
         );
         assert_eq!(summary.submitted, 3);
         assert_eq!(summary.ok, 3);
+        client.shutdown();
+        coord.shutdown();
+    }
+
+    fn sock_path(tag: &str) -> String {
+        std::env::temp_dir()
+            .join(format!("exa-serve-{}-{tag}.sock", std::process::id()))
+            .to_string_lossy()
+            .into_owned()
+    }
+
+    fn connect_retry(path: &str) -> std::os::unix::net::UnixStream {
+        let t0 = Instant::now();
+        loop {
+            match std::os::unix::net::UnixStream::connect(path) {
+                Ok(c) => return c,
+                Err(_) if t0.elapsed() < Duration::from_secs(20) => {
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => panic!("connecting {path}: {e}"),
+            }
+        }
+    }
+
+    /// The headline socket bugfix: the accept loop serves a *second*
+    /// connection (the old serve exited after one), and the socket file
+    /// is gone afterwards.
+    #[test]
+    fn socket_serves_two_sequential_connections_and_cleans_up() {
+        let coord = Arc::new(Coordinator::new(hw(2, 32)));
+        let client = Client::new(coord.clone(), 2);
+        let path = sock_path("two-conns");
+        let _ = std::fs::remove_file(&path);
+        let wpath = path.clone();
+        let writer = std::thread::spawn(move || {
+            use std::io::Write;
+            for seed in [1u64, 2] {
+                let mut conn = connect_retry(&wpath);
+                writeln!(conn, "{{\"type\":\"simulate\",\"n\":50,\"seed\":{seed}}}").unwrap();
+                conn.shutdown(std::net::Shutdown::Write).unwrap();
+            }
+        });
+        let summary =
+            serve_socket(&client, &path, &ServeOptions::default(), Some(2), |_, _| {}).unwrap();
+        writer.join().unwrap();
+        assert_eq!(summary.submitted, 2);
+        assert_eq!(summary.ok, 2);
+        assert_eq!(summary.latencies_s.len(), 2);
+        assert!(
+            !std::path::Path::new(&path).exists(),
+            "socket file must be removed on exit"
+        );
+        client.shutdown();
+        coord.shutdown();
+    }
+
+    /// The stale-cleanup bugfix, both halves: a path owned by a live
+    /// listener is refused (not silently stolen), while a stale path
+    /// left by a killed process is removed and rebound.
+    #[test]
+    fn live_socket_is_refused_and_stale_socket_is_recovered() {
+        let coord = Arc::new(Coordinator::new(hw(1, 16)));
+        let client = Client::new(coord.clone(), 1);
+        let path = sock_path("probe");
+        let _ = std::fs::remove_file(&path);
+
+        // Live owner: serve_socket must refuse and leave the path alone.
+        let live = std::os::unix::net::UnixListener::bind(&path).unwrap();
+        let err = serve_socket(&client, &path, &ServeOptions::default(), Some(1), |_, _| {})
+            .unwrap_err();
+        assert!(err.to_string().contains("live server"), "{err:#}");
+        assert!(
+            std::path::Path::new(&path).exists(),
+            "the live owner's socket must not be deleted"
+        );
+        drop(live);
+
+        // The dropped listener leaves a stale file; serve_socket removes
+        // it, rebinds, and serves.
+        assert!(std::path::Path::new(&path).exists());
+        let wpath = path.clone();
+        let writer = std::thread::spawn(move || {
+            use std::io::Write;
+            let mut conn = connect_retry(&wpath);
+            writeln!(conn, "{{\"type\":\"simulate\",\"n\":40,\"seed\":7}}").unwrap();
+            conn.shutdown(std::net::Shutdown::Write).unwrap();
+        });
+        let summary =
+            serve_socket(&client, &path, &ServeOptions::default(), Some(1), |_, _| {}).unwrap();
+        writer.join().unwrap();
+        assert_eq!(summary.ok, 1);
+        assert!(!std::path::Path::new(&path).exists());
         client.shutdown();
         coord.shutdown();
     }

@@ -1,0 +1,178 @@
+//! Sharded fan-out coordinator: N member [`Coordinator`]s, each owning
+//! its own runtime, behind the one [`Dispatch`] surface.
+//!
+//! Two concurrency regimes compose here (mirroring the paper's
+//! distributed runs, where a 2-D block-cyclic tile distribution spreads
+//! one Cholesky across nodes while independent requests land on
+//! different nodes):
+//!
+//! * **Across requests** — each request is routed *whole* to one member
+//!   by a stable hash of its dataset key, so repeated requests over the
+//!   same data keep hitting that member's warm dataset/session caches
+//!   (shard affinity).  Distinct datasets spread across members and run
+//!   fully concurrently on disjoint worker pools.
+//! * **Within a request** — every member carries the one shared
+//!   [`ShardSet`] over *all* members' runtimes
+//!   ([`Coordinator::attach_shards`]); a tiled pipeline with at least
+//!   [`MIN_NT`] tiles per side partitions 2-D block-cyclic across every
+//!   runtime (`pipeline::shard::execute_sharded`), exchanging boundary
+//!   tiles through the lock-free mailbox.  Small pipelines stay on
+//!   their routed member — sharding a 2×2 tile grid would only pay
+//!   transfer overhead.
+//!
+//! Results are bit-identical to a single [`Coordinator`] for f64
+//! exact/DST work — the sharded executor preserves every plan edge and
+//! the host-side reduction order (`rust/tests/sharded.rs`).
+
+use super::{Coordinator, CoordinatorStats, Dispatch, Request, Response};
+use crate::api::Hardware;
+use crate::pipeline::shard::ShardSet;
+use crate::scheduler::runtime::CancelToken;
+use std::sync::Arc;
+
+/// Tile-grid side below which a routed request's pipelines run whole on
+/// their member runtime instead of sharding across all of them: with
+/// fewer than 16 tiles per side the per-stage mailbox round-trips cost
+/// more than the added workers buy.
+const MIN_NT: usize = 16;
+
+/// See module docs.
+pub struct ShardedCoordinator {
+    members: Vec<Arc<Coordinator>>,
+}
+
+impl ShardedCoordinator {
+    /// Build `nshards` member coordinators splitting `hw.ncores` worker
+    /// threads evenly (`hw.ncores` is the TOTAL across members; each
+    /// member gets at least one), and wire the shared [`ShardSet`] into
+    /// every member.
+    pub fn new(hw: Hardware, nshards: usize) -> ShardedCoordinator {
+        let nshards = nshards.max(1);
+        let per_shard = (hw.ncores.max(1) / nshards).max(1);
+        let members: Vec<Arc<Coordinator>> = (0..nshards)
+            .map(|_| {
+                let mut mhw = hw.clone();
+                mhw.ncores = per_shard;
+                Arc::new(Coordinator::new(mhw))
+            })
+            .collect();
+        let runtimes = members.iter().map(|m| m.runtime().clone()).collect();
+        let set = Arc::new(ShardSet::from_runtimes(runtimes, MIN_NT));
+        for m in &members {
+            m.attach_shards(set.clone());
+        }
+        ShardedCoordinator { members }
+    }
+
+    pub fn nshards(&self) -> usize {
+        self.members.len()
+    }
+
+    /// The member a request's dataset routes to (for tests).
+    pub fn route_of(&self, req: &Request) -> usize {
+        // FNV-1a over the dataset key: stable across runs (cache
+        // affinity must survive reconnects), independent of HashMap's
+        // randomized state.
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in req.data.key().bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        (h % self.members.len() as u64) as usize
+    }
+
+    /// Member coordinator `i` (for tests / introspection).
+    pub fn member(&self, i: usize) -> &Arc<Coordinator> {
+        &self.members[i]
+    }
+}
+
+impl Dispatch for ShardedCoordinator {
+    fn run_with_cancel(&self, req: Request, cancel: &CancelToken) -> anyhow::Result<Response> {
+        let m = self.route_of(&req);
+        self.members[m].run_with_cancel(req, cancel)
+    }
+    fn queue_depth(&self) -> usize {
+        self.members.iter().map(|m| m.runtime().queue_depth()).sum()
+    }
+    fn nworkers(&self) -> usize {
+        self.members.iter().map(|m| m.runtime().nworkers()).sum()
+    }
+    fn stats(&self) -> CoordinatorStats {
+        let mut total = CoordinatorStats::default();
+        for m in &self.members {
+            total.accumulate(&m.stats());
+        }
+        total
+    }
+    fn shutdown_dispatch(&self) {
+        for m in &self.members {
+            m.shutdown();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{DataSpec, Outcome, RequestKind};
+    use crate::scheduler::pool::Policy;
+
+    fn hw(ncores: usize, ts: usize) -> Hardware {
+        Hardware {
+            ncores,
+            ts,
+            policy: Policy::Lws,
+            ..Hardware::default()
+        }
+    }
+
+    fn sim_req(n: usize, seed: u64) -> Request {
+        Request {
+            data: DataSpec {
+                n,
+                seed,
+                ..DataSpec::default()
+            }
+            .into(),
+            kind: RequestKind::Simulate,
+            priority: 0,
+        }
+    }
+
+    #[test]
+    fn routing_is_stable_and_cache_affine() {
+        let sc = ShardedCoordinator::new(hw(2, 32), 2);
+        let a = sim_req(60, 1);
+        let b = sim_req(60, 2);
+        assert_eq!(sc.route_of(&a), sc.route_of(&sim_req(60, 1)));
+        // Serve `a` twice: the second hit lands on the same member's
+        // warm dataset cache.
+        let r1 = sc.run_with_cancel(a.clone(), &CancelToken::new()).unwrap();
+        let r2 = sc.run_with_cancel(a, &CancelToken::new()).unwrap();
+        assert!(!r1.data_cache_hit);
+        assert!(r2.data_cache_hit);
+        assert!(matches!(r2.outcome, Outcome::Simulated { n: 60 }));
+        let _ = sc.run_with_cancel(b, &CancelToken::new()).unwrap();
+        // Aggregate stats sum across members.
+        let st = sc.stats();
+        assert_eq!(st.requests, 3);
+        assert_eq!(st.data_cache_hits, 1);
+        assert_eq!(st.data_cache_misses, 2);
+        assert_eq!(st.worker_threads, 2);
+        sc.shutdown_dispatch();
+    }
+
+    #[test]
+    fn total_cores_split_across_members() {
+        let sc = ShardedCoordinator::new(hw(4, 32), 2);
+        assert_eq!(sc.nshards(), 2);
+        assert_eq!(sc.member(0).runtime().nworkers(), 2);
+        assert_eq!(Dispatch::nworkers(&sc), 4);
+        // Oversplit still gives each member one worker.
+        let tiny = ShardedCoordinator::new(hw(1, 32), 3);
+        assert_eq!(Dispatch::nworkers(&tiny), 3);
+        tiny.shutdown_dispatch();
+        sc.shutdown_dispatch();
+    }
+}

@@ -21,6 +21,7 @@ pub use session::EvalSession;
 
 use crate::backend::{ArcEngine, Engine as _};
 use crate::covariance::{CovKernel, DistanceMetric, Location};
+use crate::pipeline::shard::{shard_set_from_env, ShardSet};
 use crate::scheduler::pool::Policy;
 use crate::scheduler::profile::Profile;
 use crate::scheduler::runtime::{CancelToken, JobHandle, Runtime};
@@ -71,6 +72,13 @@ pub struct ExecCtx {
     /// tasks and the MLE driver stops between objective evaluations.
     /// Defaults to a fresh (never-fired) token.
     pub cancel: CancelToken,
+    /// Optional shard set: when present (and the problem is large enough
+    /// — see `ShardSet::min_nt`), tiled pipelines are partitioned 2-D
+    /// block-cyclic across its runtimes instead of running as one job on
+    /// `runtime` (`pipeline::shard`).  `ExecCtx::with_engine` attaches
+    /// one from `EXAGEOSTAT_SHARDS`; the coordinator route attaches its
+    /// own via `Coordinator::attach_shards`.
+    pub shards: Option<Arc<ShardSet>>,
 }
 
 impl ExecCtx {
@@ -90,6 +98,7 @@ impl ExecCtx {
             runtime: Arc::new(Runtime::new(ncores, policy)),
             job_prio: 0,
             cancel: CancelToken::new(),
+            shards: shard_set_from_env(),
         }
     }
 
@@ -104,6 +113,7 @@ impl ExecCtx {
             runtime,
             job_prio: 0,
             cancel: CancelToken::new(),
+            shards: None,
         }
     }
 

@@ -14,6 +14,7 @@
 //! exageostat serve --requests requests.jsonl --clients 4 --ncores 4
 //! tail -f requests.jsonl | exageostat serve --stdin --clients 4
 //! exageostat serve --socket /tmp/exa.sock --window 8
+//! exageostat serve --socket /tmp/exa.sock --shards 2 --ncores 4 --once
 //! ```
 
 use anyhow::Context;
@@ -249,13 +250,17 @@ fn cmd_sst(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
-    use exageostat::coordinator::{serve_stream, Client, Completion, Coordinator, ServeOptions};
+    use exageostat::coordinator::{
+        serve_socket, serve_stream, Client, Completion, Coordinator, Dispatch, ServeOptions,
+        ShardedCoordinator,
+    };
     use exageostat::testkit::percentile;
     use std::io::BufReader;
     use std::sync::Arc;
 
     let hw = hardware(args)?;
     let clients = args.get_usize("clients", 4)?.max(1);
+    let shards = args.get_usize("shards", 1)?.max(1);
     let opts = ServeOptions {
         window: args.get_usize("window", 2 * clients)?.max(1),
         depth_limit: match args.get("depth-limit") {
@@ -264,15 +269,27 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         },
     };
     println!(
-        "serving with {clients} client runners, window {} on {} workers ({:?}, ts {})",
+        "serving with {clients} client runners, window {} on {} workers ({:?}, ts {}){}",
         opts.window,
         hw.ncores.max(1),
         hw.policy,
-        hw.ts
+        hw.ts,
+        if shards > 1 {
+            format!(", {shards} shards")
+        } else {
+            String::new()
+        }
     );
 
-    let coord = Arc::new(Coordinator::new(hw));
-    let client = Client::new(coord.clone(), clients);
+    // --shards N > 1 splits the worker pool into N member coordinators:
+    // requests spread across them by dataset affinity, and large tiled
+    // pipelines partition 2-D block-cyclic over all N runtimes.
+    let coord: Arc<dyn Dispatch> = if shards > 1 {
+        Arc::new(ShardedCoordinator::new(hw, shards))
+    } else {
+        Arc::new(Coordinator::new(hw))
+    };
+    let client = Client::from_dispatch(coord.clone(), clients);
     let on_done = |id: u64, c: &Completion| match c {
         Completion::Done(r) => println!(
             "  [{id:>3}] {:<10} {:>8.3}s{}{}",
@@ -293,22 +310,30 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         serve_stream(&client, &mut reader, &opts, on_done)?
     } else if let Some(sock) = args.get("socket") {
         let sock = sock.to_string();
-        let _ = std::fs::remove_file(&sock); // stale socket from a previous run
-        let listener = std::os::unix::net::UnixListener::bind(&sock)
-            .with_context(|| format!("binding unix socket {sock}"))?;
-        println!("listening on unix socket {sock} (serving one connection to EOF)");
-        let (conn, _) = listener.accept().context("accepting connection")?;
-        let mut reader = BufReader::new(conn);
-        let s = serve_stream(&client, &mut reader, &opts, on_done)?;
-        let _ = std::fs::remove_file(&sock);
-        s
+        // Accept loop: each connection serves to its EOF, then the next
+        // is accepted — `--once` stops after one, `--max-conns N` after
+        // N, default runs until the process is killed.  Stale sockets
+        // are probed before binding (a live owner is an error, not a
+        // silent steal) and the path is removed on every exit path.
+        let max_conns = if args.has("once") {
+            Some(1)
+        } else {
+            match args.get("max-conns") {
+                Some(_) => Some(args.get_usize("max-conns", 1)?.max(1)),
+                None => None,
+            }
+        };
+        match max_conns {
+            Some(m) => println!("listening on unix socket {sock} (up to {m} connection(s))"),
+            None => println!("listening on unix socket {sock} (accepting until killed)"),
+        }
+        serve_socket(&client, &sock, &opts, max_conns, on_done)?
     } else {
         let path = args
             .get("requests")
             .context("serve needs --requests <file.jsonl>, --stdin, or --socket <path>")?
             .to_string();
-        let file =
-            std::fs::File::open(&path).with_context(|| format!("reading {path}"))?;
+        let file = std::fs::File::open(&path).with_context(|| format!("reading {path}"))?;
         let mut reader = BufReader::new(file);
         serve_stream(&client, &mut reader, &opts, on_done)?
     };
@@ -370,12 +395,8 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         println!("stats written to {out}");
     }
     client.shutdown();
-    coord.shutdown();
-    anyhow::ensure!(
-        summary.failed == 0,
-        "{} request(s) failed",
-        summary.failed
-    );
+    coord.shutdown_dispatch();
+    anyhow::ensure!(summary.failed == 0, "{} request(s) failed", summary.failed);
     Ok(())
 }
 
@@ -403,7 +424,8 @@ fn main() {
                 "usage: exageostat <simulate|mle|predict|fisher|mloe-mmom|structures|sst|serve> [--flags]\n\
                  common flags: --ncores N --ts N --sched eager|prio|lws|random\n\
                  serve input:  --requests file.jsonl | --stdin | --socket path.sock\n\
-                 serve flags:  --clients K --window W [--depth-limit D] [--out stats.json]\n\
+                 serve flags:  --clients K --window W --shards N [--depth-limit D]\n\
+                 \x20             [--once | --max-conns N] [--out stats.json]\n\
                  see rust/src/main.rs header for examples"
             );
             std::process::exit(2);

@@ -13,6 +13,7 @@
 //! the same dependence structure the legacy emitters in
 //! [`crate::linalg::cholesky`] produced.
 
+use super::shard::ShardGrid;
 use crate::scheduler::profile::CostModel;
 use crate::scheduler::TaskKind;
 use std::collections::HashMap;
@@ -224,8 +225,10 @@ pub struct TiledSpec {
     pub with_solve: bool,
     /// Lower per-panel [`Op::LogDetReduce`] nodes after each POTRF.
     pub with_logdet: bool,
-    /// Placement domains for `owner` assignment (block-row cyclic);
-    /// single-node execution passes 1.
+    /// Placement domains for `owner` assignment (2-D block-cyclic over
+    /// the squarest `p x q` grid with `p * q == owners` — the shared
+    /// [`ShardGrid`] implementation the DES cluster model and the
+    /// sharding pass also use); single-node execution passes 1.
     pub owners: usize,
 }
 
@@ -257,11 +260,15 @@ impl TiledSpec {
             _ => elems * std::mem::size_of::<f64>(),
         }
     }
-    fn owner(&self, i: usize) -> usize {
+    /// 2-D block-cyclic owner of tile (i, j).  Historically this was a
+    /// 1-D row cycle (`i % owners`) despite the doc contract and the
+    /// DES model both promising 2-D block-cyclic; all three now route
+    /// through one [`ShardGrid`].
+    fn owner(&self, i: usize, j: usize) -> usize {
         if self.owners <= 1 {
             0
         } else {
-            i % self.owners
+            ShardGrid::from_total(self.owners).owner_of(i, j)
         }
     }
 }
@@ -285,7 +292,7 @@ pub fn lower_tiled(spec: &TiledSpec) -> TaskIR {
             b.push(
                 Op::Generate { i, j },
                 spec.prec(i, j),
-                spec.owner(i),
+                spec.owner(i, j),
                 spec.tile_bytes(i, j),
                 &[(Key::Tile(i, j), Mode::W)],
             );
@@ -299,7 +306,7 @@ pub fn lower_tiled(spec: &TiledSpec) -> TaskIR {
         b.push(
             Op::Potrf { k },
             Precision::F64,
-            spec.owner(k),
+            spec.owner(k, k),
             spec.tile_bytes(k, k),
             &[(Key::Tile(k, k), Mode::Rw)],
         );
@@ -307,7 +314,7 @@ pub fn lower_tiled(spec: &TiledSpec) -> TaskIR {
             b.push(
                 Op::LogDetReduce { k },
                 Precision::F64,
-                spec.owner(k),
+                spec.owner(k, k),
                 spec.tile_bytes(k, k),
                 &[(Key::Tile(k, k), Mode::R), (Key::Scalar(k), Mode::W)],
             );
@@ -319,7 +326,7 @@ pub fn lower_tiled(spec: &TiledSpec) -> TaskIR {
             b.push(
                 Op::Trsm { k, i },
                 spec.prec(i, k),
-                spec.owner(i),
+                spec.owner(i, k),
                 spec.tile_bytes(k, k) + spec.tile_bytes(i, k),
                 &[(Key::Tile(k, k), Mode::R), (Key::Tile(i, k), Mode::Rw)],
             );
@@ -331,7 +338,7 @@ pub fn lower_tiled(spec: &TiledSpec) -> TaskIR {
             b.push(
                 Op::Syrk { k, i },
                 spec.prec(i, i),
-                spec.owner(i),
+                spec.owner(i, i),
                 spec.tile_bytes(i, k) + spec.tile_bytes(i, i),
                 &[(Key::Tile(i, k), Mode::R), (Key::Tile(i, i), Mode::Rw)],
             );
@@ -342,7 +349,7 @@ pub fn lower_tiled(spec: &TiledSpec) -> TaskIR {
                 b.push(
                     Op::Gemm { k, i, j },
                     spec.prec(i, j),
-                    spec.owner(i),
+                    spec.owner(i, j),
                     spec.tile_bytes(i, k) + spec.tile_bytes(j, k) + spec.tile_bytes(i, j),
                     &[
                         (Key::Tile(i, k), Mode::R),
@@ -365,7 +372,7 @@ pub fn lower_tiled(spec: &TiledSpec) -> TaskIR {
                 b.push(
                     Op::SolveGemv { i, j },
                     Precision::F64,
-                    spec.owner(i),
+                    spec.owner(i, j),
                     spec.tile_bytes(i, j),
                     &[
                         (Key::Tile(i, j), Mode::R),
@@ -377,7 +384,7 @@ pub fn lower_tiled(spec: &TiledSpec) -> TaskIR {
             b.push(
                 Op::SolveTrsv { i },
                 Precision::F64,
-                spec.owner(i),
+                spec.owner(i, i),
                 spec.tile_bytes(i, i),
                 &[(Key::Tile(i, i), Mode::R), (Key::Seg(i), Mode::Rw)],
             );
@@ -478,13 +485,28 @@ mod tests {
     }
 
     #[test]
-    fn owners_assign_block_row_cyclic() {
+    fn owners_assign_2d_block_cyclic() {
+        // owners = 4 factors as a 2x2 grid: owner(i, j) = (i%2)*2 + j%2.
+        // The old 1-D row cycle (i % owners) would put Generate{2, 0}
+        // on owner 2; the 2-D grid puts it back on owner 0.
         let mut spec = dense_spec(64, 16);
+        spec.owners = 4;
+        let ir = lower_tiled(&spec);
+        for n in &ir.nodes {
+            let (i, j) = match n.op {
+                Op::Generate { i, j } | Op::SolveGemv { i, j } | Op::Gemm { i, j, .. } => (i, j),
+                Op::Potrf { k } | Op::LogDetReduce { k } => (k, k),
+                Op::Trsm { k, i } => (i, k),
+                Op::Syrk { i, .. } | Op::SolveTrsv { i } => (i, i),
+            };
+            assert_eq!(n.owner, (i % 2) * 2 + (j % 2), "{:?}", n.op);
+        }
+        // owners = 2 degenerates to a 1x2 grid: a pure *column* cycle.
         spec.owners = 2;
         let ir = lower_tiled(&spec);
         for n in &ir.nodes {
-            if let Op::Generate { i, .. } = n.op {
-                assert_eq!(n.owner, i % 2);
+            if let Op::Generate { i, j } = n.op {
+                assert_eq!(n.owner, j % 2, "Generate{{{i},{j}}}");
             }
         }
     }

@@ -19,6 +19,12 @@
 //!   (valid because plans are topologically ordered), polling the
 //!   context's cancellation token between tasks.
 //!
+//! A context carrying a [`shard::ShardSet`] routes [`run_tiled`] through
+//! the sharding pass instead: the plan is partitioned 2-D block-cyclic
+//! across N runtimes with explicit transfer edges at shard boundaries
+//! ([`shard`] module docs), preserving every plan edge — so sharded and
+//! single-runtime execution are bit-identical on f64 paths.
+//!
 //! The log-determinant is an explicit [`Op::LogDetReduce`] node in both
 //! fused and unfused plans: each computes one diagonal tile's partial
 //! ln-sum, and the host adds the partials in panel order — one summation
@@ -27,10 +33,12 @@
 pub mod execution_plan;
 pub mod ir;
 pub mod planner;
+pub mod shard;
 
 pub use execution_plan::{ExecutionPlan, OpRunner, PlanTask};
 pub use ir::{lower_tiled, Op, Precision, TaskIR, TiledSpec};
 pub use planner::{fuse_enabled, plan, set_fuse_override, PlanKnobs};
+pub use shard::{execute_sharded, ShardGrid, ShardPlan, ShardSet, TileMailbox};
 
 use crate::api::ApiError;
 use crate::backend::{ArcEngine, Engine as _};
@@ -279,6 +287,14 @@ pub fn run_tiled(
     band: Option<usize>,
     with_logdet: bool,
 ) -> anyhow::Result<TiledOutcome> {
+    // A context carrying a shard set partitions the plan 2-D
+    // block-cyclically across the set's runtimes (tile grids below the
+    // set's `min_nt` threshold are not worth splitting and run whole on
+    // the context's own runtime).
+    let shards = match &ctx.shards {
+        Some(s) if s.nshards() > 1 && a.nt() >= s.min_nt => Some(s),
+        _ => None,
+    };
     let spec = TiledSpec {
         n: a.n(),
         ts: a.ts(),
@@ -287,14 +303,18 @@ pub fn run_tiled(
         tlr: false,
         with_solve: y.is_some(),
         with_logdet,
-        owners: 1,
+        owners: shards.map_or(1, |s| s.nshards()),
     };
     let ir = lower_tiled(&spec);
     let plan = planner::plan(&ir, &PlanKnobs::from_env());
     let runner = Arc::new(TiledRunner::new(problem, theta, &ctx.engine, dist, a, y));
-    let g = plan.instantiate(&ir, runner.clone());
-    let prof = ctx.run_graph(g);
-    if prof.tasks_skipped > 0 {
+    let skipped = if let Some(set) = shards {
+        shard::execute_sharded(&plan, &ir, runner.clone(), set, ctx.job_prio, &ctx.cancel)
+    } else {
+        let g = plan.instantiate(&ir, runner.clone());
+        ctx.run_graph(g).tasks_skipped
+    };
+    if skipped > 0 {
         // Cancelled mid-flight: the factor is incomplete, so neither the
         // fail flag nor the log-det slots are meaningful.
         return Err(ApiError::Cancelled.into());
@@ -460,6 +480,37 @@ mod tests {
         assert!((results[0].1 - oracle.sse).abs() < 1e-8);
         // f64 task bodies are identical closures over identical inputs:
         // fused and unfused runs must agree to the bit.
+        assert_eq!(results[0].0.to_bits(), results[1].0.to_bits(), "logdet");
+        assert_eq!(results[0].1.to_bits(), results[1].1.to_bits(), "sse");
+    }
+
+    /// Sharded execution preserves every plan edge and the host-side
+    /// log-det summation order, so it must reproduce the single-runtime
+    /// result to the bit (the cross-variant half lives in
+    /// `tests/sharded.rs`).
+    #[test]
+    fn sharded_run_tiled_matches_single_runtime_bit_identically() {
+        let p = small_problem(54, 44);
+        let theta = [1.1, 0.11, 0.5];
+        let mut results = Vec::new();
+        for nshards in [1usize, 3] {
+            let mut ctx = ExecCtx::new(2, 11, Policy::Lws);
+            let owned = if nshards > 1 {
+                let set = Arc::new(shard::ShardSet::new(nshards, 1, Policy::Lws));
+                ctx.shards = Some(set.clone());
+                Some(set)
+            } else {
+                None
+            };
+            let a = TileMatrix::zeros(p.dim(), ctx.ts);
+            let y = TileVector::from_slice(&p.z, ctx.ts);
+            let out = run_tiled(&p, &theta, &ctx, None, &a, Some(&y), None, true).unwrap();
+            assert_eq!(out.not_spd, None);
+            results.push((out.logdet, y.dot_self()));
+            if let Some(set) = owned {
+                set.shutdown();
+            }
+        }
         assert_eq!(results[0].0.to_bits(), results[1].0.to_bits(), "logdet");
         assert_eq!(results[0].1.to_bits(), results[1].1.to_bits(), "sse");
     }

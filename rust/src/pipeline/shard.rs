@@ -1,0 +1,645 @@
+//! Sharding pass: partition an [`ExecutionPlan`] across N in-process
+//! runtimes ("shards") along the IR's 2-D block-cyclic tile ownership,
+//! inserting explicit transfer edges wherever a consumer task's shard
+//! differs from its producer's — the in-process model of ExaGeoStat's
+//! distributed runs (arxiv 1708.02835 Fig. 7), where the same
+//! block-cyclic distribution places tiles on cluster nodes and boundary
+//! panels move over the interconnect.
+//!
+//! Three pieces:
+//!
+//! * [`ShardGrid`] — the one 2-D block-cyclic owner function
+//!   (`owner(i, j) = (i mod p)·q + (j mod q)`), shared by
+//!   `TiledSpec::owner`, the DES cluster model
+//!   ([`crate::scheduler::des::block_cyclic_owner`]) and this pass, so
+//!   the simulated distribution and the executed one cannot drift.
+//! * [`ShardPlan::partition`] — assigns every plan task to the shard
+//!   owning its output tile, levels the plan into *stages* such that
+//!   every cross-shard edge strictly increases the stage, and derives
+//!   the transfer-edge set (one [`TileMailbox`] slot per producer with a
+//!   consumer in another shard).
+//! * [`execute_sharded`] — drives the per-shard stage jobs concurrently
+//!   from a single-threaded event loop, gating each stage on its
+//!   cross-shard inputs through the lock-free mailbox.
+//!
+//! **Deadlock freedom.** Stages are defined by
+//! `stage(t) = max over preds p of (stage(p) + [shard(p) != shard(t)])`,
+//! so a stage's cross-shard inputs always come from strictly earlier
+//! stages.  By induction on the stage number, the lowest unfinished
+//! stage of any shard always has every awaited slot published, hence is
+//! submittable — no worker ever blocks on a mailbox (workers never poll
+//! it at all; only the event loop does, between jobs).
+//!
+//! **Determinism.** Sharding reorders nothing that matters: every plan
+//! edge is preserved (same-stage intra-shard edges become explicit graph
+//! edges, earlier-stage intra-shard edges ride the per-shard sequential
+//! stage order, cross-shard edges ride the mailbox gate), so each tile
+//! still sees its writes in plan order and the per-panel log-det
+//! partials are still summed host-side in panel order.  f64 pipelines
+//! are therefore bit-identical across shard counts — the property
+//! `rust/tests/sharded.rs` pins.
+
+use super::execution_plan::{ExecutionPlan, OpRunner};
+use super::ir::{Op, TaskIR};
+use crate::scheduler::pool::Policy;
+use crate::scheduler::runtime::{CancelToken, JobHandle, Runtime};
+use crate::scheduler::TaskGraph;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::{Arc, OnceLock};
+
+/// The 2-D block-cyclic process grid (ScaLAPACK/ExaGeoStat style): tile
+/// (i, j) belongs to domain `(i mod p) * q + (j mod q)`.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub struct ShardGrid {
+    pub p: usize,
+    pub q: usize,
+}
+
+impl ShardGrid {
+    pub fn new(p: usize, q: usize) -> ShardGrid {
+        ShardGrid {
+            p: p.max(1),
+            q: q.max(1),
+        }
+    }
+
+    /// Squarest `p x q` factorization of `n` with `p <= q` (the usual
+    /// choice for block-cyclic grids: it balances both the row and the
+    /// column cycle).
+    pub fn from_total(n: usize) -> ShardGrid {
+        let n = n.max(1);
+        let mut p = 1;
+        let mut d = 1;
+        while d * d <= n {
+            if n % d == 0 {
+                p = d;
+            }
+            d += 1;
+        }
+        ShardGrid { p, q: n / p }
+    }
+
+    /// Number of placement domains (`p * q`).
+    pub fn domains(&self) -> usize {
+        self.p * self.q
+    }
+
+    /// Owner domain of tile (i, j).
+    pub fn owner_of(&self, i: usize, j: usize) -> usize {
+        (i % self.p) * self.q + (j % self.q)
+    }
+}
+
+/// Tile coordinate an op's output is associated with (the mailbox key's
+/// spatial half).  Solve ops are keyed by the factor tile they read —
+/// their true output is vector segment `i`, which has no (i, j) home.
+pub fn output_coord(op: Op) -> (usize, usize) {
+    match op {
+        Op::Generate { i, j } | Op::SolveGemv { i, j } => (i, j),
+        Op::Potrf { k } | Op::LogDetReduce { k } => (k, k),
+        Op::Trsm { k, i } => (i, k),
+        Op::Syrk { i, .. } => (i, i),
+        Op::Gemm { i, j, .. } => (i, j),
+        Op::SolveTrsv { i } => (i, i),
+    }
+}
+
+/// One cross-shard dependence edge of the partitioned plan.
+#[derive(Clone, Debug)]
+pub struct TransferEdge {
+    /// Mailbox slot the producer publishes (shared by every consumer of
+    /// the same producer).
+    pub slot: usize,
+    /// Producer / consumer plan-task indices.
+    pub from_task: usize,
+    pub to_task: usize,
+    /// Their shard assignments (`from_shard != to_shard` by
+    /// construction).
+    pub from_shard: usize,
+    pub to_shard: usize,
+    /// Tile coordinate of the producer's output.
+    pub coord: (usize, usize),
+}
+
+/// A plan partitioned across shards: per-task shard and stage labels,
+/// the per-shard stage rosters, and the transfer-edge set.
+pub struct ShardPlan {
+    pub nshards: usize,
+    /// Shard of each plan task (the owner of its final op's output).
+    pub shard: Vec<usize>,
+    /// Stage level of each plan task (cross-shard edges strictly
+    /// increase it; intra-shard edges never decrease it).
+    pub stage: Vec<usize>,
+    pub nstages: usize,
+    /// `stages[s][g]`: plan-task indices of shard `s`, stage `g`, in
+    /// ascending plan order (a valid intra-job order: plan preds only
+    /// point backwards).
+    pub stages: Vec<Vec<Vec<usize>>>,
+    /// Every cross-shard plan edge, in plan order of the consumer.
+    pub transfers: Vec<TransferEdge>,
+    /// `publishes[t]`: mailbox slots task `t` must publish on completion
+    /// (empty for tasks without cross-shard consumers).
+    pub publishes: Vec<Vec<usize>>,
+    /// `awaits[s][g]`: slots that must be published before shard `s`
+    /// may submit stage `g`.
+    pub awaits: Vec<Vec<Vec<usize>>>,
+    /// Total mailbox slots (== producers with >= 1 cross-shard consumer).
+    pub nslots: usize,
+}
+
+impl ShardPlan {
+    /// Partition `plan` over `nshards` shards.  Task placement is the IR
+    /// owner of the task's *last* op (its output op) reduced mod
+    /// `nshards`; fusion may group ops whose owner hints differ, in
+    /// which case the output op's owner wins and the transfer edges —
+    /// which are derived from the *task*-level placement, never from the
+    /// per-op hints — stay exact.
+    pub fn partition(ir: &TaskIR, plan: &ExecutionPlan, nshards: usize) -> ShardPlan {
+        let nshards = nshards.max(1);
+        let ntasks = plan.tasks.len();
+        let mut shard = Vec::with_capacity(ntasks);
+        for t in &plan.tasks {
+            let last = *t.ops.last().expect("plan task has at least one op");
+            shard.push(ir.nodes[last].owner % nshards);
+        }
+
+        // Stage leveling: every cross-shard edge steps the stage up, so
+        // a stage's awaited slots always belong to earlier stages.
+        let mut stage = vec![0usize; ntasks];
+        for (t, task) in plan.tasks.iter().enumerate() {
+            let mut lvl = 0;
+            for &p in &task.preds {
+                lvl = lvl.max(stage[p] + usize::from(shard[p] != shard[t]));
+            }
+            stage[t] = lvl;
+        }
+        let nstages = stage.iter().map(|&g| g + 1).max().unwrap_or(0);
+
+        let mut stages = vec![vec![Vec::new(); nstages]; nshards];
+        for t in 0..ntasks {
+            stages[shard[t]][stage[t]].push(t);
+        }
+
+        let mut slot_of: HashMap<usize, usize> = HashMap::new();
+        let mut transfers = Vec::new();
+        let mut publishes = vec![Vec::new(); ntasks];
+        let mut awaits = vec![vec![Vec::new(); nstages]; nshards];
+        for (t, task) in plan.tasks.iter().enumerate() {
+            for &p in &task.preds {
+                if shard[p] == shard[t] {
+                    continue;
+                }
+                let next = slot_of.len();
+                let slot = *slot_of.entry(p).or_insert(next);
+                if publishes[p].is_empty() {
+                    publishes[p].push(slot);
+                }
+                let out = *plan.tasks[p].ops.last().expect("plan task has ops");
+                transfers.push(TransferEdge {
+                    slot,
+                    from_task: p,
+                    to_task: t,
+                    from_shard: shard[p],
+                    to_shard: shard[t],
+                    coord: output_coord(ir.nodes[out].op),
+                });
+                let gate = &mut awaits[shard[t]][stage[t]];
+                if !gate.contains(&slot) {
+                    gate.push(slot);
+                }
+            }
+        }
+        let nslots = slot_of.len();
+        ShardPlan {
+            nshards,
+            shard,
+            stage,
+            nstages,
+            stages,
+            transfers,
+            publishes,
+            awaits,
+            nslots,
+        }
+    }
+}
+
+/// Lock-free mailbox for cross-shard boundary tiles: one slot per
+/// publishing plan task, keyed by (tile coordinate, plan step).  In this
+/// in-process setting the tile payload itself lives in the shared tile
+/// storage, so a "transfer" is a release-store publication that the
+/// event loop acquires before submitting the consuming stage — exactly
+/// the fence a cross-address-space implementation would pair with the
+/// actual copy.  Workers never touch the mailbox from inside a task
+/// wait; producers store on completion, the event loop polls between
+/// jobs.
+pub struct TileMailbox {
+    slots: Vec<AtomicU32>,
+    keys: Vec<(usize, usize, usize)>,
+}
+
+impl TileMailbox {
+    pub fn new(sp: &ShardPlan) -> TileMailbox {
+        let mut keys = vec![(0, 0, 0); sp.nslots];
+        for e in &sp.transfers {
+            keys[e.slot] = (e.coord.0, e.coord.1, e.from_task);
+        }
+        TileMailbox {
+            slots: (0..sp.nslots).map(|_| AtomicU32::new(0)).collect(),
+            keys,
+        }
+    }
+
+    /// Producer side: mark the slot's tile as complete (release: the
+    /// tile writes of the publishing task happen-before any consumer
+    /// that observes the flag).
+    pub fn publish(&self, slot: usize) {
+        self.slots[slot].store(1, Ordering::Release);
+    }
+
+    pub fn is_published(&self, slot: usize) -> bool {
+        self.slots[slot].load(Ordering::Acquire) == 1
+    }
+
+    pub fn all_published(&self, slots: &[usize]) -> bool {
+        slots.iter().all(|&s| self.is_published(s))
+    }
+
+    /// `(tile i, tile j, producing plan step)` of a slot.
+    pub fn key(&self, slot: usize) -> (usize, usize, usize) {
+        self.keys[slot]
+    }
+}
+
+/// A set of shard runtimes plus the grid that places tiles on them.
+/// Attached to an `ExecCtx` (or a coordinator), it switches `run_tiled`
+/// to sharded execution for plans with at least `min_nt` tile rows.
+pub struct ShardSet {
+    runtimes: Vec<Arc<Runtime>>,
+    pub grid: ShardGrid,
+    /// Minimum tile-grid side before a plan is worth partitioning:
+    /// below it the whole plan runs on shard 0's runtime (a 1-tile
+    /// matrix cannot be distributed usefully).
+    pub min_nt: usize,
+}
+
+impl ShardSet {
+    /// Spawn `nshards` fresh runtimes of `ncores_per_shard` workers each.
+    pub fn new(nshards: usize, ncores_per_shard: usize, policy: Policy) -> ShardSet {
+        let n = nshards.max(1);
+        ShardSet {
+            runtimes: (0..n)
+                .map(|_| Arc::new(Runtime::new(ncores_per_shard.max(1), policy)))
+                .collect(),
+            grid: ShardGrid::from_total(n),
+            min_nt: 2,
+        }
+    }
+
+    /// Wrap existing runtimes (the sharded coordinator hands its member
+    /// coordinators' runtimes here; it stays responsible for shutting
+    /// them down).
+    pub fn from_runtimes(runtimes: Vec<Arc<Runtime>>, min_nt: usize) -> ShardSet {
+        assert!(!runtimes.is_empty(), "shard set needs at least one runtime");
+        let grid = ShardGrid::from_total(runtimes.len());
+        ShardSet {
+            runtimes,
+            grid,
+            min_nt,
+        }
+    }
+
+    pub fn nshards(&self) -> usize {
+        self.runtimes.len()
+    }
+
+    pub fn runtime(&self, shard: usize) -> &Arc<Runtime> {
+        &self.runtimes[shard]
+    }
+
+    /// Shut down every shard runtime.  Only for sets that own their
+    /// runtimes (`new`), never for wrapped ones (`from_runtimes`).
+    pub fn shutdown(&self) {
+        for r in &self.runtimes {
+            r.shutdown();
+        }
+    }
+}
+
+static ENV_SHARDS: OnceLock<Option<Arc<ShardSet>>> = OnceLock::new();
+
+/// Process-wide shard set from `EXAGEOSTAT_SHARDS=N` (N >= 2), attached
+/// to every context built through `ExecCtx::new` / `with_engine` so the
+/// whole conformance suite can run sharded without code changes (the CI
+/// build-test job does exactly that).  `None` when the variable is
+/// unset, `< 2`, or unparseable (one-time stderr warning on garbage —
+/// the same surfacing as `EXAGEOSTAT_BACKEND`).  Contexts built over an
+/// explicit runtime (`with_runtime`, the coordinator route) are *not*
+/// affected; the coordinator layer decides its own sharding.
+pub fn shard_set_from_env() -> Option<Arc<ShardSet>> {
+    ENV_SHARDS
+        .get_or_init(|| {
+            let raw = std::env::var("EXAGEOSTAT_SHARDS").ok()?;
+            match raw.trim().parse::<usize>() {
+                Ok(n) if n >= 2 => Some(Arc::new(ShardSet::new(n, 1, Policy::Lws))),
+                Ok(_) => None,
+                Err(_) => {
+                    eprintln!(
+                        "warning: EXAGEOSTAT_SHARDS={raw:?} is not an integer; running unsharded"
+                    );
+                    None
+                }
+            }
+        })
+        .clone()
+}
+
+struct Cursor {
+    next_stage: usize,
+    inflight: Option<JobHandle>,
+}
+
+/// Drive a partitioned plan to completion across the set's runtimes.
+///
+/// Single-threaded event loop on the calling thread: each shard runs its
+/// stages strictly in order, one job per stage, and a stage is submitted
+/// only once every mailbox slot it awaits has been published.  Workers
+/// therefore never block on cross-shard data — the gate lives entirely
+/// in this loop — which is what makes the scheme deadlock-free (see the
+/// module docs for the induction).
+///
+/// Returns the number of tasks skipped: `> 0` exactly when `cancel`
+/// fired mid-run (the same contract as `Profile::tasks_skipped` on the
+/// single-runtime path).
+pub fn execute_sharded<R: OpRunner + Send + Sync + 'static>(
+    plan: &ExecutionPlan,
+    ir: &TaskIR,
+    runner: Arc<R>,
+    set: &ShardSet,
+    job_prio: u8,
+    cancel: &CancelToken,
+) -> usize {
+    let sp = ShardPlan::partition(ir, plan, set.nshards());
+    let mailbox = Arc::new(TileMailbox::new(&sp));
+    let mut cursors: Vec<Cursor> = (0..sp.nshards)
+        .map(|_| Cursor {
+            next_stage: 0,
+            inflight: None,
+        })
+        .collect();
+    let mut skipped = 0usize;
+    let mut idle_rounds = 0u32;
+    loop {
+        let mut progressed = false;
+        let mut all_done = true;
+        for (s, cur) in cursors.iter_mut().enumerate() {
+            if let Some(h) = cur.inflight.take() {
+                if h.is_done() {
+                    // Reap: re-raises a task panic here, like run_graph.
+                    skipped += h.wait().tasks_skipped;
+                    progressed = true;
+                } else {
+                    cur.inflight = Some(h);
+                    all_done = false;
+                    continue;
+                }
+            }
+            while cur.next_stage < sp.nstages && sp.stages[s][cur.next_stage].is_empty() {
+                cur.next_stage += 1;
+            }
+            if cur.next_stage >= sp.nstages {
+                continue;
+            }
+            all_done = false;
+            if cancel.is_cancelled() {
+                // The runtimes would skip these tasks anyway; account
+                // for them here and stop submitting.  Producers that
+                // were skipped never publish, but no shard waits on
+                // them: every shard takes this branch on its next pass.
+                for g in cur.next_stage..sp.nstages {
+                    skipped += sp.stages[s][g].len();
+                }
+                cur.next_stage = sp.nstages;
+                progressed = true;
+            } else if mailbox.all_published(&sp.awaits[s][cur.next_stage]) {
+                let g = stage_graph(plan, ir, &sp, &mailbox, s, cur.next_stage, &runner);
+                cur.inflight = Some(set.runtime(s).submit_job(g, job_prio, cancel.clone()));
+                cur.next_stage += 1;
+                progressed = true;
+            }
+        }
+        if all_done {
+            break;
+        }
+        if progressed {
+            idle_rounds = 0;
+        } else {
+            // Waiting on worker progress: yield first, then back off to
+            // a micro-sleep so the loop doesn't burn a core while a
+            // long stage runs.
+            idle_rounds += 1;
+            if idle_rounds < 64 {
+                std::thread::yield_now();
+            } else {
+                std::thread::sleep(std::time::Duration::from_micros(50));
+            }
+        }
+    }
+    skipped
+}
+
+/// Build the task graph for one (shard, stage) job.  Same-stage
+/// intra-shard plan edges become explicit graph edges; earlier-stage
+/// intra-shard predecessors are sequenced by the per-shard stage order,
+/// and cross-shard predecessors by the mailbox gate that admitted this
+/// stage.  Publishing tasks flag their slots at the end of their
+/// closure, after their ops' tile writes.
+fn stage_graph<R: OpRunner + Send + Sync + 'static>(
+    plan: &ExecutionPlan,
+    ir: &TaskIR,
+    sp: &ShardPlan,
+    mailbox: &Arc<TileMailbox>,
+    s: usize,
+    g: usize,
+    runner: &Arc<R>,
+) -> TaskGraph {
+    let mut graph = TaskGraph::new();
+    let mut local: HashMap<usize, usize> = HashMap::new();
+    for &t in &sp.stages[s][g] {
+        let task = &plan.tasks[t];
+        let preds: Vec<usize> = task
+            .preds
+            .iter()
+            .filter_map(|p| local.get(p).copied())
+            .collect();
+        let ops: Vec<Op> = task.ops.iter().map(|&o| ir.nodes[o].op).collect();
+        let pubs = sp.publishes[t].clone();
+        let r = runner.clone();
+        let mb = mailbox.clone();
+        let id = graph.submit_dep(task.kind, &preds, task.bytes, move || {
+            for op in &ops {
+                r.run_op(*op);
+            }
+            for &slot in &pubs {
+                mb.publish(slot);
+            }
+        });
+        local.insert(t, id);
+    }
+    graph
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::{lower_tiled, planner, PlanKnobs, TiledSpec};
+    use std::sync::atomic::AtomicUsize;
+
+    fn spec(n: usize, ts: usize, owners: usize) -> TiledSpec {
+        TiledSpec {
+            n,
+            ts,
+            band: None,
+            mp_band: None,
+            tlr: false,
+            with_solve: true,
+            with_logdet: true,
+            owners,
+        }
+    }
+
+    #[test]
+    fn grid_factors_squarest_and_matches_formula() {
+        assert_eq!(ShardGrid::from_total(1), ShardGrid::new(1, 1));
+        assert_eq!(ShardGrid::from_total(2), ShardGrid::new(1, 2));
+        assert_eq!(ShardGrid::from_total(4), ShardGrid::new(2, 2));
+        assert_eq!(ShardGrid::from_total(6), ShardGrid::new(2, 3));
+        assert_eq!(ShardGrid::from_total(7), ShardGrid::new(1, 7));
+        assert_eq!(ShardGrid::from_total(12), ShardGrid::new(3, 4));
+        let g = ShardGrid::new(2, 3);
+        for i in 0..7 {
+            for j in 0..7 {
+                assert_eq!(g.owner_of(i, j), (i % 2) * 3 + (j % 3));
+                assert!(g.owner_of(i, j) < g.domains());
+            }
+        }
+    }
+
+    /// Over tile grids that do *not* divide n: every cross-shard plan
+    /// edge gets a transfer (slot + strictly increasing stage), no
+    /// intra-shard edge does, and the stage rosters partition the plan.
+    #[test]
+    fn transfer_edges_cover_exactly_the_cross_shard_plan_edges() {
+        for (n, ts, owners) in [(54, 16, 2), (75, 11, 4), (90, 24, 3)] {
+            let ir = lower_tiled(&spec(n, ts, owners));
+            let plan = planner::plan(&ir, &PlanKnobs { fuse: true });
+            let sp = ShardPlan::partition(&ir, &plan, owners);
+            let mut expected = 0;
+            for (t, task) in plan.tasks.iter().enumerate() {
+                for &p in &task.preds {
+                    if sp.shard[p] != sp.shard[t] {
+                        expected += 1;
+                        assert!(
+                            sp.stage[t] > sp.stage[p],
+                            "cross-shard edge {p}->{t} must climb stages"
+                        );
+                        assert!(
+                            sp.transfers
+                                .iter()
+                                .any(|e| e.from_task == p && e.to_task == t),
+                            "missing transfer for cross-shard edge {p}->{t}"
+                        );
+                        assert_eq!(sp.publishes[p].len(), 1, "producer {p} publishes one slot");
+                        assert!(
+                            sp.awaits[sp.shard[t]][sp.stage[t]].contains(&sp.publishes[p][0]),
+                            "stage of {t} must await producer {p}'s slot"
+                        );
+                    } else {
+                        assert!(sp.stage[t] >= sp.stage[p]);
+                        let transferred = sp
+                            .transfers
+                            .iter()
+                            .any(|e| e.from_task == p && e.to_task == t);
+                        assert!(!transferred, "intra-shard edge {p}->{t} must not transfer");
+                    }
+                }
+            }
+            assert_eq!(sp.transfers.len(), expected);
+            assert!(sp.nslots > 0, "a dense multi-shard plan must transfer");
+            let mut seen = vec![0usize; plan.tasks.len()];
+            for (s, per_stage) in sp.stages.iter().enumerate() {
+                for roster in per_stage {
+                    for &t in roster {
+                        seen[t] += 1;
+                        assert_eq!(sp.shard[t], s);
+                    }
+                }
+            }
+            assert!(seen.iter().all(|&c| c == 1), "stage rosters partition tasks");
+        }
+    }
+
+    #[test]
+    fn single_shard_has_no_transfers_and_one_stage() {
+        let ir = lower_tiled(&spec(54, 16, 1));
+        let plan = planner::plan(&ir, &PlanKnobs { fuse: true });
+        let sp = ShardPlan::partition(&ir, &plan, 1);
+        assert_eq!(sp.nstages, 1);
+        assert!(sp.transfers.is_empty());
+        assert_eq!(sp.nslots, 0);
+    }
+
+    #[test]
+    fn mailbox_keys_and_publication() {
+        let ir = lower_tiled(&spec(48, 16, 2));
+        let plan = planner::plan(&ir, &PlanKnobs { fuse: true });
+        let sp = ShardPlan::partition(&ir, &plan, 2);
+        let mb = TileMailbox::new(&sp);
+        let e = &sp.transfers[0];
+        assert!(!mb.is_published(e.slot));
+        assert!(!mb.all_published(&[e.slot]));
+        mb.publish(e.slot);
+        assert!(mb.is_published(e.slot));
+        assert!(mb.all_published(&[e.slot]));
+        let (i, j, step) = mb.key(e.slot);
+        assert_eq!((i, j), e.coord);
+        assert_eq!(step, e.from_task);
+    }
+
+    struct CountRunner(AtomicUsize);
+    impl OpRunner for CountRunner {
+        fn run_op(&self, _: Op) {
+            self.0.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    #[test]
+    fn sharded_execution_runs_every_op_exactly_once() {
+        for fuse in [false, true] {
+            let ir = lower_tiled(&spec(54, 11, 3));
+            let plan = planner::plan(&ir, &PlanKnobs { fuse });
+            let set = ShardSet::new(3, 1, Policy::Lws);
+            let runner = Arc::new(CountRunner(AtomicUsize::new(0)));
+            let cancel = CancelToken::new();
+            let skipped = execute_sharded(&plan, &ir, runner.clone(), &set, 0, &cancel);
+            assert_eq!(skipped, 0);
+            assert_eq!(runner.0.load(Ordering::Relaxed), ir.len());
+            set.shutdown();
+        }
+    }
+
+    #[test]
+    fn precancelled_sharded_execution_skips_everything() {
+        let ir = lower_tiled(&spec(48, 16, 2));
+        let plan = planner::plan(&ir, &PlanKnobs { fuse: true });
+        let set = ShardSet::new(2, 1, Policy::Lws);
+        let runner = Arc::new(CountRunner(AtomicUsize::new(0)));
+        let cancel = CancelToken::new();
+        cancel.cancel();
+        let skipped = execute_sharded(&plan, &ir, runner.clone(), &set, 0, &cancel);
+        assert_eq!(skipped, plan.len());
+        assert_eq!(runner.0.load(Ordering::Relaxed), 0);
+        set.shutdown();
+    }
+}

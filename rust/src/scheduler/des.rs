@@ -11,7 +11,9 @@
 //! `dmda`-class schedulers approximate with their cost models.
 
 use super::profile::CostModel;
-use super::{topo_order, TaskGraph};
+use super::{topo_order, Handle, TaskGraph};
+use crate::pipeline::shard::ShardGrid;
+use std::sync::Arc;
 
 /// A simulated execution resource (one CPU core, one GPU stream, ...).
 #[derive(Copy, Clone, Debug)]
@@ -164,6 +166,25 @@ pub fn gpu_machine(ncpu: usize, ngpu: usize, gpu_speed: f64) -> Vec<Resource> {
     r
 }
 
+/// The 2-D block-cyclic placement constraint of the distributed study:
+/// handle `h` (whose tile coordinate is `coords[h.0]`) is owned by
+/// domain `grid.owner_of(i, j)`.
+///
+/// This is the *same* [`ShardGrid`] the sharding pass
+/// (`pipeline::shard`) and `TiledSpec::owner` use, so the DES model,
+/// the IR lowering, and the live sharded executor cannot drift apart.
+/// Handles outside `coords` (scalars, segments) are unconstrained
+/// tiles at (0, 0).
+pub fn block_cyclic_owner(
+    grid: ShardGrid,
+    coords: Arc<Vec<(usize, usize)>>,
+) -> impl Fn(Handle) -> usize {
+    move |h: Handle| {
+        let (i, j) = coords.get(h.0).copied().unwrap_or((0, 0));
+        grid.owner_of(i, j)
+    }
+}
+
 /// A `p x q` node grid with `ncores` per node — mirrors the Shaheen II
 /// runs of Example 4 (each node is one memory domain).
 pub fn cluster_machine(p: usize, q: usize, ncores: usize) -> Vec<Resource> {
@@ -256,7 +277,9 @@ mod tests {
         g.submit(TaskKind::GEMM, &[(h0, Access::RW)], 1024, || {});
         g.submit(TaskKind::GEMM, &[(h1, Access::RW)], 1024, || {});
         let machine = cluster_machine(1, 2, 1); // 2 nodes, 1 core each
-        let owner = |h: crate::scheduler::Handle| h.0; // handle i owned by node i
+        // handle 0 is tile (0,0) -> node 0, handle 1 is tile (1,0) -> node 1
+        // on a 2x1 grid (the shared block-cyclic implementation).
+        let owner = block_cyclic_owner(ShardGrid::new(2, 1), Arc::new(vec![(0, 0), (1, 0)]));
         let r = simulate(
             &g,
             &unit_cost(),
@@ -270,6 +293,19 @@ mod tests {
         // both tasks run in parallel on their owner nodes
         assert!((r.makespan - 1.0).abs() < 1e-9);
         assert!(r.busy[0] > 0.9 && r.busy[1] > 0.9);
+    }
+
+    #[test]
+    fn block_cyclic_owner_matches_grid_formula() {
+        let grid = ShardGrid::new(2, 3);
+        let coords: Vec<(usize, usize)> =
+            (0..5).flat_map(|i| (0..5).map(move |j| (i, j))).collect();
+        let f = block_cyclic_owner(grid, Arc::new(coords.clone()));
+        for (h, &(i, j)) in coords.iter().enumerate() {
+            assert_eq!(f(Handle(h)), (i % 2) * 3 + (j % 3));
+        }
+        // Out-of-range handles (scalars/segments) default to tile (0,0).
+        assert_eq!(f(Handle(coords.len() + 7)), 0);
     }
 
     #[test]

@@ -1,0 +1,225 @@
+//! Sharded-vs-single-runtime conformance: partitioning a tiled pipeline
+//! 2-D block-cyclic across N runtimes (`pipeline::shard`) is a pure
+//! scheduling transform — every plan edge is preserved (same-stage edges
+//! stay graph edges, cross-shard edges become mailbox waits) and the
+//! log-det reduction keeps its host-side order, so all-f64 variants
+//! (Exact, DST) must reproduce the unsharded result **to the bit** at
+//! every shard count.  MP runs the identical op stream through f32
+//! kernels and TLR through ACA compression, so they assert through a
+//! 1e-13 relative bound instead (same honesty hedge as the fusion
+//! conformance suite).
+//!
+//! Problem sizes deliberately include tile sizes that do not divide `n`
+//! and shard counts that do not divide the tile grid.
+
+use exageostat::covariance::{DistanceMetric, Location};
+use exageostat::likelihood::{self, EvalSession, ExecCtx, Problem, Variant};
+use exageostat::pipeline::shard::ShardSet;
+use exageostat::rng::Pcg64;
+use exageostat::scheduler::pool::Policy;
+use exageostat::testkit::{forall, gen};
+use std::sync::Arc;
+
+#[derive(Debug)]
+struct Case {
+    n: usize,
+    ts: usize,
+    locs: Vec<Location>,
+    z: Vec<f64>,
+    theta: [f64; 3],
+}
+
+fn gen_case(rng: &mut Pcg64) -> Case {
+    // 40..=90 over small non-dividing tile sizes: 3..=13 tiles per side,
+    // so 2 and 4 shards genuinely interleave (and never divide evenly).
+    let n = 40 + rng.below(51);
+    let ts = [7usize, 11, 16][rng.below(3)];
+    Case {
+        n,
+        ts,
+        locs: gen::locations(rng, n),
+        z: gen::normals(rng, n),
+        theta: gen::ugsm_theta(rng),
+    }
+}
+
+fn problem(case: &Case) -> Problem {
+    Problem {
+        kernel: exageostat::covariance::kernel_by_name("ugsm-s").unwrap().into(),
+        locs: Arc::new(case.locs.clone()),
+        z: Arc::new(case.z.clone()),
+        metric: DistanceMetric::Euclidean,
+    }
+}
+
+/// One full session evaluation under `nshards` (1 = plain single-runtime
+/// execution, explicitly overriding any `EXAGEOSTAT_SHARDS` ambient set
+/// so the baseline really is unsharded).
+fn eval_with_shards(case: &Case, variant: Variant, nshards: usize) -> likelihood::LogLik {
+    let p = problem(case);
+    let mut ctx = ExecCtx::new(2, case.ts, Policy::Lws);
+    let owned = if nshards > 1 {
+        let set = Arc::new(ShardSet::new(nshards, 1, Policy::Lws));
+        ctx.shards = Some(set.clone());
+        Some(set)
+    } else {
+        ctx.shards = None;
+        None
+    };
+    let mut session = EvalSession::new(&p, variant, &ctx).unwrap();
+    let r = session.eval(&case.theta).unwrap();
+    drop(session);
+    if let Some(set) = owned {
+        set.shutdown();
+    }
+    r
+}
+
+#[test]
+fn exact_and_dst_are_bit_identical_across_shard_counts() {
+    forall(0x5AAD_0001, 6, gen_case, |case| {
+        let band = case.n.div_ceil(case.ts).saturating_sub(1).max(1);
+        for variant in [Variant::Exact, Variant::Dst { band }] {
+            let base = eval_with_shards(case, variant, 1);
+            for nshards in [2usize, 4] {
+                let got = eval_with_shards(case, variant, nshards);
+                for (name, g, b) in [
+                    ("logdet", got.logdet, base.logdet),
+                    ("sse", got.sse, base.sse),
+                    ("loglik", got.loglik, base.loglik),
+                ] {
+                    assert_eq!(
+                        g.to_bits(),
+                        b.to_bits(),
+                        "{variant:?} n={} ts={} shards={nshards}: {name} {g} != unsharded {b}",
+                        case.n,
+                        case.ts
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn mp_and_tlr_conform_across_shard_counts() {
+    forall(0x5AAD_0002, 5, gen_case, |case| {
+        let variants = [
+            Variant::Mp { band: 1 },
+            Variant::Tlr {
+                tol: 1e-9,
+                max_rank: usize::MAX,
+            },
+        ];
+        for variant in variants {
+            let base = eval_with_shards(case, variant, 1);
+            for nshards in [2usize, 4] {
+                let got = eval_with_shards(case, variant, nshards);
+                for (name, g, b) in [
+                    ("logdet", got.logdet, base.logdet),
+                    ("sse", got.sse, base.sse),
+                    ("loglik", got.loglik, base.loglik),
+                ] {
+                    let tol = 1e-13 * (1.0 + b.abs());
+                    assert!(
+                        (g - b).abs() <= tol,
+                        "{variant:?} n={} ts={} shards={nshards}: {name} {g} vs {b}",
+                        case.n,
+                        case.ts
+                    );
+                }
+            }
+        }
+    });
+}
+
+/// `EXAGEOSTAT_SHARDS` wiring: whatever the ambient environment says is
+/// exactly what `ExecCtx::new` contexts carry (the CI build-test job
+/// runs this suite once with `EXAGEOSTAT_SHARDS=2`).
+#[test]
+fn env_shard_set_matches_environment() {
+    use exageostat::pipeline::shard::shard_set_from_env;
+    let want = std::env::var("EXAGEOSTAT_SHARDS")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .filter(|&n| n >= 2);
+    let got = shard_set_from_env();
+    match (want, &got) {
+        (Some(n), Some(set)) => assert_eq!(set.nshards(), n),
+        (None, None) => {}
+        (w, g) => panic!(
+            "EXAGEOSTAT_SHARDS={w:?} but shard_set_from_env -> {:?}",
+            g.as_ref().map(|s| s.nshards())
+        ),
+    }
+    let ctx = ExecCtx::new(1, 64, Policy::Lws);
+    assert_eq!(
+        ctx.shards.as_ref().map(|s| s.nshards()),
+        got.map(|s| s.nshards())
+    );
+}
+
+/// End-to-end through the serving layer: a 2-member
+/// [`ShardedCoordinator`] (each member on its own 1-worker runtime, big
+/// pipelines sharded across both) reproduces a plain [`Coordinator`]'s
+/// MLE bit-for-bit, and aggregates its members' stats.
+#[test]
+fn sharded_coordinator_mle_matches_single_coordinator() {
+    use exageostat::api::{Hardware, MleOptions};
+    use exageostat::coordinator::{
+        Coordinator, DataSpec, Dispatch, Outcome, Request, RequestKind, ShardedCoordinator,
+    };
+    use exageostat::scheduler::runtime::CancelToken;
+
+    // ts 8 over n=160 gives a 20-tile grid — past the coordinator's
+    // shard threshold, so the MLE's pipelines really partition across
+    // both member runtimes.
+    let hw = Hardware {
+        ncores: 2,
+        ts: 8,
+        policy: Policy::Lws,
+        ..Hardware::default()
+    };
+    let req = Request {
+        data: DataSpec {
+            n: 160,
+            seed: 5,
+            ..DataSpec::default()
+        }
+        .into(),
+        kind: RequestKind::Mle {
+            variant: Variant::Exact,
+            opt: MleOptions::new(vec![0.01; 3], vec![5.0; 3], 1e-3, 3),
+        },
+        priority: 0,
+    };
+
+    let single = Coordinator::new(hw.clone());
+    let r1 = single.run(req.clone()).unwrap();
+    single.shutdown();
+
+    let sc = ShardedCoordinator::new(hw, 2);
+    assert_eq!(sc.nshards(), 2);
+    let r2 = sc.run_with_cancel(req, &CancelToken::new()).unwrap();
+    let st = sc.stats();
+    assert_eq!(st.requests, 1);
+    assert_eq!(st.worker_threads, 2);
+    sc.shutdown_dispatch();
+
+    match (r1.outcome, r2.outcome) {
+        (Outcome::Mle(a), Outcome::Mle(b)) => {
+            assert_eq!(
+                a.loglik.to_bits(),
+                b.loglik.to_bits(),
+                "loglik {} vs {}",
+                a.loglik,
+                b.loglik
+            );
+            assert_eq!(a.iters, b.iters);
+            for (x, y) in a.theta.iter().zip(&b.theta) {
+                assert_eq!(x.to_bits(), y.to_bits(), "theta {x} vs {y}");
+            }
+        }
+        other => panic!("unexpected outcomes: {other:?}"),
+    }
+}
