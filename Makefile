@@ -12,7 +12,7 @@ PYTHON ?= python3
 
 BENCHES = fig3_shared_memory fig5_scaling_n fig6_accelerated \
           fig7_distributed table5_time_per_iter ablation_variants \
-          serving_throughput kernel_roofline
+          serving_throughput kernel_roofline sst_scaling
 
 .PHONY: all test artifacts bench-smoke fmt lint doc python-test clean
 
@@ -37,7 +37,10 @@ artifacts:
 # per-job-pool requests/sec + latency percentiles); kernel_roofline
 # refreshes BENCH_kernels.json (per-kernel GFLOP/s, dispatched-SIMD vs
 # forced-scalar, fused-vs-unfused warm eval per variant, MP-vs-exact
-# time/eval — EXPERIMENTS.md §Kernel roofline).  BENCH_OUT pins every
+# time/eval — EXPERIMENTS.md §Kernel roofline); sst_scaling refreshes
+# BENCH_sst_scaling.json (warm eval resident vs out-of-core budget vs
+# MP on the SST day, with peak-resident and spill counters —
+# EXPERIMENTS.md §SST workload scaling).  BENCH_OUT pins every
 # bench's JSON to the repo root regardless of cargo's bench cwd, so the
 # CI artifact glob and the regression gate always find them.  Ends
 # with a smoke invocation of the `exageostat serve` subcommand.

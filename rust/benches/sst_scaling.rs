@@ -1,0 +1,248 @@
+//! **SST workload scaling under a memory budget** — fit the synthetic
+//! Agulhas SST day (DESIGN.md §5) at growing n, fully resident vs under
+//! an out-of-core tile budget vs mixed-precision, and report warm-eval
+//! time plus spill telemetry.
+//!
+//! This is the bench behind two regression gates
+//! (`ci/bench_baseline.json`):
+//!  * `spill.resident_warm_eval_s` — the resident fast path must stay
+//!    flat now that the spill branch sits on it (tight 5% band);
+//!  * `spill.budget_warm_eval_s` — the budgeted serial sweep must stay
+//!    usable (absolute ceiling), not just correct.
+//!
+//! Emits `BENCH_sst_scaling.json` (path override: `BENCH_OUT`).  Quick
+//! mode (`BENCH_QUICK=1` / `--quick`) shrinks n; `BENCH_FULL=1` grows
+//! it toward the paper-shaped grid.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+use bench_util::*;
+
+use exageostat::covariance::{kernel_by_name, DistanceMetric};
+use exageostat::data::sst::{ols_linear_mean, stream_days, SstConfig};
+use exageostat::likelihood::{EvalSession, ExecCtx, Problem, Variant};
+use exageostat::scheduler::pool::Policy;
+use exageostat::testkit::{tile_prefetches, tile_spill_reads, tile_spill_writes};
+use std::sync::Arc;
+
+/// Dense lower-triangle footprint of the all-f64 workspace, in bytes —
+/// what a resident fit of size n must hold, and the yardstick the
+/// budget is set against.
+fn dense_lower_bytes(n: usize, ts: usize) -> usize {
+    let nt = n.div_ceil(ts);
+    let dim = |t: usize| if t + 1 == nt { n - t * ts } else { ts };
+    let mut total = 0;
+    for i in 0..nt {
+        for j in 0..=i {
+            total += dim(i) * dim(j) * 8;
+        }
+    }
+    total
+}
+
+struct BenchRow {
+    n: usize,
+    variant: &'static str,
+    mode: String,
+    warm_s: f64,
+    peak_bytes: Option<usize>,
+    budget_bytes: Option<usize>,
+    spill_writes: u64,
+    spill_reads: u64,
+    prefetches: u64,
+}
+
+/// Warm-eval one (variant, budget) cell through the session layer and
+/// collect spill-counter deltas.  Counters are process-global, so this
+/// bench (like `rust/tests/spill.rs`) runs its cells strictly serially.
+fn measure(
+    problem: &Problem,
+    variant: Variant,
+    ts: usize,
+    theta: &[f64],
+    budget: Option<usize>,
+    k: usize,
+) -> (f64, Option<usize>, u64, u64, u64) {
+    let mut ctx = ExecCtx::new(2, ts, Policy::Lws);
+    ctx.tile_budget = budget;
+    let (w0, r0, f0) = (tile_spill_writes(), tile_spill_reads(), tile_prefetches());
+    let mut session = EvalSession::new(problem, variant, &ctx).unwrap();
+    session.eval(theta).unwrap(); // warm the distance cache + workspace
+    let warm = time_median(k, || {
+        session.eval(theta).unwrap();
+    });
+    let peak = session.peak_resident_tile_bytes();
+    (
+        warm,
+        peak,
+        tile_spill_writes() - w0,
+        tile_spill_reads() - r0,
+        tile_prefetches() - f0,
+    )
+}
+
+fn main() {
+    let quick = quick();
+    let full = std::env::var("BENCH_FULL").is_ok();
+
+    // One streamed SST day, OLS-demeaned — the tutorial's fit input.
+    let cfg = SstConfig {
+        ny: 32,
+        nx: 80,
+        days: 1,
+        ..SstConfig::default()
+    };
+    let gen_ctx = ExecCtx::new(2, 64, Policy::Lws);
+    let day = stream_days(&cfg, &gen_ctx)
+        .next()
+        .expect("one day configured")
+        .unwrap();
+    let (locs, z) = day.valid_observations();
+    let (_coef, resid) = ols_linear_mean(&locs, &z);
+    let theta = day.theta_true;
+
+    let sizes: Vec<usize> = if full {
+        vec![480, 960, locs.len()]
+    } else if quick {
+        vec![240, 480]
+    } else {
+        vec![240, 480, 960]
+    };
+    let ts = 64;
+    let k = if quick { 2 } else { 5 };
+
+    println!(
+        "SST scaling — warm exact eval, resident vs budget=dense/3 vs MP; grid {}x{} ({} valid), ts={ts}",
+        cfg.ny,
+        cfg.nx,
+        locs.len()
+    );
+    header(&[
+        "n", "variant", "mode", "warm s", "peak MiB", "budg MiB", "writes", "reads",
+    ]);
+
+    let mib = |b: Option<usize>| match b {
+        Some(b) => format!("{:.2}", b as f64 / (1024.0 * 1024.0)),
+        None => "-".into(),
+    };
+    let mut rows: Vec<BenchRow> = Vec::new();
+    for &n_target in &sizes {
+        let n = n_target.min(locs.len());
+        let problem = Problem {
+            kernel: kernel_by_name("ugsm-s").unwrap().into(),
+            locs: Arc::new(locs[..n].to_vec()),
+            z: Arc::new(resid[..n].to_vec()),
+            metric: DistanceMetric::Euclidean,
+        };
+        let budget = (dense_lower_bytes(n, ts) / 3).max(1);
+        let cells: [(Variant, &'static str, Option<usize>, String); 3] = [
+            (Variant::Exact, "exact", None, "resident".into()),
+            (Variant::Exact, "exact", Some(budget), "budget_dense/3".into()),
+            (Variant::Mp { band: 1 }, "mp_band1", None, "resident".into()),
+        ];
+        for (variant, vname, b, mode) in cells {
+            let (warm, peak, w, r, p) = measure(&problem, variant, ts, &theta, b, k);
+            row(&[
+                format!("{n}"),
+                vname.into(),
+                mode.clone(),
+                s(warm),
+                mib(peak),
+                mib(b),
+                format!("{w}"),
+                format!("{r}"),
+            ]);
+            if let (Some(peak), Some(b)) = (peak, b) {
+                assert!(
+                    peak <= b.max(6 * ts * ts * 8),
+                    "peak resident {peak} B exceeds clamped budget at n={n}"
+                );
+            }
+            rows.push(BenchRow {
+                n,
+                variant: vname,
+                mode,
+                warm_s: warm,
+                peak_bytes: peak,
+                budget_bytes: b,
+                spill_writes: w,
+                spill_reads: r,
+                prefetches: p,
+            });
+        }
+    }
+
+    // Gate metrics: the largest-n exact pair.
+    let n_max = rows.iter().map(|r| r.n).max().unwrap();
+    let pick = |mode_resident: bool| {
+        rows.iter()
+            .find(|r| {
+                r.n == n_max && r.variant == "exact" && (r.budget_bytes.is_none()) == mode_resident
+            })
+            .expect("both exact cells measured")
+    };
+    let resident = pick(true);
+    let budgeted = pick(false);
+    println!(
+        "\nn={n_max}: resident {:.4}s, budgeted {:.4}s ({:.2}x), peak {} within budget {}",
+        resident.warm_s,
+        budgeted.warm_s,
+        budgeted.warm_s / resident.warm_s,
+        mib(budgeted.peak_bytes),
+        mib(budgeted.budget_bytes),
+    );
+
+    let jnum = |v: f64| -> String {
+        if v.is_finite() {
+            format!("{v}")
+        } else {
+            "null".into()
+        }
+    };
+    let jopt = |v: Option<usize>| -> String {
+        match v {
+            Some(v) => format!("{v}"),
+            None => "null".into(),
+        }
+    };
+    let rows_json: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "    {{\"n\": {}, \"variant\": \"{}\", \"mode\": \"{}\", \
+                 \"warm_eval_s\": {}, \"peak_resident_bytes\": {}, \
+                 \"budget_bytes\": {}, \"spill_writes\": {}, \
+                 \"spill_reads\": {}, \"prefetches\": {}}}",
+                r.n,
+                r.variant,
+                r.mode,
+                jnum(r.warm_s),
+                jopt(r.peak_bytes),
+                jopt(r.budget_bytes),
+                r.spill_writes,
+                r.spill_reads,
+                r.prefetches
+            )
+        })
+        .collect();
+    let mut json = String::from("{\n");
+    json.push_str("  \"bench\": \"sst_scaling\",\n");
+    json.push_str(&format!(
+        "  \"grid\": {{\"ny\": {}, \"nx\": {}, \"valid\": {}}},\n  \"ts\": {ts},\n",
+        cfg.ny,
+        cfg.nx,
+        locs.len()
+    ));
+    json.push_str(&format!("  \"rows\": [\n{}\n  ],\n", rows_json.join(",\n")));
+    json.push_str(&format!(
+        "  \"spill\": {{\n    \"n\": {n_max},\n    \"resident_warm_eval_s\": {},\n    \
+         \"budget_warm_eval_s\": {},\n    \"budget_over_resident\": {}\n  }}\n}}\n",
+        jnum(resident.warm_s),
+        jnum(budgeted.warm_s),
+        jnum(budgeted.warm_s / resident.warm_s)
+    ));
+    let out = bench_out_path("BENCH_sst_scaling.json");
+    std::fs::write(&out, &json)
+        .unwrap_or_else(|e| eprintln!("cannot write {}: {e}", out.display()));
+    println!("telemetry written to {}", out.display());
+}

@@ -176,6 +176,7 @@ impl ExaGeoStat {
             job_prio: 0,
             cancel: CancelToken::new(),
             shards: None,
+            tile_budget: crate::linalg::tile::tile_budget_from_env(),
         }
     }
 
@@ -304,6 +305,36 @@ impl ExaGeoStat {
         self.mle(data, kernel, dmetric, opt, Variant::Mp { band })
     }
 
+    /// Speculative exact MLE: race `starts.len()` optimizer lanes from
+    /// different starting points over a pool of per-lane sessions and
+    /// keep the first to converge (see [`mle_speculative`]).  Useful
+    /// when the objective surface is multimodal or a good start is
+    /// known only approximately — the losers are cancelled, not run to
+    /// completion.
+    pub fn exact_mle_speculative(
+        &self,
+        data: &GeoData,
+        kernel: &str,
+        dmetric: &str,
+        opt: &MleOptions,
+        starts: &[Vec<f64>],
+    ) -> anyhow::Result<SpeculativeMle> {
+        anyhow::ensure!(!starts.is_empty(), "speculative MLE needs at least one start");
+        let k: Arc<dyn CovKernel> = Arc::from(kernel_by_name(kernel)?);
+        let metric = DistanceMetric::parse(dmetric)?;
+        let problem = crate::likelihood::Problem {
+            kernel: k,
+            locs: Arc::new(data.locs.clone()),
+            z: Arc::new(data.z.clone()),
+            metric,
+        };
+        let mut sessions = Vec::with_capacity(starts.len());
+        for _ in starts {
+            sessions.push(EvalSession::new(&problem, Variant::Exact, &self.ctx())?);
+        }
+        mle_speculative(&mut sessions, starts, opt)
+    }
+
     /// `exact_predict(train, new, kernel, dmetric, est_theta)`.  The
     /// covariance factorization and forward solve run as one job on the
     /// instance's persistent runtime (tiled, parallel) rather than on a
@@ -372,6 +403,18 @@ impl ExaGeoStat {
 /// optimizer stops at its next iteration boundary and this function
 /// returns [`ApiError::Cancelled`].
 pub fn mle_with_session(session: &mut EvalSession, opt: &MleOptions) -> anyhow::Result<MleResult> {
+    mle_with_session_from(session, opt, None)
+}
+
+/// [`mle_with_session`] with an explicit starting point (in *parameter*
+/// space, like the bounds).  `None` keeps the R package's default of
+/// starting at the lower bounds; [`mle_speculative`] passes a distinct
+/// start per racing candidate.  Out-of-bounds components are clamped.
+pub fn mle_with_session_from(
+    session: &mut EvalSession,
+    opt: &MleOptions,
+    start: Option<&[f64]>,
+) -> anyhow::Result<MleResult> {
     let nparams = session.kernel().nparams();
     if opt.clb.len() != nparams || opt.cub.len() != nparams {
         return Err(ApiError::BoundsArity {
@@ -388,15 +431,30 @@ pub fn mle_with_session(session: &mut EvalSession, opt: &MleOptions) -> anyhow::
     // scale; the log transform conditions it (standard practice, and
     // what makes BOBYQA's quadratic models accurate here).
     let log_ok = opt.clb.iter().all(|&v| v > 0.0);
+    // Default start: the lower bounds (what the R package does).  An
+    // explicit start is clamped into the box, then mapped alongside it.
+    let start_lin: Vec<f64> = match start {
+        Some(s) => {
+            anyhow::ensure!(
+                s.len() == nparams,
+                "start point has {} components, kernel needs {nparams}",
+                s.len()
+            );
+            s.iter()
+                .zip(opt.clb.iter().zip(&opt.cub))
+                .map(|(&v, (&lo, &hi))| v.clamp(lo, hi))
+                .collect()
+        }
+        None => opt.clb.clone(),
+    };
     let (lo, hi, init): (Vec<f64>, Vec<f64>, Vec<f64>) = if log_ok {
         (
             opt.clb.iter().map(|v| v.ln()).collect(),
             opt.cub.iter().map(|v| v.ln()).collect(),
-            // The R package starts the search at the lower bounds.
-            opt.clb.iter().map(|v| v.ln()).collect(),
+            start_lin.iter().map(|v| v.ln()).collect(),
         )
     } else {
-        (opt.clb.clone(), opt.cub.clone(), opt.clb.clone())
+        (opt.clb.clone(), opt.cub.clone(), start_lin)
     };
     let bounds = Bounds::new(lo, hi)?;
     let opts = OptOptions {
@@ -444,6 +502,115 @@ pub fn mle_with_session(session: &mut EvalSession, opt: &MleOptions) -> anyhow::
         total_time: r.total_time,
         history: r.history,
     })
+}
+
+/// Outcome of a speculative MLE race ([`mle_speculative`]).
+#[derive(Clone, Debug)]
+pub struct SpeculativeMle {
+    /// The winning candidate's fit.
+    pub result: MleResult,
+    /// Index (into `sessions` / `starts`) of the winner.
+    pub winner: usize,
+    /// Runtime tasks the race *avoided* executing: once the winner
+    /// converged, the losers' cancellation tokens fired and their
+    /// queued-but-not-started tasks were retired unrun.  Measured as
+    /// the delta of [`Runtime::tasks_skipped`] over the race.
+    pub tasks_skipped: u64,
+}
+
+/// Race several MLE candidates speculatively and keep the first to
+/// converge.
+///
+/// Each session gets its own optimizer driven from its own starting
+/// point (`starts[i]`, parameter space, clamped into the bounds box).
+/// All lanes share the instance's persistent worker runtime — the race
+/// adds optimizer *threads*, not compute workers, so objective
+/// evaluations from different lanes interleave on the same cores.  The
+/// first lane whose optimizer converges wins; every other lane's
+/// [`CancelToken`] fires immediately, its in-flight evaluation stops at
+/// the next task boundary, and its never-started tasks are skipped (the
+/// saving reported in [`SpeculativeMle::tasks_skipped`]).
+///
+/// `sessions` must all evaluate the same problem (same data/kernel/
+/// variant) for the race to be meaningful; each needs its own workspace,
+/// which is why the pool is a slice of sessions rather than one shared.
+/// When every lane fails, the first lane's error is returned.
+pub fn mle_speculative(
+    sessions: &mut [EvalSession],
+    starts: &[Vec<f64>],
+    opt: &MleOptions,
+) -> anyhow::Result<SpeculativeMle> {
+    anyhow::ensure!(!sessions.is_empty(), "speculative MLE needs at least one session");
+    anyhow::ensure!(
+        sessions.len() == starts.len(),
+        "{} sessions but {} start points",
+        sessions.len(),
+        starts.len()
+    );
+    let runtime = sessions[0].ctx().runtime.clone();
+    let skipped_before = runtime.tasks_skipped();
+    // One fresh token per lane: cached sessions may carry a fired token
+    // from a previous race, and the loser-cancellation below must not
+    // touch other lanes.
+    let tokens: Vec<CancelToken> = (0..sessions.len()).map(|_| CancelToken::new()).collect();
+    for (s, t) in sessions.iter_mut().zip(&tokens) {
+        s.set_cancel(t.clone());
+    }
+    let (win, mut first_err) = std::thread::scope(|sc| {
+        let (tx, rx) = std::sync::mpsc::channel::<(usize, anyhow::Result<MleResult>)>();
+        for (i, (session, start)) in sessions.iter_mut().zip(starts).enumerate() {
+            let tx = tx.clone();
+            sc.spawn(move || {
+                let r = mle_with_session_from(session, opt, Some(start.as_slice()));
+                // The receiver hangs up after a winner; losers' sends
+                // failing is expected.
+                let _ = tx.send((i, r));
+            });
+        }
+        drop(tx);
+        let mut win: Option<(usize, MleResult)> = None;
+        let mut first_err: Option<(usize, anyhow::Error)> = None;
+        // Drain *all* lanes: scoped threads join at scope exit anyway,
+        // so leaving the channel early would not return control sooner —
+        // and cancelled lanes exit fast once their token fires.
+        for (i, r) in rx.iter() {
+            match r {
+                Ok(res) => {
+                    if win.is_none() {
+                        for (j, t) in tokens.iter().enumerate() {
+                            if j != i {
+                                t.cancel();
+                            }
+                        }
+                        win = Some((i, res));
+                    }
+                    // A slower lane that converged before its token
+                    // fired is discarded: first convergence wins.
+                }
+                Err(e) => {
+                    let keep = match &first_err {
+                        Some((j, _)) => i < *j,
+                        None => true,
+                    };
+                    if keep {
+                        first_err = Some((i, e));
+                    }
+                }
+            }
+        }
+        (win, first_err)
+    });
+    match win {
+        Some((winner, result)) => Ok(SpeculativeMle {
+            result,
+            winner,
+            tasks_skipped: runtime.tasks_skipped() - skipped_before,
+        }),
+        None => Err(first_err
+            .take()
+            .map(|(_, e)| e)
+            .unwrap_or_else(|| anyhow::anyhow!("speculative MLE: no lane produced a result"))),
+    }
 }
 
 #[cfg(test)]
@@ -513,6 +680,35 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn speculative_mle_wins_and_reports_skips() {
+        let exa = ExaGeoStat::init(small_hw(32));
+        let data = exa
+            .simulate_data_exact("ugsm-s", &[1.0, 0.1, 0.5], "euclidean", 96, 9)
+            .unwrap();
+        let opt = MleOptions::new(vec![0.01; 3], vec![5.0; 3], 1e-4, 40);
+        let starts = vec![
+            vec![0.5, 0.05, 0.4],
+            vec![2.0, 0.3, 1.0],
+            // Out-of-box start exercises the clamp.
+            vec![10.0, 1e-6, 0.5],
+        ];
+        let spec = exa
+            .exact_mle_speculative(&data, "ugsm-s", "euclidean", &opt, &starts)
+            .unwrap();
+        assert!(spec.winner < starts.len());
+        assert!(spec.result.loglik.is_finite());
+        assert!(spec.result.iters > 0);
+        // A single-lane race has no losers to cancel: it degenerates to
+        // a plain fit and skips nothing.
+        let single = exa
+            .exact_mle_speculative(&data, "ugsm-s", "euclidean", &opt, &starts[..1])
+            .unwrap();
+        assert_eq!(single.winner, 0);
+        assert_eq!(single.tasks_skipped, 0);
+        exa.finalize();
     }
 
     #[test]

@@ -405,6 +405,9 @@ pub struct CoordinatorStats {
     pub session_cache_evictions: u64,
     /// Tasks executed by the shared runtime (all jobs, all requests).
     pub tasks_executed: u64,
+    /// Tasks retired unrun because their request was cancelled (client
+    /// disconnect, speculative-race loser) — work the runtime saved.
+    pub tasks_skipped: u64,
     pub worker_threads: usize,
 }
 
@@ -422,6 +425,7 @@ impl CoordinatorStats {
         self.session_cache_misses += o.session_cache_misses;
         self.session_cache_evictions += o.session_cache_evictions;
         self.tasks_executed += o.tasks_executed;
+        self.tasks_skipped += o.tasks_skipped;
         self.worker_threads += o.worker_threads;
     }
 }
@@ -436,6 +440,12 @@ pub struct Coordinator {
     /// pipelines partition across the member runtimes
     /// (`pipeline::shard::execute_sharded`).
     shards: OnceLock<Arc<ShardSet>>,
+    /// Out-of-core tile budget (bytes) stamped onto every request
+    /// context: sessions built under it allocate spill-backed
+    /// workspaces.  `None` = fully resident.  Defaults to the
+    /// `EXAGEOSTAT_TILE_BUDGET` env; [`Coordinator::with_mem_budget`]
+    /// sets it from the unified serve budget.
+    tile_budget: Option<usize>,
     data_cache: Mutex<LruCache<DataArc>>,
     sessions: Mutex<LruCache<Arc<Mutex<EvalSession>>>>,
     next_id: AtomicU64,
@@ -469,6 +479,7 @@ impl Coordinator {
             engine: backend::default_engine(),
             runtime,
             shards: OnceLock::new(),
+            tile_budget: crate::linalg::tile::tile_budget_from_env(),
             data_cache: Mutex::new(LruCache::new(data_budget)),
             sessions: Mutex::new(LruCache::new(session_budget)),
             next_id: AtomicU64::new(0),
@@ -482,9 +493,33 @@ impl Coordinator {
         }
     }
 
+    /// [`Coordinator::new`] under one unified memory budget of
+    /// `total_bytes`, split proportionally across the three pools that
+    /// hold per-request state: half to the out-of-core tile workspace
+    /// (the dominant allocation — sessions built here spill instead of
+    /// growing resident), three-eighths to the session distance-cache
+    /// LRU and one-eighth to the dataset LRU (both bounded in doubles,
+    /// hence the ÷8).  This is what `serve --mem-budget` constructs; an
+    /// `EXAGEOSTAT_TILE_BUDGET` env still wins for the tile share so
+    /// operators can tune the spill threshold independently.
+    pub fn with_mem_budget(hw: Hardware, total_bytes: usize) -> Coordinator {
+        let data_budget = (total_bytes / 8 / 8).max(1);
+        let session_budget = (total_bytes * 3 / 8 / 8).max(1);
+        let mut c = Coordinator::with_cache_budgets(hw, data_budget, session_budget);
+        if c.tile_budget.is_none() {
+            c.tile_budget = Some((total_bytes / 2).max(1));
+        }
+        c
+    }
+
     /// The shared runtime (for tests / introspection).
     pub fn runtime(&self) -> &Arc<Runtime> {
         &self.runtime
+    }
+
+    /// The tile budget request contexts carry (`None` = resident).
+    pub fn tile_budget(&self) -> Option<usize> {
+        self.tile_budget
     }
 
     /// Attach a shard set: from now on every request context carries it,
@@ -502,6 +537,7 @@ impl Coordinator {
         let mut ctx = ExecCtx::with_runtime(self.runtime.clone(), self.hw.ts, self.engine.clone());
         ctx.job_prio = priority;
         ctx.shards = self.shards.get().cloned();
+        ctx.tile_budget = self.tile_budget;
         ctx
     }
 
@@ -723,6 +759,7 @@ impl Coordinator {
             session_cache_misses: self.session_misses.load(Ordering::Relaxed),
             session_cache_evictions: session_ev,
             tasks_executed: self.runtime.tasks_executed(),
+            tasks_skipped: self.runtime.tasks_skipped(),
             worker_threads: self.runtime.nworkers(),
         }
     }

@@ -47,13 +47,28 @@ impl ShardedCoordinator {
     /// member gets at least one), and wire the shared [`ShardSet`] into
     /// every member.
     pub fn new(hw: Hardware, nshards: usize) -> ShardedCoordinator {
+        ShardedCoordinator::build(hw, nshards, None)
+    }
+
+    /// [`ShardedCoordinator::new`] under one unified memory budget of
+    /// `total_bytes` for the whole set: each member gets an equal slice,
+    /// split internally by [`Coordinator::with_mem_budget`].
+    pub fn with_mem_budget(hw: Hardware, nshards: usize, total_bytes: usize) -> ShardedCoordinator {
+        let per = (total_bytes / nshards.max(1)).max(1);
+        ShardedCoordinator::build(hw, nshards, Some(per))
+    }
+
+    fn build(hw: Hardware, nshards: usize, member_budget: Option<usize>) -> ShardedCoordinator {
         let nshards = nshards.max(1);
         let per_shard = (hw.ncores.max(1) / nshards).max(1);
         let members: Vec<Arc<Coordinator>> = (0..nshards)
             .map(|_| {
                 let mut mhw = hw.clone();
                 mhw.ncores = per_shard;
-                Arc::new(Coordinator::new(mhw))
+                Arc::new(match member_budget {
+                    Some(b) => Coordinator::with_mem_budget(mhw, b),
+                    None => Coordinator::new(mhw),
+                })
             })
             .collect();
         let runtimes = members.iter().map(|m| m.runtime().clone()).collect();

@@ -21,30 +21,104 @@ pub fn write_geodata(path: &Path, data: &GeoData) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// Read `x,y,z` CSV (header optional).
-pub fn read_geodata(path: &Path) -> anyhow::Result<GeoData> {
+/// Rows per chunk of the streaming reader when the caller does not pick
+/// a size ([`read_geodata`] uses it): big enough to amortize per-chunk
+/// overhead, small enough that a chunk is a bounded allocation
+/// (~1.5 MB) regardless of file size.
+pub const READ_CHUNK_ROWS: usize = 1 << 16;
+
+/// Parse one non-header CSV row (`lineno` is 0-based, for messages).
+fn parse_row(t: &str, lineno: usize) -> anyhow::Result<(Location, f64)> {
+    let mut parts = t.split(',');
+    let mut parse = |what: &str| -> anyhow::Result<f64> {
+        parts
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("line {}: missing {what}", lineno + 1))?
+            .trim()
+            .parse()
+            .map_err(|_| anyhow::anyhow!("line {}: bad {what}", lineno + 1))
+    };
+    let x = parse("x")?;
+    let y = parse("y")?;
+    let zv = parse("z")?;
+    Ok((Location::new(x, y), zv))
+}
+
+/// Streaming CSV reader: an iterator of up-to-`chunk`-row [`GeoData`]
+/// batches (see [`read_geodata_chunks`]).  Holds one `BufRead` line
+/// buffer plus the chunk being built — resident memory is bounded by
+/// the chunk size, not the file size.
+pub struct GeoDataChunks {
+    lines: std::iter::Enumerate<std::io::Lines<std::io::BufReader<std::fs::File>>>,
+    chunk: usize,
+    done: bool,
+}
+
+/// Open `path` for chunked reading: each `next()` yields the following
+/// `chunk` data rows as one [`GeoData`] batch (the last batch may be
+/// short).  Header and blank lines are skipped as in [`read_geodata`].
+/// A parse/IO error ends the stream after being yielded once.
+pub fn read_geodata_chunks(path: &Path, chunk: usize) -> anyhow::Result<GeoDataChunks> {
     let f = std::fs::File::open(path)?;
-    let reader = std::io::BufReader::new(f);
+    Ok(GeoDataChunks {
+        lines: std::io::BufReader::new(f).lines().enumerate(),
+        chunk: chunk.max(1),
+        done: false,
+    })
+}
+
+impl Iterator for GeoDataChunks {
+    type Item = anyhow::Result<GeoData>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.done {
+            return None;
+        }
+        let mut locs = Vec::new();
+        let mut z = Vec::new();
+        while locs.len() < self.chunk {
+            let Some((lineno, line)) = self.lines.next() else {
+                self.done = true;
+                break;
+            };
+            let line = match line {
+                Ok(l) => l,
+                Err(e) => {
+                    self.done = true;
+                    return Some(Err(e.into()));
+                }
+            };
+            let t = line.trim();
+            if t.is_empty() || (lineno == 0 && t.starts_with(|c: char| c.is_alphabetic())) {
+                continue;
+            }
+            match parse_row(t, lineno) {
+                Ok((loc, zv)) => {
+                    locs.push(loc);
+                    z.push(zv);
+                }
+                Err(e) => {
+                    self.done = true;
+                    return Some(Err(e));
+                }
+            }
+        }
+        if locs.is_empty() {
+            None
+        } else {
+            Some(Ok(GeoData { locs, z }))
+        }
+    }
+}
+
+/// Read `x,y,z` CSV (header optional) whole, via the chunked reader.
+pub fn read_geodata(path: &Path) -> anyhow::Result<GeoData> {
     let mut locs = Vec::new();
     let mut z = Vec::new();
-    for (lineno, line) in reader.lines().enumerate() {
-        let line = line?;
-        let t = line.trim();
-        if t.is_empty() || (lineno == 0 && t.starts_with(|c: char| c.is_alphabetic())) {
-            continue;
-        }
-        let mut parts = t.split(',');
-        let parse = |p: Option<&str>, what: &str| -> anyhow::Result<f64> {
-            p.ok_or_else(|| anyhow::anyhow!("line {}: missing {what}", lineno + 1))?
-                .trim()
-                .parse()
-                .map_err(|_| anyhow::anyhow!("line {}: bad {what}", lineno + 1))
-        };
-        let x = parse(parts.next(), "x")?;
-        let y = parse(parts.next(), "y")?;
-        let zv = parse(parts.next(), "z")?;
-        locs.push(Location::new(x, y));
-        z.push(zv);
+    for chunk in read_geodata_chunks(path, READ_CHUNK_ROWS)? {
+        let c = chunk?;
+        locs.extend(c.locs);
+        z.extend(c.z);
     }
     anyhow::ensure!(!locs.is_empty(), "no data rows in {path:?}");
     Ok(GeoData { locs, z })
@@ -68,6 +142,53 @@ mod tests {
         assert_eq!(back.locs.len(), 2);
         assert_eq!(back.z, data.z);
         assert!((back.locs[1].y + 1.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn chunked_read_matches_whole_and_bounds_batches() {
+        let dir = std::env::temp_dir().join("exageostat_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("chunks.csv");
+        let data = GeoData {
+            locs: (0..23)
+                .map(|i| Location::new(i as f64 * 0.1, -(i as f64)))
+                .collect(),
+            z: (0..23).map(|i| i as f64 / 7.0).collect(),
+        };
+        write_geodata(&path, &data).unwrap();
+        let whole = read_geodata(&path).unwrap();
+        // chunk = 5: batches of 5,5,5,5,3; concatenation bit-identical.
+        let mut sizes = Vec::new();
+        let mut locs = Vec::new();
+        let mut z = Vec::new();
+        for c in read_geodata_chunks(&path, 5).unwrap() {
+            let c = c.unwrap();
+            assert!(c.n() <= 5);
+            sizes.push(c.n());
+            locs.extend(c.locs);
+            z.extend(c.z);
+        }
+        assert_eq!(sizes, vec![5, 5, 5, 5, 3]);
+        assert_eq!(z.len(), whole.z.len());
+        for (a, b) in z.iter().zip(&whole.z) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in locs.iter().zip(&whole.locs) {
+            assert_eq!(a.x.to_bits(), b.x.to_bits());
+            assert_eq!(a.y.to_bits(), b.y.to_bits());
+        }
+    }
+
+    #[test]
+    fn chunked_read_surfaces_error_once_then_ends() {
+        let dir = std::env::temp_dir().join("exageostat_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad_chunk.csv");
+        std::fs::write(&path, "x,y,z\n1,2,3\n4,oops,6\n7,8,9\n").unwrap();
+        let mut it = read_geodata_chunks(&path, 1).unwrap();
+        assert!(it.next().unwrap().is_ok());
+        assert!(it.next().unwrap().is_err());
+        assert!(it.next().is_none(), "stream ends after the error");
     }
 
     #[test]

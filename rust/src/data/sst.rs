@@ -239,6 +239,19 @@ pub fn generate_day(cfg: &SstConfig, day: usize, ctx: &ExecCtx) -> anyhow::Resul
     })
 }
 
+/// Stream the configured days lazily: each `next()` generates exactly
+/// one [`SstDay`] (grid + GRF sample + masks) and hands it off, so the
+/// resident footprint of a whole-campaign sweep is one day's field —
+/// not `days × ny × nx` — matching the out-of-core posture of the rest
+/// of the pipeline.  Deterministic per `(cfg.seed, day)` exactly like
+/// calling [`generate_day`] in a loop.
+pub fn stream_days<'a>(
+    cfg: &'a SstConfig,
+    ctx: &'a ExecCtx,
+) -> impl Iterator<Item = anyhow::Result<SstDay>> + 'a {
+    (0..cfg.days).map(move |day| generate_day(cfg, day, ctx))
+}
+
 /// OLS fit of `z ~ 1 + lon + lat` (the tutorial's first stage).
 /// Returns `(coef = [c, a, b], residuals)`.
 pub fn ols_linear_mean(locs: &[Location], z: &[f64]) -> ([f64; 3], Vec<f64>) {
@@ -353,6 +366,23 @@ mod tests {
             north > south + 5.0,
             "north {north} vs south {south} (gradient missing)"
         );
+    }
+
+    #[test]
+    fn stream_days_matches_loop_generation() {
+        let cfg = tiny_cfg();
+        let ctx = ctx();
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        let mut days = 0;
+        for (day, d) in stream_days(&cfg, &ctx).enumerate() {
+            let d = d.unwrap();
+            assert_eq!(d.day, day);
+            let direct = generate_day(&cfg, day, &ctx).unwrap();
+            assert_eq!(bits(&d.observed), bits(&direct.observed));
+            assert_eq!(d.mask, direct.mask);
+            days += 1;
+        }
+        assert_eq!(days, cfg.days);
     }
 
     #[test]

@@ -118,7 +118,9 @@ pub fn loglik(
         } else {
             (problem, std::borrow::Cow::Borrowed(problem.z.as_slice()))
         };
-    let a = TileMatrix::zeros(dim, ctx.ts);
+    // Budgeted contexts get an out-of-core workspace (spill-backed,
+    // peak-resident <= budget); unbudgeted ones the resident fast path.
+    let a = ctx.alloc_tile_matrix(dim)?;
     let y = TileVector::from_slice(&z, ctx.ts);
     run_pipeline(problem, theta, band, ctx, None, &a, &y)
 }

@@ -79,6 +79,15 @@ pub struct ExecCtx {
     /// one from `EXAGEOSTAT_SHARDS`; the coordinator route attaches its
     /// own via `Coordinator::attach_shards`.
     pub shards: Option<Arc<ShardSet>>,
+    /// Out-of-core tile budget in bytes: `Some` makes every tiled
+    /// workspace allocated through this context a budget-bounded
+    /// spill-backed matrix (`TileMatrix::zeros_spill`), executed by the
+    /// plan-aware spill sweep.  `None` (the default) is the fully
+    /// resident fast path — zero overhead, bit-identical to pre-budget
+    /// behaviour.  `ExecCtx::with_engine` seeds this from
+    /// `EXAGEOSTAT_TILE_BUDGET`; the coordinator route plumbs its
+    /// `--mem-budget` share instead.
+    pub tile_budget: Option<usize>,
 }
 
 impl ExecCtx {
@@ -99,6 +108,7 @@ impl ExecCtx {
             job_prio: 0,
             cancel: CancelToken::new(),
             shards: shard_set_from_env(),
+            tile_budget: crate::linalg::tile::tile_budget_from_env(),
         }
     }
 
@@ -114,6 +124,31 @@ impl ExecCtx {
             job_prio: 0,
             cancel: CancelToken::new(),
             shards: None,
+            tile_budget: crate::linalg::tile::tile_budget_from_env(),
+        }
+    }
+
+    /// Allocate the tiled factor workspace this context's budget calls
+    /// for: fully resident without a budget, spill-backed under one.
+    /// `mp_band` selects mixed-precision storage (the MP variant).
+    pub fn alloc_tile_matrix(&self, n: usize) -> anyhow::Result<crate::linalg::tile::TileMatrix> {
+        self.alloc_tile_matrix_mp(n, None)
+    }
+
+    /// See [`ExecCtx::alloc_tile_matrix`].
+    pub fn alloc_tile_matrix_mp(
+        &self,
+        n: usize,
+        mp_band: Option<usize>,
+    ) -> anyhow::Result<crate::linalg::tile::TileMatrix> {
+        use crate::linalg::tile::TileMatrix;
+        match self.tile_budget {
+            Some(budget) => TileMatrix::zeros_spill(n, self.ts, mp_band, budget)
+                .map_err(|e| anyhow::anyhow!("tile spill store: {e}")),
+            None => Ok(match mp_band {
+                Some(band) => TileMatrix::zeros_mp(n, self.ts, band),
+                None => TileMatrix::zeros(n, self.ts),
+            }),
         }
     }
 

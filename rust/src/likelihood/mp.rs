@@ -41,7 +41,9 @@ pub fn loglik(
     ctx: &ExecCtx,
 ) -> anyhow::Result<LogLik> {
     let dim = problem.dim();
-    let a = TileMatrix::zeros_mp(dim, ctx.ts, band);
+    // Budgeted contexts get an out-of-core MP workspace (same f32
+    // off-band layout, spill-backed); unbudgeted ones stay resident.
+    let a = ctx.alloc_tile_matrix_mp(dim, Some(band))?;
     let y = TileVector::from_slice(&problem.z, ctx.ts);
     run_pipeline(problem, theta, band, ctx, None, &a, &y)
 }

@@ -111,12 +111,15 @@ impl EvalSession {
             Variant::Tlr { .. } => None,
             // MP stores off-band tiles as f32 — the workspace must carry
             // the same per-tile precision layout the pipeline expects.
+            // A context with a tile budget gets a spill-backed workspace
+            // instead (same layout, peak-resident <= budget), persisting
+            // across warm iterations like the resident one.
             Variant::Mp { band } => Some(TiledWorkspace {
-                a: TileMatrix::zeros_mp(dim, ctx.ts, band),
+                a: ctx.alloc_tile_matrix_mp(dim, Some(band))?,
                 y: TileVector::from_slice(&z, ctx.ts),
             }),
             _ => Some(TiledWorkspace {
-                a: TileMatrix::zeros(dim, ctx.ts),
+                a: ctx.alloc_tile_matrix(dim)?,
                 y: TileVector::from_slice(&z, ctx.ts),
             }),
         };
@@ -251,6 +254,33 @@ impl EvalSession {
     /// Doubles held by the distance cache (memory telemetry).
     pub fn dist_storage_len(&self) -> usize {
         self.dist.storage_len()
+    }
+
+    /// The execution context this session drives evaluations through
+    /// (runtime telemetry, budget introspection).
+    pub fn ctx(&self) -> &ExecCtx {
+        &self.ctx
+    }
+
+    /// Effective out-of-core tile budget of this session's workspace in
+    /// bytes, `None` when the workspace is fully resident (no budget, or
+    /// a TLR session — TLR tiles are rank-adaptive heap storage).
+    pub fn tile_budget(&self) -> Option<usize> {
+        self.tiled
+            .as_ref()
+            .and_then(|ws| ws.a.store())
+            .map(|st| st.budget())
+    }
+
+    /// High-water mark of resident tile bytes in this session's
+    /// out-of-core workspace (`None` when fully resident).  The number
+    /// the budget bounds: `peak_resident_tile_bytes() <= tile_budget()`
+    /// is asserted by the spill test suite.
+    pub fn peak_resident_tile_bytes(&self) -> Option<usize> {
+        self.tiled
+            .as_ref()
+            .and_then(|ws| ws.a.store())
+            .map(|st| st.peak_resident_bytes())
     }
 }
 

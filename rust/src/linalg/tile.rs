@@ -10,10 +10,27 @@
 //! Cholesky routes their updates through the f32 micro-kernel path
 //! (`linalg::blas::gemm_mp`), which is what makes the MP variant of
 //! Fig 1(d) a measured speedup rather than a simulated rounding.
+//!
+//! Tiles also carry a **residency**: a matrix built with
+//! [`TileMatrix::zeros_spill`] keeps its buffers in a budget-bounded
+//! [`TileStore`] that spills cold tiles to an unlinked temp file and
+//! faults them back in on [`TileStore::pin`] — the out-of-core layer
+//! that lets one machine factor a covariance whose dense tile set
+//! exceeds RAM (the ExaGeoStat out-of-core regime of arxiv 1708.02835).
+//! Eviction is plan-aware rather than LRU: the executor feeds each
+//! tile's next-use step from the `ExecutionPlan`, so the store evicts
+//! the tile it will need *latest* (Belady's rule on the known schedule)
+//! and drops finished panels without a write-out.  The ordinary
+//! resident path never touches the store — `store` is `None` and every
+//! accessor compiles to exactly the pre-spill code.
 
 use crate::linalg::blas::{MatMut, MatRef};
 use crate::linalg::matrix::Matrix;
 use std::cell::Cell;
+use std::fs::File;
+use std::os::unix::fs::FileExt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
 
 thread_local! {
     /// Per-thread count of [`TileMatrix`] buffer allocations — the
@@ -28,6 +45,73 @@ thread_local! {
 /// Number of `TileMatrix` allocations performed by the current thread.
 pub fn tile_matrix_allocs() -> u64 {
     TILE_MATRIX_ALLOCS.with(|c| c.get())
+}
+
+/// Process-wide spill/prefetch telemetry (the out-of-core analogue of
+/// `pack_buffer_allocs`): tests assert these stay flat on the resident
+/// path and move under a tiny budget.  Global atomics, not thread-local —
+/// the prefetch I/O lane runs on its own thread and must land in the
+/// same counters as the executor's demand faults.
+static TILE_SPILL_WRITES: AtomicU64 = AtomicU64::new(0);
+static TILE_SPILL_READS: AtomicU64 = AtomicU64::new(0);
+static TILE_PREFETCHES: AtomicU64 = AtomicU64::new(0);
+
+/// Tiles written out to the spill file (evictions of live data).
+pub fn tile_spill_writes() -> u64 {
+    TILE_SPILL_WRITES.load(Ordering::Relaxed)
+}
+/// Tiles read back from the spill file (demand faults + prefetches).
+pub fn tile_spill_reads() -> u64 {
+    TILE_SPILL_READS.load(Ordering::Relaxed)
+}
+/// Tiles brought resident ahead of use by the prefetch I/O lane.
+pub fn tile_prefetches() -> u64 {
+    TILE_PREFETCHES.load(Ordering::Relaxed)
+}
+
+/// Parse a human-friendly byte budget: a plain integer with an optional
+/// `K`/`M`/`G` (or `KB`/`MB`/`GB`) suffix, case-insensitive.  `"0"`,
+/// `"off"`, `"none"` and `"unbounded"` — and anything unparseable —
+/// mean *no budget* (`None`), i.e. the fully-resident fast path.
+pub fn parse_budget(s: &str) -> Option<usize> {
+    let t = s.trim();
+    if t.is_empty() {
+        return None;
+    }
+    match t.to_ascii_lowercase().as_str() {
+        "0" | "off" | "none" | "unbounded" => return None,
+        _ => {}
+    }
+    let mut digits = t;
+    let mut mult = 1usize;
+    if let Some(rest) = digits.strip_suffix(['b', 'B']) {
+        digits = rest;
+    }
+    if let Some(rest) = digits.strip_suffix(['k', 'K']) {
+        digits = rest;
+        mult = 1 << 10;
+    } else if let Some(rest) = digits.strip_suffix(['m', 'M']) {
+        digits = rest;
+        mult = 1 << 20;
+    } else if let Some(rest) = digits.strip_suffix(['g', 'G']) {
+        digits = rest;
+        mult = 1 << 30;
+    }
+    digits
+        .trim()
+        .parse::<usize>()
+        .ok()
+        .map(|v| v.saturating_mul(mult))
+        .filter(|&v| v > 0)
+}
+
+/// The `EXAGEOSTAT_TILE_BUDGET` environment knob (bytes, suffixes per
+/// [`parse_budget`]): the peak-resident ceiling every budgeted
+/// `TileMatrix` workspace is built with.  Unset/off = fully resident.
+pub fn tile_budget_from_env() -> Option<usize> {
+    std::env::var("EXAGEOSTAT_TILE_BUDGET")
+        .ok()
+        .and_then(|v| parse_budget(&v))
 }
 
 /// The mixed-precision storage rule, in one place: is lower tile
@@ -147,6 +231,363 @@ impl TilePtr {
     pub fn is_f32(&self) -> bool {
         matches!(self, TilePtr::F32 { .. })
     }
+
+    /// A placeholder for pointer tables whose real entries are installed
+    /// per-task by the out-of-core executor.  Well-aligned, zero-length,
+    /// never dereferenced before being overwritten by a pinned pointer.
+    pub fn dangling() -> TilePtr {
+        TilePtr::F64 {
+            ptr: std::ptr::NonNull::dangling().as_ptr(),
+            len: 0,
+        }
+    }
+}
+
+/// Residency of one [`TileStore`] slot.
+#[derive(Copy, Clone, PartialEq, Eq, Debug)]
+enum SlotState {
+    /// No data anywhere: either never materialized, or dropped after its
+    /// last plan use.  Pinning materializes zeros.
+    Empty,
+    /// Buffer in memory; counted against the budget.
+    Resident,
+    /// The prefetch lane is reading this tile off disk; counted against
+    /// the budget already.  Pinners wait on the store's condvar.
+    Loading,
+    /// Data lives in the spill file at the slot's fixed offset.
+    Spilled,
+}
+
+/// `next_use` value for a tile with no known upcoming use but live data
+/// (the default outside plan execution): evictable, but must spill.
+const NEXT_USE_FAR: u64 = u64::MAX - 1;
+/// `next_use` value for a tile the plan never reads again: dropped on
+/// eviction/unpin without a write-out (eager panel release).
+const NEXT_USE_DEAD: u64 = u64::MAX;
+
+struct Slot {
+    /// Tile data when `Resident`; an empty boxed slice otherwise.
+    buf: TileBuf,
+    state: SlotState,
+    /// In-flight task references: a pinned slot is never evicted, so
+    /// running kernels cannot fault mid-operation.
+    pins: u32,
+    /// Elements in the tile (rows * cols).
+    elems: usize,
+    /// Storage precision (fixed at construction by the MP band rule).
+    f32_tile: bool,
+    /// Resident footprint in bytes (`elems` * element width).
+    bytes: usize,
+    /// Fixed byte offset in the spill file.
+    offset: u64,
+    /// Plan step of the next use ([`NEXT_USE_FAR`] = unknown,
+    /// [`NEXT_USE_DEAD`] = never again).  Eviction picks the maximum.
+    next_use: u64,
+}
+
+fn empty_buf(f32_tile: bool) -> TileBuf {
+    if f32_tile {
+        TileBuf::F32(Vec::new().into_boxed_slice())
+    } else {
+        TileBuf::F64(Vec::new().into_boxed_slice())
+    }
+}
+
+fn alloc_buf(elems: usize, f32_tile: bool) -> TileBuf {
+    if f32_tile {
+        TileBuf::F32(vec![0.0f32; elems].into_boxed_slice())
+    } else {
+        TileBuf::F64(vec![0.0f64; elems].into_boxed_slice())
+    }
+}
+
+/// Raw byte view of a tile buffer for spill-file I/O.  f64/f32 → u8
+/// reinterpretation is always valid and round-trips bit-exactly.
+fn buf_bytes(buf: &TileBuf) -> &[u8] {
+    unsafe {
+        match buf {
+            TileBuf::F64(t) => std::slice::from_raw_parts(t.as_ptr() as *const u8, t.len() * 8),
+            TileBuf::F32(t) => std::slice::from_raw_parts(t.as_ptr() as *const u8, t.len() * 4),
+        }
+    }
+}
+
+fn buf_bytes_mut(buf: &mut TileBuf) -> &mut [u8] {
+    unsafe {
+        match buf {
+            TileBuf::F64(t) => {
+                std::slice::from_raw_parts_mut(t.as_mut_ptr() as *mut u8, t.len() * 8)
+            }
+            TileBuf::F32(t) => {
+                std::slice::from_raw_parts_mut(t.as_mut_ptr() as *mut u8, t.len() * 4)
+            }
+        }
+    }
+}
+
+fn tile_ptr_of(buf: &TileBuf) -> TilePtr {
+    match buf {
+        TileBuf::F64(t) => TilePtr::F64 {
+            ptr: t.as_ptr() as *mut f64,
+            len: t.len(),
+        },
+        TileBuf::F32(t) => TilePtr::F32 {
+            ptr: t.as_ptr() as *mut f32,
+            len: t.len(),
+        },
+    }
+}
+
+struct StoreInner {
+    slots: Vec<Slot>,
+    resident_bytes: usize,
+    peak_resident_bytes: usize,
+}
+
+/// Budget-bounded backing store for an out-of-core [`TileMatrix`].
+///
+/// Slots are addressed by the matrix's lower-triangular linear index
+/// (`i * (i + 1) / 2 + j`).  The protocol the executor follows:
+///
+/// 1. [`TileStore::pin`] every tile a task touches (the pointer is
+///    stable until the matching [`TileStore::unpin`] — pinned slots are
+///    never evicted, so kernels cannot fault mid-operation).
+/// 2. Run the task's ops.
+/// 3. [`TileStore::set_next_use`] each tile from the plan schedule
+///    (`None` = last use just happened), then [`TileStore::unpin`].
+///
+/// Eviction (inside `pin`, when materializing would exceed the budget)
+/// picks the unpinned resident slot with the **greatest** `next_use` —
+/// Belady's offline rule, exact here because the plan is the future.
+/// Dead tiles are dropped without a write-out.  A budgeted matrix
+/// therefore does *not* retain its factor after execution: dropped
+/// slots read back as zeros.  Every consumer (log-det, solve) runs
+/// inside the plan, so nothing outside tests ever re-reads the factor.
+///
+/// [`TileStore::prefetch`] (called from the executor's dedicated I/O
+/// thread) brings a spilled tile resident ahead of use when there is
+/// headroom, overlapping disk reads with compute.
+pub struct TileStore {
+    /// Peak-resident ceiling in bytes (clamped at construction to
+    /// [`TileStore::MIN_TILES`] full tiles).
+    budget: usize,
+    /// One full-size f64 tile in bytes (`ts * ts * 8`).
+    tile_bytes: usize,
+    /// Unlinked spill file: pread/pwrite at fixed per-slot offsets.
+    file: File,
+    inner: Mutex<StoreInner>,
+    /// Wakes pinners blocked on a `Loading` slot.
+    loaded: Condvar,
+}
+
+impl TileStore {
+    /// Minimum budget, in full-size tiles.  A task pins at most three
+    /// tiles (the Gemm operand set) and the single-lane prefetcher may
+    /// hold one more `Loading`; with one tile of slack on each side the
+    /// store can always honor a pin without exceeding the budget, so
+    /// `peak_resident_bytes() <= budget()` is an invariant, not a goal.
+    pub const MIN_TILES: usize = 6;
+
+    fn new(slots: Vec<Slot>, ts: usize, budget_bytes: usize) -> std::io::Result<TileStore> {
+        let tile_bytes = ts * ts * std::mem::size_of::<f64>();
+        static SPILL_SEQ: AtomicU64 = AtomicU64::new(0);
+        let path = std::env::temp_dir().join(format!(
+            "exageostat-spill-{}-{}.bin",
+            std::process::id(),
+            SPILL_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        let file = File::options()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(&path)?;
+        // Unlink immediately: on unix the open fd keeps the storage
+        // alive, and the spill data can never outlive the process.
+        std::fs::remove_file(&path)?;
+        Ok(TileStore {
+            budget: budget_bytes.max(Self::MIN_TILES * tile_bytes),
+            tile_bytes,
+            file,
+            inner: Mutex::new(StoreInner {
+                slots,
+                resident_bytes: 0,
+                peak_resident_bytes: 0,
+            }),
+            loaded: Condvar::new(),
+        })
+    }
+
+    /// Effective budget in bytes (after the [`TileStore::MIN_TILES`]
+    /// clamp).
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+    /// Bytes currently resident (including `Loading` reservations).
+    pub fn resident_bytes(&self) -> usize {
+        self.inner.lock().unwrap().resident_bytes
+    }
+    /// High-water mark of [`TileStore::resident_bytes`] over the store's
+    /// lifetime — the number the budget bounds.
+    pub fn peak_resident_bytes(&self) -> usize {
+        self.inner.lock().unwrap().peak_resident_bytes
+    }
+
+    /// Pin slot `idx` resident and return its (stable-until-unpin)
+    /// pointer, reading spilled data back from disk.
+    pub fn pin(&self, idx: usize) -> TilePtr {
+        self.pin_impl(idx, true)
+    }
+
+    /// [`TileStore::pin`] for a tile whose first touched op fully
+    /// overwrites it (a `Generate`): materializes zeros without reading
+    /// stale spilled data back — half the I/O on warm re-evaluations.
+    pub fn pin_for_write(&self, idx: usize) -> TilePtr {
+        self.pin_impl(idx, false)
+    }
+
+    fn pin_impl(&self, idx: usize, read_back: bool) -> TilePtr {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            match inner.slots[idx].state {
+                SlotState::Loading => inner = self.loaded.wait(inner).unwrap(),
+                SlotState::Resident => break,
+                s @ (SlotState::Empty | SlotState::Spilled) => {
+                    let need = inner.slots[idx].bytes;
+                    self.make_room(&mut inner, need, idx);
+                    let slot = &mut inner.slots[idx];
+                    let mut buf = alloc_buf(slot.elems, slot.f32_tile);
+                    if read_back && s == SlotState::Spilled {
+                        self.file
+                            .read_exact_at(buf_bytes_mut(&mut buf), slot.offset)
+                            .expect("tile spill read");
+                        TILE_SPILL_READS.fetch_add(1, Ordering::Relaxed);
+                    }
+                    slot.buf = buf;
+                    slot.state = SlotState::Resident;
+                    inner.resident_bytes += need;
+                    inner.peak_resident_bytes =
+                        inner.peak_resident_bytes.max(inner.resident_bytes);
+                    break;
+                }
+            }
+        }
+        let slot = &mut inner.slots[idx];
+        slot.pins += 1;
+        tile_ptr_of(&slot.buf)
+    }
+
+    /// Release one pin.  A slot whose last use has passed
+    /// (`set_next_use(_, None)`) is dropped here the moment its last pin
+    /// goes — the eager finished-panel release of the left-looking sweep.
+    pub fn unpin(&self, idx: usize) {
+        let mut inner = self.inner.lock().unwrap();
+        let slot = &mut inner.slots[idx];
+        debug_assert!(slot.pins > 0, "unpin without pin (slot {idx})");
+        slot.pins -= 1;
+        if slot.pins == 0 && slot.next_use == NEXT_USE_DEAD && slot.state == SlotState::Resident {
+            slot.buf = empty_buf(slot.f32_tile);
+            slot.state = SlotState::Empty;
+            let bytes = slot.bytes;
+            inner.resident_bytes -= bytes;
+        }
+    }
+
+    /// Record slot `idx`'s next plan step (`None` = the plan never
+    /// touches it again).  Dead unpinned residents are dropped on the
+    /// spot; the executor normally calls this while still holding the
+    /// pin, deferring the drop to [`TileStore::unpin`].
+    pub fn set_next_use(&self, idx: usize, step: Option<u64>) {
+        let mut inner = self.inner.lock().unwrap();
+        let slot = &mut inner.slots[idx];
+        slot.next_use = step.unwrap_or(NEXT_USE_DEAD);
+        if slot.next_use == NEXT_USE_DEAD
+            && slot.pins == 0
+            && slot.state == SlotState::Resident
+        {
+            slot.buf = empty_buf(slot.f32_tile);
+            slot.state = SlotState::Empty;
+            let bytes = slot.bytes;
+            inner.resident_bytes -= bytes;
+        }
+    }
+
+    /// Bring a spilled slot resident ahead of use, from the dedicated
+    /// I/O lane.  Only proceeds with two full tiles of headroom below
+    /// the budget (never evicts, never blocks the executor beyond the
+    /// brief slot-state flip), and reads the file **outside** the lock
+    /// so demand pins of other tiles proceed concurrently.  Returns
+    /// whether a read was started.
+    pub fn prefetch(&self, idx: usize) -> bool {
+        let (elems, f32_tile, offset);
+        {
+            let mut inner = self.inner.lock().unwrap();
+            let slot = &inner.slots[idx];
+            if slot.state != SlotState::Spilled {
+                return false;
+            }
+            let need = slot.bytes;
+            if inner.resident_bytes + need + 2 * self.tile_bytes > self.budget {
+                return false;
+            }
+            (elems, f32_tile, offset) = (slot.elems, slot.f32_tile, slot.offset);
+            inner.slots[idx].state = SlotState::Loading;
+            inner.resident_bytes += need;
+            inner.peak_resident_bytes = inner.peak_resident_bytes.max(inner.resident_bytes);
+        }
+        let mut buf = alloc_buf(elems, f32_tile);
+        self.file
+            .read_exact_at(buf_bytes_mut(&mut buf), offset)
+            .expect("tile prefetch read");
+        TILE_SPILL_READS.fetch_add(1, Ordering::Relaxed);
+        TILE_PREFETCHES.fetch_add(1, Ordering::Relaxed);
+        let mut inner = self.inner.lock().unwrap();
+        let slot = &mut inner.slots[idx];
+        debug_assert_eq!(slot.state, SlotState::Loading);
+        slot.buf = buf;
+        slot.state = SlotState::Resident;
+        self.loaded.notify_all();
+        true
+    }
+
+    /// Evict until `need` more bytes fit, skipping `keep` and anything
+    /// pinned or loading.  Victim = greatest `next_use` (Belady).  If
+    /// everything left is pinned/loading the pin proceeds anyway — the
+    /// [`TileStore::MIN_TILES`] clamp sizes the budget so that worst
+    /// case still lands under it.
+    fn make_room(&self, inner: &mut StoreInner, need: usize, keep: usize) {
+        while inner.resident_bytes + need > self.budget {
+            let mut victim: Option<(usize, u64)> = None;
+            for (i, s) in inner.slots.iter().enumerate() {
+                if i == keep || s.pins != 0 || s.state != SlotState::Resident {
+                    continue;
+                }
+                let farther = match victim {
+                    None => true,
+                    Some((_, nu)) => s.next_use > nu,
+                };
+                if farther {
+                    victim = Some((i, s.next_use));
+                }
+            }
+            let Some((v, _)) = victim else { break };
+            let slot = &mut inner.slots[v];
+            if slot.next_use != NEXT_USE_DEAD {
+                self.file
+                    .write_all_at(buf_bytes(&slot.buf), slot.offset)
+                    .expect("tile spill write");
+                TILE_SPILL_WRITES.fetch_add(1, Ordering::Relaxed);
+                slot.state = SlotState::Spilled;
+            } else {
+                // Dead by the schedule: the value is never read again,
+                // so dropping beats a wasted write-out.
+                slot.state = SlotState::Empty;
+            }
+            slot.buf = empty_buf(slot.f32_tile);
+            let bytes = slot.bytes;
+            inner.resident_bytes -= bytes;
+        }
+    }
 }
 
 /// Lower-triangular tile storage for a symmetric matrix.
@@ -157,8 +598,12 @@ pub struct TileMatrix {
     /// `Some(band)` for mixed-precision storage: tiles with
     /// `i - j > band` are f32.  `None` = every tile f64.
     mp_band: Option<usize>,
-    /// Lower tiles, indexed by `tri_index(i, j)` for `i >= j`.
+    /// Lower tiles, indexed by `tri_index(i, j)` for `i >= j`.  Empty in
+    /// out-of-core mode, where `store` owns the slots instead.
     tiles: Vec<TileBuf>,
+    /// `Some` for a budget-bounded out-of-core matrix
+    /// ([`TileMatrix::zeros_spill`]); `None` = fully resident.
+    store: Option<TileStore>,
 }
 
 impl TileMatrix {
@@ -201,7 +646,72 @@ impl TileMatrix {
             nt,
             mp_band,
             tiles,
+            store: None,
         }
+    }
+
+    /// Allocate an **out-of-core** tile matrix: no tile is materialized
+    /// up front, and at most `budget_bytes` of tiles (clamped up to
+    /// [`TileStore::MIN_TILES`] full tiles) are ever resident at once —
+    /// the rest live in an unlinked spill file.  `mp_band` selects
+    /// mixed-precision storage exactly as [`TileMatrix::zeros_mp`].
+    ///
+    /// Such a matrix is executed by the serial plan-order spill sweep in
+    /// `pipeline::run_tiled` (which branches on [`TileMatrix::store`]);
+    /// direct buffer accessors ([`TileMatrix::tile`],
+    /// [`TileMatrix::tile_ptr`], …) panic, while element-level
+    /// [`TileMatrix::get`]/[`TileMatrix::set`] pin through the store.
+    pub fn zeros_spill(
+        n: usize,
+        ts: usize,
+        mp_band: Option<usize>,
+        budget_bytes: usize,
+    ) -> std::io::Result<Self> {
+        assert!(n > 0 && ts > 0);
+        TILE_MATRIX_ALLOCS.with(|c| c.set(c.get() + 1));
+        let nt = n.div_ceil(ts);
+        let mut slots = Vec::with_capacity(nt * (nt + 1) / 2);
+        let mut offset = 0u64;
+        for i in 0..nt {
+            for j in 0..=i {
+                let elems = Self::dim_at(n, ts, i) * Self::dim_at(n, ts, j);
+                let f32_tile = match mp_band {
+                    Some(band) => !mp_tile_is_f64(band, i, j),
+                    None => false,
+                };
+                let bytes = elems * if f32_tile { 4 } else { 8 };
+                slots.push(Slot {
+                    buf: empty_buf(f32_tile),
+                    state: SlotState::Empty,
+                    pins: 0,
+                    elems,
+                    f32_tile,
+                    bytes,
+                    offset,
+                    next_use: NEXT_USE_FAR,
+                });
+                offset += bytes as u64;
+            }
+        }
+        Ok(TileMatrix {
+            n,
+            ts,
+            nt,
+            mp_band,
+            tiles: Vec::new(),
+            store: Some(TileStore::new(slots, ts, budget_bytes)?),
+        })
+    }
+
+    /// The out-of-core backing store, if this matrix is budgeted.
+    pub fn store(&self) -> Option<&TileStore> {
+        self.store.as_ref()
+    }
+
+    /// Linear store-slot index of lower tile (i, j) — the index
+    /// [`TileStore`] methods take.
+    pub fn slot_index(&self, i: usize, j: usize) -> usize {
+        self.tri_index(i, j)
     }
 
     #[inline]
@@ -248,30 +758,49 @@ impl TileMatrix {
         i * (i + 1) / 2 + j
     }
 
-    /// Is tile (i, j) stored in f32?
+    /// Is tile (i, j) stored in f32?  Decided by the MP band rule, so it
+    /// answers identically for resident and out-of-core matrices.
     pub fn tile_is_f32(&self, i: usize, j: usize) -> bool {
-        matches!(self.tiles[self.tri_index(i, j)], TileBuf::F32(_))
+        debug_assert!(i >= j && i < self.nt, "lower tile ({i},{j})");
+        match self.mp_band {
+            Some(band) => !mp_tile_is_f64(band, i, j),
+            None => false,
+        }
+    }
+
+    #[inline]
+    fn assert_resident(&self, what: &str) {
+        assert!(
+            self.store.is_none(),
+            "{what} on an out-of-core TileMatrix: tiles are not directly \
+             addressable; pin through store() or run via the spill executor"
+        );
     }
 
     /// Borrow f64 tile (i, j), i >= j.  Panics on an f32-stored tile
-    /// (use [`TileMatrix::tile_f32`]).
+    /// (use [`TileMatrix::tile_f32`]) and on an out-of-core matrix.
     pub fn tile(&self, i: usize, j: usize) -> &[f64] {
+        self.assert_resident("tile()");
         match &self.tiles[self.tri_index(i, j)] {
             TileBuf::F64(t) => t,
             TileBuf::F32(_) => panic!("tile ({i},{j}) is f32-stored; use tile_f32"),
         }
     }
 
-    /// Borrow f32 tile (i, j).  Panics on an f64-stored tile.
+    /// Borrow f32 tile (i, j).  Panics on an f64-stored tile and on an
+    /// out-of-core matrix.
     pub fn tile_f32(&self, i: usize, j: usize) -> &[f32] {
+        self.assert_resident("tile_f32()");
         match &self.tiles[self.tri_index(i, j)] {
             TileBuf::F32(t) => t,
             TileBuf::F64(_) => panic!("tile ({i},{j}) is f64-stored; use tile"),
         }
     }
 
-    /// Mutably borrow f64 tile (i, j), i >= j.  Panics on an f32 tile.
+    /// Mutably borrow f64 tile (i, j), i >= j.  Panics on an f32 tile
+    /// and on an out-of-core matrix.
     pub fn tile_mut(&mut self, i: usize, j: usize) -> &mut [f64] {
+        self.assert_resident("tile_mut()");
         let idx = self.tri_index(i, j);
         match &mut self.tiles[idx] {
             TileBuf::F64(t) => t,
@@ -279,8 +808,11 @@ impl TileMatrix {
         }
     }
 
-    /// Raw pointer for task capture (precision-tagged).
+    /// Raw pointer for task capture (precision-tagged).  Panics on an
+    /// out-of-core matrix, whose pointers are only stable while pinned —
+    /// use [`TileStore::pin`] via [`TileMatrix::store`].
     pub fn tile_ptr(&self, i: usize, j: usize) -> TilePtr {
+        self.assert_resident("tile_ptr()");
         let idx = self.tri_index(i, j);
         match &self.tiles[idx] {
             TileBuf::F64(t) => TilePtr::F64 {
@@ -302,7 +834,21 @@ impl TileMatrix {
         let (ti, li) = (gi / self.ts, gi % self.ts);
         let (tj, lj) = (gj / self.ts, gj % self.ts);
         let h = self.tile_rows(ti);
-        match &self.tiles[self.tri_index(ti, tj)] {
+        let idx = self.tri_index(ti, tj);
+        if let Some(st) = &self.store {
+            let p = st.pin(idx);
+            // SAFETY: the pin keeps the buffer alive and unshared with
+            // any writer for the duration of this read.
+            let v = unsafe {
+                match p.mat_ref() {
+                    MatRef::F64(t) => t[li + lj * h],
+                    MatRef::F32(t) => t[li + lj * h] as f64,
+                }
+            };
+            st.unpin(idx);
+            return v;
+        }
+        match &self.tiles[idx] {
             TileBuf::F64(t) => t[li + lj * h],
             TileBuf::F32(t) => t[li + lj * h] as f64,
         }
@@ -316,6 +862,18 @@ impl TileMatrix {
         let (tj, lj) = (gj / self.ts, gj % self.ts);
         let h = self.tile_rows(ti);
         let idx = self.tri_index(ti, tj);
+        if let Some(st) = &self.store {
+            let p = st.pin(idx);
+            // SAFETY: exclusive access — `&mut self` plus the pin.
+            unsafe {
+                match p.mat_mut() {
+                    MatMut::F64(t) => t[li + lj * h] = v,
+                    MatMut::F32(t) => t[li + lj * h] = v as f32,
+                }
+            }
+            st.unpin(idx);
+            return;
+        }
         match &mut self.tiles[idx] {
             TileBuf::F64(t) => t[li + lj * h] = v,
             TileBuf::F32(t) => t[li + lj * h] = v as f32,
@@ -392,9 +950,10 @@ impl TileMatrix {
     /// real (halved) off-band memory traffic.
     pub fn tile_bytes_at(&self, i: usize, j: usize) -> usize {
         let elems = self.tile_rows(i) * self.tile_cols(j);
-        match &self.tiles[self.tri_index(i, j)] {
-            TileBuf::F64(_) => elems * std::mem::size_of::<f64>(),
-            TileBuf::F32(_) => elems * std::mem::size_of::<f32>(),
+        if self.tile_is_f32(i, j) {
+            elems * std::mem::size_of::<f32>()
+        } else {
+            elems * std::mem::size_of::<f64>()
         }
     }
 }
@@ -588,6 +1147,113 @@ mod tests {
         assert_eq!(tm.get(12, 1), 1.0, "stored through f32");
         tm.set(1, 2, v); // diagonal tile: f64
         assert_eq!(tm.get(1, 2), v);
+    }
+
+    #[test]
+    fn parse_budget_suffixes_and_off_words() {
+        assert_eq!(parse_budget("4096"), Some(4096));
+        assert_eq!(parse_budget("16K"), Some(16 << 10));
+        assert_eq!(parse_budget("2m"), Some(2 << 20));
+        assert_eq!(parse_budget("1GB"), Some(1 << 30));
+        assert_eq!(parse_budget(" 8kb "), Some(8 << 10));
+        assert_eq!(parse_budget("0"), None);
+        assert_eq!(parse_budget("off"), None);
+        assert_eq!(parse_budget("Unbounded"), None);
+        assert_eq!(parse_budget(""), None);
+        assert_eq!(parse_budget("lots"), None);
+    }
+
+    #[test]
+    fn spill_round_trip_preserves_data_and_respects_budget() {
+        // 10 tile rows of ts=4 → 55 tiles; budget clamps to 6 tiles
+        // (768 B), far below the ~14 KB dense set, so sets/gets churn
+        // through the spill file.
+        let mut tm = TileMatrix::zeros_spill(40, 4, None, 1).unwrap();
+        let st_budget = tm.store().unwrap().budget();
+        assert_eq!(st_budget, TileStore::MIN_TILES * 4 * 4 * 8);
+        let w0 = tile_spill_writes();
+        for i in 0..40 {
+            for j in 0..=i {
+                tm.set(i, j, (i * 40 + j) as f64 + 0.5);
+            }
+        }
+        for i in 0..40 {
+            for j in 0..=i {
+                assert_eq!(tm.get(i, j), (i * 40 + j) as f64 + 0.5, "({i},{j})");
+            }
+        }
+        let st = tm.store().unwrap();
+        assert!(tile_spill_writes() > w0, "tiny budget must force spills");
+        assert!(st.peak_resident_bytes() <= st.budget());
+        assert!(st.resident_bytes() <= st.budget());
+    }
+
+    #[test]
+    fn store_pin_protocol_and_dead_release() {
+        let tm = TileMatrix::zeros_spill(8, 4, None, 1 << 20).unwrap();
+        let st = tm.store().unwrap();
+        let idx = tm.slot_index(1, 0);
+        let p = st.pin(idx);
+        unsafe { p.as_mut()[0] = 7.0 };
+        // Double pin returns the same buffer.
+        let p2 = st.pin(idx);
+        assert_eq!(unsafe { p2.as_ref()[0] }, 7.0);
+        st.unpin(idx);
+        // Mark dead while still pinned: the drop happens at last unpin.
+        st.set_next_use(idx, None);
+        let before = st.resident_bytes();
+        st.unpin(idx);
+        assert!(st.resident_bytes() < before, "dead tile released eagerly");
+        // A dead tile re-pins as zeros (never written out).
+        assert_eq!(tm.get(4, 0), 0.0);
+    }
+
+    #[test]
+    fn store_prefetch_restores_spilled_tile() {
+        // Budget of exactly the clamp: 6 full tiles resident max.
+        let tm = TileMatrix::zeros_spill(48, 4, None, 1).unwrap();
+        let st = tm.store().unwrap();
+        // Touch every diagonal tile; early ones spill.
+        let nt = tm.nt();
+        for t in 0..nt {
+            let p = st.pin(tm.slot_index(t, t));
+            unsafe { p.as_mut()[0] = t as f64 + 1.0 };
+            st.unpin(tm.slot_index(t, t));
+        }
+        let idx = tm.slot_index(0, 0);
+        // (0,0) must be spilled by now; prefetch requires headroom, so
+        // release the budget first by marking late tiles dead.
+        for t in 3..nt {
+            st.set_next_use(tm.slot_index(t, t), None);
+        }
+        let pf0 = tile_prefetches();
+        assert!(st.prefetch(idx), "spilled tile with headroom prefetches");
+        assert!(!st.prefetch(idx), "already resident: prefetch declines");
+        assert_eq!(tile_prefetches(), pf0 + 1);
+        assert_eq!(tm.get(0, 0), 1.0, "prefetched data intact");
+    }
+
+    #[test]
+    fn out_of_core_direct_accessors_panic() {
+        use std::panic::{catch_unwind, AssertUnwindSafe};
+        let tm = TileMatrix::zeros_spill(8, 4, None, 1 << 20).unwrap();
+        assert!(catch_unwind(AssertUnwindSafe(|| tm.tile_ptr(0, 0))).is_err());
+        assert!(catch_unwind(AssertUnwindSafe(|| tm.tile(0, 0))).is_err());
+    }
+
+    #[test]
+    fn mp_spill_layout_matches_resident_rule() {
+        let tm = TileMatrix::zeros_spill(16, 4, Some(1), 1 << 20).unwrap();
+        assert_eq!(tm.mp_band(), Some(1));
+        for i in 0..tm.nt() {
+            for j in 0..=i {
+                assert_eq!(tm.tile_is_f32(i, j), i - j > 1, "({i},{j})");
+            }
+        }
+        let mut tm = tm;
+        let v = 1.0 + 1e-12;
+        tm.set(12, 1, v); // off-band: stored f32 even out-of-core
+        assert_eq!(tm.get(12, 1), 1.0);
     }
 
     #[test]

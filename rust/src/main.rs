@@ -224,8 +224,11 @@ fn cmd_sst(args: &Args) -> anyhow::Result<()> {
         ..sst::SstConfig::default()
     };
     let exa = ExaGeoStat::init(hardware(args)?);
-    for day in 0..days {
-        let d = sst::generate_day(&cfg, day, &exa.ctx())?;
+    let ctx = exa.ctx();
+    // Stream days one at a time: only the day being fitted is resident.
+    for d in sst::stream_days(&cfg, &ctx) {
+        let d = d?;
+        let day = d.day;
         let (locs, z) = d.valid_observations();
         if d.valid_fraction() < 0.5 {
             println!(
@@ -261,6 +264,14 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let hw = hardware(args)?;
     let clients = args.get_usize("clients", 4)?.max(1);
     let shards = args.get_usize("shards", 1)?.max(1);
+    // One unified knob for every serve-side memory pool: tile workspace
+    // (spill threshold), session cache and dataset cache split a single
+    // budget proportionally (`Coordinator::with_mem_budget`).  Accepts
+    // K/M/G suffixes; "off" (or omitting the flag) keeps the defaults
+    // with fully-resident workspaces.
+    let mem_budget = args
+        .get("mem-budget")
+        .and_then(|v| exageostat::linalg::tile::parse_budget(v));
     let opts = ServeOptions {
         window: args.get_usize("window", 2 * clients)?.max(1),
         depth_limit: match args.get("depth-limit") {
@@ -269,7 +280,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         },
     };
     println!(
-        "serving with {clients} client runners, window {} on {} workers ({:?}, ts {}){}",
+        "serving with {clients} client runners, window {} on {} workers ({:?}, ts {}){}{}",
         opts.window,
         hw.ncores.max(1),
         hw.policy,
@@ -278,16 +289,21 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             format!(", {shards} shards")
         } else {
             String::new()
+        },
+        match mem_budget {
+            Some(b) => format!(", {:.0} MiB memory budget", b as f64 / (1 << 20) as f64),
+            None => String::new(),
         }
     );
 
     // --shards N > 1 splits the worker pool into N member coordinators:
     // requests spread across them by dataset affinity, and large tiled
     // pipelines partition 2-D block-cyclic over all N runtimes.
-    let coord: Arc<dyn Dispatch> = if shards > 1 {
-        Arc::new(ShardedCoordinator::new(hw, shards))
-    } else {
-        Arc::new(Coordinator::new(hw))
+    let coord: Arc<dyn Dispatch> = match (shards > 1, mem_budget) {
+        (true, Some(b)) => Arc::new(ShardedCoordinator::with_mem_budget(hw, shards, b)),
+        (true, None) => Arc::new(ShardedCoordinator::new(hw, shards)),
+        (false, Some(b)) => Arc::new(Coordinator::with_mem_budget(hw, b)),
+        (false, None) => Arc::new(Coordinator::new(hw)),
     };
     let client = Client::from_dispatch(coord.clone(), clients);
     let on_done = |id: u64, c: &Completion| match c {
@@ -369,6 +385,12 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         st.tasks_executed,
         st.worker_threads
     );
+    if st.tasks_skipped > 0 {
+        println!(
+            "cancellation skipped {} queued task(s) before they ran",
+            st.tasks_skipped
+        );
+    }
     if let Some(out) = args.get("out") {
         let json = format!(
             "{{\n  \"requests\": {},\n  \"ok\": {},\n  \"failed\": {},\n  \
@@ -376,7 +398,8 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
              \"total_s\": {total_s},\n  \"req_per_s\": {},\n  \"p50_s\": {},\n  \
              \"p95_s\": {},\n  \"p99_s\": {},\n  \"data_cache_hits\": {},\n  \
              \"data_cache_evictions\": {},\n  \"session_cache_hits\": {},\n  \
-             \"session_cache_evictions\": {}\n}}\n",
+             \"session_cache_evictions\": {},\n  \"tasks_executed\": {},\n  \
+             \"tasks_skipped\": {}\n}}\n",
             summary.submitted,
             summary.ok,
             summary.failed,
@@ -390,6 +413,8 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             st.data_cache_evictions,
             st.session_cache_hits,
             st.session_cache_evictions,
+            st.tasks_executed,
+            st.tasks_skipped,
         );
         std::fs::write(out, json).with_context(|| format!("writing {out}"))?;
         println!("stats written to {out}");
@@ -425,6 +450,7 @@ fn main() {
                  common flags: --ncores N --ts N --sched eager|prio|lws|random\n\
                  serve input:  --requests file.jsonl | --stdin | --socket path.sock\n\
                  serve flags:  --clients K --window W --shards N [--depth-limit D]\n\
+                 \x20             [--mem-budget 2G]\n\
                  \x20             [--once | --max-conns N] [--out stats.json]\n\
                  see rust/src/main.rs header for examples"
             );

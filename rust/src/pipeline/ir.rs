@@ -61,6 +61,55 @@ impl Op {
             Op::SolveTrsv { .. } => TaskKind::TRSM,
         }
     }
+
+    /// The factor-matrix tiles this op touches, as `(i, j)` lower-tile
+    /// coordinates (up to three: the Gemm operand set).  This is the
+    /// out-of-core executor's pin set — kept next to the op definitions
+    /// so a new op cannot silently run unpinned.  Solve ops touch
+    /// segments of the RHS vector too, but segments are never spilled
+    /// (the vector is O(n), the matrix O(n²)).
+    pub fn tile_operands(&self) -> TileOperands {
+        let mut t = TileOperands::default();
+        match *self {
+            Op::Generate { i, j } => t.push(i, j),
+            Op::Potrf { k } | Op::LogDetReduce { k } => t.push(k, k),
+            Op::Trsm { k, i } => {
+                t.push(k, k);
+                t.push(i, k);
+            }
+            Op::Syrk { k, i } => {
+                t.push(i, k);
+                t.push(i, i);
+            }
+            Op::Gemm { k, i, j } => {
+                t.push(i, k);
+                t.push(j, k);
+                t.push(i, j);
+            }
+            Op::SolveGemv { i, j } => t.push(i, j),
+            Op::SolveTrsv { i } => t.push(i, i),
+        }
+        t
+    }
+}
+
+/// Up to three lower-tile coordinates (inline, no allocation — this is
+/// walked per task in the out-of-core executor's hot loop).
+#[derive(Copy, Clone, Debug, Default)]
+pub struct TileOperands {
+    tiles: [(usize, usize); 3],
+    len: usize,
+}
+
+impl TileOperands {
+    fn push(&mut self, i: usize, j: usize) {
+        self.tiles[self.len] = (i, j);
+        self.len += 1;
+    }
+    /// The operand coordinates, in op order.
+    pub fn as_slice(&self) -> &[(usize, usize)] {
+        &self.tiles[..self.len]
+    }
 }
 
 /// Storage/compute precision of a node's output tile.

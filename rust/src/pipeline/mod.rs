@@ -8,12 +8,18 @@
 //! [`crate::linalg::cholesky`] remain as the reference/test layer the
 //! planner's parity suite compares against.
 //!
-//! Two executors share the IR:
+//! Three executors share the IR:
 //!
 //! * [`run_tiled`] — dense-tile storage ([`TileMatrix`]): exact, DST
 //!   (structural band), MP (precision dispatch on the tile's storage),
 //!   simulation (factor only) and kriging (factor + solve).  Fused
 //!   groups run as single runtime tasks.
+//! * the out-of-core spill executor — a [`run_tiled`] call whose matrix
+//!   carries a budget-bounded `TileStore` runs the plan serially in plan
+//!   order, pinning each task's tile set resident first and prefetching
+//!   the next panel on a dedicated I/O thread; bit-identical to the
+//!   resident path on f64 exact/DST because the op bodies and their
+//!   dependency-ordered inputs are unchanged.
 //! * [`run_tlr`] — low-rank tiles mutate rank-adaptive heap storage, so
 //!   the plan executes serially on the calling thread in plan order
 //!   (valid because plans are topologically ordered), polling the
@@ -104,11 +110,19 @@ impl TiledRunner {
         y: Option<&TileVector>,
     ) -> TiledRunner {
         let nt = a.nt();
+        let spilled = a.store().is_some();
         let mut ptrs = Vec::with_capacity(nt * (nt + 1) / 2);
         let mut blocks = Vec::with_capacity(nt * (nt + 1) / 2);
         for i in 0..nt {
             for j in 0..=i {
-                ptrs.push(a.tile_ptr(i, j));
+                // Out-of-core matrix: pointers are only stable while
+                // pinned, so the table starts as placeholders and the
+                // spill executor installs the real pointer per task.
+                ptrs.push(if spilled {
+                    TilePtr::dangling()
+                } else {
+                    a.tile_ptr(i, j)
+                });
                 blocks.push(dist.and_then(|c| c.block(i, j)));
             }
         }
@@ -287,6 +301,13 @@ pub fn run_tiled(
     band: Option<usize>,
     with_logdet: bool,
 ) -> anyhow::Result<TiledOutcome> {
+    // An out-of-core matrix runs on the budget-bounded spill executor —
+    // it wins over sharding: a budgeted workspace means this machine
+    // cannot hold the tile set, so fanning the plan out across runtimes
+    // that share its memory would defeat the budget.
+    if a.store().is_some() {
+        return run_tiled_spilled(problem, theta, ctx, dist, a, y, band, with_logdet);
+    }
     // A context carrying a shard set partitions the plan 2-D
     // block-cyclically across the set's runtimes (tile grids below the
     // set's `min_nt` threshold are not worth splitting and run whole on
@@ -317,6 +338,180 @@ pub fn run_tiled(
     if skipped > 0 {
         // Cancelled mid-flight: the factor is incomplete, so neither the
         // fail flag nor the log-det slots are meaningful.
+        return Err(ApiError::Cancelled.into());
+    }
+    let not_spd = check_fail(&runner.fail).err().map(|e| e.pivot);
+    let logdet = if with_logdet && not_spd.is_none() {
+        runner.logdet()
+    } else {
+        0.0
+    };
+    Ok(TiledOutcome { not_spd, logdet })
+}
+
+/// Prefetch horizon of the spill executor, in plan steps: tiles first
+/// needed this many tasks ahead are requested on the I/O lane.  Deep
+/// enough to cover one disk read per compute task, shallow enough that
+/// prefetched tiles don't crowd the budget.
+const SPILL_LOOKAHEAD: usize = 8;
+
+/// Plan-derived residency schedule for one spill run: when each tile is
+/// used, so eviction is Belady-exact and write-only first touches skip
+/// the read-back.
+struct SpillSchedule {
+    /// Per slot (`tri(i, j)`): ascending plan steps touching the tile.
+    /// The executor pops the front as steps retire; the front is the
+    /// tile's next-use the store evicts against.
+    uses: Vec<std::collections::VecDeque<u32>>,
+    /// Per slot: the step whose Generate fully overwrites the tile
+    /// (`u32::MAX` if the plan never generates it) — pinned for write,
+    /// skipping the spill-file read.
+    gen_step: Vec<u32>,
+    /// Per step: deduped slots touched, in first-touch order (the pin
+    /// set; also the prefetch request list for the lookahead window).
+    step_tiles: Vec<Vec<u32>>,
+}
+
+fn build_spill_schedule(plan: &ExecutionPlan, ir: &TaskIR, nslots: usize) -> SpillSchedule {
+    let mut uses = vec![std::collections::VecDeque::new(); nslots];
+    let mut gen_step = vec![u32::MAX; nslots];
+    let mut step_tiles = Vec::with_capacity(plan.tasks.len());
+    for (s, task) in plan.tasks.iter().enumerate() {
+        let mut tiles: Vec<u32> = Vec::new();
+        for &id in &task.ops {
+            let op = ir.nodes[id].op;
+            for &(i, j) in op.tile_operands().as_slice() {
+                let t = tri(i, j) as u32;
+                if !tiles.contains(&t) {
+                    tiles.push(t);
+                }
+                if matches!(op, Op::Generate { .. }) {
+                    gen_step[t as usize] = s as u32;
+                }
+            }
+        }
+        for &t in &tiles {
+            uses[t as usize].push_back(s as u32);
+        }
+        step_tiles.push(tiles);
+    }
+    SpillSchedule {
+        uses,
+        gen_step,
+        step_tiles,
+    }
+}
+
+/// Queue prefetches for every tile step `target` touches — except tiles
+/// that step regenerates (their pin is write-only; reading stale spill
+/// data back would be wasted I/O and budget).
+fn send_prefetches(tx: &std::sync::mpsc::Sender<u32>, sched: &SpillSchedule, target: usize) {
+    for &t in &sched.step_tiles[target] {
+        if sched.gen_step[t as usize] != target as u32 {
+            let _ = tx.send(t);
+        }
+    }
+}
+
+/// The out-of-core executor: the plan runs serially on the calling
+/// thread in plan order (topologically valid, same as [`run_tlr`]),
+/// each task pinning its tile set in the budget-bounded [`TileStore`]
+/// before running and feeding next-use/dead hints back afterwards, while
+/// a dedicated I/O thread prefetches the tiles of the next
+/// [`SPILL_LOOKAHEAD`] steps.  Serial op execution means every op sees
+/// exactly the operand values of the resident executor's dependency
+/// order, so f64 exact/DST results are bit-identical to the resident
+/// path — spill round-trips are byte-exact — and the host-side log-det
+/// summation tree is shared via the same [`TiledRunner`].
+#[allow(clippy::too_many_arguments)]
+fn run_tiled_spilled(
+    problem: &Problem,
+    theta: &[f64],
+    ctx: &ExecCtx,
+    dist: Option<&DistCache>,
+    a: &TileMatrix,
+    y: Option<&TileVector>,
+    band: Option<usize>,
+    with_logdet: bool,
+) -> anyhow::Result<TiledOutcome> {
+    let store = a.store().expect("run_tiled_spilled needs an out-of-core matrix");
+    let spec = TiledSpec {
+        n: a.n(),
+        ts: a.ts(),
+        band,
+        mp_band: a.mp_band(),
+        tlr: false,
+        with_solve: y.is_some(),
+        with_logdet,
+        owners: 1,
+    };
+    let ir = lower_tiled(&spec);
+    let plan = planner::plan(&ir, &PlanKnobs::from_env());
+    let mut runner = TiledRunner::new(problem, theta, &ctx.engine, dist, a, y);
+    let mut sched = build_spill_schedule(&plan, &ir, runner.ptrs.len());
+    // Reset residual next-use state from any previous eval on this
+    // workspace: every slot gets its first step under the new plan, and
+    // slots the plan never touches (off-band DST tiles) go dead — a warm
+    // re-eval starts from a clean, minimal residency.
+    for t in 0..runner.ptrs.len() {
+        store.set_next_use(t, sched.uses[t].front().map(|&s| s as u64));
+    }
+    let cancelled = std::thread::scope(|sc| {
+        let (tx, rx) = std::sync::mpsc::channel::<u32>();
+        // The I/O lane: drains prefetch requests until the executor
+        // drops `tx`; the scope joins it on exit.
+        sc.spawn(move || {
+            for t in rx {
+                store.prefetch(t as usize);
+            }
+        });
+        for s in 1..SPILL_LOOKAHEAD.min(plan.tasks.len()) {
+            send_prefetches(&tx, &sched, s);
+        }
+        let mut pinned: Vec<u32> = Vec::with_capacity(4);
+        for (step, task) in plan.tasks.iter().enumerate() {
+            if ctx.cancel.is_cancelled() {
+                return true;
+            }
+            pinned.clear();
+            for &id in &task.ops {
+                for &(i, j) in ir.nodes[id].op.tile_operands().as_slice() {
+                    let t = tri(i, j) as u32;
+                    if !pinned.contains(&t) {
+                        // First touch by this task's Generate: the op
+                        // overwrites the whole tile, so materialize
+                        // without reading stale spill data back.
+                        let ptr = if sched.gen_step[t as usize] == step as u32 {
+                            store.pin_for_write(t as usize)
+                        } else {
+                            store.pin(t as usize)
+                        };
+                        runner.ptrs[t as usize] = ptr;
+                        pinned.push(t);
+                    }
+                }
+            }
+            for &id in &task.ops {
+                runner.run_op(ir.nodes[id].op);
+            }
+            for &t in &pinned {
+                let q = &mut sched.uses[t as usize];
+                while q.front() == Some(&(step as u32)) {
+                    q.pop_front();
+                }
+                // Hint before unpin: a tile with no further use is
+                // dropped by the unpin itself (eager panel release).
+                store.set_next_use(t as usize, q.front().map(|&s| s as u64));
+                store.unpin(t as usize);
+            }
+            let target = step + SPILL_LOOKAHEAD;
+            if target < plan.tasks.len() {
+                send_prefetches(&tx, &sched, target);
+            }
+        }
+        false
+    });
+    if cancelled {
         return Err(ApiError::Cancelled.into());
     }
     let not_spd = check_fail(&runner.fail).err().map(|e| e.pivot);
@@ -509,6 +704,35 @@ mod tests {
             results.push((out.logdet, y.dot_self()));
             if let Some(set) = owned {
                 set.shutdown();
+            }
+        }
+        assert_eq!(results[0].0.to_bits(), results[1].0.to_bits(), "logdet");
+        assert_eq!(results[0].1.to_bits(), results[1].1.to_bits(), "sse");
+    }
+
+    /// The out-of-core executor preserves every op body and the
+    /// dependency-ordered inputs, so a run under a tiny tile budget must
+    /// reproduce the resident result to the bit — while never holding
+    /// more than the budget resident.
+    #[test]
+    fn spilled_run_tiled_matches_resident_bit_identically() {
+        let _serial = planner::fuse_test_lock();
+        let p = small_problem(54, 45);
+        let theta = [1.15, 0.13, 0.5];
+        let ctx = ExecCtx::new(2, 16, Policy::Lws);
+        let mut results = Vec::new();
+        for budget in [None, Some(1usize)] {
+            let a = match budget {
+                None => TileMatrix::zeros(p.dim(), ctx.ts),
+                Some(b) => TileMatrix::zeros_spill(p.dim(), ctx.ts, None, b).unwrap(),
+            };
+            let y = TileVector::from_slice(&p.z, ctx.ts);
+            let out = run_tiled(&p, &theta, &ctx, None, &a, Some(&y), None, true).unwrap();
+            assert_eq!(out.not_spd, None);
+            results.push((out.logdet, y.dot_self()));
+            if let Some(st) = a.store() {
+                assert!(st.peak_resident_bytes() <= st.budget());
+                assert!(st.budget() < a.n() * a.n() * 8, "budget must bind");
             }
         }
         assert_eq!(results[0].0.to_bits(), results[1].0.to_bits(), "logdet");

@@ -186,6 +186,10 @@ struct Shared {
     lifecycle: RwLock<()>,
     rng_state: AtomicUsize,
     tasks_executed: AtomicU64,
+    /// Tasks retired without running because their job's cancellation
+    /// token had fired — the work a won speculative race (or a client
+    /// disconnect) saved.  Mirrors `tasks_executed` for stats.
+    tasks_skipped: AtomicU64,
 }
 
 impl Shared {
@@ -268,6 +272,7 @@ fn execute(shared: &Arc<Shared>, r: Ready, w: usize) {
         // so the job drains and its waiter wakes.
         drop(run);
         job.skipped.fetch_add(1, Ordering::Relaxed);
+        shared.tasks_skipped.fetch_add(1, Ordering::Relaxed);
     } else {
         let t0 = Instant::now();
         if let Some(f) = run {
@@ -383,6 +388,7 @@ impl Runtime {
             lifecycle: RwLock::new(()),
             rng_state: AtomicUsize::new(0x5DEECE66),
             tasks_executed: AtomicU64::new(0),
+            tasks_skipped: AtomicU64::new(0),
         });
         let rt = Runtime {
             shared: shared.clone(),
@@ -427,6 +433,13 @@ impl Runtime {
     /// Tasks executed across all jobs so far.
     pub fn tasks_executed(&self) -> u64 {
         self.shared.tasks_executed.load(Ordering::Relaxed)
+    }
+
+    /// Tasks retired without running across all jobs so far — the work
+    /// saved by cancellation (a lost speculative MLE candidate, a client
+    /// disconnect).  Counterpart of [`Runtime::tasks_executed`].
+    pub fn tasks_skipped(&self) -> u64 {
+        self.shared.tasks_skipped.load(Ordering::Relaxed)
     }
 
     /// Ready tasks currently queued but not yet picked up by a worker —

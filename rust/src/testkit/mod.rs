@@ -26,6 +26,16 @@ pub use crate::linalg::tile::tile_matrix_allocs;
 /// concurrent test can run kernels.
 pub use crate::linalg::blas::pack_buffer_allocs;
 
+/// Process-global out-of-core tile-store counters (spill write-outs,
+/// demand read-backs, completed prefetches) — the telemetry behind the
+/// spill regression tests ("a tiny budget forces spill traffic; the
+/// resident fast path performs none").  Global for the same reason as
+/// [`pack_buffer_allocs`]: the I/O happens on the store's prefetch lane
+/// and on runtime workers, while tests observe deltas from the
+/// submitting thread — so assert deltas only under serialization (see
+/// `rust/tests/spill.rs`).
+pub use crate::linalg::tile::{tile_prefetches, tile_spill_reads, tile_spill_writes};
+
 /// Process-wide count of worker threads spawned by
 /// [`crate::scheduler::runtime::Runtime`]s — the telemetry behind the
 /// runtime-lifecycle regression tests ("a full MLE run spawns exactly

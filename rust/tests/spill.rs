@@ -1,0 +1,204 @@
+//! Out-of-core tile-store conformance: a memory budget must change
+//! *memory behaviour*, never *results*.
+//!
+//! The contract under test (DESIGN.md §2h):
+//! * exact and DST likelihoods under a tiny budget are **bit-identical**
+//!   to the fully resident path (the spill sweep executes the same plan
+//!   in serial plan order and spill round-trips bytes exactly);
+//! * MP agrees to ~1e-13 relative (f32 off-band arithmetic, different
+//!   but equally valid reduction grouping);
+//! * a budgeted run's peak resident tile bytes never exceed the budget,
+//!   even when the dense working set is several times larger;
+//! * the spill/prefetch counters fire under a binding budget and stay
+//!   flat on the resident fast path.
+//!
+//! Every test takes the file-global lock: the spill counters are
+//! process-wide (the I/O lane is a separate thread), so counter-delta
+//! assertions must not observe a concurrent budgeted run — and the
+//! cheapest way to guarantee that inside one test binary is to
+//! serialize all of them (same pattern as `rust/tests/pack_alloc.rs`).
+
+use exageostat::api::{mle_with_session, MleOptions};
+use exageostat::covariance::{kernel_by_name, DistanceMetric};
+use exageostat::likelihood::{self, EvalSession, ExecCtx, Problem, Variant};
+use exageostat::rng::Pcg64;
+use exageostat::scheduler::pool::Policy;
+use exageostat::testkit::{forall, gen, tile_prefetches, tile_spill_reads, tile_spill_writes};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+
+fn lock() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|p| p.into_inner())
+}
+
+fn problem(n: usize, seed: u64) -> Problem {
+    let mut rng = Pcg64::seed_from_u64(seed);
+    Problem {
+        kernel: kernel_by_name("ugsm-s").unwrap().into(),
+        locs: Arc::new(gen::locations(&mut rng, n)),
+        z: Arc::new(gen::normals(&mut rng, n)),
+        metric: DistanceMetric::Euclidean,
+    }
+}
+
+/// A context with an *explicit* budget (`None` = fully resident even if
+/// `EXAGEOSTAT_TILE_BUDGET` is set — these tests control both sides).
+fn ctx_with(ncores: usize, ts: usize, budget: Option<usize>) -> ExecCtx {
+    let mut ctx = ExecCtx::new(ncores, ts, Policy::Lws);
+    ctx.tile_budget = budget;
+    ctx
+}
+
+/// Dense lower-triangle footprint of the all-f64 workspace, in bytes.
+fn dense_lower_bytes(n: usize, ts: usize) -> usize {
+    let nt = n.div_ceil(ts);
+    let dim = |t: usize| if t + 1 == nt { n - t * ts } else { ts };
+    let mut total = 0;
+    for i in 0..nt {
+        for j in 0..=i {
+            total += dim(i) * dim(j) * 8;
+        }
+    }
+    total
+}
+
+#[test]
+fn spilled_exact_and_dst_bit_identical_to_resident() {
+    let _g = lock();
+    // Random non-dividing grids: n = k*ts + r with 0 < r < ts, so edge
+    // tiles are genuinely smaller and the slot/offset bookkeeping is
+    // exercised off the easy path.  Budget Some(1) clamps to the
+    // store's minimum working set — maximal spill pressure.
+    forall(
+        0x5B1D,
+        5,
+        |rng| {
+            let ts = 9 + rng.below(12); // 9..=20
+            let k = 2 + rng.below(3); // 2..=4 full tiles per side
+            let n = k * ts + 1 + rng.below(ts - 1);
+            let band = rng.below(3); // DST band 0..=2
+            (n, ts, band)
+        },
+        |&(n, ts, band)| {
+            let p = problem(n, 77 + n as u64);
+            let theta = [1.1, 0.12, 0.5];
+            for variant in [Variant::Exact, Variant::Dst { band }] {
+                let resident =
+                    likelihood::loglik(&p, &theta, variant, &ctx_with(2, ts, None)).unwrap();
+                let spilled =
+                    likelihood::loglik(&p, &theta, variant, &ctx_with(2, ts, Some(1))).unwrap();
+                assert_eq!(
+                    resident.loglik.to_bits(),
+                    spilled.loglik.to_bits(),
+                    "{variant:?} loglik differs at n={n} ts={ts}"
+                );
+                assert_eq!(resident.logdet.to_bits(), spilled.logdet.to_bits());
+                assert_eq!(resident.sse.to_bits(), spilled.sse.to_bits());
+            }
+        },
+    );
+}
+
+#[test]
+fn spilled_mp_and_tlr_match_resident_tightly() {
+    let _g = lock();
+    let (n, ts) = (70, 16);
+    let p = problem(n, 3);
+    let theta = [1.0, 0.15, 1.0];
+    for variant in [
+        Variant::Mp { band: 1 },
+        // TLR workspaces are rank-adaptive heap storage, not TileMatrix
+        // tiles — a budget must be silently inert there, not an error.
+        Variant::Tlr {
+            tol: 1e-9,
+            max_rank: usize::MAX,
+        },
+    ] {
+        let resident = likelihood::loglik(&p, &theta, variant, &ctx_with(2, ts, None)).unwrap();
+        let spilled = likelihood::loglik(&p, &theta, variant, &ctx_with(2, ts, Some(1))).unwrap();
+        let rel = (resident.loglik - spilled.loglik).abs() / resident.loglik.abs();
+        assert!(
+            rel <= 1e-13,
+            "{variant:?}: resident {} vs spilled {} (rel {rel})",
+            resident.loglik,
+            spilled.loglik
+        );
+    }
+}
+
+#[test]
+fn budgeted_mle_completes_with_peak_resident_within_budget() {
+    let _g = lock();
+    // n chosen so the dense working set is several times the clamped
+    // budget: the fit cannot complete without spilling.
+    let (n, ts) = (120, 16);
+    let p = problem(n, 11);
+    let ctx = ctx_with(2, ts, Some(1));
+    let mut session = EvalSession::new(&p, Variant::Exact, &ctx).unwrap();
+    let budget = session.tile_budget().expect("budgeted session has a store");
+    assert!(
+        dense_lower_bytes(n, ts) > 3 * budget,
+        "test must exceed the budget to mean anything"
+    );
+    let opt = MleOptions::new(vec![0.01; 3], vec![5.0; 3], 1e-3, 8);
+    let r = mle_with_session(&mut session, &opt).unwrap();
+    assert!(r.loglik.is_finite());
+    assert!(r.iters > 0);
+    let peak = session
+        .peak_resident_tile_bytes()
+        .expect("budgeted session tracks peak");
+    assert!(
+        peak <= budget,
+        "peak resident {peak} B exceeds budget {budget} B"
+    );
+    // Sanity: the sweep actually used most of its allowance at some
+    // point (an absurdly low peak would mean the budget never bound).
+    assert!(peak * 2 > budget, "peak {peak} B vs budget {budget} B");
+}
+
+#[test]
+fn spill_counters_fire_under_budget_and_stay_flat_resident() {
+    let _g = lock();
+    let (n, ts) = (54, 16);
+    let p = problem(n, 21);
+    let theta = [0.9, 0.1, 0.5];
+
+    // Resident fast path: zero spill traffic.
+    let (w0, r0, f0) = (tile_spill_writes(), tile_spill_reads(), tile_prefetches());
+    likelihood::loglik(&p, &theta, Variant::Exact, &ctx_with(2, ts, None)).unwrap();
+    assert_eq!(tile_spill_writes(), w0, "resident eval wrote spill");
+    assert_eq!(tile_spill_reads(), r0, "resident eval read spill");
+    assert_eq!(tile_prefetches(), f0, "resident eval prefetched");
+
+    // Binding budget: the sweep must both write out and read back.
+    likelihood::loglik(&p, &theta, Variant::Exact, &ctx_with(2, ts, Some(1))).unwrap();
+    assert!(tile_spill_writes() > w0, "budgeted eval never spilled");
+    assert!(tile_spill_reads() > r0, "budgeted eval never read back");
+}
+
+#[test]
+fn env_budget_reaches_sessions_end_to_end() {
+    let _g = lock();
+    // The CI low-memory job sets EXAGEOSTAT_TILE_BUDGET for the whole
+    // suite; this test pins the plumbing the job relies on — a context
+    // built the normal way picks the env budget up and the session
+    // reports it.  (Env mutation is why this test, too, needs the
+    // file lock.)
+    std::env::set_var("EXAGEOSTAT_TILE_BUDGET", "16K");
+    let ctx = ExecCtx::new(1, 16, Policy::Eager);
+    std::env::remove_var("EXAGEOSTAT_TILE_BUDGET");
+    let p = problem(40, 31);
+    let session = EvalSession::new(&p, Variant::Exact, &ctx).unwrap();
+    let budget = session.tile_budget().expect("env budget ignored");
+    // 16K requested; ts=16 makes the minimum working set 6*16*16*8 =
+    // 12288 B, below the request, so the budget passes through intact.
+    assert_eq!(budget, 16 * 1024);
+    drop(session);
+    // "off" disables it again.
+    std::env::set_var("EXAGEOSTAT_TILE_BUDGET", "off");
+    let ctx2 = ExecCtx::new(1, 16, Policy::Eager);
+    std::env::remove_var("EXAGEOSTAT_TILE_BUDGET");
+    assert!(ctx2.tile_budget.is_none());
+}
