@@ -12,7 +12,7 @@ PYTHON ?= python3
 
 BENCHES = fig3_shared_memory fig5_scaling_n fig6_accelerated \
           fig7_distributed table5_time_per_iter ablation_variants \
-          serving_throughput kernel_roofline sst_scaling
+          serving_throughput kernel_roofline sst_scaling placement
 
 .PHONY: all test artifacts bench-smoke fmt lint doc python-test clean
 
@@ -40,7 +40,10 @@ artifacts:
 # time/eval — EXPERIMENTS.md §Kernel roofline); sst_scaling refreshes
 # BENCH_sst_scaling.json (warm eval resident vs out-of-core budget vs
 # MP on the SST day, with peak-resident and spill counters —
-# EXPERIMENTS.md §SST workload scaling).  BENCH_OUT pins every
+# EXPERIMENTS.md §SST workload scaling); placement refreshes
+# BENCH_placement.json (cost-model placement vs class-blind scheduling
+# on a cpu+slow pool, plus the heterogeneous DES projection ratio —
+# EXPERIMENTS.md §Heterogeneous placement).  BENCH_OUT pins every
 # bench's JSON to the repo root regardless of cargo's bench cwd, so the
 # CI artifact glob and the regression gate always find them.  Ends
 # with a smoke invocation of the `exageostat serve` subcommand.

@@ -1,0 +1,150 @@
+//! **Placement** — cost-model-driven task placement vs class-blind
+//! scheduling on a heterogeneous worker pool (DESIGN.md §2i).
+//!
+//! The paper's heterogeneous results come from StarPU keeping slow
+//! resources off the critical path; this machine has no accelerator, so
+//! the bench simulates heterogeneity with the throttled `Slow` worker
+//! class (`EXAGEOSTAT_SLOW_FACTOR`, default 4x) and measures the same
+//! policy effect:
+//!
+//! * **blind** — one merged scheduling class (the pre-placement
+//!   behaviour): any worker, including the throttled one, may pick up
+//!   POTRF/TRSM and stall the whole factorization chain.
+//! * **placed** — per-class queues + the HEFT placer: the slow class
+//!   only receives eligible off-critical work (DCMG/GEMM/SYRK) and only
+//!   when its estimated finish time wins.
+//!
+//! Also reports the heterogeneous DES projection (`simulate_placed`)
+//! against the measured warm eval, tying the simulator's cost logic to
+//! reality.  Emits BENCH_placement.json for the CI bench gate.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+use bench_util::*;
+
+use exageostat::covariance::{kernel_by_name, DistanceMetric};
+use exageostat::likelihood::{EvalSession, ExecCtx, Problem, Variant};
+use exageostat::pipeline::{lower_tiled, plan, PlanKnobs, TiledSpec};
+use exageostat::scheduler::des::simulate_placed;
+use exageostat::scheduler::placement::{ClassSpec, Placer};
+use exageostat::scheduler::pool::Policy;
+use exageostat::scheduler::runtime::Runtime;
+use exageostat::simulation::simulate_data_exact;
+use std::sync::Arc;
+
+fn main() {
+    let quick = quick();
+    let (n, ts, spec_str) = if quick {
+        (400usize, 64usize, "cpu:1,slow:1")
+    } else {
+        (1200usize, 100usize, "cpu:3,slow:1")
+    };
+    let reps = if quick { 3 } else { 5 };
+    let spec = ClassSpec::parse(spec_str).unwrap();
+    let theta = [1.0, 0.1, 0.5];
+    let kernel: Arc<dyn exageostat::covariance::CovKernel> =
+        Arc::from(kernel_by_name("ugsm-s").unwrap());
+
+    let ctx0 = ExecCtx::new(1, ts, Policy::Lws);
+    let data = simulate_data_exact(
+        kernel.clone(),
+        &theta,
+        n,
+        DistanceMetric::Euclidean,
+        0,
+        &ctx0,
+    )
+    .unwrap();
+    let problem = Problem {
+        kernel: kernel.clone(),
+        locs: Arc::new(data.locs.clone()),
+        z: Arc::new(data.z.clone()),
+        metric: DistanceMetric::Euclidean,
+    };
+
+    // Same worker mix in both runtimes — the slow worker is throttled in
+    // both — only the scheduling differs (per-class queues + placer vs
+    // one merged class).
+    let warm_eval = |ctx: &ExecCtx| -> f64 {
+        let mut session = EvalSession::new(&problem, Variant::Exact, ctx).unwrap();
+        session.eval(&theta).unwrap(); // cold: allocate + learn costs
+        time_median(reps, || {
+            session.eval(&theta).unwrap();
+        })
+    };
+
+    let blind_rt = Arc::new(Runtime::new_with_classes_blind(&spec, Policy::Lws));
+    let blind_ctx = ExecCtx::with_runtime(blind_rt, ts, exageostat::backend::default_engine());
+    let t_blind = warm_eval(&blind_ctx);
+
+    let placed_rt = Arc::new(Runtime::new_with_classes(&spec, Policy::Lws));
+    let placed_ctx = ExecCtx::with_runtime(
+        placed_rt.clone(),
+        ts,
+        exageostat::backend::default_engine(),
+    );
+    let t_placed = warm_eval(&placed_ctx);
+
+    let speedup = t_blind / t_placed;
+
+    // Heterogeneous DES projection of the same placed plan, priced by the
+    // cost model the placed runtime measured — the contract is that the
+    // projection and the measurement stay within the same small multiple.
+    let ir = lower_tiled(&TiledSpec {
+        n,
+        ts,
+        band: None,
+        mp_band: None,
+        tlr: false,
+        with_solve: true,
+        with_logdet: true,
+        owners: 1,
+    });
+    let mut pl = plan(&ir, &PlanKnobs::from_env());
+    let cost = placed_rt.cost_model_by_class();
+    Placer::new(&placed_rt.classes())
+        .with_cost(cost.clone())
+        .place(&mut pl);
+    let sim = simulate_placed(&pl, &cost, &placed_rt.classes());
+    let des_ratio = sim.makespan / t_placed;
+
+    println!("Placement — warm exact eval (n={n}, ts={ts}, classes {spec_str})");
+    header(&["config", "warm eval s", "speedup", "des proj s", "des ratio"]);
+    row(&[
+        "blind".into(),
+        s(t_blind),
+        s2(1.0),
+        "-".into(),
+        "-".into(),
+    ]);
+    row(&[
+        "placed".into(),
+        s(t_placed),
+        s2(speedup),
+        s(sim.makespan),
+        s2(des_ratio),
+    ]);
+
+    let stats = placed_rt.class_stats();
+    for c in &stats {
+        println!(
+            "  class {:<6} x{}: {} placed, {} executed, {} steals",
+            c.class.name(),
+            c.workers,
+            c.tasks_placed,
+            c.tasks_executed,
+            c.steals
+        );
+    }
+
+    let json = format!(
+        "{{\n  \"placement\": {{\n    \"n\": {n},\n    \"ts\": {ts},\n    \
+         \"classes\": \"{spec_str}\",\n    \"blind_warm_eval_s\": {t_blind},\n    \
+         \"placed_warm_eval_s\": {t_placed},\n    \"speedup_vs_blind\": {speedup},\n    \
+         \"des_makespan_s\": {},\n    \"des_ratio\": {des_ratio}\n  }}\n}}\n",
+        sim.makespan
+    );
+    let path = bench_out_path("BENCH_placement.json");
+    std::fs::write(&path, json).expect("write BENCH_placement.json");
+    println!("wrote {}", path.display());
+}

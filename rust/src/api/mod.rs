@@ -127,7 +127,8 @@ impl ExaGeoStat {
     /// defaulting to the pure-Rust native engine.  Spawns the worker
     /// runtime.
     pub fn init(hw: Hardware) -> Self {
-        let runtime = Arc::new(Runtime::new(hw.ncores.max(1), hw.policy));
+        let spec = crate::scheduler::placement::class_spec_for(hw.ncores.max(1));
+        let runtime = Arc::new(Runtime::new_with_classes(&spec, hw.policy));
         ExaGeoStat {
             hw,
             engine: backend::default_engine(),
@@ -140,7 +141,8 @@ impl ExaGeoStat {
     /// the cargo feature or without `make artifacts`).
     pub fn init_with_backend(hw: Hardware, b: Backend) -> anyhow::Result<Self> {
         let engine = backend::create_engine(b)?;
-        let runtime = Arc::new(Runtime::new(hw.ncores.max(1), hw.policy));
+        let spec = crate::scheduler::placement::class_spec_for(hw.ncores.max(1));
+        let runtime = Arc::new(Runtime::new_with_classes(&spec, hw.policy));
         Ok(ExaGeoStat {
             hw,
             engine,

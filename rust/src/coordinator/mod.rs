@@ -53,6 +53,7 @@ use crate::likelihood::{EvalSession, ExecCtx, Problem, Variant};
 use crate::optimizer::Method;
 use crate::pipeline::shard::ShardSet;
 use crate::prediction::{self, Prediction};
+use crate::scheduler::placement::ClassStat;
 use crate::scheduler::runtime::{CancelToken, Runtime};
 use crate::simulation;
 use anyhow::Context as _;
@@ -409,6 +410,9 @@ pub struct CoordinatorStats {
     /// disconnect, speculative-race loser) — work the runtime saved.
     pub tasks_skipped: u64,
     pub worker_threads: usize,
+    /// Per-worker-class placement/execution/steal counters (one entry
+    /// per class of the shared runtime; single entry when homogeneous).
+    pub class_stats: Vec<ClassStat>,
 }
 
 impl CoordinatorStats {
@@ -427,6 +431,19 @@ impl CoordinatorStats {
         self.tasks_executed += o.tasks_executed;
         self.tasks_skipped += o.tasks_skipped;
         self.worker_threads += o.worker_threads;
+        // Merge class counters by class (shard members may differ in
+        // layout; a class missing here is appended).
+        for s in &o.class_stats {
+            match self.class_stats.iter_mut().find(|m| m.class == s.class) {
+                Some(m) => {
+                    m.workers += s.workers;
+                    m.tasks_placed += s.tasks_placed;
+                    m.tasks_executed += s.tasks_executed;
+                    m.steals += s.steals;
+                }
+                None => self.class_stats.push(s.clone()),
+            }
+        }
     }
 }
 
@@ -473,7 +490,8 @@ impl Coordinator {
         data_budget: usize,
         session_budget: usize,
     ) -> Coordinator {
-        let runtime = Arc::new(Runtime::new(hw.ncores.max(1), hw.policy));
+        let spec = crate::scheduler::placement::class_spec_for(hw.ncores.max(1));
+        let runtime = Arc::new(Runtime::new_with_classes(&spec, hw.policy));
         Coordinator {
             hw,
             engine: backend::default_engine(),
@@ -761,6 +779,7 @@ impl Coordinator {
             tasks_executed: self.runtime.tasks_executed(),
             tasks_skipped: self.runtime.tasks_skipped(),
             worker_threads: self.runtime.nworkers(),
+            class_stats: self.runtime.class_stats(),
         }
     }
 

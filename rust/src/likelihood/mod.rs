@@ -96,15 +96,19 @@ impl ExecCtx {
     }
 
     /// Build a context around an explicit compute backend, spawning a
-    /// fresh runtime of `ncores` workers.
+    /// fresh runtime of `ncores` workers.  The worker-class layout comes
+    /// from `EXAGEOSTAT_WORKER_CLASSES` / `--worker-classes` (fitted to
+    /// `ncores`; default: one homogeneous `Cpu` class — identical to the
+    /// pre-class runtime).
     pub fn with_engine(ncores: usize, ts: usize, policy: Policy, engine: ArcEngine) -> ExecCtx {
         let ncores = ncores.max(1);
+        let spec = crate::scheduler::placement::class_spec_for(ncores);
         ExecCtx {
             ncores,
             ts,
             policy,
             engine,
-            runtime: Arc::new(Runtime::new(ncores, policy)),
+            runtime: Arc::new(Runtime::new_with_classes(&spec, policy)),
             job_prio: 0,
             cancel: CancelToken::new(),
             shards: shard_set_from_env(),

@@ -27,6 +27,16 @@ use exageostat::scheduler::pool::Policy;
 use std::path::PathBuf;
 
 fn hardware(args: &Args) -> anyhow::Result<Hardware> {
+    // --worker-classes cpu:6,slow:2 partitions the worker pool into
+    // heterogeneous classes (see DESIGN.md §2i).  The spec is fitted to
+    // --ncores by largest-remainder apportionment, so the total worker
+    // count is still exactly ncores.  Omitting the flag falls back to
+    // EXAGEOSTAT_WORKER_CLASSES, then to an all-CPU pool.
+    if let Some(spec) = args.get("worker-classes") {
+        let parsed = exageostat::scheduler::placement::ClassSpec::parse(spec)
+            .with_context(|| format!("bad --worker-classes {spec:?} (want e.g. cpu:6,slow:2)"))?;
+        exageostat::scheduler::placement::set_class_override(Some(parsed));
+    }
     Ok(Hardware {
         // Default: all available hardware threads (EXAGEOSTAT_NCORES
         // overrides); --ncores pins it explicitly.
@@ -391,6 +401,24 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             st.tasks_skipped
         );
     }
+    // Only worth a line when the pool is actually heterogeneous: a single
+    // all-CPU class is the default and adds no information.
+    if st.class_stats.len() > 1 {
+        let parts: Vec<String> = st
+            .class_stats
+            .iter()
+            .map(|c| {
+                format!(
+                    "{} x{} ({} tasks, {} steals)",
+                    c.class.name(),
+                    c.workers,
+                    c.tasks_executed,
+                    c.steals
+                )
+            })
+            .collect();
+        println!("worker classes: {}", parts.join(", "));
+    }
     if let Some(out) = args.get("out") {
         let json = format!(
             "{{\n  \"requests\": {},\n  \"ok\": {},\n  \"failed\": {},\n  \
@@ -448,6 +476,7 @@ fn main() {
             eprintln!(
                 "usage: exageostat <simulate|mle|predict|fisher|mloe-mmom|structures|sst|serve> [--flags]\n\
                  common flags: --ncores N --ts N --sched eager|prio|lws|random\n\
+                 \x20             [--worker-classes cpu:6,slow:2]\n\
                  serve input:  --requests file.jsonl | --stdin | --socket path.sock\n\
                  serve flags:  --clients K --window W --shards N [--depth-limit D]\n\
                  \x20             [--mem-budget 2G]\n\

@@ -14,6 +14,7 @@
 //! reference earlier plan positions.
 
 use super::ir::{Op, TaskIR};
+use crate::scheduler::placement::WorkerClass;
 use crate::scheduler::{TaskGraph, TaskKind};
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -33,6 +34,10 @@ pub struct PlanTask {
     /// Indices of earlier plan tasks this one depends on (deduplicated,
     /// ascending, all `<` this task's own index).
     pub preds: Vec<usize>,
+    /// Worker class assigned by the [`crate::scheduler::placement::Placer`]
+    /// (`None` until placed / on homogeneous runtimes — the runtime's
+    /// default class runs the task).
+    pub class: Option<WorkerClass>,
 }
 
 /// A topologically ordered, fused task list ready for the runtime.
@@ -86,6 +91,9 @@ impl ExecutionPlan {
                     r.run_op(*op);
                 }
             });
+            if let Some(c) = t.class {
+                g.set_class(id, c);
+            }
             tid.push(id);
         }
         g

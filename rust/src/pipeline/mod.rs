@@ -327,11 +327,24 @@ pub fn run_tiled(
         owners: shards.map_or(1, |s| s.nshards()),
     };
     let ir = lower_tiled(&spec);
-    let plan = planner::plan(&ir, &PlanKnobs::from_env());
+    let mut plan = planner::plan(&ir, &PlanKnobs::from_env());
     let runner = Arc::new(TiledRunner::new(problem, theta, &ctx.engine, dist, a, y));
     let skipped = if let Some(set) = shards {
+        // Sharded execution stays class-blind: each shard runtime runs
+        // its partition on whatever workers it has.
         shard::execute_sharded(&plan, &ir, runner.clone(), set, ctx.job_prio, &ctx.cancel)
     } else {
+        // Heterogeneous runtime: place each plan task on a worker class
+        // (HEFT over the runtime's accumulated per-(kind, class) costs;
+        // static eligibility before any costs exist).  Placement only
+        // decides *where* tasks run — op bodies, dependency edges and
+        // the host-side log-det summation are untouched, so results are
+        // bit-identical to the unplaced schedule.
+        if ctx.runtime.nclasses() > 1 {
+            crate::scheduler::placement::Placer::new(&ctx.runtime.classes())
+                .with_cost(ctx.runtime.cost_model_by_class())
+                .place(&mut plan);
+        }
         let g = plan.instantiate(&ir, runner.clone());
         ctx.run_graph(g).tasks_skipped
     };

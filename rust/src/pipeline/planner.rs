@@ -254,6 +254,7 @@ pub fn plan(ir: &TaskIR, knobs: &PlanKnobs) -> ExecutionPlan {
                 kind,
                 bytes,
                 preds,
+                class: None,
             }
         })
         .collect();

@@ -10,8 +10,10 @@
 //! earliest-finish-time (EFT) list scheduling, which is what StarPU's
 //! `dmda`-class schedulers approximate with their cost models.
 
-use super::profile::CostModel;
+use super::placement::{est_cost, WorkerClass};
+use super::profile::{ClassCostModel, CostModel};
 use super::{topo_order, Handle, TaskGraph};
+use crate::pipeline::execution_plan::ExecutionPlan;
 use crate::pipeline::shard::ShardGrid;
 use std::sync::Arc;
 
@@ -139,6 +141,67 @@ pub fn simulate(
         makespan: finish.iter().cloned().fold(0.0, f64::max),
         busy,
         bytes_moved,
+    }
+}
+
+/// Heterogeneous projection: replay a **placed** [`ExecutionPlan`] on a
+/// simulated machine with the same worker-class layout the live runtime
+/// has, constraining every task to the class the
+/// [`super::placement::Placer`] assigned — the exact constraint the
+/// class queues enforce.  Task durations come from the measured
+/// per-(kind, class) cost model with the same static-factor fallback the
+/// placer uses ([`est_cost`]), so projected and measured makespans are
+/// directly comparable (the placement bench records their ratio).
+///
+/// `classes` is `(class, worker count)` in range order (e.g. from
+/// `Runtime::classes()`); unplaced tasks run on the `Cpu` class (or
+/// class 0 when none exists).  Shared memory — no transfer model.
+pub fn simulate_placed(
+    plan: &ExecutionPlan,
+    cost: &ClassCostModel,
+    classes: &[(WorkerClass, usize)],
+) -> SimResult {
+    let live: Vec<(WorkerClass, usize)> = classes.iter().copied().filter(|c| c.1 > 0).collect();
+    assert!(!live.is_empty(), "simulate_placed needs at least one class");
+    let default_class = live
+        .iter()
+        .position(|c| c.0 == WorkerClass::Cpu)
+        .unwrap_or(0);
+    // One simulated lane per worker; lane ranges tile classes in order.
+    let starts: Vec<usize> = live
+        .iter()
+        .scan(0usize, |acc, c| {
+            let s = *acc;
+            *acc += c.1;
+            Some(s)
+        })
+        .collect();
+    let nlanes: usize = live.iter().map(|c| c.1).sum();
+    let mut free_at = vec![0.0f64; nlanes];
+    let mut busy = vec![0.0f64; nlanes];
+    let mut finish = vec![0.0f64; plan.tasks.len()];
+    for (id, t) in plan.tasks.iter().enumerate() {
+        let ci = t
+            .class
+            .and_then(|c| live.iter().position(|e| e.0 == c))
+            .unwrap_or(default_class);
+        let dur = est_cost(cost, t.kind, t.bytes, live[ci].0);
+        let ready = t.preds.iter().map(|&p| finish[p]).fold(0.0f64, f64::max);
+        // Earliest-finish lane within the assigned class only.
+        let lanes = starts[ci]..starts[ci] + live[ci].1;
+        let lane = lanes
+            .clone()
+            .min_by(|&a, &b| free_at[a].total_cmp(&free_at[b]))
+            .expect("class has workers");
+        let fin = ready.max(free_at[lane]) + dur;
+        finish[id] = fin;
+        free_at[lane] = fin;
+        busy[lane] += dur;
+    }
+    SimResult {
+        makespan: finish.iter().cloned().fold(0.0, f64::max),
+        busy,
+        bytes_moved: 0.0,
     }
 }
 
@@ -306,6 +369,49 @@ mod tests {
         }
         // Out-of-range handles (scalars/segments) default to tile (0,0).
         assert_eq!(f(Handle(coords.len() + 7)), 0);
+    }
+
+    #[test]
+    fn placed_projection_respects_class_constraint() {
+        use crate::pipeline::execution_plan::{ExecutionPlan, PlanTask};
+        let mk = |kind, class, preds: Vec<usize>| PlanTask {
+            ops: Vec::new(),
+            kind,
+            bytes: 1 << 20,
+            preds,
+            class,
+        };
+        let mut cm = ClassCostModel::default();
+        cm.record(TaskKind::GEMM, WorkerClass::Cpu, 1.0);
+        cm.record(TaskKind::GEMM, WorkerClass::Slow, 4.0);
+        let layout = [(WorkerClass::Cpu, 1), (WorkerClass::Slow, 1)];
+        // Two independent gemms pinned Cpu serialize on the one cpu lane
+        // while the slow-pinned one runs in parallel at 4x cost.
+        let plan = ExecutionPlan {
+            tasks: vec![
+                mk(TaskKind::GEMM, Some(WorkerClass::Cpu), vec![]),
+                mk(TaskKind::GEMM, Some(WorkerClass::Cpu), vec![]),
+                mk(TaskKind::GEMM, Some(WorkerClass::Slow), vec![]),
+            ],
+        };
+        let r = simulate_placed(&plan, &cm, &layout);
+        assert!((r.makespan - 4.0).abs() < 1e-9, "{}", r.makespan);
+        assert!((r.busy[0] - 2.0).abs() < 1e-9 && (r.busy[1] - 4.0).abs() < 1e-9);
+        // Dependence edges delay the successor even across classes.
+        let plan = ExecutionPlan {
+            tasks: vec![
+                mk(TaskKind::GEMM, Some(WorkerClass::Cpu), vec![]),
+                mk(TaskKind::GEMM, Some(WorkerClass::Slow), vec![0]),
+            ],
+        };
+        let r = simulate_placed(&plan, &cm, &layout);
+        assert!((r.makespan - 5.0).abs() < 1e-9, "{}", r.makespan);
+        // Unplaced tasks default to the Cpu class wherever it is listed.
+        let plan = ExecutionPlan {
+            tasks: vec![mk(TaskKind::GEMM, None, vec![])],
+        };
+        let r = simulate_placed(&plan, &cm, &[(WorkerClass::Slow, 1), (WorkerClass::Cpu, 1)]);
+        assert!((r.makespan - 1.0).abs() < 1e-9, "{}", r.makespan);
     }
 
     #[test]

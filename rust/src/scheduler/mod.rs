@@ -17,11 +17,15 @@
 //!   plus the one-shot `pool::run` convenience executor.
 //! * [`profile`] — per-task timing and per-kind cost models (StarPU builds
 //!   the same cost models to drive heterogeneous dispatch).
+//! * [`placement`] — heterogeneous worker classes (`cpu`/`accel`/`slow`)
+//!   and the HEFT-style [`placement::Placer`] that routes each task to the
+//!   class best suited for it (DESIGN.md §2i).
 //! * [`des`] — a discrete-event simulator that replays a measured task
 //!   graph on modeled heterogeneous (GPU, Fig 6) or distributed (Fig 7)
 //!   resources; see DESIGN.md "Hardware adaptation".
 
 pub mod des;
+pub mod placement;
 pub mod pool;
 pub mod profile;
 pub mod runtime;
@@ -75,6 +79,9 @@ pub struct TaskNode {
     /// Handle of the output operand (first W/RW), for ownership mapping in
     /// the distributed DES.
     pub out_handle: Option<Handle>,
+    /// Worker class this task must run on (`None` = the runtime's default
+    /// class); set by [`TaskGraph::set_class`] from placement decisions.
+    pub class: Option<placement::WorkerClass>,
     pub(crate) run: Option<Box<dyn FnOnce() + Send>>,
     pub(crate) succs: Vec<usize>,
     pub(crate) npred: usize,
@@ -162,6 +169,7 @@ impl TaskGraph {
             kind,
             bytes,
             out_handle,
+            class: None,
             run: Some(Box::new(run)),
             succs: Vec::new(),
             npred,
@@ -198,11 +206,19 @@ impl TaskGraph {
             kind,
             bytes,
             out_handle: None,
+            class: None,
             run: Some(Box::new(run)),
             succs: Vec::new(),
             npred,
         });
         id
+    }
+
+    /// Pin task `id` to a worker class (placement decision).  Runtimes
+    /// without that class fall back to their default class, so a placed
+    /// graph remains runnable anywhere.
+    pub fn set_class(&mut self, id: usize, class: placement::WorkerClass) {
+        self.tasks[id].class = Some(class);
     }
 
     /// Direct predecessor count of task `id` (for tests / DES).

@@ -1,0 +1,474 @@
+//! Heterogeneous worker classes + cost-model-driven task placement
+//! (DESIGN.md §2i).
+//!
+//! The paper's large-scale results come from StarPU placing each tiled-
+//! Cholesky task on the worker *class* best suited to it (CPU cores vs GPU
+//! streams, §Performance / arxiv 1708.02835).  This module is that policy
+//! layer for our runtime:
+//!
+//! * [`WorkerClass`] — the class enum (`Cpu`, `Accel`, plus a throttled
+//!   `Slow` simulation class that validates placement without hardware).
+//! * [`ClassSpec`] — an ordered `class:count` layout, parsed from
+//!   `EXAGEOSTAT_WORKER_CLASSES=cpu:6,slow:2` (env) or `--worker-classes`
+//!   (CLI), and scaled to a runtime's core count with [`ClassSpec::fit`].
+//! * [`eligible`] — static eligibility: DCMG generation and off-diagonal
+//!   GEMM/SYRK may run on `Accel`/`Slow`; POTRF, TRSM, reductions, solves
+//!   and small tiles are pinned to `Cpu`.
+//! * [`Placer`] — HEFT-style earliest-finish placement over an
+//!   [`ExecutionPlan`], using measured per-(kind, class) cost means from
+//!   [`profile::ClassCostModel`] when available and static class speed
+//!   factors otherwise.
+//!
+//! The default configuration is a single all-`Cpu` class, which degenerates
+//! to exactly the homogeneous scheduling the runtime had before classes
+//! existed — same queue indices, same steal order, bit-for-bit.
+
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+use super::profile::ClassCostModel;
+use super::TaskKind;
+use crate::pipeline::execution_plan::ExecutionPlan;
+
+/// A worker class.  Every runtime worker belongs to exactly one class;
+/// queues and work-stealing are confined within a class.
+#[derive(Copy, Clone, Debug, PartialEq, Eq, Hash)]
+pub enum WorkerClass {
+    /// General-purpose CPU core: eligible for every task kind.
+    Cpu,
+    /// Accelerator lane (the PJRT backend seam): eligible for DCMG
+    /// generation and off-diagonal GEMM/SYRK only.
+    Accel,
+    /// Simulated slow worker (`EXAGEOSTAT_SLOW_FACTOR`x throttle): same
+    /// eligibility as `Accel`, used to validate placement policy without
+    /// accelerator hardware.
+    Slow,
+}
+
+impl WorkerClass {
+    pub const ALL: [WorkerClass; 3] = [WorkerClass::Cpu, WorkerClass::Accel, WorkerClass::Slow];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            WorkerClass::Cpu => "cpu",
+            WorkerClass::Accel => "accel",
+            WorkerClass::Slow => "slow",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<WorkerClass> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "cpu" => Some(WorkerClass::Cpu),
+            "accel" | "gpu" => Some(WorkerClass::Accel),
+            "slow" => Some(WorkerClass::Slow),
+            _ => None,
+        }
+    }
+
+    /// Static relative execution-time factor (1.0 = CPU) used by the
+    /// placer and the DES projection when no measured cost exists.
+    pub fn static_factor(self) -> f64 {
+        match self {
+            WorkerClass::Cpu => 1.0,
+            WorkerClass::Accel => 0.5,
+            WorkerClass::Slow => slow_factor(),
+        }
+    }
+}
+
+/// Can `kind` run on `class`?  `Cpu` runs everything; non-CPU classes take
+/// only the kinds the paper offloads: covariance generation and the
+/// off-diagonal BLAS3 updates.  POTRF (critical path), TRSM, reductions
+/// and triangular solves stay on CPU.
+pub fn eligible(kind: TaskKind, class: WorkerClass) -> bool {
+    match class {
+        WorkerClass::Cpu => true,
+        WorkerClass::Accel | WorkerClass::Slow => {
+            matches!(kind.name, "dcmg" | "gemm" | "syrk" | "lr_gemm" | "lr_syrk")
+        }
+    }
+}
+
+/// Tasks touching fewer bytes than this stay on `Cpu` regardless of
+/// eligibility: offload latency dominates for small tiles.
+pub const SMALL_TILE_BYTES: usize = 16 * 1024;
+
+/// Throttle factor for the `Slow` class (relative task duration).
+/// `EXAGEOSTAT_SLOW_FACTOR` overrides; default 4.0.
+pub fn slow_factor() -> f64 {
+    static F: OnceLock<f64> = OnceLock::new();
+    *F.get_or_init(|| {
+        std::env::var("EXAGEOSTAT_SLOW_FACTOR")
+            .ok()
+            .and_then(|v| v.trim().parse::<f64>().ok())
+            .filter(|f| f.is_finite() && *f >= 1.0)
+            .unwrap_or(4.0)
+    })
+}
+
+/// An ordered worker-class layout: `(class, worker count)` entries in
+/// declaration order.  Order matters — class 0 hosts tasks with no class
+/// annotation (unless a `Cpu` class exists, which always wins the
+/// default), so list `cpu` first.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ClassSpec {
+    pub classes: Vec<(WorkerClass, usize)>,
+}
+
+impl ClassSpec {
+    /// The pre-heterogeneity layout: all workers in one `Cpu` class.
+    pub fn homogeneous(nworkers: usize) -> ClassSpec {
+        ClassSpec {
+            classes: vec![(WorkerClass::Cpu, nworkers.max(1))],
+        }
+    }
+
+    /// Parse `"cpu:6,slow:2"`.  Duplicate class names merge; counts of 0
+    /// are kept (and later dropped by [`fit`](Self::fit)).  Returns `None`
+    /// on any malformed entry or an all-zero total.
+    pub fn parse(s: &str) -> Option<ClassSpec> {
+        let mut classes: Vec<(WorkerClass, usize)> = Vec::new();
+        for part in s.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (name, count) = match part.split_once(':') {
+                Some((n, c)) => (WorkerClass::parse(n)?, c.trim().parse::<usize>().ok()?),
+                // bare "cpu" means one worker of that class
+                None => (WorkerClass::parse(part)?, 1),
+            };
+            match classes.iter_mut().find(|e| e.0 == name) {
+                Some(e) => e.1 += count,
+                None => classes.push((name, count)),
+            }
+        }
+        if classes.iter().map(|e| e.1).sum::<usize>() == 0 {
+            return None;
+        }
+        Some(ClassSpec { classes })
+    }
+
+    pub fn total(&self) -> usize {
+        self.classes.iter().map(|e| e.1).sum()
+    }
+
+    /// Number of non-empty classes.
+    pub fn nclasses(&self) -> usize {
+        self.classes.iter().filter(|e| e.1 > 0).count()
+    }
+
+    pub fn is_homogeneous_cpu(&self) -> bool {
+        self.nclasses() == 1
+            && self
+                .classes
+                .iter()
+                .all(|e| e.1 == 0 || e.0 == WorkerClass::Cpu)
+    }
+
+    /// Scale the spec proportionally so the total worker count is exactly
+    /// `ncores` (largest-remainder apportionment; ties go to the
+    /// earlier-listed class).  This keeps thread counts identical to the
+    /// homogeneous runtime no matter what ratio the spec declares —
+    /// `cpu:1,slow:1` on 3 cores becomes `cpu:2,slow:1`.  Classes scaled
+    /// to 0 workers are dropped.
+    pub fn fit(&self, ncores: usize) -> ClassSpec {
+        let ncores = ncores.max(1);
+        let total = self.total();
+        if total == 0 {
+            return ClassSpec::homogeneous(ncores);
+        }
+        let mut out: Vec<(WorkerClass, usize)> = Vec::with_capacity(self.classes.len());
+        let mut rems: Vec<(usize, usize)> = Vec::new(); // (remainder, index)
+        let mut assigned = 0usize;
+        for (i, &(class, count)) in self.classes.iter().enumerate() {
+            let share = ncores * count;
+            out.push((class, share / total));
+            assigned += share / total;
+            rems.push((share % total, i));
+        }
+        // Hand the leftover seats to the largest remainders, earlier
+        // classes first on ties.
+        rems.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+        let mut leftover = ncores - assigned;
+        for &(_, i) in &rems {
+            if leftover == 0 {
+                break;
+            }
+            out[i].1 += 1;
+            leftover -= 1;
+        }
+        out.retain(|e| e.1 > 0);
+        ClassSpec { classes: out }
+    }
+}
+
+static CLASS_OVERRIDE: Mutex<Option<ClassSpec>> = Mutex::new(None);
+static CLASS_ENV: OnceLock<Option<ClassSpec>> = OnceLock::new();
+
+/// Process-wide class-spec override (CLI `--worker-classes`, tests).
+/// `Some(spec)` wins over the environment; `None` restores env/default
+/// resolution.  Pass `ClassSpec::parse("cpu:1")` to force the homogeneous
+/// layout regardless of `EXAGEOSTAT_WORKER_CLASSES` (a single-entry spec
+/// fits to all-CPU at any core count).
+pub fn set_class_override(spec: Option<ClassSpec>) {
+    *CLASS_OVERRIDE.lock().unwrap() = spec;
+}
+
+/// Tests mutating the override (or relying on its absence) serialize on
+/// this lock — the override is process-global and `cargo test` runs tests
+/// concurrently.
+#[doc(hidden)]
+pub fn class_test_lock() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Resolve the worker-class layout for a runtime of `ncores` workers:
+/// override > `EXAGEOSTAT_WORKER_CLASSES` > homogeneous all-`Cpu`.
+/// Always fitted so the total is exactly `ncores`.
+pub fn class_spec_for(ncores: usize) -> ClassSpec {
+    if let Some(spec) = CLASS_OVERRIDE.lock().unwrap().clone() {
+        return spec.fit(ncores);
+    }
+    let env = CLASS_ENV.get_or_init(|| {
+        let raw = std::env::var("EXAGEOSTAT_WORKER_CLASSES").ok()?;
+        match ClassSpec::parse(&raw) {
+            Some(s) => Some(s),
+            None => {
+                eprintln!(
+                    "exageostat: ignoring malformed EXAGEOSTAT_WORKER_CLASSES={:?} \
+                     (expected e.g. \"cpu:6,slow:2\")",
+                    raw
+                );
+                None
+            }
+        }
+    });
+    match env {
+        Some(spec) => spec.fit(ncores),
+        None => ClassSpec::homogeneous(ncores),
+    }
+}
+
+/// Per-class runtime counters (satellite of `CoordinatorStats`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ClassStat {
+    pub class: WorkerClass,
+    pub workers: usize,
+    /// Tasks routed to this class's queues at push time.
+    pub tasks_placed: u64,
+    /// Tasks executed by this class's workers.
+    pub tasks_executed: u64,
+    /// Intra-class steals (lws/random victim pops).
+    pub steals: u64,
+}
+
+/// Estimated execution time of `kind` on `class`, in seconds.  Prefers the
+/// measured per-(kind, class) mean; falls back to scaling a measured CPU
+/// mean by the class's static factor; last resort is a bytes-proportional
+/// synthetic cost so relative placement still reflects task size.
+pub fn est_cost(cost: &ClassCostModel, kind: TaskKind, bytes: usize, class: WorkerClass) -> f64 {
+    if let Some(m) = cost.mean(kind, class) {
+        return m;
+    }
+    if let Some(m) = cost.mean(kind, WorkerClass::Cpu) {
+        return m * class.static_factor();
+    }
+    (bytes.max(1) as f64) * 1e-9 * class.static_factor()
+}
+
+/// HEFT-style placer: walks an [`ExecutionPlan`] in (topological) task
+/// order and annotates each task with the eligible class giving the
+/// earliest estimated finish, modeling each class as `workers` parallel
+/// lanes with an aggregate load.
+pub struct Placer {
+    classes: Vec<(WorkerClass, usize)>,
+    cost: ClassCostModel,
+    small_tile_bytes: usize,
+}
+
+impl Placer {
+    /// `classes` is the runtime's live layout (non-empty counts), e.g.
+    /// from `Runtime::classes()`.
+    pub fn new(classes: &[(WorkerClass, usize)]) -> Placer {
+        Placer {
+            classes: classes.iter().copied().filter(|e| e.1 > 0).collect(),
+            cost: ClassCostModel::default(),
+            small_tile_bytes: SMALL_TILE_BYTES,
+        }
+    }
+
+    /// Feed measured per-(kind, class) costs (e.g.
+    /// `Runtime::cost_model_by_class()`); without this the placer uses
+    /// static eligibility + class speed factors only.
+    pub fn with_cost(mut self, cost: ClassCostModel) -> Placer {
+        self.cost = cost;
+        self
+    }
+
+    #[allow(dead_code)]
+    pub fn small_tile_bytes(mut self, bytes: usize) -> Placer {
+        self.small_tile_bytes = bytes;
+        self
+    }
+
+    fn class_eligible(&self, kind: TaskKind, bytes: usize, class: WorkerClass) -> bool {
+        if class != WorkerClass::Cpu && bytes < self.small_tile_bytes {
+            return false;
+        }
+        eligible(kind, class)
+    }
+
+    /// Annotate every task in `plan` with a class.  Returns per-class
+    /// placement counts (same order as the layout).  With fewer than two
+    /// classes this is a no-op: tasks keep `class: None` and the runtime
+    /// routes them to its only class, exactly as before.
+    pub fn place(&self, plan: &mut ExecutionPlan) -> Vec<(WorkerClass, usize)> {
+        let mut counts: Vec<(WorkerClass, usize)> =
+            self.classes.iter().map(|&(c, _)| (c, 0)).collect();
+        if self.classes.len() < 2 {
+            return counts;
+        }
+        // Aggregate outstanding work per class (seconds of serial work).
+        let mut load = vec![0.0f64; self.classes.len()];
+        // Estimated finish time per plan task, for predecessor readiness.
+        let mut finish: Vec<f64> = Vec::with_capacity(plan.tasks.len());
+        for t in plan.tasks.iter_mut() {
+            let ready = t
+                .preds
+                .iter()
+                .map(|&p| finish[p])
+                .fold(0.0f64, f64::max);
+            let mut best: Option<(f64, usize)> = None;
+            for (ci, &(class, nw)) in self.classes.iter().enumerate() {
+                if !self.class_eligible(t.kind, t.bytes, class) {
+                    continue;
+                }
+                let dur = est_cost(&self.cost, t.kind, t.bytes, class);
+                let start = ready.max(load[ci] / nw as f64);
+                let fin = start + dur;
+                if best.map_or(true, |(bf, _)| fin < bf) {
+                    best = Some((fin, ci));
+                }
+            }
+            // Nothing eligible (layout without a Cpu class): place on the
+            // least-loaded class so the plan still runs.
+            let (fin, ci) = best.unwrap_or_else(|| {
+                let mut pick = 0usize;
+                for ci in 1..self.classes.len() {
+                    if load[ci] < load[pick] {
+                        pick = ci;
+                    }
+                }
+                let dur = est_cost(&self.cost, t.kind, t.bytes, self.classes[pick].0);
+                (ready.max(load[pick] / self.classes[pick].1 as f64) + dur, pick)
+            });
+            t.class = Some(self.classes[ci].0);
+            load[ci] += est_cost(&self.cost, t.kind, t.bytes, self.classes[ci].0);
+            counts[ci].1 += 1;
+            finish.push(fin);
+        }
+        counts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip_and_merge() {
+        let s = ClassSpec::parse("cpu:6,slow:2").unwrap();
+        assert_eq!(
+            s.classes,
+            vec![(WorkerClass::Cpu, 6), (WorkerClass::Slow, 2)]
+        );
+        assert_eq!(s.total(), 8);
+        assert_eq!(s.nclasses(), 2);
+        // duplicates merge, bare names count 1, gpu aliases accel
+        let s = ClassSpec::parse("cpu:2, cpu:1, gpu").unwrap();
+        assert_eq!(
+            s.classes,
+            vec![(WorkerClass::Cpu, 3), (WorkerClass::Accel, 1)]
+        );
+        assert!(ClassSpec::parse("cpu:x").is_none());
+        assert!(ClassSpec::parse("warp:3").is_none());
+        assert!(ClassSpec::parse("cpu:0,slow:0").is_none());
+    }
+
+    #[test]
+    fn fit_preserves_total_and_proportion() {
+        let s = ClassSpec::parse("cpu:1,slow:1").unwrap();
+        // 3 cores: cpu gets the tie-break seat
+        assert_eq!(
+            s.fit(3).classes,
+            vec![(WorkerClass::Cpu, 2), (WorkerClass::Slow, 1)]
+        );
+        assert_eq!(s.fit(2).classes, s.classes);
+        // 1 core: slow drops out entirely
+        assert_eq!(s.fit(1).classes, vec![(WorkerClass::Cpu, 1)]);
+        let s = ClassSpec::parse("cpu:6,slow:2").unwrap();
+        assert_eq!(
+            s.fit(4).classes,
+            vec![(WorkerClass::Cpu, 3), (WorkerClass::Slow, 1)]
+        );
+        for n in 1..=16 {
+            assert_eq!(s.fit(n).total(), n, "fit must hit ncores exactly");
+        }
+        assert!(ClassSpec::homogeneous(4).is_homogeneous_cpu());
+        assert!(ClassSpec::parse("cpu:1").unwrap().fit(8).is_homogeneous_cpu());
+    }
+
+    #[test]
+    fn eligibility_pins_critical_path_to_cpu() {
+        for class in [WorkerClass::Accel, WorkerClass::Slow] {
+            assert!(!eligible(TaskKind::POTRF, class));
+            assert!(!eligible(TaskKind::TRSM, class));
+            assert!(!eligible(TaskKind::LOGDET, class));
+            assert!(eligible(TaskKind::GEMM, class));
+            assert!(eligible(TaskKind::SYRK, class));
+            assert!(eligible(TaskKind::DCMG, class));
+        }
+        for kind in [
+            TaskKind::POTRF,
+            TaskKind::TRSM,
+            TaskKind::GEMM,
+            TaskKind::SYRK,
+            TaskKind::DCMG,
+            TaskKind::OTHER,
+        ] {
+            assert!(eligible(kind, WorkerClass::Cpu));
+        }
+    }
+
+    #[test]
+    fn override_wins_over_default() {
+        let _g = class_test_lock();
+        set_class_override(ClassSpec::parse("cpu:1,slow:1"));
+        let s = class_spec_for(4);
+        assert_eq!(
+            s.classes,
+            vec![(WorkerClass::Cpu, 2), (WorkerClass::Slow, 2)]
+        );
+        set_class_override(None);
+        // Without the env var, default is homogeneous; with it, the env
+        // spec applies — either way the total matches ncores.
+        assert_eq!(class_spec_for(4).total(), 4);
+    }
+
+    #[test]
+    fn est_cost_prefers_measured_then_scales_cpu_mean() {
+        let mut cm = ClassCostModel::default();
+        cm.record(TaskKind::GEMM, WorkerClass::Cpu, 0.010);
+        cm.record(TaskKind::GEMM, WorkerClass::Slow, 0.050);
+        assert!((est_cost(&cm, TaskKind::GEMM, 1 << 20, WorkerClass::Slow) - 0.050).abs() < 1e-12);
+        // no slow measurement for trsm: cpu mean x static factor
+        cm.record(TaskKind::TRSM, WorkerClass::Cpu, 0.008);
+        let e = est_cost(&cm, TaskKind::TRSM, 1 << 20, WorkerClass::Slow);
+        assert!((e - 0.008 * slow_factor()).abs() < 1e-9);
+        // nothing measured: bytes-proportional
+        let a = est_cost(&ClassCostModel::default(), TaskKind::SYRK, 1 << 20, WorkerClass::Cpu);
+        let b = est_cost(&ClassCostModel::default(), TaskKind::SYRK, 1 << 21, WorkerClass::Cpu);
+        assert!(b > a && a > 0.0);
+    }
+}

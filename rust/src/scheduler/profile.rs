@@ -6,6 +6,7 @@
 //! §Time per iteration, and (b) the discrete-event simulator for the
 //! GPU / distributed studies (Figs 6–7).
 
+use super::placement::WorkerClass;
 use super::TaskKind;
 use std::collections::HashMap;
 use std::time::Duration;
@@ -28,6 +29,9 @@ pub struct Profile {
     /// Tasks retired without executing because their job was cancelled
     /// (`records` holds only tasks that actually ran).
     pub tasks_skipped: usize,
+    /// Class of each worker index (empty = treat all workers as `Cpu`;
+    /// serial profiles and pre-heterogeneity callers leave it empty).
+    pub worker_classes: Vec<WorkerClass>,
 }
 
 impl Profile {
@@ -37,7 +41,15 @@ impl Profile {
             records: Vec::new(),
             wall: Duration::ZERO,
             tasks_skipped: 0,
+            worker_classes: Vec::new(),
         }
+    }
+
+    fn class_of_worker(&self, w: usize) -> WorkerClass {
+        self.worker_classes
+            .get(w)
+            .copied()
+            .unwrap_or(WorkerClass::Cpu)
     }
 
     pub fn record(&mut self, worker: usize, kind: TaskKind, dur: Duration, bytes: usize) {
@@ -68,6 +80,47 @@ impl Profile {
             return 0.0;
         }
         self.busy_time().as_secs_f64() / (self.wall.as_secs_f64() * self.nworkers as f64)
+    }
+
+    /// Per-class busy time and utilization: `(class, workers, busy,
+    /// busy / (wall * workers))`, one row per class present in
+    /// `worker_classes` (all-`Cpu` when unset), in first-worker order.
+    pub fn class_utilization(&self) -> Vec<(WorkerClass, usize, Duration, f64)> {
+        let mut rows: Vec<(WorkerClass, usize, Duration)> = Vec::new();
+        for w in 0..self.nworkers {
+            let c = self.class_of_worker(w);
+            if !rows.iter().any(|r| r.0 == c) {
+                rows.push((c, 0, Duration::ZERO));
+            }
+            rows.iter_mut().find(|r| r.0 == c).unwrap().1 += 1;
+        }
+        for r in &self.records {
+            let c = self.class_of_worker(r.worker);
+            match rows.iter_mut().find(|row| row.0 == c) {
+                Some(row) => row.2 += r.dur,
+                None => rows.push((c, 0, r.dur)),
+            }
+        }
+        rows.into_iter()
+            .map(|(c, nw, busy)| {
+                let util = if self.wall.is_zero() || nw == 0 {
+                    0.0
+                } else {
+                    busy.as_secs_f64() / (self.wall.as_secs_f64() * nw as f64)
+                };
+                (c, nw, busy, util)
+            })
+            .collect()
+    }
+
+    /// Build the per-(kind, class) cost model from this profile's records
+    /// (feeds [`super::placement::Placer`] and the DES projection).
+    pub fn class_cost_model(&self) -> ClassCostModel {
+        let mut cm = ClassCostModel::default();
+        for r in &self.records {
+            cm.record(r.kind, self.class_of_worker(r.worker), r.dur.as_secs_f64());
+        }
+        cm
     }
 
     /// Build a per-kind cost model (mean seconds per task kind).
@@ -125,6 +178,39 @@ impl CostModel {
     }
 }
 
+/// Measured per-(kind, class) execution-time sums — the heterogeneous
+/// cost model StarPU keeps per codelet per architecture.  The runtime
+/// accumulates one of these across jobs; [`super::placement::est_cost`]
+/// consumes it with static-factor fallback.
+#[derive(Clone, Debug, Default)]
+pub struct ClassCostModel {
+    /// (kind name, class) -> (total seconds, samples)
+    sums: HashMap<(&'static str, WorkerClass), (f64, u64)>,
+}
+
+impl ClassCostModel {
+    pub fn record(&mut self, kind: TaskKind, class: WorkerClass, secs: f64) {
+        let e = self.sums.entry((kind.name, class)).or_insert((0.0, 0));
+        e.0 += secs;
+        e.1 += 1;
+    }
+
+    /// Mean seconds of `kind` on `class`, if ever measured there.
+    pub fn mean(&self, kind: TaskKind, class: WorkerClass) -> Option<f64> {
+        self.sums
+            .get(&(kind.name, class))
+            .map(|&(s, n)| s / n as f64)
+    }
+
+    pub fn samples(&self, kind: TaskKind, class: WorkerClass) -> u64 {
+        self.sums.get(&(kind.name, class)).map_or(0, |&(_, n)| n)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sums.is_empty()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -140,6 +226,33 @@ mod tests {
         assert!((cm.cost(TaskKind::POTRF) - 50e-6).abs() < 1e-12);
         // unknown kind gets a small default, not zero (DES needs progress)
         assert!(cm.cost(TaskKind::DCMG) > 0.0);
+    }
+
+    #[test]
+    fn class_utilization_and_cost_model() {
+        let mut p = Profile::new(3);
+        p.worker_classes = vec![WorkerClass::Cpu, WorkerClass::Cpu, WorkerClass::Slow];
+        p.wall = Duration::from_secs(1);
+        p.record(0, TaskKind::GEMM, Duration::from_millis(100), 0);
+        p.record(1, TaskKind::GEMM, Duration::from_millis(300), 0);
+        p.record(2, TaskKind::GEMM, Duration::from_millis(800), 0);
+        let rows = p.class_utilization();
+        assert_eq!(rows.len(), 2);
+        let cpu = rows.iter().find(|r| r.0 == WorkerClass::Cpu).unwrap();
+        let slow = rows.iter().find(|r| r.0 == WorkerClass::Slow).unwrap();
+        assert_eq!(cpu.1, 2);
+        assert_eq!(slow.1, 1);
+        assert!((cpu.3 - 0.2).abs() < 1e-9, "{}", cpu.3);
+        assert!((slow.3 - 0.8).abs() < 1e-9, "{}", slow.3);
+        let cm = p.class_cost_model();
+        assert!((cm.mean(TaskKind::GEMM, WorkerClass::Cpu).unwrap() - 0.2).abs() < 1e-12);
+        assert!((cm.mean(TaskKind::GEMM, WorkerClass::Slow).unwrap() - 0.8).abs() < 1e-12);
+        assert_eq!(cm.mean(TaskKind::POTRF, WorkerClass::Cpu), None);
+        assert_eq!(cm.samples(TaskKind::GEMM, WorkerClass::Cpu), 2);
+        // unmapped workers default to Cpu
+        let mut q = Profile::new(1);
+        q.record(0, TaskKind::POTRF, Duration::from_millis(10), 0);
+        assert!(q.class_cost_model().mean(TaskKind::POTRF, WorkerClass::Cpu).is_some());
     }
 
     #[test]

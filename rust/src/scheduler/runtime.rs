@@ -33,8 +33,9 @@
 //! scope alongside the storage (what every pipeline in this crate does)
 //! is sufficient.
 
+use super::placement::{slow_factor, ClassSpec, ClassStat, WorkerClass};
 use super::pool::Policy;
-use super::profile::{Profile, TaskRecord};
+use super::profile::{ClassCostModel, Profile, TaskRecord};
 use super::{Access, TaskGraph, TaskKind};
 use std::collections::{BinaryHeap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -97,6 +98,10 @@ impl CancelToken {
 struct JobTask {
     kind: TaskKind,
     bytes: usize,
+    /// Index into `Shared::classes` — resolved at submission from the
+    /// task's [`WorkerClass`] annotation (default class when absent or
+    /// when this runtime lacks the requested class).
+    class: usize,
     succs: Vec<usize>,
 }
 
@@ -167,17 +172,41 @@ impl Ord for HeapEntry {
     }
 }
 
+/// One worker class's contiguous slice of the worker/queue arrays.
+/// A single all-`Cpu` range `{start: 0, count: nworkers}` makes every
+/// queue/steal formula below reduce exactly to the pre-class runtime.
+struct ClassRange {
+    class: WorkerClass,
+    start: usize,
+    count: usize,
+}
+
 /// State shared between the workers and the submitting threads.
 struct Shared {
     policy: Policy,
     nworkers: usize,
-    /// eager uses slot 0 only; lws/random use one deque per worker.
+    /// Worker classes, in spec order; non-empty, counts sum to
+    /// `nworkers`, ranges tile `0..nworkers` contiguously.
+    classes: Vec<ClassRange>,
+    /// Worker index -> index into `classes`.
+    worker_class: Vec<usize>,
+    /// Workers simulating the `Slow` class sleep `(slow_factor-1)` x each
+    /// task's measured duration after running it (values untouched —
+    /// results stay bit-identical, only timing changes).
+    worker_slow: Vec<bool>,
+    /// Class hosting unannotated tasks: the `Cpu` range if present,
+    /// else class 0.
+    default_class: usize,
+    /// eager uses the first slot of each class range only; lws/random
+    /// use one deque per worker.
     queues: Vec<Mutex<VecDeque<Ready>>>,
-    heap: Mutex<BinaryHeap<HeapEntry>>,
+    /// One priority heap per class (prio policy).
+    heaps: Vec<Mutex<BinaryHeap<HeapEntry>>>,
     cv: Condvar,
     cv_guard: Mutex<()>,
-    /// Queued-but-not-popped ready tasks (guards against missed wakeups).
-    pending: AtomicUsize,
+    /// Queued-but-not-popped ready tasks per class (guards against
+    /// missed wakeups; workers park against their own class's counter).
+    pending: Vec<AtomicUsize>,
     shutdown: AtomicBool,
     /// Submission gate: submits hold a read lock while seeding their
     /// job, shutdown takes the write lock before raising the flag — so
@@ -190,13 +219,38 @@ struct Shared {
     /// token had fired — the work a won speculative race (or a client
     /// disconnect) saved.  Mirrors `tasks_executed` for stats.
     tasks_skipped: AtomicU64,
+    /// Per-class counters (placement telemetry): tasks routed at push,
+    /// tasks executed, intra-class steals.
+    class_placed: Vec<AtomicU64>,
+    class_executed: Vec<AtomicU64>,
+    class_stolen: Vec<AtomicU64>,
+    /// Measured per-(kind, class) costs, accumulated across jobs to feed
+    /// the placer.  Only written on heterogeneous runtimes (>1 class) —
+    /// the homogeneous hot path never takes this lock.
+    cost_stats: Mutex<ClassCostModel>,
 }
 
 impl Shared {
+    /// Resolve a task's class annotation to a class index on *this*
+    /// runtime.  Unknown/absent classes fall back to the default class so
+    /// a placed graph remains runnable on any runtime.
+    fn class_index(&self, class: Option<WorkerClass>) -> usize {
+        match class {
+            Some(c) => self
+                .classes
+                .iter()
+                .position(|r| r.class == c)
+                .unwrap_or(self.default_class),
+            None => self.default_class,
+        }
+    }
+
     fn push(&self, r: Ready, local: usize) {
         let prio = r.job.tasks[r.task].kind.priority;
+        let ci = r.job.tasks[r.task].class;
+        let rg = &self.classes[ci];
         match self.policy {
-            Policy::Eager => self.queues[0].lock().unwrap().push_back(r),
+            Policy::Eager => self.queues[rg.start].lock().unwrap().push_back(r),
             Policy::Prio => {
                 let key = (
                     prio,
@@ -204,9 +258,9 @@ impl Shared {
                     std::cmp::Reverse(r.job.seq),
                     std::cmp::Reverse(r.task),
                 );
-                self.heap.lock().unwrap().push(HeapEntry { key, ready: r });
+                self.heaps[ci].lock().unwrap().push(HeapEntry { key, ready: r });
             }
-            Policy::Lws => self.queues[local % self.nworkers]
+            Policy::Lws => self.queues[rg.start + local % rg.count]
                 .lock()
                 .unwrap()
                 .push_back(r),
@@ -215,41 +269,56 @@ impl Shared {
                 let s = self.rng_state.fetch_add(0x9E3779B9, Ordering::Relaxed);
                 let mut x = s.wrapping_mul(0x2545F4914F6CDD1D) ^ 0x1234_5678;
                 x ^= x >> 17;
-                self.queues[x % self.nworkers].lock().unwrap().push_back(r)
+                self.queues[rg.start + x % rg.count]
+                    .lock()
+                    .unwrap()
+                    .push_back(r)
             }
         }
-        self.pending.fetch_add(1, Ordering::Release);
+        self.class_placed[ci].fetch_add(1, Ordering::Relaxed);
+        self.pending[ci].fetch_add(1, Ordering::Release);
         // wake sleepers
         let _g = self.cv_guard.lock().unwrap();
         self.cv.notify_all();
     }
 
     fn pop(&self, me: usize) -> Option<Ready> {
+        let ci = self.worker_class[me];
+        let rg = &self.classes[ci];
         let got = match self.policy {
-            Policy::Eager => self.queues[0].lock().unwrap().pop_front(),
-            Policy::Prio => self.heap.lock().unwrap().pop().map(|e| e.ready),
+            Policy::Eager => self.queues[rg.start].lock().unwrap().pop_front(),
+            Policy::Prio => self.heaps[ci].lock().unwrap().pop().map(|e| e.ready),
             Policy::Lws => {
-                // local LIFO first (cache locality), then steal FIFO
+                // local LIFO first (cache locality), then steal FIFO —
+                // victims confined to this worker's class.
                 let mine = self.queues[me].lock().unwrap().pop_back();
                 mine.or_else(|| {
-                    (1..self.nworkers).find_map(|off| {
-                        let v = (me + off) % self.nworkers;
-                        self.queues[v].lock().unwrap().pop_front()
+                    (1..rg.count).find_map(|off| {
+                        let v = rg.start + (me - rg.start + off) % rg.count;
+                        let r = self.queues[v].lock().unwrap().pop_front();
+                        if r.is_some() {
+                            self.class_stolen[ci].fetch_add(1, Ordering::Relaxed);
+                        }
+                        r
                     })
                 })
             }
             Policy::Random => {
                 let mine = self.queues[me].lock().unwrap().pop_front();
                 mine.or_else(|| {
-                    (1..self.nworkers).find_map(|off| {
-                        let v = (me + off) % self.nworkers;
-                        self.queues[v].lock().unwrap().pop_front()
+                    (1..rg.count).find_map(|off| {
+                        let v = rg.start + (me - rg.start + off) % rg.count;
+                        let r = self.queues[v].lock().unwrap().pop_front();
+                        if r.is_some() {
+                            self.class_stolen[ci].fetch_add(1, Ordering::Relaxed);
+                        }
+                        r
                     })
                 })
             }
         };
         if got.is_some() {
-            self.pending.fetch_sub(1, Ordering::AcqRel);
+            self.pending[ci].fetch_sub(1, Ordering::AcqRel);
         }
         got
     }
@@ -286,8 +355,26 @@ fn execute(shared: &Arc<Shared>, r: Ready, w: usize) {
                 }
             }
         }
+        if shared.worker_slow[w] {
+            // Slow-class simulation: stretch this task's wall time by the
+            // throttle factor.  The closure already ran unmodified, so
+            // results are bit-identical — only the clock differs.
+            let f = slow_factor();
+            if f > 1.0 {
+                std::thread::sleep(t0.elapsed().mul_f64(f - 1.0));
+            }
+        }
         let dur = t0.elapsed();
         shared.tasks_executed.fetch_add(1, Ordering::Relaxed);
+        let ci = shared.worker_class[w];
+        shared.class_executed[ci].fetch_add(1, Ordering::Relaxed);
+        if shared.classes.len() > 1 {
+            shared.cost_stats.lock().unwrap().record(
+                job.tasks[task].kind,
+                shared.classes[ci].class,
+                dur.as_secs_f64(),
+            );
+        }
         *job.records[task].lock().unwrap() = Some(TaskRecord {
             worker: w,
             kind: job.tasks[task].kind,
@@ -317,13 +404,14 @@ fn execute(shared: &Arc<Shared>, r: Ready, w: usize) {
 /// Worker main loop: drain ready tasks, park while idle, exit on
 /// shutdown once no work is queued.
 fn worker_loop(shared: Arc<Shared>, w: usize) {
+    let ci = shared.worker_class[w];
     loop {
         if let Some(r) = shared.pop(w) {
             execute(&shared, r, w);
             continue;
         }
         let g = shared.cv_guard.lock().unwrap();
-        if shared.pending.load(Ordering::Acquire) > 0 {
+        if shared.pending[ci].load(Ordering::Acquire) > 0 {
             continue; // a push raced our empty pop — retry
         }
         if shared.shutdown.load(Ordering::Acquire) {
@@ -359,6 +447,9 @@ fn warn_if_oversubscribed(nworkers: usize) {
 pub struct Runtime {
     shared: Arc<Shared>,
     workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    /// Class of each worker index, for per-class profile attribution
+    /// (shared cheaply with every [`JobHandle`]).
+    worker_classes: Arc<Vec<WorkerClass>>,
     spawned: AtomicU64,
     next_seq: AtomicU64,
     /// High-water mark of [`Runtime::prewarm_workers_once`] keys already
@@ -371,28 +462,113 @@ pub struct Runtime {
 }
 
 impl Runtime {
-    /// Spawn `nworkers.max(1)` worker threads under `policy`.  Warns (once
-    /// per process) when the request oversubscribes the machine.
+    /// Spawn `nworkers.max(1)` worker threads under `policy`, all in one
+    /// `Cpu` class — the exact pre-heterogeneity runtime (hermetic: never
+    /// consults `EXAGEOSTAT_WORKER_CLASSES`; callers that want env-driven
+    /// classes resolve a [`ClassSpec`] via `placement::class_spec_for`
+    /// and use [`Runtime::new_with_classes`]).  Warns (once per process)
+    /// when the request oversubscribes the machine.
     pub fn new(nworkers: usize, policy: Policy) -> Runtime {
-        let nworkers = nworkers.max(1);
+        Self::build(&ClassSpec::homogeneous(nworkers), policy, false)
+    }
+
+    /// Spawn one worker pool per class in `spec` (empty classes dropped).
+    /// Queues, priority heaps and work-stealing are confined within each
+    /// class; tasks annotated with a class run only on its workers.  A
+    /// single-class spec behaves bit-for-bit like [`Runtime::new`].
+    pub fn new_with_classes(spec: &ClassSpec, policy: Policy) -> Runtime {
+        Self::build(spec, policy, false)
+    }
+
+    /// Class-*blind* variant for policy experiments (the baseline the
+    /// placement bench compares against): same worker mix — `Slow`
+    /// workers are still throttled — but all workers share one
+    /// scheduling class, so any worker may pick up any task.
+    pub fn new_with_classes_blind(spec: &ClassSpec, policy: Policy) -> Runtime {
+        Self::build(spec, policy, true)
+    }
+
+    fn build(spec: &ClassSpec, policy: Policy, blind: bool) -> Runtime {
+        let entries: Vec<(WorkerClass, usize)> = {
+            let mut e: Vec<(WorkerClass, usize)> =
+                spec.classes.iter().copied().filter(|c| c.1 > 0).collect();
+            if e.is_empty() {
+                e.push((WorkerClass::Cpu, 1));
+            }
+            e
+        };
+        let nworkers: usize = entries.iter().map(|e| e.1).sum();
         warn_if_oversubscribed(nworkers);
+        let mut worker_names: Vec<WorkerClass> = Vec::with_capacity(nworkers);
+        let mut worker_slow: Vec<bool> = Vec::with_capacity(nworkers);
+        for &(class, count) in &entries {
+            for _ in 0..count {
+                worker_names.push(class);
+                worker_slow.push(class == WorkerClass::Slow);
+            }
+        }
+        let classes: Vec<ClassRange> = if blind {
+            vec![ClassRange {
+                class: WorkerClass::Cpu,
+                start: 0,
+                count: nworkers,
+            }]
+        } else {
+            let mut out = Vec::with_capacity(entries.len());
+            let mut start = 0;
+            for &(class, count) in &entries {
+                out.push(ClassRange {
+                    class,
+                    start,
+                    count,
+                });
+                start += count;
+            }
+            out
+        };
+        let nclasses = classes.len();
+        let default_class = classes
+            .iter()
+            .position(|r| r.class == WorkerClass::Cpu)
+            .unwrap_or(0);
+        let worker_class: Vec<usize> = if blind {
+            vec![0; nworkers]
+        } else {
+            (0..nworkers)
+                .map(|w| {
+                    classes
+                        .iter()
+                        .position(|r| w >= r.start && w < r.start + r.count)
+                        .unwrap()
+                })
+                .collect()
+        };
         let shared = Arc::new(Shared {
             policy,
             nworkers,
+            classes,
+            worker_class,
+            worker_slow,
+            default_class,
             queues: (0..nworkers).map(|_| Mutex::new(VecDeque::new())).collect(),
-            heap: Mutex::new(BinaryHeap::new()),
+            heaps: (0..nclasses).map(|_| Mutex::new(BinaryHeap::new())).collect(),
             cv: Condvar::new(),
             cv_guard: Mutex::new(()),
-            pending: AtomicUsize::new(0),
+            pending: (0..nclasses).map(|_| AtomicUsize::new(0)).collect(),
             shutdown: AtomicBool::new(false),
             lifecycle: RwLock::new(()),
             rng_state: AtomicUsize::new(0x5DEECE66),
             tasks_executed: AtomicU64::new(0),
             tasks_skipped: AtomicU64::new(0),
+            class_placed: (0..nclasses).map(|_| AtomicU64::new(0)).collect(),
+            class_executed: (0..nclasses).map(|_| AtomicU64::new(0)).collect(),
+            class_stolen: (0..nclasses).map(|_| AtomicU64::new(0)).collect(),
+            cost_stats: Mutex::new(ClassCostModel::default()),
         });
         let rt = Runtime {
             shared: shared.clone(),
             workers: Mutex::new(Vec::with_capacity(nworkers)),
+            worker_classes: Arc::new(worker_names),
             spawned: AtomicU64::new(0),
             next_seq: AtomicU64::new(0),
             prewarm_mark: Mutex::new(0),
@@ -417,6 +593,48 @@ impl Runtime {
     /// Number of worker threads serving this runtime.
     pub fn nworkers(&self) -> usize {
         self.shared.nworkers
+    }
+
+    /// Live class layout: `(class, worker count)` in range order.
+    pub fn classes(&self) -> Vec<(WorkerClass, usize)> {
+        self.shared
+            .classes
+            .iter()
+            .map(|r| (r.class, r.count))
+            .collect()
+    }
+
+    /// Number of scheduling classes (1 = homogeneous).
+    pub fn nclasses(&self) -> usize {
+        self.shared.classes.len()
+    }
+
+    /// Class of worker `w` (scheduling class — a blind runtime reports
+    /// one merged class regardless of throttling).
+    pub fn worker_class_of(&self, w: usize) -> WorkerClass {
+        self.shared.classes[self.shared.worker_class[w]].class
+    }
+
+    /// Per-class placement/execution/steal counters since startup.
+    pub fn class_stats(&self) -> Vec<ClassStat> {
+        self.shared
+            .classes
+            .iter()
+            .enumerate()
+            .map(|(ci, r)| ClassStat {
+                class: r.class,
+                workers: r.count,
+                tasks_placed: self.shared.class_placed[ci].load(Ordering::Relaxed),
+                tasks_executed: self.shared.class_executed[ci].load(Ordering::Relaxed),
+                steals: self.shared.class_stolen[ci].load(Ordering::Relaxed),
+            })
+            .collect()
+    }
+
+    /// Measured per-(kind, class) cost model accumulated across all jobs
+    /// (empty on homogeneous runtimes — the hot path skips recording).
+    pub fn cost_model_by_class(&self) -> ClassCostModel {
+        self.shared.cost_stats.lock().unwrap().clone()
     }
 
     /// Scheduling policy the workers dispatch under.
@@ -446,7 +664,11 @@ impl Runtime {
     /// the backpressure signal the streaming serve loop admits requests
     /// against (`coordinator::serve_stream`).
     pub fn queue_depth(&self) -> usize {
-        self.shared.pending.load(Ordering::Acquire)
+        self.shared
+            .pending
+            .iter()
+            .map(|p| p.load(Ordering::Acquire))
+            .sum()
     }
 
     /// Has [`Runtime::shutdown`] run?
@@ -501,6 +723,7 @@ impl Runtime {
             tasks.push(JobTask {
                 kind: t.kind,
                 bytes: t.bytes,
+                class: self.shared.class_index(t.class),
                 succs: std::mem::take(&mut t.succs),
             });
         }
@@ -539,6 +762,7 @@ impl Runtime {
         JobHandle {
             job,
             nworkers: self.shared.nworkers,
+            worker_classes: self.worker_classes.clone(),
             consumed: false,
         }
     }
@@ -556,32 +780,45 @@ impl Runtime {
     /// all — acceptable for its purpose: growing worker-local state ahead
     /// of time (e.g. `linalg::blas::reserve_pack_workspaces`, called by
     /// `EvalSession::new` so tile kernels start allocation-free).
-    /// Blocks until the prewarm job completes.
+    /// Blocks until the prewarm jobs complete.
+    ///
+    /// Heterogeneous runtimes prewarm **per class**: each class gets its
+    /// own barrier over its own worker count, with the tasks pinned to
+    /// that class — a `Slow`/`Accel` worker can never satisfy a `Cpu`
+    /// barrier slot (or vice versa), which the old single shared barrier
+    /// allowed.
     pub fn prewarm_workers(&self, f: impl Fn() + Send + Sync + 'static) {
-        let n = self.shared.nworkers;
         let f = Arc::new(f);
-        let arrived = Arc::new(AtomicUsize::new(0));
-        // One shared deadline from submission time: on a busy runtime the
-        // whole prewarm costs at most this bound, it never serializes
-        // per-task waits.  Kept short — on an idle runtime the barrier
-        // completes in microseconds, and under contention distribution
-        // is best-effort anyway; the spin only burns otherwise-idle
-        // workers until then.
-        let deadline = Instant::now() + Duration::from_millis(50);
-        let mut g = TaskGraph::new();
-        let hs = g.register_many(n);
-        for h in hs {
-            let f = f.clone();
-            let arrived = arrived.clone();
-            g.submit(TaskKind::OTHER, &[(h, Access::RW)], 0, move || {
-                arrived.fetch_add(1, Ordering::SeqCst);
-                while arrived.load(Ordering::SeqCst) < n && Instant::now() < deadline {
-                    std::thread::yield_now();
-                }
-                f();
-            });
+        let mut handles = Vec::with_capacity(self.shared.classes.len());
+        for rg in &self.shared.classes {
+            let n = rg.count;
+            let arrived = Arc::new(AtomicUsize::new(0));
+            // One shared deadline from submission time: on a busy runtime
+            // the whole prewarm costs at most this bound, it never
+            // serializes per-task waits.  Kept short — on an idle runtime
+            // the barrier completes in microseconds, and under contention
+            // distribution is best-effort anyway; the spin only burns
+            // otherwise-idle workers until then.
+            let deadline = Instant::now() + Duration::from_millis(50);
+            let mut g = TaskGraph::new();
+            let hs = g.register_many(n);
+            for h in hs {
+                let f = f.clone();
+                let arrived = arrived.clone();
+                let id = g.submit(TaskKind::OTHER, &[(h, Access::RW)], 0, move || {
+                    arrived.fetch_add(1, Ordering::SeqCst);
+                    while arrived.load(Ordering::SeqCst) < n && Instant::now() < deadline {
+                        std::thread::yield_now();
+                    }
+                    f();
+                });
+                g.set_class(id, rg.class);
+            }
+            handles.push(self.submit(g));
         }
-        self.submit(g).wait();
+        for h in handles {
+            h.wait();
+        }
     }
 
     /// [`Runtime::prewarm_workers`], deduplicated by a monotone `key`:
@@ -649,6 +886,7 @@ impl std::fmt::Debug for Runtime {
 pub struct JobHandle {
     job: Arc<JobInner>,
     nworkers: usize,
+    worker_classes: Arc<Vec<WorkerClass>>,
     consumed: bool,
 }
 
@@ -708,6 +946,7 @@ impl JobHandle {
             (st.wall, st.panic.take())
         };
         let mut p = Profile::new(self.nworkers);
+        p.worker_classes = (*self.worker_classes).clone();
         for slot in &self.job.records {
             if let Some(rec) = *slot.lock().unwrap() {
                 p.records.push(rec);
@@ -1041,5 +1280,123 @@ mod tests {
         low.wait();
         high.wait();
         assert_eq!(*order.lock().unwrap(), vec![1, 0]);
+    }
+
+    /// Worker thread names are `exa-worker-{w}`; parse back the index.
+    fn current_worker_index() -> usize {
+        std::thread::current()
+            .name()
+            .and_then(|n| n.strip_prefix("exa-worker-"))
+            .and_then(|n| n.parse().ok())
+            .expect("task ran off a runtime worker")
+    }
+
+    #[test]
+    fn classed_tasks_run_only_on_their_class_workers() {
+        // cpu:1,slow:1 -> worker 0 is Cpu, worker 1 is Slow.  Class
+        // pinning is a hard guarantee under every policy: queues and
+        // steals never cross classes.
+        let spec = ClassSpec::parse("cpu:1,slow:1").unwrap();
+        for policy in all_policies() {
+            let rt = Runtime::new_with_classes(&spec, policy);
+            assert_eq!(rt.nworkers(), 2);
+            assert_eq!(rt.nclasses(), 2);
+            assert_eq!(rt.worker_class_of(0), WorkerClass::Cpu);
+            assert_eq!(rt.worker_class_of(1), WorkerClass::Slow);
+            let hits = Arc::new(Mutex::new(Vec::new()));
+            let mut g = TaskGraph::new();
+            let hs = g.register_many(12);
+            for (i, h) in hs.into_iter().enumerate() {
+                let hits = hits.clone();
+                let id = g.submit(TaskKind::GEMM, &[(h, Access::RW)], 0, move || {
+                    hits.lock().unwrap().push((i, current_worker_index()));
+                });
+                g.set_class(
+                    id,
+                    if i % 2 == 0 {
+                        WorkerClass::Cpu
+                    } else {
+                        WorkerClass::Slow
+                    },
+                );
+            }
+            rt.submit(g).wait();
+            let hits = hits.lock().unwrap();
+            assert_eq!(hits.len(), 12, "{policy:?}");
+            for &(i, w) in hits.iter() {
+                assert_eq!(w, i % 2, "{policy:?}: task {i} on wrong class worker");
+            }
+            let stats = rt.class_stats();
+            assert_eq!(stats.len(), 2);
+            assert_eq!(stats[0].class, WorkerClass::Cpu);
+            assert_eq!(stats[0].tasks_executed, 6);
+            assert_eq!(stats[1].class, WorkerClass::Slow);
+            assert_eq!(stats[1].tasks_executed, 6);
+            assert_eq!(stats[0].tasks_placed, 6);
+            // heterogeneous runtimes learn per-(kind, class) costs
+            let cm = rt.cost_model_by_class();
+            assert!(cm.mean(TaskKind::GEMM, WorkerClass::Cpu).is_some());
+            assert!(cm.mean(TaskKind::GEMM, WorkerClass::Slow).is_some());
+            rt.shutdown();
+        }
+    }
+
+    #[test]
+    fn unknown_class_falls_back_to_default() {
+        // A graph placed for a slow class still runs on a homogeneous
+        // runtime (and on class-blind runtimes).
+        for rt in [
+            Runtime::new(2, Policy::Lws),
+            Runtime::new_with_classes_blind(
+                &ClassSpec::parse("cpu:1,slow:1").unwrap(),
+                Policy::Lws,
+            ),
+        ] {
+            assert_eq!(rt.nclasses(), 1);
+            let counter = Arc::new(AtomicUsize::new(0));
+            let mut g = TaskGraph::new();
+            let hs = g.register_many(8);
+            for h in hs {
+                let c = counter.clone();
+                let id = g.submit(TaskKind::SYRK, &[(h, Access::RW)], 0, move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+                g.set_class(id, WorkerClass::Slow);
+            }
+            rt.submit(g).wait();
+            assert_eq!(counter.load(Ordering::SeqCst), 8);
+            // homogeneous runtimes never record class costs
+            assert!(rt.cost_model_by_class().is_empty());
+            rt.shutdown();
+        }
+    }
+
+    #[test]
+    fn prewarm_is_per_class() {
+        // cpu:2,slow:1 -> the slow prewarm slot may only be filled by
+        // the slow worker (index 2), and the two cpu slots only by cpu
+        // workers — exactly one prewarm run per worker class member.
+        let rt = Runtime::new_with_classes(&ClassSpec::parse("cpu:2,slow:1").unwrap(), Policy::Lws);
+        let by_worker = Arc::new(Mutex::new(std::collections::HashMap::new()));
+        {
+            let by_worker = by_worker.clone();
+            rt.prewarm_workers(move || {
+                *by_worker
+                    .lock()
+                    .unwrap()
+                    .entry(current_worker_index())
+                    .or_insert(0usize) += 1;
+            });
+        }
+        let by_worker = by_worker.lock().unwrap();
+        let slow_runs = by_worker.get(&2).copied().unwrap_or(0);
+        let cpu_runs: usize = by_worker
+            .iter()
+            .filter(|(&w, _)| w < 2)
+            .map(|(_, &n)| n)
+            .sum();
+        assert_eq!(slow_runs, 1, "slow class warms on its own worker only");
+        assert_eq!(cpu_runs, 2, "cpu class warms against its own count");
+        rt.shutdown();
     }
 }

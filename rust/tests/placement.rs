@@ -1,0 +1,177 @@
+//! Heterogeneous worker-class integration suite (DESIGN.md §2i).
+//!
+//! The placement contract under test: worker classes decide only *where*
+//! a task runs, never *what* it computes — so any class layout must
+//! reproduce the homogeneous pool's results bit-for-bit, across every
+//! likelihood variant, while the placer keeps the critical-path
+//! factorization kinds (POTRF, TRSM) off classes that cannot run them
+//! competitively.
+//!
+//! Tests that flip the process-global class override serialize on
+//! `placement::class_test_lock()` (same pattern as the planner's fuse
+//! override lock).
+
+use exageostat::covariance::DistanceMetric;
+use exageostat::likelihood::{EvalSession, ExecCtx, Problem, Variant};
+use exageostat::pipeline::{lower_tiled, plan, Op, PlanKnobs, TiledSpec};
+use exageostat::rng::Pcg64;
+use exageostat::scheduler::placement::{
+    class_test_lock, set_class_override, ClassSpec, Placer, WorkerClass,
+};
+use exageostat::scheduler::pool::Policy;
+use exageostat::testkit::gen;
+use std::sync::Arc;
+
+fn problem(n: usize, seed: u64) -> (Problem, [f64; 3]) {
+    let mut rng = Pcg64::seed_from_u64(seed);
+    let p = Problem {
+        kernel: exageostat::covariance::kernel_by_name("ugsm-s").unwrap().into(),
+        locs: Arc::new(gen::locations(&mut rng, n)),
+        z: Arc::new(gen::normals(&mut rng, n)),
+        metric: DistanceMetric::Euclidean,
+    };
+    (p, gen::ugsm_theta(&mut rng))
+}
+
+/// Evaluate all four variants twice (cold + warm — the warm pass runs
+/// with a populated per-class cost model, exercising the measured HEFT
+/// path) and return the warm `(loglik, logdet, sse)` bit patterns.
+fn eval_all(p: &Problem, theta: &[f64; 3], n: usize, ts: usize) -> Vec<(u64, u64, u64)> {
+    let ctx = ExecCtx::new(3, ts, Policy::Lws);
+    let nt = n.div_ceil(ts);
+    let variants = [
+        Variant::Exact,
+        Variant::Dst { band: nt - 1 },
+        Variant::Mp { band: 1 },
+        Variant::Tlr {
+            tol: 1e-9,
+            max_rank: usize::MAX,
+        },
+    ];
+    variants
+        .iter()
+        .map(|v| {
+            let mut s = EvalSession::new(p, *v, &ctx).unwrap();
+            s.eval(theta).unwrap();
+            let r = s.eval(theta).unwrap();
+            (r.loglik.to_bits(), r.logdet.to_bits(), r.sse.to_bits())
+        })
+        .collect()
+}
+
+/// Any class layout — default, forced single-class, or CPU + throttled
+/// slow — must reproduce identical bits for every variant: placement
+/// moves tasks between workers, and the dependency edges plus the
+/// host-side reductions already fix the floating-point summation order.
+#[test]
+fn class_layouts_are_bit_identical_across_variants() {
+    let _g = class_test_lock();
+    let (p, theta) = problem(60, 0x9_1001);
+    let (n, ts) = (60, 16);
+
+    set_class_override(None);
+    let baseline = eval_all(&p, &theta, n, ts);
+
+    set_class_override(ClassSpec::parse("cpu:1"));
+    let single = eval_all(&p, &theta, n, ts);
+
+    set_class_override(ClassSpec::parse("cpu:2,slow:1"));
+    let classed = eval_all(&p, &theta, n, ts);
+
+    set_class_override(None);
+    assert_eq!(baseline, single, "forced single-class drifted from default");
+    assert_eq!(baseline, classed, "cpu+slow layout drifted from default");
+}
+
+/// The override visibly reaches the runtime `ExecCtx::new` spawns: a
+/// `cpu:2,slow:1` spec fitted to 3 cores yields exactly those classes.
+#[test]
+fn class_override_reaches_exec_ctx_runtime() {
+    let _g = class_test_lock();
+    set_class_override(ClassSpec::parse("cpu:2,slow:1"));
+    let ctx = ExecCtx::new(3, 16, Policy::Lws);
+    let classes = ctx.runtime.classes();
+    set_class_override(None);
+    assert_eq!(
+        classes,
+        vec![(WorkerClass::Cpu, 2), (WorkerClass::Slow, 1)],
+        "override did not reach the spawned runtime"
+    );
+    assert_eq!(ctx.runtime.nworkers(), 3);
+}
+
+/// Eligibility pins the factorization critical path: with a slow class
+/// present, the placer routes some off-critical work (generation, GEMM
+/// updates) to it but never a POTRF or TRSM — those kinds are declared
+/// CPU-only, so no cost estimate can move them.
+#[test]
+fn placer_keeps_potrf_and_trsm_off_slow_class() {
+    // Dense 5x5-tile Cholesky, unfused so every plan task is one IR op
+    // and the op<->class mapping is directly inspectable.
+    let spec = TiledSpec {
+        n: 240,
+        ts: 48,
+        band: None,
+        mp_band: None,
+        tlr: false,
+        with_solve: true,
+        with_logdet: true,
+        owners: 1,
+    };
+    let ir = lower_tiled(&spec);
+    let mut pl = plan(&ir, &PlanKnobs { fuse: false });
+    let placer = Placer::new(&[(WorkerClass::Cpu, 2), (WorkerClass::Slow, 1)]);
+    let counts = placer.place(&mut pl);
+
+    let placed: usize = counts.iter().map(|&(_, c)| c).sum();
+    assert_eq!(placed, pl.tasks.len(), "placer must class every task");
+    let slow_placed = counts
+        .iter()
+        .find(|(c, _)| *c == WorkerClass::Slow)
+        .map_or(0, |&(_, c)| c);
+    assert!(
+        slow_placed > 0,
+        "48x48 f64 tiles clear the small-tile gate, so HEFT should \
+         offload some generation/update work to the slow class"
+    );
+    for t in &pl.tasks {
+        if t.class != Some(WorkerClass::Slow) {
+            continue;
+        }
+        for &o in &t.ops {
+            assert!(
+                !matches!(ir.nodes[o].op, Op::Potrf { .. } | Op::Trsm { .. }),
+                "critical-path op {:?} placed on the slow class",
+                ir.nodes[o].op
+            );
+        }
+    }
+}
+
+/// Tiles below the small-tile threshold never leave the CPU class: the
+/// transfer/latency overhead dominates, so the placer's eligibility gate
+/// must keep them local regardless of load.
+#[test]
+fn small_tiles_stay_on_cpu() {
+    let spec = TiledSpec {
+        n: 64,
+        ts: 8, // 8x8 f64 = 512 B, far below the 16 KiB gate
+        band: None,
+        mp_band: None,
+        tlr: false,
+        with_solve: false,
+        with_logdet: false,
+        owners: 1,
+    };
+    let ir = lower_tiled(&spec);
+    let mut pl = plan(&ir, &PlanKnobs { fuse: false });
+    Placer::new(&[(WorkerClass::Cpu, 1), (WorkerClass::Slow, 3)]).place(&mut pl);
+    for t in &pl.tasks {
+        assert_eq!(
+            t.class,
+            Some(WorkerClass::Cpu),
+            "small-tile task {:?} escaped the CPU class",
+            t.kind.name
+        );
+    }
+}
