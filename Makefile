@@ -12,7 +12,8 @@ PYTHON ?= python3
 
 BENCHES = fig3_shared_memory fig5_scaling_n fig6_accelerated \
           fig7_distributed table5_time_per_iter ablation_variants \
-          serving_throughput kernel_roofline sst_scaling placement
+          serving_throughput kernel_roofline sst_scaling placement \
+          faults
 
 .PHONY: all test artifacts bench-smoke fmt lint doc python-test clean
 
@@ -43,7 +44,10 @@ artifacts:
 # EXPERIMENTS.md §SST workload scaling); placement refreshes
 # BENCH_placement.json (cost-model placement vs class-blind scheduling
 # on a cpu+slow pool, plus the heterogeneous DES projection ratio —
-# EXPERIMENTS.md §Heterogeneous placement).  BENCH_OUT pins every
+# EXPERIMENTS.md §Heterogeneous placement); faults refreshes
+# BENCH_faults.json (warm eval under seeded fault injection at 0/1%/5%
+# rates with retry, armed-vs-disarmed overhead ratio —
+# EXPERIMENTS.md §Fault tolerance).  BENCH_OUT pins every
 # bench's JSON to the repo root regardless of cargo's bench cwd, so the
 # CI artifact glob and the regression gate always find them.  Ends
 # with a smoke invocation of the `exageostat serve` subcommand.

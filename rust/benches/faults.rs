@@ -1,0 +1,135 @@
+//! **Fault tolerance** — warm exact eval under the seeded fault injector
+//! (DESIGN.md §2j) at injection rates {0, 1%, 5%} with task retry armed.
+//!
+//! Two walls, both CI-gated (`ci/bench_baseline.json`):
+//!
+//! * **zero-cost when idle** — the injector hooks sit on every task
+//!   boundary and every spill I/O, so the fault-free path must not pay
+//!   for them.  `overhead_ratio` compares an *armed-with-zero-rates*
+//!   plan (hooks fully live, nothing ever fires) against the disarmed
+//!   fast path (one relaxed atomic load), measured back-to-back in the
+//!   same process so runner jitter mostly cancels.
+//! * **usable when firing** — `recovered_warm_eval_s` is the warm eval
+//!   at a 5% per-task panic rate with a retry budget of 4: recovery has
+//!   to keep the eval in the same order of magnitude, not just
+//!   eventually correct.
+//!
+//! The bench also asserts the recovery contract itself: every faulted
+//! eval must return the **bit-identical** log-likelihood of the clean
+//! run (injection fires at task entry; a retried task re-executes from
+//! untouched inputs).  Emits BENCH_faults.json.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+use bench_util::*;
+
+use exageostat::covariance::{kernel_by_name, DistanceMetric};
+use exageostat::likelihood::{EvalSession, ExecCtx, Problem, Variant};
+use exageostat::scheduler::faults::{
+    faults_injected, set_fault_plan, set_task_retry_override, tasks_retried, FaultPlan,
+};
+use exageostat::scheduler::pool::Policy;
+use exageostat::simulation::simulate_data_exact;
+use std::sync::Arc;
+
+const RETRIES: usize = 4;
+
+fn main() {
+    let quick = quick();
+    let (n, ts) = if quick { (240usize, 64usize) } else { (1200usize, 100usize) };
+    let reps = if quick { 5 } else { 7 };
+    let theta = [1.0, 0.1, 0.5];
+    let kernel: Arc<dyn exageostat::covariance::CovKernel> =
+        Arc::from(kernel_by_name("ugsm-s").unwrap());
+
+    let ctx = ExecCtx::new(2, ts, Policy::Lws);
+    let data = simulate_data_exact(
+        kernel.clone(),
+        &theta,
+        n,
+        DistanceMetric::Euclidean,
+        0,
+        &ctx,
+    )
+    .unwrap();
+    let problem = Problem {
+        kernel,
+        locs: Arc::new(data.locs),
+        z: Arc::new(data.z),
+        metric: DistanceMetric::Euclidean,
+    };
+
+    set_fault_plan(None);
+    set_task_retry_override(Some(RETRIES));
+    let mut session = EvalSession::new(&problem, Variant::Exact, &ctx).unwrap();
+    let clean = session.eval(&theta).unwrap().loglik; // cold: allocate workspaces
+
+    let plan = |rate: f64| FaultPlan {
+        panic_rate: rate,
+        io_rate: rate, // inert on the resident path; drawn by spill runs
+        stall_rate: rate,
+        stall_ms: 1,
+        seed: 42,
+    };
+    let mut timed_eval = |armed: Option<FaultPlan>| -> (f64, u64, u64) {
+        set_fault_plan(armed);
+        let (f0, r0) = (faults_injected(), tasks_retried());
+        let t = time_median(reps, || {
+            let ll = session.eval(&theta).unwrap().loglik;
+            assert_eq!(
+                ll.to_bits(),
+                clean.to_bits(),
+                "recovered eval must be bit-identical to the clean run"
+            );
+        });
+        set_fault_plan(None);
+        (t, faults_injected() - f0, tasks_retried() - r0)
+    };
+
+    let (t_disarmed, _, _) = timed_eval(None);
+    let (t_armed_zero, _, _) = timed_eval(Some(plan(0.0)));
+    let (t_1pct, inj_1, ret_1) = timed_eval(Some(plan(0.01)));
+    let (t_5pct, inj_5, ret_5) = timed_eval(Some(plan(0.05)));
+    set_task_retry_override(None);
+    let overhead_ratio = t_armed_zero / t_disarmed;
+
+    println!("Faults — warm exact eval under injection (n={n}, ts={ts}, retries {RETRIES})");
+    header(&["rate", "warm eval s", "vs clean", "injected", "retried"]);
+    row(&["off".into(), s(t_disarmed), s2(1.0), "0".into(), "0".into()]);
+    row(&[
+        "0%".into(),
+        s(t_armed_zero),
+        s2(overhead_ratio),
+        "0".into(),
+        "0".into(),
+    ]);
+    row(&[
+        "1%".into(),
+        s(t_1pct),
+        s2(t_1pct / t_disarmed),
+        inj_1.to_string(),
+        ret_1.to_string(),
+    ]);
+    row(&[
+        "5%".into(),
+        s(t_5pct),
+        s2(t_5pct / t_disarmed),
+        inj_5.to_string(),
+        ret_5.to_string(),
+    ]);
+
+    let json = format!(
+        "{{\n  \"faults\": {{\n    \"n\": {n},\n    \"ts\": {ts},\n    \
+         \"retries\": {RETRIES},\n    \"disarmed_warm_eval_s\": {t_disarmed},\n    \
+         \"armed_zero_warm_eval_s\": {t_armed_zero},\n    \
+         \"overhead_ratio\": {overhead_ratio},\n    \
+         \"recovered_warm_eval_s\": {t_5pct},\n    \"rates\": [\n      \
+         {{ \"rate\": 0.01, \"warm_eval_s\": {t_1pct}, \"faults_injected\": {inj_1}, \
+         \"tasks_retried\": {ret_1} }},\n      \
+         {{ \"rate\": 0.05, \"warm_eval_s\": {t_5pct}, \"faults_injected\": {inj_5}, \
+         \"tasks_retried\": {ret_5} }}\n    ]\n  }}\n}}\n"
+    );
+    let path = bench_out_path("BENCH_faults.json");
+    std::fs::write(&path, json).expect("write BENCH_faults.json");
+    println!("wrote {}", path.display());
+}

@@ -48,6 +48,7 @@ fn workload(n: usize, count: usize, max_iters: usize) -> Vec<Request> {
                 data: data.into(),
                 kind,
                 priority: (i % 4) as u8,
+                deadline_ms: None,
             }
         })
         .collect()
@@ -148,6 +149,7 @@ fn run_cancelling(hw: &Hardware, reqs: &[Request]) -> (usize, usize, u64) {
         match t.wait() {
             Completion::Done(_) => done += 1,
             Completion::Cancelled => cancelled += 1,
+            Completion::TimedOut => panic!("bench request timed out (no deadlines set)"),
             Completion::Failed(e) => panic!("bench request failed: {e}"),
         }
     }
@@ -180,6 +182,7 @@ fn workload_sharded(n: usize, count: usize, max_iters: usize) -> Vec<Request> {
                 data: data.into(),
                 kind,
                 priority: 0,
+                deadline_ms: None,
             }
         })
         .collect()
@@ -210,6 +213,7 @@ fn run_sharded(ts: usize, reqs: &[Request], clients: usize, nshards: usize) -> (
         match t.wait() {
             Completion::Done(r) => lats.push(r.wall_s),
             Completion::Cancelled => {}
+            Completion::TimedOut => panic!("sharded bench request timed out (no deadlines set)"),
             Completion::Failed(e) => panic!("sharded bench request failed: {e}"),
         }
     }

@@ -36,6 +36,9 @@ pub enum ApiError {
     BuilderIncomplete(&'static str),
     /// The job was cancelled before it produced a result.
     Cancelled,
+    /// The job exceeded its deadline (or the runtime watchdog's stall
+    /// threshold) and was cancelled with a timeout reason.
+    Timeout,
 }
 
 impl fmt::Display for ApiError {
@@ -60,6 +63,7 @@ impl fmt::Display for ApiError {
                 write!(f, "ModelBuilder is missing required field `{field}`")
             }
             ApiError::Cancelled => write!(f, "job cancelled"),
+            ApiError::Timeout => write!(f, "job timed out"),
         }
     }
 }
@@ -71,6 +75,21 @@ impl std::error::Error for ApiError {}
 pub fn is_cancelled(err: &anyhow::Error) -> bool {
     err.chain()
         .any(|e| matches!(e.downcast_ref::<ApiError>(), Some(ApiError::Cancelled)))
+}
+
+/// Does `err` represent a deadline/watchdog timeout (an
+/// [`ApiError::Timeout`] or a raw
+/// [`crate::scheduler::runtime::TaskError::Timeout`] anywhere in its
+/// chain)?  The latter matters for paths that surface the runtime's
+/// typed error without an API-layer wrapper — e.g. a watchdog-flagged
+/// job latched by the MLE objective — which must still be classified a
+/// timeout (counted in `stats().timeouts`, never job-retried).
+pub fn is_timeout(err: &anyhow::Error) -> bool {
+    use crate::scheduler::runtime::TaskError;
+    err.chain().any(|e| {
+        matches!(e.downcast_ref::<ApiError>(), Some(ApiError::Timeout))
+            || matches!(e.downcast_ref::<TaskError>(), Some(TaskError::Timeout(_)))
+    })
 }
 
 #[cfg(test)]

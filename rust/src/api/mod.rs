@@ -13,7 +13,7 @@
 pub mod error;
 pub mod model;
 
-pub use error::{is_cancelled, ApiError};
+pub use error::{is_cancelled, is_timeout, ApiError};
 pub use model::{GeoModel, ModelBuilder};
 
 use crate::backend::{self, ArcEngine, Backend, Engine as _};
@@ -22,8 +22,9 @@ use crate::likelihood::{EvalSession, ExecCtx, Variant};
 use crate::optimizer::{self, Bounds, Method, OptOptions};
 use crate::prediction::{self, FisherResult, MloeMmom, Prediction};
 use crate::scheduler::pool::Policy;
-use crate::scheduler::runtime::{CancelToken, Runtime};
+use crate::scheduler::runtime::{CancelToken, Runtime, TaskError};
 use crate::simulation::{self, GeoData};
+use std::cell::RefCell;
 use std::sync::Arc;
 
 /// Default worker-thread count: the `EXAGEOSTAT_NCORES` environment
@@ -403,7 +404,13 @@ impl ExaGeoStat {
 /// The session's cancellation token (see [`EvalSession::set_cancel`])
 /// is honoured between objective evaluations: when it fires, the
 /// optimizer stops at its next iteration boundary and this function
-/// returns [`ApiError::Cancelled`].
+/// returns [`ApiError::Cancelled`] — or [`ApiError::Timeout`] when the
+/// token was fired by a deadline or the runtime watchdog.  An
+/// evaluation failing with an infrastructure error ([`TaskError::Io`],
+/// [`TaskError::Panic`], [`TaskError::Timeout`]) stops the search and
+/// surfaces that error; numerical infeasibility (`Numerical`, the
+/// non-SPD probes BOBYQA makes routinely) keeps steering the search
+/// with `+inf` exactly as before.
 pub fn mle_with_session(session: &mut EvalSession, opt: &MleOptions) -> anyhow::Result<MleResult> {
     mle_with_session_from(session, opt, None)
 }
@@ -458,13 +465,6 @@ pub fn mle_with_session_from(
     } else {
         (opt.clb.clone(), opt.cub.clone(), start_lin)
     };
-    let bounds = Bounds::new(lo, hi)?;
-    let opts = OptOptions {
-        tol: opt.tol,
-        max_iters: opt.max_iters,
-        init,
-        stop: Some(cancel.clone()),
-    };
     let back = |x: &[f64]| -> Vec<f64> {
         if log_ok {
             x.iter().map(|v| v.exp()).collect()
@@ -472,25 +472,89 @@ pub fn mle_with_session_from(
             x.to_vec()
         }
     };
-    let r = optimizer::minimize(
-        opt.method,
-        |x| {
-            let theta = back(x);
-            match session.eval(&theta) {
-                Ok(l) => -l.loglik,
-                Err(_) => f64::INFINITY,
+    // The optimizer is stopped through a *mirror* token, not the request
+    // token: infeasible-but-recoverable evaluations (non-SPD theta, i.e.
+    // `TaskError::Numerical`) keep steering the search with +inf as they
+    // always did, while infrastructure failures — task panics, spill I/O
+    // errors, watchdog timeouts — latch the first error, fire the mirror,
+    // and surface the latched error verbatim after the search unwinds.
+    // Firing the request token itself would mislabel the job as
+    // user-cancelled and defeat the coordinator's whole-job retry.
+    let stop = CancelToken::new();
+    let latched: RefCell<Option<anyhow::Error>> = RefCell::new(None);
+    let mut objective = |x: &[f64]| -> f64 {
+        if cancel.is_cancelled() {
+            stop.cancel();
+            return f64::INFINITY;
+        }
+        let theta = back(x);
+        match session.eval(&theta) {
+            Ok(l) => -l.loglik,
+            Err(e) => {
+                let infra = is_timeout(&e)
+                    || e.chain().any(|c| {
+                        matches!(
+                            c.downcast_ref::<TaskError>(),
+                            Some(TaskError::Panic(_) | TaskError::Io(_) | TaskError::Timeout(_))
+                        )
+                    });
+                if infra {
+                    if latched.borrow().is_none() {
+                        *latched.borrow_mut() = Some(e);
+                    }
+                    stop.cancel();
+                }
+                f64::INFINITY
             }
-        },
-        bounds,
-        &opts,
-    );
+        }
+    };
+    // Optional bounded restart from deterministically jittered in-box
+    // points when the search never finds a positive-definite theta
+    // (`EXAGEOSTAT_JITTER_RETRY=k`, default 0 = off so results stay
+    // bit-identical to previous releases).
+    let jitter_retries: usize = std::env::var("EXAGEOSTAT_JITTER_RETRY")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0);
+    let mut attempt = 0usize;
+    let r = loop {
+        let opts = OptOptions {
+            tol: opt.tol,
+            max_iters: opt.max_iters,
+            init: if attempt == 0 {
+                init.clone()
+            } else {
+                jittered_init(&lo, &hi, attempt)
+            },
+            stop: Some(stop.clone()),
+        };
+        let r = optimizer::minimize(
+            opt.method,
+            &mut objective,
+            Bounds::new(lo.clone(), hi.clone())?,
+            &opts,
+        );
+        if r.fx.is_finite() || r.stopped || latched.borrow().is_some() || attempt >= jitter_retries {
+            break r;
+        }
+        attempt += 1;
+    };
+    if let Some(e) = latched.into_inner() {
+        return Err(e);
+    }
     if r.stopped {
         // The optimizer *observed* the stop signal and cut the search
         // short; whatever iterate it holds is not an MLE.  Report the
-        // cancellation as a typed, downcastable error.  (Checking
-        // `r.stopped` rather than re-reading the token avoids mislabeling
-        // a run whose token fired only after the search converged.)
-        return Err(ApiError::Cancelled.into());
+        // cancellation as a typed, downcastable error — a token fired by
+        // the deadline/watchdog machinery reports `Timeout`, a plain
+        // cancellation reports `Cancelled`.  (Checking `r.stopped` rather
+        // than re-reading the token avoids mislabeling a run whose token
+        // fired only after the search converged.)
+        return Err(if cancel.timed_out() {
+            ApiError::Timeout.into()
+        } else {
+            ApiError::Cancelled.into()
+        });
     }
     anyhow::ensure!(
         r.fx.is_finite(),
@@ -504,6 +568,23 @@ pub fn mle_with_session_from(
         total_time: r.total_time,
         history: r.history,
     })
+}
+
+/// Deterministic in-box restart point for attempt `a >= 1` of the
+/// jitter-retry loop: low-discrepancy (golden-ratio / plastic-constant)
+/// fractions of the box, so successive attempts probe distinct regions
+/// without any RNG state — reruns are bit-reproducible.
+fn jittered_init(lo: &[f64], hi: &[f64], attempt: usize) -> Vec<f64> {
+    lo.iter()
+        .zip(hi)
+        .enumerate()
+        .map(|(i, (&l, &h))| {
+            let f = (attempt as f64 * 0.618_033_988_749_895
+                + (i + 1) as f64 * 0.324_717_957_244_746)
+                .fract();
+            l + (h - l) * f
+        })
+        .collect()
 }
 
 /// Outcome of a speculative MLE race ([`mle_speculative`]).

@@ -23,11 +23,12 @@
 //! submit/ticket surface.
 
 use super::{Dispatch, Request, Response};
-use crate::api::is_cancelled;
+use crate::api::{is_cancelled, is_timeout};
 use crate::scheduler::runtime::CancelToken;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 /// Final outcome of a submitted request.
 #[derive(Clone, Debug)]
@@ -36,12 +37,20 @@ pub enum Completion {
     Done(Response),
     /// The request was cancelled (before or during execution).
     Cancelled,
+    /// The request exceeded its deadline (or the runtime watchdog fired)
+    /// and was cancelled with a timeout reason.
+    TimedOut,
     /// The request failed; the formatted error chain.
     Failed(String),
 }
 
 struct TicketState {
     cancel: CancelToken,
+    /// Absolute expiry stamped at submission from the request's
+    /// `deadline_ms` (`None` = unbounded).  Enforced cooperatively: a
+    /// blocked [`Ticket::wait`] and the serve loop's reaper both fire
+    /// the timeout cancellation once it passes.
+    deadline: Option<Instant>,
     slot: Mutex<Option<Completion>>,
     cv: Condvar,
 }
@@ -69,18 +78,83 @@ impl Ticket {
         self.state.cancel.is_cancelled()
     }
 
+    /// Cancel with a *timeout* reason: [`Ticket::wait`] reports
+    /// [`Completion::TimedOut`] instead of `Cancelled`.  What the
+    /// deadline machinery fires; also useful for caller-side timers.
+    pub fn cancel_timeout(&self) {
+        self.state.cancel.cancel_with_timeout();
+    }
+
+    /// The absolute deadline stamped at submission (`None` = none).
+    pub fn deadline(&self) -> Option<Instant> {
+        self.state.deadline
+    }
+
+    /// Fire the timeout cancellation if the deadline has passed with the
+    /// request still unfinished; returns whether it fired.  The serve
+    /// loop's reaper calls this each sweep so deadlines are enforced
+    /// even when nobody blocks in [`Ticket::wait`].
+    pub fn enforce_deadline(&self) -> bool {
+        match self.state.deadline {
+            Some(d) if Instant::now() >= d && self.try_wait().is_none() => {
+                self.state.cancel.cancel_with_timeout();
+                true
+            }
+            _ => false,
+        }
+    }
+
     /// Non-blocking poll: `Some(outcome)` once the request finished.
     pub fn try_wait(&self) -> Option<Completion> {
         self.state.slot.lock().unwrap().clone()
     }
 
-    /// Block until the request finishes and return its outcome.
+    /// Block until the request finishes and return its outcome.  A
+    /// ticket with a deadline fires the timeout cancellation the moment
+    /// the deadline passes, then keeps blocking — the runner observes
+    /// the token at its next boundary and fills the slot promptly
+    /// (normally with [`Completion::TimedOut`]; a result that wins the
+    /// race is kept as [`Completion::Done`]).
     pub fn wait(&self) -> Completion {
         let mut slot = self.state.slot.lock().unwrap();
-        while slot.is_none() {
-            slot = self.state.cv.wait(slot).unwrap();
+        loop {
+            if let Some(c) = slot.clone() {
+                return c;
+            }
+            match self.state.deadline {
+                None => slot = self.state.cv.wait(slot).unwrap(),
+                Some(d) => {
+                    let now = Instant::now();
+                    if now >= d {
+                        self.state.cancel.cancel_with_timeout();
+                        slot = self.state.cv.wait(slot).unwrap();
+                    } else {
+                        let (s, _) = self.state.cv.wait_timeout(slot, d - now).unwrap();
+                        slot = s;
+                    }
+                }
+            }
         }
-        slot.clone().expect("slot filled")
+    }
+
+    /// Block up to `timeout` for the outcome; `None` when the request is
+    /// still in flight afterwards.  Purely observational — expiring here
+    /// cancels nothing (use a request `deadline_ms` or
+    /// [`Ticket::cancel_timeout`] to bound the job itself).
+    pub fn wait_timeout(&self, timeout: Duration) -> Option<Completion> {
+        let until = Instant::now() + timeout;
+        let mut slot = self.state.slot.lock().unwrap();
+        loop {
+            if slot.is_some() {
+                return slot.clone();
+            }
+            let now = Instant::now();
+            if now >= until {
+                return None;
+            }
+            let (s, _) = self.state.cv.wait_timeout(slot, until - now).unwrap();
+            slot = s;
+        }
     }
 }
 
@@ -144,6 +218,9 @@ impl Client {
     pub fn submit(&self, req: Request) -> Ticket {
         let state = Arc::new(TicketState {
             cancel: CancelToken::new(),
+            deadline: req
+                .deadline_ms
+                .map(|ms| Instant::now() + Duration::from_millis(ms)),
             slot: Mutex::new(None),
             cv: Condvar::new(),
         });
@@ -194,9 +271,20 @@ fn runner_loop(coord: &dyn Dispatch, rx: &Mutex<Receiver<Submission>>) {
             Err(_) => break, // channel closed and drained
         };
         let Submission { state, req } = sub;
+        // A deadline that expired while the request sat in the queue is
+        // a timeout, not a user cancellation.
+        if let Some(d) = state.deadline {
+            if Instant::now() >= d {
+                state.cancel.cancel_with_timeout();
+            }
+        }
         let outcome = if state.cancel.is_cancelled() {
             // Cancelled while queued: never reaches the coordinator.
-            Completion::Cancelled
+            if state.cancel.timed_out() {
+                Completion::TimedOut
+            } else {
+                Completion::Cancelled
+            }
         } else {
             // A panicking request (e.g. a task panic re-raised by
             // JobHandle::wait) must not kill the runner: the ticket's
@@ -208,6 +296,7 @@ fn runner_loop(coord: &dyn Dispatch, rx: &Mutex<Receiver<Submission>>) {
             }));
             match run {
                 Ok(Ok(resp)) => Completion::Done(resp),
+                Ok(Err(e)) if is_timeout(&e) => Completion::TimedOut,
                 Ok(Err(e)) if is_cancelled(&e) => Completion::Cancelled,
                 Ok(Err(e)) => Completion::Failed(format!("{e:#}")),
                 Err(p) => Completion::Failed(format!(
@@ -249,6 +338,7 @@ mod tests {
             .into(),
             kind: RequestKind::Simulate,
             priority: 0,
+            deadline_ms: None,
         }
     }
 
@@ -311,6 +401,7 @@ mod tests {
                 opt: MleOptions::new(vec![0.01; 3], vec![5.0; 3], 1e-5, 40),
             },
             priority: 0,
+            deadline_ms: None,
         };
         let busy = client.submit(mle);
         let victim = client.submit(sim_req(500, 9));

@@ -46,21 +46,24 @@ pub use client::{Client, Completion, Ticket};
 pub use serve::{serve_socket, serve_stream, ServeOptions, ServeSummary};
 pub use sharded::ShardedCoordinator;
 
-use crate::api::{is_cancelled, mle_with_session, ApiError, Hardware, MleOptions, MleResult};
+use crate::api::{
+    is_cancelled, is_timeout, mle_with_session, ApiError, Hardware, MleOptions, MleResult,
+};
 use crate::backend::{self, ArcEngine};
 use crate::covariance::{kernel_by_name, CovKernel, DistanceMetric, Location};
 use crate::likelihood::{EvalSession, ExecCtx, Problem, Variant};
 use crate::optimizer::Method;
 use crate::pipeline::shard::ShardSet;
 use crate::prediction::{self, Prediction};
+use crate::scheduler::faults;
 use crate::scheduler::placement::ClassStat;
-use crate::scheduler::runtime::{CancelToken, Runtime};
+use crate::scheduler::runtime::{panic_message, CancelToken, Runtime, TaskError};
 use crate::simulation;
 use anyhow::Context as _;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// The request-dispatch surface [`Client`] and [`serve_stream`] sit on:
 /// one [`Coordinator`] and the sharded fan-out [`ShardedCoordinator`]
@@ -166,6 +169,49 @@ impl<V: Clone> LruCache<V> {
         );
         value
     }
+
+    /// Drop `key`, returning whether it was present.  The failure path
+    /// uses this: a request that died mid-MLE must not leave its
+    /// (possibly half-mutated) session or a suspect dataset behind for
+    /// the next request — or its own retry — to trip over.
+    fn remove(&mut self, key: &str) -> bool {
+        match self.map.remove(key) {
+            Some(e) => {
+                self.used -= e.cost;
+                true
+            }
+            None => false,
+        }
+    }
+}
+
+/// Whole-request retry budget after a non-cancellation failure
+/// (`EXAGEOSTAT_JOB_RETRIES`, default 0 = fail fast).  This is the
+/// recovery tier above per-task retry: failures of non-idempotent work
+/// (a panic mid-factorization, an I/O error the tile store's bounded
+/// retry could not ride out) abandon the attempt, evict the request's
+/// possibly half-built cache state and re-run the request from scratch
+/// under capped exponential backoff.
+static JOB_RETRY_OVERRIDE: AtomicU64 = AtomicU64::new(u64::MAX);
+
+/// Test hook: force the whole-job retry budget (`None` restores the
+/// `EXAGEOSTAT_JOB_RETRIES` environment default).
+pub fn set_job_retry_override(v: Option<u64>) {
+    JOB_RETRY_OVERRIDE.store(v.unwrap_or(u64::MAX), Ordering::Relaxed);
+}
+
+fn job_retry_limit() -> u64 {
+    let o = JOB_RETRY_OVERRIDE.load(Ordering::Relaxed);
+    if o != u64::MAX {
+        return o;
+    }
+    static ENV: OnceLock<u64> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        std::env::var("EXAGEOSTAT_JOB_RETRIES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(0)
+    })
 }
 
 /// How a request's dataset is produced: simulated from a kernel + seed
@@ -310,6 +356,11 @@ pub struct Request {
     pub kind: RequestKind,
     /// Job-priority tie-break under the `prio` policy (higher = sooner).
     pub priority: u8,
+    /// Soft deadline in milliseconds (`None` = none).  Enforced by the
+    /// serving layers ([`Client::submit`]'s ticket reaper, `serve
+    /// --deadline`): on expiry the request's token is cancelled with a
+    /// timeout reason and the ticket reports [`Completion::TimedOut`].
+    pub deadline_ms: Option<u64>,
 }
 
 impl Request {
@@ -324,6 +375,7 @@ impl Request {
                 opt: model.options().clone(),
             },
             priority,
+            deadline_ms: None,
         }
     }
 
@@ -344,6 +396,7 @@ impl Request {
                 with_variance,
             },
             priority,
+            deadline_ms: None,
         }
     }
 
@@ -398,6 +451,17 @@ pub struct CoordinatorStats {
     pub errors: u64,
     /// Requests that ended in cancellation (not counted as errors).
     pub cancelled: u64,
+    /// Requests that ended in a deadline/watchdog timeout (counted
+    /// separately from both `errors` and `cancelled`).
+    pub timeouts: u64,
+    /// Whole-request retries performed after non-cancellation failures
+    /// (`EXAGEOSTAT_JOB_RETRIES` tier).
+    pub job_retries: u64,
+    /// Faults fired by the active injection plan (process-global
+    /// counter — see [`crate::scheduler::faults`]).
+    pub faults_injected: u64,
+    /// Task-level retries performed (process-global counter).
+    pub tasks_retried: u64,
     pub data_cache_hits: u64,
     pub data_cache_misses: u64,
     pub data_cache_evictions: u64,
@@ -422,6 +486,13 @@ impl CoordinatorStats {
         self.requests += o.requests;
         self.errors += o.errors;
         self.cancelled += o.cancelled;
+        self.timeouts += o.timeouts;
+        self.job_retries += o.job_retries;
+        // The fault counters are process-global (every shard reads the
+        // same atomics); summing them across members would multiply the
+        // truth by the shard count.
+        self.faults_injected = self.faults_injected.max(o.faults_injected);
+        self.tasks_retried = self.tasks_retried.max(o.tasks_retried);
         self.data_cache_hits += o.data_cache_hits;
         self.data_cache_misses += o.data_cache_misses;
         self.data_cache_evictions += o.data_cache_evictions;
@@ -469,6 +540,8 @@ pub struct Coordinator {
     requests: AtomicU64,
     errors: AtomicU64,
     cancelled: AtomicU64,
+    timeouts: AtomicU64,
+    job_retries: AtomicU64,
     data_hits: AtomicU64,
     data_misses: AtomicU64,
     session_hits: AtomicU64,
@@ -504,6 +577,8 @@ impl Coordinator {
             requests: AtomicU64::new(0),
             errors: AtomicU64::new(0),
             cancelled: AtomicU64::new(0),
+            timeouts: AtomicU64::new(0),
+            job_retries: AtomicU64::new(0),
             data_hits: AtomicU64::new(0),
             data_misses: AtomicU64::new(0),
             session_hits: AtomicU64::new(0),
@@ -635,30 +710,68 @@ impl Coordinator {
     /// [`Client`] tickets use).  When the token fires, not-yet-started
     /// runtime tasks of this request are skipped, the optimizer stops
     /// between evaluations, and the request reports
-    /// [`ApiError::Cancelled`] (counted in `stats().cancelled`, not as
-    /// an error).
+    /// [`ApiError::Cancelled`] — or [`ApiError::Timeout`] when the token
+    /// was fired with a timeout reason (deadline reaper, runtime
+    /// watchdog).  Cancellations and timeouts count in
+    /// `stats().cancelled` / `stats().timeouts`, not as errors.
+    ///
+    /// Any other failure (a task panic, an unrecovered spill I/O error)
+    /// is retried whole — up to `EXAGEOSTAT_JOB_RETRIES` times with
+    /// capped exponential backoff — after evicting the request's
+    /// possibly half-built dataset and session cache entries, so each
+    /// attempt rebuilds from scratch.  The eviction also runs on final
+    /// failure: a dead request must never leave a poisoned session
+    /// behind for the next request over the same data.
     pub fn run_with_cancel(&self, req: Request, cancel: &CancelToken) -> anyhow::Result<Response> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         self.requests.fetch_add(1, Ordering::Relaxed);
         let t0 = Instant::now();
-        let r = if cancel.is_cancelled() {
-            // Cancelled while queued: skip the work entirely.
-            Err(ApiError::Cancelled.into())
-        } else {
-            // Whether the token interrupted the work is decided *inside*
-            // the layers that can observe it (the pipeline sees skipped
-            // tasks, the optimizer latches an observed stop) — never by
-            // re-reading the token here.  A token that fires after the
-            // request completed must leave its `Done` result alone, or
-            // `cancelled` double-counts against a successful response.
-            self.dispatch(&req, cancel)
+        let retries = job_retry_limit();
+        let mut attempt: u64 = 0;
+        let r = loop {
+            let r = if cancel.is_cancelled() {
+                // Cancelled while queued: skip the work entirely.
+                Err(if cancel.timed_out() {
+                    ApiError::Timeout.into()
+                } else {
+                    ApiError::Cancelled.into()
+                })
+            } else {
+                // Whether the token interrupted the work is decided
+                // *inside* the layers that can observe it (the pipeline
+                // sees skipped tasks, the optimizer latches an observed
+                // stop) — never by re-reading the token here.  A token
+                // that fires after the request completed must leave its
+                // `Done` result alone, or `cancelled` double-counts
+                // against a successful response.
+                self.dispatch_guarded(&req, cancel)
+            };
+            match &r {
+                Err(e) if !is_cancelled(e) && !is_timeout(e) && attempt < retries => {
+                    self.evict_request_state(&req);
+                    self.job_retries.fetch_add(1, Ordering::Relaxed);
+                    attempt += 1;
+                    // 10ms, 20ms, 40ms, ... capped at 200ms: enough to
+                    // let a transient I/O condition clear without
+                    // stalling the serving thread for seconds.
+                    std::thread::sleep(Duration::from_millis(
+                        (10u64 << (attempt - 1).min(4)).min(200),
+                    ));
+                }
+                _ => break r,
+            }
         };
         match &r {
             Err(e) if is_cancelled(e) => {
                 self.cancelled.fetch_add(1, Ordering::Relaxed);
             }
+            Err(e) if is_timeout(e) => {
+                self.timeouts.fetch_add(1, Ordering::Relaxed);
+                self.evict_request_state(&req);
+            }
             Err(_) => {
                 self.errors.fetch_add(1, Ordering::Relaxed);
+                self.evict_request_state(&req);
             }
             Ok(_) => {}
         }
@@ -671,6 +784,46 @@ impl Coordinator {
             session_cache_hit,
             outcome,
         })
+    }
+
+    /// [`Coordinator::dispatch`] behind a panic guard: a panic escaping
+    /// a request (worker-task panics propagate through the job handle on
+    /// the submitting thread) becomes a typed [`TaskError::Panic`]
+    /// failure of *this* request instead of tearing down the serving
+    /// thread — the accept loop and every other in-flight request keep
+    /// going.
+    fn dispatch_guarded(
+        &self,
+        req: &Request,
+        cancel: &CancelToken,
+    ) -> anyhow::Result<(&'static str, bool, bool, Outcome)> {
+        match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| self.dispatch(req, cancel)))
+        {
+            Ok(r) => r,
+            Err(p) => Err(anyhow::Error::new(TaskError::Panic(panic_message(p.as_ref())))),
+        }
+    }
+
+    /// Evict every cache entry a failed request may have left half-built:
+    /// its dataset, and every session keyed over that dataset (any
+    /// variant / tile size — session keys are prefixed by the data key).
+    /// A session whose job died mid-factorization holds garbage in its
+    /// workspace (and a poisoned mutex if the death was a panic); the
+    /// next request over this data must rebuild, not reuse.
+    fn evict_request_state(&self, req: &Request) {
+        let dkey = req.data.key();
+        self.data_cache.lock().unwrap().remove(&dkey);
+        let mut sessions = self.sessions.lock().unwrap();
+        let prefix = format!("{dkey}|");
+        let stale: Vec<String> = sessions
+            .map
+            .keys()
+            .filter(|k| k.starts_with(&prefix))
+            .cloned()
+            .collect();
+        for k in stale {
+            sessions.remove(&k);
+        }
     }
 
     fn dispatch(
@@ -770,6 +923,10 @@ impl Coordinator {
             requests: self.requests.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
             cancelled: self.cancelled.load(Ordering::Relaxed),
+            timeouts: self.timeouts.load(Ordering::Relaxed),
+            job_retries: self.job_retries.load(Ordering::Relaxed),
+            faults_injected: faults::faults_injected(),
+            tasks_retried: faults::tasks_retried(),
             data_cache_hits: self.data_hits.load(Ordering::Relaxed),
             data_cache_misses: self.data_misses.load(Ordering::Relaxed),
             data_cache_evictions: data_ev,
@@ -1056,7 +1213,8 @@ fn get_f64_arr(obj: &[(String, Json)], key: &str) -> anyhow::Result<Option<Vec<f
 /// Recognized fields: `type` (`mle`|`predict`|`simulate`, default `mle`),
 /// dataset (`n`, `seed`, `kernel`, `dmetric`, `theta`), MLE (`variant`,
 /// `band`, `tlr_tol`, `max_rank`, `clb`, `cub`, `tol`, `max_iters`,
-/// `method`), predict (`grid`), and `priority`.
+/// `method`), predict (`grid`), `priority`, and `deadline_ms` (soft
+/// per-request deadline, enforced by the serving layers).
 pub fn parse_request(line: &str) -> anyhow::Result<Request> {
     let Json::Obj(obj) = parse_json(line)? else {
         anyhow::bail!("request line must be a JSON object");
@@ -1077,6 +1235,10 @@ pub fn parse_request(line: &str) -> anyhow::Result<Request> {
         data.n
     );
     let priority = get_usize(&obj, "priority", 0)?.min(u8::MAX as usize) as u8;
+    let deadline_ms = match field(&obj, "deadline_ms") {
+        None => None,
+        Some(_) => Some(get_usize(&obj, "deadline_ms", 0)? as u64),
+    };
     let ty = get_str(&obj, "type", "mle")?;
     let kind = match ty.as_str() {
         "simulate" => RequestKind::Simulate,
@@ -1119,6 +1281,7 @@ pub fn parse_request(line: &str) -> anyhow::Result<Request> {
         data: data.into(),
         kind,
         priority,
+        deadline_ms,
     })
 }
 
@@ -1208,6 +1371,7 @@ mod tests {
             data: data.clone().into(),
             kind: RequestKind::Simulate,
             priority: 0,
+            deadline_ms: None,
         };
         let r0 = coord.run(sim.clone()).unwrap();
         assert!(!r0.data_cache_hit);
@@ -1221,6 +1385,7 @@ mod tests {
                 opt: MleOptions::new(vec![0.01; 3], vec![5.0; 3], 1e-3, 8),
             },
             priority: 0,
+            deadline_ms: None,
         };
         let m0 = coord.run(mle.clone()).unwrap();
         assert!(!m0.session_cache_hit);
@@ -1284,6 +1449,7 @@ mod tests {
                 opt: MleOptions::new(vec![0.01; 3], vec![5.0; 3], 1e-2, 4),
             },
             priority: 0,
+            deadline_ms: None,
         };
         coord.run(mle(1)).unwrap();
         coord.run(mle(2)).unwrap();
@@ -1314,6 +1480,7 @@ mod tests {
             .into(),
             kind: RequestKind::Simulate,
             priority: 0,
+            deadline_ms: None,
         };
         assert!(coord.run(bad).is_err());
         let ok = Request {
@@ -1324,6 +1491,7 @@ mod tests {
             .into(),
             kind: RequestKind::Predict { grid: 3 },
             priority: 0,
+            deadline_ms: None,
         };
         let r = coord.run(ok).unwrap();
         let Outcome::Predicted { npoints, .. } = r.outcome else {

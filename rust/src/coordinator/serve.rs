@@ -23,6 +23,7 @@ use super::client::{Client, Completion};
 use super::parse_request;
 use std::collections::VecDeque;
 use std::io::BufRead;
+use std::time::Duration;
 
 /// Admission-control knobs for [`serve_stream`].
 #[derive(Clone, Debug)]
@@ -32,6 +33,10 @@ pub struct ServeOptions {
     /// Hold admissions while the runtime has more than this many ready
     /// tasks queued; `None` derives `4 * workers` from the runtime.
     pub depth_limit: Option<usize>,
+    /// Default per-request deadline in milliseconds (`serve --deadline`):
+    /// applied to every admitted request that does not carry its own
+    /// `deadline_ms`.  `None` = unbounded.
+    pub deadline_ms: Option<u64>,
 }
 
 impl Default for ServeOptions {
@@ -39,6 +44,7 @@ impl Default for ServeOptions {
         ServeOptions {
             window: 8,
             depth_limit: None,
+            deadline_ms: None,
         }
     }
 }
@@ -54,6 +60,9 @@ pub struct ServeSummary {
     pub failed: usize,
     /// Requests that ended cancelled.
     pub cancelled: usize,
+    /// Requests that exceeded their deadline and were reaped as
+    /// [`Completion::TimedOut`].
+    pub timed_out: usize,
     /// Lines that did not parse as a request (skipped, not fatal).
     pub parse_errors: usize,
     /// Wall-clock latencies (seconds) of the successful requests,
@@ -86,13 +95,27 @@ pub fn serve_stream(
                     inflight: &mut VecDeque<super::Ticket>,
                     on_done: &mut dyn FnMut(u64, &Completion)| {
         if let Some(t) = inflight.pop_front() {
-            let done = t.wait();
+            // Reap the oldest ticket, sweeping deadlines across the
+            // whole window while blocked: a ticket *behind* the oldest
+            // must still time out on schedule even though it is not the
+            // one being waited on (its own `wait` only runs once it
+            // reaches the front).
+            let done = loop {
+                if let Some(c) = t.wait_timeout(Duration::from_millis(50)) {
+                    break c;
+                }
+                t.enforce_deadline();
+                for other in inflight.iter() {
+                    other.enforce_deadline();
+                }
+            };
             match &done {
                 Completion::Done(r) => {
                     summary.ok += 1;
                     summary.latencies_s.push(r.wall_s);
                 }
                 Completion::Cancelled => summary.cancelled += 1,
+                Completion::TimedOut => summary.timed_out += 1,
                 Completion::Failed(_) => summary.failed += 1,
             }
             on_done(t.id(), &done);
@@ -108,7 +131,7 @@ pub fn serve_stream(
         if trimmed.is_empty() || trimmed.starts_with('#') {
             continue;
         }
-        let req = match parse_request(trimmed) {
+        let mut req = match parse_request(trimmed) {
             Ok(r) => r,
             Err(e) => {
                 summary.parse_errors += 1;
@@ -116,6 +139,10 @@ pub fn serve_stream(
                 continue;
             }
         };
+        // `serve --deadline` default; a request's own deadline_ms wins.
+        if req.deadline_ms.is_none() {
+            req.deadline_ms = opts.deadline_ms;
+        }
         // Admission control: the window bounds client-side in-flight
         // requests; the queue-depth check holds admissions while the
         // workers are already saturated with ready tasks.
@@ -143,6 +170,7 @@ impl ServeSummary {
         self.ok += o.ok;
         self.failed += o.failed;
         self.cancelled += o.cancelled;
+        self.timed_out += o.timed_out;
         self.parse_errors += o.parse_errors;
         self.latencies_s.extend(o.latencies_s);
         self.latencies_s.sort_by(f64::total_cmp);
@@ -254,6 +282,7 @@ this is not json
             &ServeOptions {
                 window: 2,
                 depth_limit: None,
+                deadline_ms: None,
             },
             |_, _| seen.set(seen.get() + 1),
         )
@@ -332,6 +361,7 @@ this is not json
             &ServeOptions {
                 window: 1,
                 depth_limit: None,
+                deadline_ms: None,
             },
             move |_, _| {
                 completions_cb.fetch_add(1, Ordering::SeqCst);
@@ -457,6 +487,7 @@ this is not json
             &ServeOptions {
                 window: 4,
                 depth_limit: Some(0),
+                deadline_ms: None,
             },
             |_, _| {},
         )

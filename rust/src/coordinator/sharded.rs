@@ -152,6 +152,7 @@ mod tests {
             .into(),
             kind: RequestKind::Simulate,
             priority: 0,
+            deadline_ms: None,
         }
     }
 

@@ -148,7 +148,11 @@ pub(crate) fn run_pipeline(
     // are spawned here, warm MLE iterations reuse the parked workers.
     let out = crate::pipeline::run_tiled(problem, theta, ctx, dist, a, Some(y), band, true)?;
     if let Some(pivot) = out.not_spd {
-        anyhow::bail!("covariance not positive definite at pivot {pivot} (theta = {theta:?})");
+        // Typed so the MLE driver can tell recoverable infeasibility
+        // (steer the search away) from infrastructure failures.
+        return Err(anyhow::Error::new(crate::scheduler::runtime::TaskError::Numerical(
+            format!("covariance not positive definite at pivot {pivot} (theta = {theta:?})"),
+        )));
     }
     Ok(LogLik::assemble(out.logdet, y.dot_self(), a.n()))
 }

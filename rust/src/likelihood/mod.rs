@@ -146,14 +146,24 @@ impl ExecCtx {
         mp_band: Option<usize>,
     ) -> anyhow::Result<crate::linalg::tile::TileMatrix> {
         use crate::linalg::tile::TileMatrix;
-        match self.tile_budget {
-            Some(budget) => TileMatrix::zeros_spill(n, self.ts, mp_band, budget)
-                .map_err(|e| anyhow::anyhow!("tile spill store: {e}")),
-            None => Ok(match mp_band {
-                Some(band) => TileMatrix::zeros_mp(n, self.ts, band),
-                None => TileMatrix::zeros(n, self.ts),
-            }),
+        if let Some(budget) = self.tile_budget {
+            match TileMatrix::zeros_spill(n, self.ts, mp_band, budget) {
+                Ok(tm) => return Ok(tm),
+                Err(e) => {
+                    // No spill file (tmpdir full, read-only, …): degrade
+                    // to resident mode — correct but unbudgeted — rather
+                    // than failing every request up front.
+                    eprintln!(
+                        "exageostat: warning: cannot create tile spill store ({e}); \
+                         memory budget disabled, running fully resident"
+                    );
+                }
+            }
         }
+        Ok(match mp_band {
+            Some(band) => TileMatrix::zeros_mp(n, self.ts, band),
+            None => TileMatrix::zeros(n, self.ts),
+        })
     }
 
     /// Submit a task graph as one job on this context's runtime,
@@ -163,8 +173,22 @@ impl ExecCtx {
     }
 
     /// Submit a task graph and block until it completes.
+    ///
+    /// # Panics
+    /// Re-raises the first task panic ([`JobHandle::wait`] semantics).
+    /// Recovery-aware callers use [`ExecCtx::run_graph_result`].
     pub fn run_graph(&self, g: TaskGraph) -> Profile {
         self.submit(g).wait()
+    }
+
+    /// [`ExecCtx::run_graph`] reporting the job's first
+    /// [`TaskError`](crate::scheduler::runtime::TaskError) as a value
+    /// instead of re-raising it — the pipeline's recovery seam.
+    pub fn run_graph_result(
+        &self,
+        g: TaskGraph,
+    ) -> Result<Profile, crate::scheduler::runtime::TaskError> {
+        self.submit(g).wait_result()
     }
 }
 

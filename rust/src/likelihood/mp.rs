@@ -67,7 +67,9 @@ pub(crate) fn run_pipeline(
     // `a`'s mixed-precision storage layout inside the pipeline runner.
     let out = crate::pipeline::run_tiled(problem, theta, ctx, dist, a, Some(y), None, true)?;
     if let Some(pivot) = out.not_spd {
-        anyhow::bail!("MP covariance not positive definite at pivot {pivot} (theta = {theta:?})");
+        return Err(anyhow::Error::new(crate::scheduler::runtime::TaskError::Numerical(
+            format!("MP covariance not positive definite at pivot {pivot} (theta = {theta:?})"),
+        )));
     }
     Ok(LogLik::assemble(out.logdet, y.dot_self(), a.n()))
 }

@@ -206,7 +206,11 @@ impl EvalSession {
             &mut self.y_scratch,
         )?;
         if let Some(pivot) = out.not_spd {
-            anyhow::bail!("TLR potrf failed at pivot {pivot}");
+            return Err(anyhow::Error::new(
+                crate::scheduler::runtime::TaskError::Numerical(format!(
+                    "TLR covariance not positive definite at pivot {pivot}"
+                )),
+            ));
         }
         let sse = self.y_scratch.iter().map(|v| v * v).sum();
         Ok(LogLik::assemble(out.logdet, sse, self.problem.dim()))

@@ -137,8 +137,12 @@ pub fn tlr_potrf(a: &mut TlrMatrix, opts: LrOpts) -> anyhow::Result<f64> {
         {
             let d = &mut a.diag[k];
             let h = d.rows();
-            dpotrf_raw(h, d.as_mut_slice(), h)
-                .map_err(|e| anyhow::anyhow!("TLR potrf failed at pivot {}", k * a.ts + e.pivot))?;
+            dpotrf_raw(h, d.as_mut_slice(), h).map_err(|e| {
+                anyhow::Error::new(crate::scheduler::runtime::TaskError::Numerical(format!(
+                    "TLR covariance not positive definite at pivot {}",
+                    k * a.ts + e.pivot
+                )))
+            })?;
             d.zero_upper();
         }
         // LR_TRSM down the panel.
@@ -227,7 +231,9 @@ pub fn loglik(
     };
     let out = crate::pipeline::run_tlr(&sorted, theta, opts, ctx, None, &mut y)?;
     if let Some(pivot) = out.not_spd {
-        anyhow::bail!("TLR potrf failed at pivot {pivot}");
+        return Err(anyhow::Error::new(crate::scheduler::runtime::TaskError::Numerical(
+            format!("TLR covariance not positive definite at pivot {pivot}"),
+        )));
     }
     let sse = y.iter().map(|v| v * v).sum();
     Ok(LogLik::assemble(out.logdet, sse, problem.dim()))

@@ -26,6 +26,7 @@
 
 use crate::linalg::blas::{MatMut, MatRef};
 use crate::linalg::matrix::Matrix;
+use crate::scheduler::faults;
 use std::cell::Cell;
 use std::fs::File;
 use std::os::unix::fs::FileExt;
@@ -434,19 +435,47 @@ impl TileStore {
     }
 
     /// Pin slot `idx` resident and return its (stable-until-unpin)
-    /// pointer, reading spilled data back from disk.
-    pub fn pin(&self, idx: usize) -> TilePtr {
+    /// pointer, reading spilled data back from disk.  An I/O failure
+    /// (disk or injected — see `scheduler::faults`) leaves the slot
+    /// spilled and the store consistent; the error propagates to the
+    /// executor as `TaskError::Io` instead of aborting the process.
+    pub fn pin(&self, idx: usize) -> std::io::Result<TilePtr> {
         self.pin_impl(idx, true)
     }
 
     /// [`TileStore::pin`] for a tile whose first touched op fully
     /// overwrites it (a `Generate`): materializes zeros without reading
     /// stale spilled data back — half the I/O on warm re-evaluations.
-    pub fn pin_for_write(&self, idx: usize) -> TilePtr {
+    pub fn pin_for_write(&self, idx: usize) -> std::io::Result<TilePtr> {
         self.pin_impl(idx, false)
     }
 
-    fn pin_impl(&self, idx: usize, read_back: bool) -> TilePtr {
+    /// One spill-file read with the fault-injection hook and a bounded
+    /// retry: spill reads are idempotent (the on-disk bytes are
+    /// immutable between write-out and the next write-out), so a
+    /// transient failure is retried up to the shared task-retry budget
+    /// before propagating.
+    fn read_slot(&self, buf: &mut [u8], offset: u64, site: &'static str) -> std::io::Result<()> {
+        let budget = faults::task_retry_limit();
+        let mut attempt = 0usize;
+        loop {
+            let res =
+                faults::maybe_io_error(site).and_then(|()| self.file.read_exact_at(buf, offset));
+            match res {
+                Ok(()) => return Ok(()),
+                Err(e) => {
+                    if attempt < budget {
+                        attempt += 1;
+                        faults::note_task_retry();
+                        continue;
+                    }
+                    return Err(e);
+                }
+            }
+        }
+    }
+
+    fn pin_impl(&self, idx: usize, read_back: bool) -> std::io::Result<TilePtr> {
         let mut inner = self.inner.lock().unwrap();
         loop {
             match inner.slots[idx].state {
@@ -454,13 +483,14 @@ impl TileStore {
                 SlotState::Resident => break,
                 s @ (SlotState::Empty | SlotState::Spilled) => {
                     let need = inner.slots[idx].bytes;
-                    self.make_room(&mut inner, need, idx);
+                    self.make_room(&mut inner, need, idx)?;
                     let slot = &mut inner.slots[idx];
                     let mut buf = alloc_buf(slot.elems, slot.f32_tile);
                     if read_back && s == SlotState::Spilled {
-                        self.file
-                            .read_exact_at(buf_bytes_mut(&mut buf), slot.offset)
-                            .expect("tile spill read");
+                        // Error path: the slot is still `Spilled` and
+                        // `resident_bytes` untouched — a later pin can
+                        // retry cleanly.
+                        self.read_slot(buf_bytes_mut(&mut buf), slot.offset, "spill read")?;
                         TILE_SPILL_READS.fetch_add(1, Ordering::Relaxed);
                     }
                     slot.buf = buf;
@@ -474,7 +504,7 @@ impl TileStore {
         }
         let slot = &mut inner.slots[idx];
         slot.pins += 1;
-        tile_ptr_of(&slot.buf)
+        Ok(tile_ptr_of(&slot.buf))
     }
 
     /// Release one pin.  A slot whose last use has passed
@@ -517,18 +547,21 @@ impl TileStore {
     /// the budget (never evicts, never blocks the executor beyond the
     /// brief slot-state flip), and reads the file **outside** the lock
     /// so demand pins of other tiles proceed concurrently.  Returns
-    /// whether a read was started.
-    pub fn prefetch(&self, idx: usize) -> bool {
-        let (elems, f32_tile, offset);
+    /// whether a read was started.  On a read failure the `Loading`
+    /// reservation is rolled back (slot returns to `Spilled`, bytes
+    /// un-reserved, waiters woken) and the error propagates — the
+    /// prefetch lane forwards it to the executor, which stops cleanly.
+    pub fn prefetch(&self, idx: usize) -> std::io::Result<bool> {
+        let (elems, f32_tile, offset, need);
         {
             let mut inner = self.inner.lock().unwrap();
             let slot = &inner.slots[idx];
             if slot.state != SlotState::Spilled {
-                return false;
+                return Ok(false);
             }
-            let need = slot.bytes;
+            need = slot.bytes;
             if inner.resident_bytes + need + 2 * self.tile_bytes > self.budget {
-                return false;
+                return Ok(false);
             }
             (elems, f32_tile, offset) = (slot.elems, slot.f32_tile, slot.offset);
             inner.slots[idx].state = SlotState::Loading;
@@ -536,9 +569,17 @@ impl TileStore {
             inner.peak_resident_bytes = inner.peak_resident_bytes.max(inner.resident_bytes);
         }
         let mut buf = alloc_buf(elems, f32_tile);
-        self.file
-            .read_exact_at(buf_bytes_mut(&mut buf), offset)
-            .expect("tile prefetch read");
+        if let Err(e) = self.read_slot(buf_bytes_mut(&mut buf), offset, "prefetch read") {
+            // Roll the reservation back under the lock so a demand pin
+            // blocked on `Loading` wakes and retries the read itself.
+            let mut inner = self.inner.lock().unwrap();
+            let slot = &mut inner.slots[idx];
+            debug_assert_eq!(slot.state, SlotState::Loading);
+            slot.state = SlotState::Spilled;
+            inner.resident_bytes -= need;
+            self.loaded.notify_all();
+            return Err(e);
+        }
         TILE_SPILL_READS.fetch_add(1, Ordering::Relaxed);
         TILE_PREFETCHES.fetch_add(1, Ordering::Relaxed);
         let mut inner = self.inner.lock().unwrap();
@@ -547,15 +588,39 @@ impl TileStore {
         slot.buf = buf;
         slot.state = SlotState::Resident;
         self.loaded.notify_all();
-        true
+        Ok(true)
+    }
+
+    /// One spill-file write with the fault-injection hook and the same
+    /// bounded retry as [`TileStore::read_slot`] (write-out of a
+    /// resident buffer is idempotent).
+    fn write_slot(&self, buf: &[u8], offset: u64) -> std::io::Result<()> {
+        let budget = faults::task_retry_limit();
+        let mut attempt = 0usize;
+        loop {
+            let res = faults::maybe_io_error("spill write")
+                .and_then(|()| self.file.write_all_at(buf, offset));
+            match res {
+                Ok(()) => return Ok(()),
+                Err(e) => {
+                    if attempt < budget {
+                        attempt += 1;
+                        faults::note_task_retry();
+                        continue;
+                    }
+                    return Err(e);
+                }
+            }
+        }
     }
 
     /// Evict until `need` more bytes fit, skipping `keep` and anything
     /// pinned or loading.  Victim = greatest `next_use` (Belady).  If
     /// everything left is pinned/loading the pin proceeds anyway — the
     /// [`TileStore::MIN_TILES`] clamp sizes the budget so that worst
-    /// case still lands under it.
-    fn make_room(&self, inner: &mut StoreInner, need: usize, keep: usize) {
+    /// case still lands under it.  A failed write-out leaves the victim
+    /// resident (nothing lost) and propagates the error.
+    fn make_room(&self, inner: &mut StoreInner, need: usize, keep: usize) -> std::io::Result<()> {
         while inner.resident_bytes + need > self.budget {
             let mut victim: Option<(usize, u64)> = None;
             for (i, s) in inner.slots.iter().enumerate() {
@@ -573,9 +638,7 @@ impl TileStore {
             let Some((v, _)) = victim else { break };
             let slot = &mut inner.slots[v];
             if slot.next_use != NEXT_USE_DEAD {
-                self.file
-                    .write_all_at(buf_bytes(&slot.buf), slot.offset)
-                    .expect("tile spill write");
+                self.write_slot(buf_bytes(&slot.buf), slot.offset)?;
                 TILE_SPILL_WRITES.fetch_add(1, Ordering::Relaxed);
                 slot.state = SlotState::Spilled;
             } else {
@@ -587,6 +650,7 @@ impl TileStore {
             let bytes = slot.bytes;
             inner.resident_bytes -= bytes;
         }
+        Ok(())
     }
 }
 
@@ -836,7 +900,9 @@ impl TileMatrix {
         let h = self.tile_rows(ti);
         let idx = self.tri_index(ti, tj);
         if let Some(st) = &self.store {
-            let p = st.pin(idx);
+            // Test/assembly-only accessor: a disk error here has no
+            // recovery seam, so it stays fatal.
+            let p = st.pin(idx).expect("tile spill read (element get)");
             // SAFETY: the pin keeps the buffer alive and unshared with
             // any writer for the duration of this read.
             let v = unsafe {
@@ -863,7 +929,7 @@ impl TileMatrix {
         let h = self.tile_rows(ti);
         let idx = self.tri_index(ti, tj);
         if let Some(st) = &self.store {
-            let p = st.pin(idx);
+            let p = st.pin(idx).expect("tile spill read (element set)");
             // SAFETY: exclusive access — `&mut self` plus the pin.
             unsafe {
                 match p.mat_mut() {
@@ -1032,6 +1098,7 @@ impl TileVector {
 mod tests {
     use super::*;
     use crate::rng::Pcg64;
+    use crate::scheduler::faults::FaultPlan;
 
     #[test]
     fn tile_dims_with_edges() {
@@ -1193,10 +1260,10 @@ mod tests {
         let tm = TileMatrix::zeros_spill(8, 4, None, 1 << 20).unwrap();
         let st = tm.store().unwrap();
         let idx = tm.slot_index(1, 0);
-        let p = st.pin(idx);
+        let p = st.pin(idx).unwrap();
         unsafe { p.as_mut()[0] = 7.0 };
         // Double pin returns the same buffer.
-        let p2 = st.pin(idx);
+        let p2 = st.pin(idx).unwrap();
         assert_eq!(unsafe { p2.as_ref()[0] }, 7.0);
         st.unpin(idx);
         // Mark dead while still pinned: the drop happens at last unpin.
@@ -1216,7 +1283,7 @@ mod tests {
         // Touch every diagonal tile; early ones spill.
         let nt = tm.nt();
         for t in 0..nt {
-            let p = st.pin(tm.slot_index(t, t));
+            let p = st.pin(tm.slot_index(t, t)).unwrap();
             unsafe { p.as_mut()[0] = t as f64 + 1.0 };
             st.unpin(tm.slot_index(t, t));
         }
@@ -1227,10 +1294,66 @@ mod tests {
             st.set_next_use(tm.slot_index(t, t), None);
         }
         let pf0 = tile_prefetches();
-        assert!(st.prefetch(idx), "spilled tile with headroom prefetches");
-        assert!(!st.prefetch(idx), "already resident: prefetch declines");
+        assert!(st.prefetch(idx).unwrap(), "spilled tile with headroom prefetches");
+        assert!(!st.prefetch(idx).unwrap(), "already resident: prefetch declines");
         assert_eq!(tile_prefetches(), pf0 + 1);
         assert_eq!(tm.get(0, 0), 1.0, "prefetched data intact");
+    }
+
+    #[test]
+    fn injected_io_fault_surfaces_as_error_and_store_recovers() {
+        let _guard = faults::fault_test_lock();
+        faults::set_fault_plan(None);
+        faults::set_task_retry_override(Some(0));
+        // Tiny budget: pinning every diagonal tile forces write-outs.
+        let tm = TileMatrix::zeros_spill(48, 4, None, 1).unwrap();
+        let st = tm.store().unwrap();
+        for t in 0..tm.nt() {
+            let p = st.pin(tm.slot_index(t, t)).unwrap();
+            unsafe { p.as_mut()[0] = t as f64 + 1.0 };
+            st.unpin(tm.slot_index(t, t));
+        }
+        // Arm a certain I/O fault with no retry budget: the next demand
+        // read of a spilled tile must fail with a typed error...
+        faults::set_fault_plan(FaultPlan::parse("io:1"));
+        let idx = tm.slot_index(0, 0);
+        let err = st.pin(idx).unwrap_err();
+        assert!(err.to_string().contains("injected i/o fault"), "{err}");
+        // ...leaving the slot spilled and consistent: disarm and the
+        // same pin succeeds with the original data intact.
+        faults::set_fault_plan(None);
+        faults::set_task_retry_override(None);
+        let p = st.pin(idx).unwrap();
+        assert_eq!(unsafe { p.as_ref()[0] }, 1.0, "data survives the fault");
+        st.unpin(idx);
+        assert!(st.resident_bytes() <= st.budget());
+    }
+
+    #[test]
+    fn spill_read_retry_rides_out_transient_io_faults() {
+        let _guard = faults::fault_test_lock();
+        faults::set_fault_plan(None);
+        let tm = TileMatrix::zeros_spill(48, 4, None, 1).unwrap();
+        let st = tm.store().unwrap();
+        for t in 0..tm.nt() {
+            let p = st.pin(tm.slot_index(t, t)).unwrap();
+            unsafe { p.as_mut()[0] = t as f64 + 1.0 };
+            st.unpin(tm.slot_index(t, t));
+        }
+        // Certain fault but one retry: the retry redraws the stream, so
+        // with rate 1.0 it fails even with retries — use a high budget
+        // against a certain fault to prove the *bounded* give-up, and a
+        // zero rate to prove the retry path is not taken when clean.
+        faults::set_task_retry_override(Some(2));
+        faults::set_fault_plan(FaultPlan::parse("io:1"));
+        let r0 = faults::tasks_retried();
+        let idx = tm.slot_index(0, 0);
+        assert!(st.pin(idx).is_err(), "certain fault exhausts the budget");
+        assert_eq!(faults::tasks_retried(), r0 + 2, "both retries consumed");
+        faults::set_fault_plan(None);
+        faults::set_task_retry_override(None);
+        assert_eq!(unsafe { st.pin(idx).unwrap().as_ref()[0] }, 1.0);
+        st.unpin(idx);
     }
 
     #[test]

@@ -288,7 +288,21 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             Some(_) => Some(args.get_usize("depth-limit", 0)?),
             None => None,
         },
+        // `--deadline MS` is a *default*: a request carrying its own
+        // `deadline_ms` keeps it.
+        deadline_ms: match args.get("deadline") {
+            Some(_) => Some(args.get_usize("deadline", 0)? as u64),
+            None => None,
+        },
     };
+    // `--retries N` opts whole-job retry in for every served request
+    // (infrastructure failures only; cancelled/timed-out jobs are never
+    // retried).  Same knob as EXAGEOSTAT_JOB_RETRIES.
+    if args.get("retries").is_some() {
+        exageostat::coordinator::set_job_retry_override(Some(
+            args.get_usize("retries", 0)? as u64,
+        ));
+    }
     println!(
         "serving with {clients} client runners, window {} on {} workers ({:?}, ts {}){}{}",
         opts.window,
@@ -325,6 +339,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             if r.session_cache_hit { "  session*" } else { "" },
         ),
         Completion::Cancelled => println!("  [{id:>3}] cancelled"),
+        Completion::TimedOut => println!("  [{id:>3}] timed out"),
         Completion::Failed(msg) => eprintln!("  [{id:>3}] error: {msg}"),
     };
 
@@ -373,11 +388,12 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let lat = &summary.latencies_s; // sorted by serve_stream
     let st = coord.stats();
     println!(
-        "{} ok, {} failed, {} cancelled in {total_s:.3}s — {:.2} req/s, \
+        "{} ok, {} failed, {} cancelled, {} timed out in {total_s:.3}s — {:.2} req/s, \
          latency p50 {:.3}s / p95 {:.3}s / p99 {:.3}s",
         summary.ok,
         summary.failed,
         summary.cancelled,
+        summary.timed_out,
         summary.ok as f64 / total_s.max(1e-9),
         percentile(lat, 0.50),
         percentile(lat, 0.95),
@@ -399,6 +415,12 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         println!(
             "cancellation skipped {} queued task(s) before they ran",
             st.tasks_skipped
+        );
+    }
+    if st.job_retries + st.faults_injected + st.tasks_retried > 0 {
+        println!(
+            "fault handling: {} fault(s) injected, {} task retr(ies), {} whole-job retr(ies)",
+            st.faults_injected, st.tasks_retried, st.job_retries
         );
     }
     // Only worth a line when the pool is actually heterogeneous: a single
@@ -427,7 +449,8 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
              \"p95_s\": {},\n  \"p99_s\": {},\n  \"data_cache_hits\": {},\n  \
              \"data_cache_evictions\": {},\n  \"session_cache_hits\": {},\n  \
              \"session_cache_evictions\": {},\n  \"tasks_executed\": {},\n  \
-             \"tasks_skipped\": {}\n}}\n",
+             \"tasks_skipped\": {},\n  \"timed_out\": {},\n  \
+             \"job_retries\": {}\n}}\n",
             summary.submitted,
             summary.ok,
             summary.failed,
@@ -443,6 +466,8 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             st.session_cache_evictions,
             st.tasks_executed,
             st.tasks_skipped,
+            summary.timed_out,
+            st.job_retries,
         );
         std::fs::write(out, json).with_context(|| format!("writing {out}"))?;
         println!("stats written to {out}");
@@ -479,7 +504,7 @@ fn main() {
                  \x20             [--worker-classes cpu:6,slow:2]\n\
                  serve input:  --requests file.jsonl | --stdin | --socket path.sock\n\
                  serve flags:  --clients K --window W --shards N [--depth-limit D]\n\
-                 \x20             [--mem-budget 2G]\n\
+                 \x20             [--mem-budget 2G] [--deadline MS] [--retries N]\n\
                  \x20             [--once | --max-conns N] [--out stats.json]\n\
                  see rust/src/main.rs header for examples"
             );

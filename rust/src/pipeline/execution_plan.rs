@@ -14,6 +14,7 @@
 //! reference earlier plan positions.
 
 use super::ir::{Op, TaskIR};
+use crate::scheduler::faults;
 use crate::scheduler::placement::WorkerClass;
 use crate::scheduler::{TaskGraph, TaskKind};
 use std::collections::HashMap;
@@ -75,6 +76,14 @@ impl ExecutionPlan {
     /// (the planner already resolved them from the IR, so no handle
     /// re-inference is needed or wanted — fusion deliberately collapses
     /// handles that STF would treat as distinct).
+    ///
+    /// Each task body runs inside the fault-injection boundary
+    /// (`scheduler::faults::with_task_faults`): groups whose every op
+    /// is **idempotent** — `Generate` overwrites its whole tile and
+    /// `LogDetReduce` overwrites its partial slot, so re-running from
+    /// still-valid inputs reproduces the same bytes — get a bounded
+    /// in-place retry on a real panic; all groups get the pre-body
+    /// injection point (free when the injector is disarmed).
     pub fn instantiate<R: OpRunner + Send + Sync + 'static>(
         &self,
         ir: &TaskIR,
@@ -85,11 +94,16 @@ impl ExecutionPlan {
         for t in &self.tasks {
             let preds: Vec<usize> = t.preds.iter().map(|&p| tid[p]).collect();
             let ops: Vec<Op> = t.ops.iter().map(|&o| ir.nodes[o].op).collect();
+            let idem = ops
+                .iter()
+                .all(|op| matches!(op, Op::Generate { .. } | Op::LogDetReduce { .. }));
             let r = runner.clone();
             let id = g.submit_dep(t.kind, &preds, t.bytes, move || {
-                for op in &ops {
-                    r.run_op(*op);
-                }
+                faults::with_task_faults(idem, || {
+                    for op in &ops {
+                        r.run_op(*op);
+                    }
+                });
             });
             if let Some(c) = t.class {
                 g.set_class(id, c);

@@ -58,8 +58,32 @@ use crate::linalg::cholesky::{check_fail, new_fail_flag, FailFlag};
 use crate::linalg::lowrank::{LrOpts, LrTile};
 use crate::linalg::matrix::Matrix;
 use crate::linalg::tile::{TileMatrix, TilePtr, TileVector};
+use crate::scheduler::faults;
+use crate::scheduler::runtime::TaskError;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
+
+/// The pipeline's `Err` cases map onto the context's cancel token: a
+/// token fired for a deadline/watchdog reason reports `Timeout`, an
+/// ordinary cancellation reports `Cancelled`.
+fn cancel_error(ctx: &ExecCtx) -> ApiError {
+    if ctx.cancel.timed_out() {
+        ApiError::Timeout
+    } else {
+        ApiError::Cancelled
+    }
+}
+
+/// Wrap a job-level [`TaskError`] for the anyhow chain.  Timeouts gain
+/// an [`ApiError::Timeout`] marker so `api::error::is_timeout` matches
+/// them; other kinds keep their typed payload downcastable.
+fn task_error(e: TaskError) -> anyhow::Error {
+    if matches!(e, TaskError::Timeout(_)) {
+        anyhow::Error::new(e).context(ApiError::Timeout)
+    } else {
+        anyhow::Error::new(e)
+    }
+}
 
 /// Result of a tiled pipeline run.  A non-SPD pivot is a *value*, not an
 /// `Err` — callers format their variant-specific diagnostics; `Err` is
@@ -346,12 +370,15 @@ pub fn run_tiled(
                 .place(&mut plan);
         }
         let g = plan.instantiate(&ir, runner.clone());
-        ctx.run_graph(g).tasks_skipped
+        // Typed failure (a task panic past its retry budget, an
+        // injected fault) propagates as a value so the coordinator's
+        // whole-job retry can see it — not as a re-raised panic.
+        ctx.run_graph_result(g).map_err(task_error)?.tasks_skipped
     };
     if skipped > 0 {
         // Cancelled mid-flight: the factor is incomplete, so neither the
         // fail flag nor the log-det slots are meaningful.
-        return Err(ApiError::Cancelled.into());
+        return Err(cancel_error(ctx).into());
     }
     let not_spd = check_fail(&runner.fail).err().map(|e| e.pivot);
     let logdet = if with_logdet && not_spd.is_none() {
@@ -469,13 +496,19 @@ fn run_tiled_spilled(
     for t in 0..runner.ptrs.len() {
         store.set_next_use(t, sched.uses[t].front().map(|&s| s as u64));
     }
-    let cancelled = std::thread::scope(|sc| {
+    let cancelled = std::thread::scope(|sc| -> anyhow::Result<bool> {
         let (tx, rx) = std::sync::mpsc::channel::<u32>();
         // The I/O lane: drains prefetch requests until the executor
-        // drops `tx`; the scope joins it on exit.
+        // drops `tx`; the scope joins it on exit.  A failed prefetch
+        // rolled its reservation back and left the slot spilled, so
+        // the demand pin retries the read itself — the lane just stops
+        // (dropping `rx`; later sends are silently ignored) and lets
+        // the executor's own pin be the authoritative failure point.
         sc.spawn(move || {
             for t in rx {
-                store.prefetch(t as usize);
+                if store.prefetch(t as usize).is_err() {
+                    break;
+                }
             }
         });
         for s in 1..SPILL_LOOKAHEAD.min(plan.tasks.len()) {
@@ -484,7 +517,7 @@ fn run_tiled_spilled(
         let mut pinned: Vec<u32> = Vec::with_capacity(4);
         for (step, task) in plan.tasks.iter().enumerate() {
             if ctx.cancel.is_cancelled() {
-                return true;
+                return Ok(true);
             }
             pinned.clear();
             for &id in &task.ops {
@@ -494,18 +527,54 @@ fn run_tiled_spilled(
                         // First touch by this task's Generate: the op
                         // overwrites the whole tile, so materialize
                         // without reading stale spill data back.
-                        let ptr = if sched.gen_step[t as usize] == step as u32 {
+                        let res = if sched.gen_step[t as usize] == step as u32 {
                             store.pin_for_write(t as usize)
                         } else {
                             store.pin(t as usize)
                         };
-                        runner.ptrs[t as usize] = ptr;
-                        pinned.push(t);
+                        match res {
+                            Ok(ptr) => {
+                                runner.ptrs[t as usize] = ptr;
+                                pinned.push(t);
+                            }
+                            Err(e) => {
+                                // Release this step's pins so the store
+                                // stays evictable (the session keeps the
+                                // workspace across requests), then
+                                // surface the typed I/O failure.
+                                for &p in &pinned {
+                                    store.unpin(p as usize);
+                                }
+                                return Err(task_error(TaskError::Io(format!(
+                                    "tile spill at plan step {step}: {e}"
+                                ))));
+                            }
+                        }
                     }
                 }
             }
-            for &id in &task.ops {
-                runner.run_op(ir.nodes[id].op);
+            // Injected faults fire at this serial task boundary exactly
+            // as they do on runtime workers; a *real* panic of a
+            // non-idempotent group propagates and is typed below.
+            let idem = task.ops.iter().all(|&id| {
+                matches!(
+                    ir.nodes[id].op,
+                    Op::Generate { .. } | Op::LogDetReduce { .. }
+                )
+            });
+            let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                faults::with_task_faults(idem, || {
+                    for &id in &task.ops {
+                        runner.run_op(ir.nodes[id].op);
+                    }
+                })
+            }));
+            if let Err(p) = run {
+                let msg = crate::scheduler::runtime::panic_message(p.as_ref());
+                for &t in &pinned {
+                    store.unpin(t as usize);
+                }
+                return Err(task_error(TaskError::Panic(msg)));
             }
             for &t in &pinned {
                 let q = &mut sched.uses[t as usize];
@@ -522,10 +591,10 @@ fn run_tiled_spilled(
                 send_prefetches(&tx, &sched, target);
             }
         }
-        false
-    });
+        Ok(false)
+    })?;
     if cancelled {
-        return Err(ApiError::Cancelled.into());
+        return Err(cancel_error(ctx).into());
     }
     let not_spd = check_fail(&runner.fail).err().map(|e| e.pivot);
     let logdet = if with_logdet && not_spd.is_none() {
@@ -583,7 +652,15 @@ pub fn run_tlr(
 
     'outer: for task in &plan.tasks {
         if ctx.cancel.is_cancelled() {
-            return Err(ApiError::Cancelled.into());
+            return Err(cancel_error(ctx).into());
+        }
+        // Fault-injection boundary (panic/stall draw, bounded retry).
+        // TLR ops mutate rank-adaptive heap state in place, so bodies
+        // are never re-run here — only the pre-body injection point is
+        // exercised; a budget-exhausted injection surfaces typed.
+        if let Err(p) = std::panic::catch_unwind(|| faults::with_task_faults(false, || ())) {
+            let msg = crate::scheduler::runtime::panic_message(p.as_ref());
+            return Err(task_error(TaskError::Panic(msg)));
         }
         for &id in &task.ops {
             match ir.nodes[id].op {

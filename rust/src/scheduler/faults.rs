@@ -1,0 +1,432 @@
+//! Deterministic fault injection (DESIGN.md §2j).
+//!
+//! Production fault tolerance is only trustworthy if it is *tested*
+//! against faults, and faults are only testable if they are
+//! deterministic and cheap to switch on.  This module is the single
+//! switchboard: a seeded [`FaultPlan`] (rates per fault kind) armed
+//! either from the `EXAGEOSTAT_FAULTS` environment knob
+//! (`panic:0.01,io:0.01,stall:0.005@seed=42,stall_ms=20`) or
+//! in-process via [`set_fault_plan`], consulted from exactly two kinds
+//! of sites:
+//!
+//! * **task boundaries** — [`with_task_faults`] wraps every pipeline
+//!   task body (runtime tasks, the serial TLR and spill sweeps).  The
+//!   draw happens *before* the body runs, so an injected panic or
+//!   stall never corrupts state and is always safe to retry — which is
+//!   exactly what the wrapper does, up to [`task_retry_limit`] times.
+//!   Genuine (non-injected) panics are retried only when the caller
+//!   declares the body idempotent (e.g. a Generate-only group, which
+//!   fully overwrites its output tile).
+//! * **spill I/O** — [`maybe_io_error`] in `linalg::tile`'s read/write
+//!   paths returns a synthetic `io::Error`, exercising the typed
+//!   `TaskError::Io` propagation added in the same PR.
+//!
+//! The disarmed fast path is one relaxed atomic load
+//! ([`faults_active`]), so the hooks cost the fault-free hot loop
+//! nothing measurable (gated ≤ 2% in `ci/bench_baseline.json`).
+//! Draws come from a splitmix64 stream over `(seed, global sequence)`:
+//! a fixed seed yields a reproducible fault pattern for serial
+//! executors and a statistically stable one under concurrency.
+//!
+//! Counters ([`injected_panics`], [`injected_io_errors`],
+//! [`injected_stalls`], [`tasks_retried`]) are process-global and
+//! monotone — tests assert deltas, and `Profile`/`CoordinatorStats`
+//! surface them so chaos suites can prove faults actually fired.
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, Once, OnceLock};
+use std::time::Duration;
+
+/// Injection rates and determinism seed for one fault campaign.
+#[derive(Copy, Clone, Debug, PartialEq)]
+pub struct FaultPlan {
+    /// Probability a task body panics at its entry boundary.
+    pub panic_rate: f64,
+    /// Probability a spill read/write returns a synthetic I/O error.
+    pub io_rate: f64,
+    /// Probability a task stalls (sleeps [`FaultPlan::stall_ms`]) at
+    /// its entry boundary — the hung-task case the watchdog converts
+    /// into `TaskError::Timeout`.
+    pub stall_rate: f64,
+    /// Stall duration in milliseconds (bounded, so jobs always drain).
+    pub stall_ms: u64,
+    /// Seed of the deterministic draw stream.
+    pub seed: u64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            panic_rate: 0.0,
+            io_rate: 0.0,
+            stall_rate: 0.0,
+            stall_ms: 20,
+            seed: 0,
+        }
+    }
+}
+
+impl FaultPlan {
+    /// Parse the `EXAGEOSTAT_FAULTS` syntax:
+    /// `kind:rate[,kind:rate...][@key=val[,key=val...]]` with kinds
+    /// `panic` / `io` / `stall` and keys `seed` / `stall_ms`.
+    /// Returns `None` for an empty/unparseable spec or all-zero rates.
+    pub fn parse(spec: &str) -> Option<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        let (rates, opts) = match spec.split_once('@') {
+            Some((r, o)) => (r, Some(o)),
+            None => (spec, None),
+        };
+        for part in rates.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (kind, rate) = part.split_once(':')?;
+            let rate: f64 = rate.trim().parse().ok()?;
+            if !(0.0..=1.0).contains(&rate) {
+                return None;
+            }
+            match kind.trim() {
+                "panic" => plan.panic_rate = rate,
+                "io" => plan.io_rate = rate,
+                "stall" => plan.stall_rate = rate,
+                _ => return None,
+            }
+        }
+        if let Some(opts) = opts {
+            for part in opts.split(',') {
+                let part = part.trim();
+                if part.is_empty() {
+                    continue;
+                }
+                let (key, val) = part.split_once('=')?;
+                match key.trim() {
+                    "seed" => plan.seed = val.trim().parse().ok()?,
+                    "stall_ms" => plan.stall_ms = val.trim().parse().ok()?,
+                    _ => return None,
+                }
+            }
+        }
+        if plan.panic_rate == 0.0 && plan.io_rate == 0.0 && plan.stall_rate == 0.0 {
+            return None;
+        }
+        Some(plan)
+    }
+}
+
+// The armed plan, decomposed into atomics so the draw path never takes
+// a lock.  `ACTIVE` is written last (and checked first), so a torn
+// read across fields can at worst misdraw during re-arming — benign
+// for an injector.
+static ACTIVE: AtomicBool = AtomicBool::new(false);
+static PANIC_BITS: AtomicU64 = AtomicU64::new(0);
+static IO_BITS: AtomicU64 = AtomicU64::new(0);
+static STALL_BITS: AtomicU64 = AtomicU64::new(0);
+static STALL_MS: AtomicU64 = AtomicU64::new(20);
+static SEED: AtomicU64 = AtomicU64::new(0);
+/// Draw sequence number: combined with the seed, gives every
+/// injection site its own deterministic sample.
+static SEQ: AtomicU64 = AtomicU64::new(0);
+
+static INJECTED_PANICS: AtomicU64 = AtomicU64::new(0);
+static INJECTED_IO: AtomicU64 = AtomicU64::new(0);
+static INJECTED_STALLS: AtomicU64 = AtomicU64::new(0);
+static TASK_RETRIES: AtomicU64 = AtomicU64::new(0);
+
+/// Injected task-boundary panics so far (pre-retry; a retried and
+/// recovered injection still counts).
+pub fn injected_panics() -> u64 {
+    INJECTED_PANICS.load(Ordering::Relaxed)
+}
+/// Injected spill I/O errors so far.
+pub fn injected_io_errors() -> u64 {
+    INJECTED_IO.load(Ordering::Relaxed)
+}
+/// Injected task stalls so far.
+pub fn injected_stalls() -> u64 {
+    INJECTED_STALLS.load(Ordering::Relaxed)
+}
+/// All injected faults so far, across kinds.
+pub fn faults_injected() -> u64 {
+    injected_panics() + injected_io_errors() + injected_stalls()
+}
+/// Task-level retries performed by [`with_task_faults`] so far.
+pub fn tasks_retried() -> u64 {
+    TASK_RETRIES.load(Ordering::Relaxed)
+}
+/// Count one retry performed outside [`with_task_faults`] (the tile
+/// store's bounded spill-read/write retry loop).
+pub fn note_task_retry() {
+    TASK_RETRIES.fetch_add(1, Ordering::Relaxed);
+}
+
+fn apply(plan: Option<FaultPlan>) {
+    match plan {
+        Some(p) => {
+            PANIC_BITS.store(p.panic_rate.to_bits(), Ordering::Relaxed);
+            IO_BITS.store(p.io_rate.to_bits(), Ordering::Relaxed);
+            STALL_BITS.store(p.stall_rate.to_bits(), Ordering::Relaxed);
+            STALL_MS.store(p.stall_ms, Ordering::Relaxed);
+            SEED.store(p.seed, Ordering::Relaxed);
+            ACTIVE.store(true, Ordering::Release);
+        }
+        None => ACTIVE.store(false, Ordering::Release),
+    }
+}
+
+fn ensure_env_init() {
+    static INIT: Once = Once::new();
+    INIT.call_once(|| {
+        if let Ok(spec) = std::env::var("EXAGEOSTAT_FAULTS") {
+            apply(FaultPlan::parse(&spec));
+        }
+    });
+}
+
+/// Arm (`Some`) or disarm (`None`) fault injection process-wide — the
+/// in-process face of `EXAGEOSTAT_FAULTS`, for tests.  Hold
+/// [`fault_test_lock`] across the armed window and disarm before
+/// releasing it, mirroring `placement::set_class_override`.
+pub fn set_fault_plan(plan: Option<FaultPlan>) {
+    ensure_env_init(); // the env must not clobber an override later
+    apply(plan);
+}
+
+/// Serializes tests that arm [`set_fault_plan`] (or the retry/
+/// quarantine overrides) — process-global state needs process-global
+/// test ordering.
+pub fn fault_test_lock() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    // A panicking armed test must not deadlock every later one.
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Is any fault plan armed?  The disarmed answer is one relaxed load.
+#[inline]
+pub fn faults_active() -> bool {
+    ensure_env_init();
+    ACTIVE.load(Ordering::Acquire)
+}
+
+/// splitmix64-derived uniform sample in `[0, 1)` for draw `n`.
+fn sample(n: u64, salt: u64) -> f64 {
+    let mut z = SEED
+        .load(Ordering::Relaxed)
+        .wrapping_add(salt)
+        .wrapping_add(n.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^= z >> 31;
+    (z >> 11) as f64 / (1u64 << 53) as f64
+}
+
+/// One task-boundary draw: may sleep (stall) inline; returns `true`
+/// when a panic was drawn (the caller panics or retries).
+fn draw_task_fault() -> bool {
+    let n = SEQ.fetch_add(1, Ordering::Relaxed);
+    let stall_rate = f64::from_bits(STALL_BITS.load(Ordering::Relaxed));
+    if stall_rate > 0.0 && sample(n, 0x5741) < stall_rate {
+        INJECTED_STALLS.fetch_add(1, Ordering::Relaxed);
+        std::thread::sleep(Duration::from_millis(STALL_MS.load(Ordering::Relaxed)));
+    }
+    let panic_rate = f64::from_bits(PANIC_BITS.load(Ordering::Relaxed));
+    panic_rate > 0.0 && sample(n, 0x9A1C) < panic_rate
+}
+
+/// Spill I/O injection point: `Err` with probability `io_rate` when a
+/// plan is armed, `Ok` otherwise.  `site` tags the error message.
+pub fn maybe_io_error(site: &'static str) -> std::io::Result<()> {
+    if !faults_active() {
+        return Ok(());
+    }
+    let n = SEQ.fetch_add(1, Ordering::Relaxed);
+    let io_rate = f64::from_bits(IO_BITS.load(Ordering::Relaxed));
+    if io_rate > 0.0 && sample(n, 0x10E7) < io_rate {
+        INJECTED_IO.fetch_add(1, Ordering::Relaxed);
+        return Err(std::io::Error::other(format!("injected i/o fault at {site}")));
+    }
+    Ok(())
+}
+
+/// Retry budget of [`with_task_faults`]: `EXAGEOSTAT_TASK_RETRIES`
+/// (default 1), or the in-process override.
+pub fn task_retry_limit() -> usize {
+    let o = TASK_RETRY_OVERRIDE.load(Ordering::Relaxed);
+    if o != u64::MAX {
+        return o as usize;
+    }
+    static ENV: OnceLock<usize> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        std::env::var("EXAGEOSTAT_TASK_RETRIES")
+            .ok()
+            .and_then(|v| v.trim().parse().ok())
+            .unwrap_or(1)
+    })
+}
+
+static TASK_RETRY_OVERRIDE: AtomicU64 = AtomicU64::new(u64::MAX);
+
+/// Test-facing override of [`task_retry_limit`] (`None` restores the
+/// env/default).  Hold [`fault_test_lock`] while set.
+pub fn set_task_retry_override(limit: Option<usize>) {
+    TASK_RETRY_OVERRIDE.store(limit.map_or(u64::MAX, |l| l as u64), Ordering::Relaxed);
+}
+
+/// Run one task body under the armed fault plan, with bounded retry.
+///
+/// Injection happens at *entry* — before `body` has touched any state —
+/// so an injected panic or stall is always safe to retry, regardless of
+/// what the body does.  A genuine panic raised *by* the body is retried
+/// only when `idempotent` (the body fully overwrites its outputs from
+/// still-valid inputs, e.g. a Generate-only group); otherwise it
+/// propagates to the caller's recovery layer (worker catch → typed
+/// `TaskError::Panic` → whole-job retry at the coordinator).
+///
+/// Disarmed, this is a direct call after one atomic load.
+pub fn with_task_faults<T>(idempotent: bool, mut body: impl FnMut() -> T) -> T {
+    if !faults_active() {
+        return body();
+    }
+    let budget = task_retry_limit();
+    let mut attempt = 0usize;
+    loop {
+        if draw_task_fault() {
+            INJECTED_PANICS.fetch_add(1, Ordering::Relaxed);
+            if attempt < budget {
+                attempt += 1;
+                TASK_RETRIES.fetch_add(1, Ordering::Relaxed);
+                continue;
+            }
+            panic!("injected fault: task panic (retry budget {budget} exhausted)");
+        }
+        if !idempotent {
+            return body();
+        }
+        match catch_unwind(AssertUnwindSafe(&mut body)) {
+            Ok(v) => return v,
+            Err(p) => {
+                if attempt < budget {
+                    attempt += 1;
+                    TASK_RETRIES.fetch_add(1, Ordering::Relaxed);
+                    continue;
+                }
+                resume_unwind(p);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_and_partial_specs() {
+        let p = FaultPlan::parse("panic:0.01,io:0.02,stall:0.005@seed=42,stall_ms=7").unwrap();
+        assert_eq!(p.panic_rate, 0.01);
+        assert_eq!(p.io_rate, 0.02);
+        assert_eq!(p.stall_rate, 0.005);
+        assert_eq!(p.seed, 42);
+        assert_eq!(p.stall_ms, 7);
+        let p = FaultPlan::parse("io:1.0").unwrap();
+        assert_eq!(p.io_rate, 1.0);
+        assert_eq!(p.seed, 0);
+        assert!(FaultPlan::parse("").is_none());
+        assert!(FaultPlan::parse("panic:0,io:0").is_none(), "all-zero = off");
+        assert!(FaultPlan::parse("panic:2.0").is_none(), "rate out of range");
+        assert!(FaultPlan::parse("disk:0.1").is_none(), "unknown kind");
+        assert!(FaultPlan::parse("panic:0.1@tick=3").is_none(), "unknown key");
+    }
+
+    #[test]
+    fn disarmed_injector_is_inert() {
+        let _serial = fault_test_lock();
+        set_fault_plan(None);
+        assert!(!faults_active());
+        assert!(maybe_io_error("test").is_ok());
+        let mut runs = 0;
+        let v = with_task_faults(true, || {
+            runs += 1;
+            7
+        });
+        assert_eq!((v, runs), (7, 1));
+    }
+
+    #[test]
+    fn certain_io_fault_fires_and_counts() {
+        let _serial = fault_test_lock();
+        set_fault_plan(FaultPlan::parse("io:1.0@seed=1"));
+        let before = injected_io_errors();
+        let err = maybe_io_error("unit").unwrap_err();
+        assert!(err.to_string().contains("injected i/o fault at unit"));
+        assert_eq!(injected_io_errors(), before + 1);
+        set_fault_plan(None);
+    }
+
+    #[test]
+    fn certain_panic_rate_retries_within_budget_then_gives_up() {
+        let _serial = fault_test_lock();
+        set_fault_plan(FaultPlan::parse("panic:1.0@seed=2"));
+        set_task_retry_override(Some(3));
+        let r0 = tasks_retried();
+        let got = std::panic::catch_unwind(|| with_task_faults(false, || 1));
+        let msg = got.unwrap_err();
+        assert!(
+            crate::scheduler::runtime::panic_message(msg.as_ref()).contains("injected fault"),
+            "exhausted budget surfaces as an injected panic"
+        );
+        assert_eq!(tasks_retried(), r0 + 3, "all 3 retries consumed");
+        set_task_retry_override(None);
+        set_fault_plan(None);
+    }
+
+    #[test]
+    fn idempotent_body_retries_real_panics() {
+        let _serial = fault_test_lock();
+        // Armed with a zero-rate-free plan (stall only, rate 0 is
+        // rejected, so use a tiny rate that never fires at this seed
+        // count) — the point is `faults_active()` gating the retry
+        // wrapper on.
+        set_fault_plan(Some(FaultPlan {
+            panic_rate: 0.0,
+            io_rate: 0.0,
+            stall_rate: 1e-12,
+            stall_ms: 1,
+            seed: 3,
+        }));
+        set_task_retry_override(Some(2));
+        let mut calls = 0;
+        let v = with_task_faults(true, || {
+            calls += 1;
+            if calls < 3 {
+                panic!("flaky body");
+            }
+            99
+        });
+        assert_eq!((v, calls), (99, 3));
+        // Non-idempotent bodies never have real panics swallowed.
+        let mut calls = 0;
+        let got = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            with_task_faults(false, || {
+                calls += 1;
+                panic!("real bug");
+            })
+        }));
+        assert!(got.is_err());
+        assert_eq!(calls, 1);
+        set_task_retry_override(None);
+        set_fault_plan(None);
+    }
+
+    #[test]
+    fn seeded_stream_is_reproducible() {
+        let a: Vec<f64> = (0..32).map(|n| sample(n, 0x9A1C)).collect();
+        let b: Vec<f64> = (0..32).map(|n| sample(n, 0x9A1C)).collect();
+        assert_eq!(a, b);
+        assert!(a.iter().all(|&x| (0.0..1.0).contains(&x)));
+        let c: Vec<f64> = (0..32).map(|n| sample(n, 0x10E7)).collect();
+        assert_ne!(a, c, "salts separate the streams");
+    }
+}

@@ -23,8 +23,13 @@
 //! * [`des`] — a discrete-event simulator that replays a measured task
 //!   graph on modeled heterogeneous (GPU, Fig 6) or distributed (Fig 7)
 //!   resources; see DESIGN.md "Hardware adaptation".
+//! * [`faults`] — the seeded, deterministic fault injector
+//!   (`EXAGEOSTAT_FAULTS`) firing at task boundaries and spill I/O,
+//!   plus the bounded task-retry wrapper — the harness the failure
+//!   model (DESIGN.md §2j) is validated against.
 
 pub mod des;
+pub mod faults;
 pub mod placement;
 pub mod pool;
 pub mod profile;

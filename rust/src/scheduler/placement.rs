@@ -250,6 +250,79 @@ pub fn class_spec_for(ncores: usize) -> ClassSpec {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Class quarantine (DESIGN.md §2j).  Process-global per-class failure
+// counters: the runtime worker loop notes each caught task panic against
+// the class whose worker it ran on, and once a non-CPU class exceeds the
+// threshold the placer stops routing work there — its tasks fall back to
+// `Cpu`, the graceful-degradation path a flaky accelerator needs.  `Cpu`
+// is never quarantined: it is the fallback.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static CLASS_FAILURES: [AtomicU64; 3] = [AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0)];
+
+/// Quarantine-threshold override for tests (`u64::MAX` = use the env).
+static QUARANTINE_OVERRIDE: AtomicU64 = AtomicU64::new(u64::MAX);
+
+fn class_slot(class: WorkerClass) -> usize {
+    WorkerClass::ALL.iter().position(|&c| c == class).unwrap()
+}
+
+/// Record one task failure against `class` (called by the runtime's
+/// worker loop on every caught task panic).
+pub fn note_class_failure(class: WorkerClass) {
+    CLASS_FAILURES[class_slot(class)].fetch_add(1, Ordering::Relaxed);
+}
+
+/// Task failures recorded against `class` since process start (or the
+/// last [`reset_class_failures`]).
+pub fn class_failures(class: WorkerClass) -> u64 {
+    CLASS_FAILURES[class_slot(class)].load(Ordering::Relaxed)
+}
+
+/// Zero all per-class failure counters (tests; serialize on
+/// [`class_test_lock`]).
+pub fn reset_class_failures() {
+    for c in &CLASS_FAILURES {
+        c.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Failure count at which a non-CPU class is quarantined.
+/// `EXAGEOSTAT_QUARANTINE_AFTER` overrides; default 16; 0 disables
+/// quarantine entirely.
+pub fn quarantine_threshold() -> u64 {
+    let ov = QUARANTINE_OVERRIDE.load(Ordering::SeqCst);
+    if ov != u64::MAX {
+        return ov;
+    }
+    static ENV: OnceLock<u64> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        std::env::var("EXAGEOSTAT_QUARANTINE_AFTER")
+            .ok()
+            .and_then(|v| v.trim().parse::<u64>().ok())
+            .unwrap_or(16)
+    })
+}
+
+/// Force (`Some(n)`) or clear (`None`) the quarantine threshold for
+/// tests, ignoring the environment.  Serialize on [`class_test_lock`].
+pub fn set_quarantine_override(n: Option<u64>) {
+    QUARANTINE_OVERRIDE.store(n.unwrap_or(u64::MAX), Ordering::SeqCst);
+}
+
+/// Is `class` currently quarantined?  `Cpu` never is (it is the
+/// fallback target); other classes are once their failure count
+/// reaches the threshold (and the threshold is nonzero).
+pub fn is_quarantined(class: WorkerClass) -> bool {
+    if class == WorkerClass::Cpu {
+        return false;
+    }
+    let thr = quarantine_threshold();
+    thr > 0 && class_failures(class) >= thr
+}
+
 /// Per-class runtime counters (satellite of `CoordinatorStats`).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ClassStat {
@@ -314,6 +387,9 @@ impl Placer {
 
     fn class_eligible(&self, kind: TaskKind, bytes: usize, class: WorkerClass) -> bool {
         if class != WorkerClass::Cpu && bytes < self.small_tile_bytes {
+            return false;
+        }
+        if is_quarantined(class) {
             return false;
         }
         eligible(kind, class)
@@ -454,6 +530,47 @@ mod tests {
         // Without the env var, default is homogeneous; with it, the env
         // spec applies — either way the total matches ncores.
         assert_eq!(class_spec_for(4).total(), 4);
+    }
+
+    #[test]
+    fn quarantined_class_loses_placement_until_reset() {
+        let _g = class_test_lock();
+        reset_class_failures();
+        set_quarantine_override(Some(3));
+        assert!(!is_quarantined(WorkerClass::Slow));
+        for _ in 0..3 {
+            note_class_failure(WorkerClass::Slow);
+        }
+        assert!(is_quarantined(WorkerClass::Slow));
+        assert_eq!(class_failures(WorkerClass::Slow), 3);
+        // Cpu is the fallback: it can never be quarantined.
+        for _ in 0..10 {
+            note_class_failure(WorkerClass::Cpu);
+        }
+        assert!(!is_quarantined(WorkerClass::Cpu));
+        // The placer routes everything to Cpu while Slow is out.
+        let classes = [(WorkerClass::Cpu, 2), (WorkerClass::Slow, 2)];
+        let placer = Placer::new(&classes);
+        let mut plan = ExecutionPlan::default();
+        for _ in 0..6 {
+            plan.tasks.push(crate::pipeline::execution_plan::PlanTask {
+                ops: Vec::new(),
+                kind: TaskKind::GEMM,
+                bytes: 1 << 20,
+                preds: Vec::new(),
+                class: None,
+            });
+        }
+        let counts = placer.place(&mut plan);
+        assert_eq!(counts, vec![(WorkerClass::Cpu, 6), (WorkerClass::Slow, 0)]);
+        assert!(plan.tasks.iter().all(|t| t.class == Some(WorkerClass::Cpu)));
+        // Threshold 0 disables quarantine; reset clears the counters.
+        set_quarantine_override(Some(0));
+        assert!(!is_quarantined(WorkerClass::Slow));
+        set_quarantine_override(None);
+        reset_class_failures();
+        assert_eq!(class_failures(WorkerClass::Slow), 0);
+        assert_eq!(class_failures(WorkerClass::Cpu), 0);
     }
 
     #[test]

@@ -32,6 +32,14 @@ pub struct Profile {
     /// Class of each worker index (empty = treat all workers as `Cpu`;
     /// serial profiles and pre-heterogeneity callers leave it empty).
     pub worker_classes: Vec<WorkerClass>,
+    /// Faults the injection harness (`scheduler::faults`) fired while
+    /// this job ran (0 when the injector is disarmed — the default).
+    /// Best-effort attribution under concurrent jobs: counters are
+    /// process-global, so a neighbour job's faults can be included.
+    pub faults_injected: u64,
+    /// Task-level retries the harness performed while this job ran
+    /// (same attribution caveat as `faults_injected`).
+    pub tasks_retried: u64,
 }
 
 impl Profile {
@@ -42,6 +50,8 @@ impl Profile {
             wall: Duration::ZERO,
             tasks_skipped: 0,
             worker_classes: Vec::new(),
+            faults_injected: 0,
+            tasks_retried: 0,
         }
     }
 
@@ -208,6 +218,17 @@ impl ClassCostModel {
 
     pub fn is_empty(&self) -> bool {
         self.sums.is_empty()
+    }
+
+    /// Global mean task cost across every (kind, class) measured so far
+    /// — the runtime watchdog's stall baseline.  `None` before any
+    /// sample has landed.
+    pub fn mean_all(&self) -> Option<f64> {
+        let (s, n) = self
+            .sums
+            .values()
+            .fold((0.0f64, 0u64), |(s, n), &(cs, cn)| (s + cs, n + cn));
+        (n > 0).then(|| s / n as f64)
     }
 }
 

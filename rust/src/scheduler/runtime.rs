@@ -33,13 +33,13 @@
 //! scope alongside the storage (what every pipeline in this crate does)
 //! is sufficient.
 
-use super::placement::{slow_factor, ClassSpec, ClassStat, WorkerClass};
+use super::placement::{note_class_failure, slow_factor, ClassSpec, ClassStat, WorkerClass};
 use super::pool::Policy;
 use super::profile::{ClassCostModel, Profile, TaskRecord};
-use super::{Access, TaskGraph, TaskKind};
+use super::{faults, Access, TaskGraph, TaskKind};
 use std::collections::{BinaryHeap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::sync::{Arc, Condvar, Mutex, OnceLock, RwLock, Weak};
 use std::time::{Duration, Instant};
 
 /// Process-wide count of worker threads ever spawned by any [`Runtime`]
@@ -63,6 +63,48 @@ pub fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
         .unwrap_or_else(|| "<non-string panic>".into())
 }
 
+/// Typed failure of a task (and, aggregated, of a job) — replacing the
+/// former first-panic-string so recovery layers can tell a crashed
+/// kernel from a disk hiccup from a numerical breakdown from a deadline
+/// (DESIGN.md §2j).  Carried in `JobState`, surfaced by
+/// [`JobHandle::wait_result`], and converted into `api::ApiError`
+/// variants at the API boundary.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum TaskError {
+    /// A task closure panicked (caught on the worker; message kept).
+    Panic(String),
+    /// Spill-store or other I/O failed (tile read/write, prefetch).
+    Io(String),
+    /// Numerical breakdown — e.g. POTRF hit a non-positive-definite
+    /// pivot where that is an error rather than a steerable value.
+    Numerical(String),
+    /// The job exceeded a deadline or the runtime watchdog's
+    /// stall threshold and was cancelled with a timeout reason.
+    Timeout(String),
+}
+
+impl std::fmt::Display for TaskError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TaskError::Panic(m) => write!(f, "task panicked: {m}"),
+            TaskError::Io(m) => write!(f, "task i/o error: {m}"),
+            TaskError::Numerical(m) => write!(f, "numerical error: {m}"),
+            TaskError::Timeout(m) => write!(f, "timed out: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for TaskError {}
+
+/// Shared state behind a [`CancelToken`]: the monotone cancel flag plus
+/// an optional *reason* bit distinguishing a deadline/watchdog firing
+/// from an ordinary cancellation.
+#[derive(Debug, Default)]
+struct CancelInner {
+    flag: AtomicBool,
+    timeout: AtomicBool,
+}
+
 /// Cooperative cancellation token shared between a job's submitter and
 /// the workers (and, higher up the stack, between a serving client and
 /// the optimizer loop — see `api::mle_with_session`).
@@ -72,8 +114,13 @@ pub fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
 /// task of a cancelled job and skip the not-yet-started ones (already
 /// running tasks finish — tile kernels are short); the optimizer
 /// consults it between objective evaluations.  Cloning shares the flag.
+///
+/// A token fired via [`CancelToken::cancel_with_timeout`] (deadline
+/// expiry, runtime watchdog) additionally reports
+/// [`CancelToken::timed_out`], which the pipeline layers use to report
+/// `Timeout` instead of `Cancelled`.
 #[derive(Clone, Debug, Default)]
-pub struct CancelToken(Arc<AtomicBool>);
+pub struct CancelToken(Arc<CancelInner>);
 
 impl CancelToken {
     /// A fresh, un-cancelled token.
@@ -84,13 +131,28 @@ impl CancelToken {
     /// Request cancellation (idempotent, takes effect at the next
     /// task/iteration boundary).
     pub fn cancel(&self) {
-        self.0.store(true, Ordering::SeqCst);
+        self.0.flag.store(true, Ordering::SeqCst);
+    }
+
+    /// Cancel with a *timeout* reason: same skip semantics as
+    /// [`CancelToken::cancel`], but [`CancelToken::timed_out`] reports
+    /// true so the failure surfaces as `Timeout`, not `Cancelled`.
+    /// The reason is set before the flag — any observer of the flag
+    /// sees the reason.
+    pub fn cancel_with_timeout(&self) {
+        self.0.timeout.store(true, Ordering::SeqCst);
+        self.0.flag.store(true, Ordering::SeqCst);
     }
 
     /// Has [`CancelToken::cancel`] been called on this token (or any
     /// clone of it)?
     pub fn is_cancelled(&self) -> bool {
-        self.0.load(Ordering::SeqCst)
+        self.0.flag.load(Ordering::SeqCst)
+    }
+
+    /// Was this token cancelled for a deadline/watchdog timeout?
+    pub fn timed_out(&self) -> bool {
+        self.0.timeout.load(Ordering::SeqCst)
     }
 }
 
@@ -109,9 +171,10 @@ struct JobTask {
 struct JobState {
     done: bool,
     wall: Duration,
-    /// First task panic message; re-raised on the thread that `wait()`s
-    /// (the old scoped pool surfaced task panics via `join().unwrap()`).
-    panic: Option<String>,
+    /// First task failure, typed; re-raised by [`JobHandle::wait`] on
+    /// the waiting thread (the old scoped pool surfaced task panics via
+    /// `join().unwrap()`) or returned by [`JobHandle::wait_result`].
+    error: Option<TaskError>,
 }
 
 /// One submitted task graph, shared between the queues, the workers and
@@ -140,6 +203,14 @@ struct JobInner {
     state: Mutex<JobState>,
     done_cv: Condvar,
     t0: Instant,
+    /// Milliseconds from `t0` of the last task retirement — the
+    /// watchdog's progress signal (only written on watchdog-enabled
+    /// runtimes; the default hot path never touches it).
+    last_progress_ms: AtomicU64,
+    /// Process-global `(faults_injected, tasks_retried)` snapshot at
+    /// submission; `wait_ref` reports the delta in the job's profile
+    /// (best-effort attribution under concurrent jobs).
+    fault_base: (u64, u64),
 }
 
 /// A task that became ready, bound to its job.
@@ -226,8 +297,14 @@ struct Shared {
     class_stolen: Vec<AtomicU64>,
     /// Measured per-(kind, class) costs, accumulated across jobs to feed
     /// the placer.  Only written on heterogeneous runtimes (>1 class) —
-    /// the homogeneous hot path never takes this lock.
+    /// the homogeneous hot path never takes this lock — or when the
+    /// watchdog is on (it thresholds against the measured task mean).
     cost_stats: Mutex<ClassCostModel>,
+    /// Watchdog enabled for this runtime (`EXAGEOSTAT_WATCHDOG` factor
+    /// or the in-process override at build time).
+    watchdog_on: bool,
+    /// Jobs the watchdog scans (only populated when `watchdog_on`).
+    live_jobs: Mutex<Vec<Weak<JobInner>>>,
 }
 
 impl Shared {
@@ -349,9 +426,12 @@ fn execute(shared: &Arc<Shared>, r: Ready, w: usize) {
             // storage, and a panicked job is reported, never reused.
             if let Err(p) = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f)) {
                 let msg = panic_message(p.as_ref());
+                // Quarantine telemetry: repeated failures on a non-CPU
+                // class mark it ineligible for future placement.
+                note_class_failure(shared.classes[shared.worker_class[w]].class);
                 let mut st = job.state.lock().unwrap();
-                if st.panic.is_none() {
-                    st.panic = Some(msg);
+                if st.error.is_none() {
+                    st.error = Some(TaskError::Panic(msg));
                 }
             }
         }
@@ -368,7 +448,7 @@ fn execute(shared: &Arc<Shared>, r: Ready, w: usize) {
         shared.tasks_executed.fetch_add(1, Ordering::Relaxed);
         let ci = shared.worker_class[w];
         shared.class_executed[ci].fetch_add(1, Ordering::Relaxed);
-        if shared.classes.len() > 1 {
+        if shared.classes.len() > 1 || shared.watchdog_on {
             shared.cost_stats.lock().unwrap().record(
                 job.tasks[task].kind,
                 shared.classes[ci].class,
@@ -381,6 +461,13 @@ fn execute(shared: &Arc<Shared>, r: Ready, w: usize) {
             dur,
             bytes: job.tasks[task].bytes,
         });
+    }
+    if shared.watchdog_on {
+        // Progress heartbeat: the watchdog only flags a job whose
+        // *last retirement* is stale, so a slow-but-moving graph is
+        // never killed.
+        job.last_progress_ms
+            .store(job.t0.elapsed().as_millis() as u64, Ordering::Relaxed);
     }
     for &s in &job.tasks[task].succs {
         if job.preds[s].fetch_sub(1, Ordering::AcqRel) == 1 {
@@ -459,6 +546,90 @@ pub struct Runtime {
     /// advance before the warm-up actually completed, or a concurrent
     /// caller at the same key returns onto cold workers.
     prewarm_mark: Mutex<usize>,
+    /// Watchdog thread handle (only when `EXAGEOSTAT_WATCHDOG` / the
+    /// test override enables one); joined on shutdown after workers.
+    watchdog: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+/// Test override for the watchdog stall factor (`f64::to_bits`;
+/// `u64::MAX` = no override, fall back to the environment).
+static WATCHDOG_OVERRIDE: AtomicU64 = AtomicU64::new(u64::MAX);
+
+/// Force (`Some(factor)`) or clear (`None`) the watchdog stall factor
+/// for runtimes built after this call, ignoring `EXAGEOSTAT_WATCHDOG`.
+/// Test hook — serialize with `faults::fault_test_lock`.
+pub fn set_watchdog_override(factor: Option<f64>) {
+    let bits = match factor {
+        Some(f) => f.to_bits(),
+        None => u64::MAX,
+    };
+    WATCHDOG_OVERRIDE.store(bits, Ordering::SeqCst);
+}
+
+/// Watchdog stall factor: a job whose last task retirement is older
+/// than `factor × mean task cost` (with an absolute floor) is flagged
+/// as hung.  `None` (the default — no `EXAGEOSTAT_WATCHDOG`) disables
+/// the watchdog thread entirely; the hot path then never touches the
+/// progress heartbeat.
+fn watchdog_factor() -> Option<f64> {
+    let bits = WATCHDOG_OVERRIDE.load(Ordering::SeqCst);
+    if bits != u64::MAX {
+        return Some(f64::from_bits(bits)).filter(|f| *f > 0.0);
+    }
+    static ENV: OnceLock<Option<f64>> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        std::env::var("EXAGEOSTAT_WATCHDOG")
+            .ok()
+            .and_then(|s| s.trim().parse::<f64>().ok())
+            .filter(|f| *f > 0.0)
+    })
+}
+
+/// Minimum stall threshold in milliseconds, so sparse cost samples or
+/// micro-tasks never trip the watchdog on scheduling noise.
+fn watchdog_floor_ms() -> u64 {
+    static ENV: OnceLock<u64> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        std::env::var("EXAGEOSTAT_WATCHDOG_FLOOR_MS")
+            .ok()
+            .and_then(|s| s.trim().parse::<u64>().ok())
+            .unwrap_or(250)
+    })
+}
+
+/// Watchdog main loop: every 50 ms, compare each live job's time since
+/// last task retirement against `factor × mean task cost` (measured by
+/// the runtime's own [`ClassCostModel`]) with [`watchdog_floor_ms`] as
+/// an absolute floor, and convert a stalled job into a timeout via its
+/// own [`CancelToken`] — [`JobHandle::wait_result`] then reports
+/// [`TaskError::Timeout`].  Stalled *running* tasks keep their worker
+/// (there is no preemption), but the job drains by skipping everything
+/// not yet started, so waiters wake promptly.
+fn watchdog_loop(shared: Arc<Shared>, factor: f64) {
+    while !shared.shutdown.load(Ordering::Acquire) {
+        std::thread::sleep(Duration::from_millis(50));
+        let mean = shared.cost_stats.lock().unwrap().mean_all();
+        let threshold_ms = match mean {
+            Some(m) => (factor * m * 1e3).max(watchdog_floor_ms() as f64) as u64,
+            None => watchdog_floor_ms(),
+        };
+        let mut jobs = shared.live_jobs.lock().unwrap();
+        jobs.retain(|wk| {
+            let Some(job) = wk.upgrade() else { return false };
+            if job.state.lock().unwrap().done {
+                return false;
+            }
+            if job.cancel.is_cancelled() {
+                return true; // already draining; keep until done
+            }
+            let elapsed = job.t0.elapsed().as_millis() as u64;
+            let last = job.last_progress_ms.load(Ordering::Relaxed);
+            if elapsed.saturating_sub(last) > threshold_ms {
+                job.cancel.cancel_with_timeout();
+            }
+            true
+        });
+    }
 }
 
 impl Runtime {
@@ -564,6 +735,8 @@ impl Runtime {
             class_executed: (0..nclasses).map(|_| AtomicU64::new(0)).collect(),
             class_stolen: (0..nclasses).map(|_| AtomicU64::new(0)).collect(),
             cost_stats: Mutex::new(ClassCostModel::default()),
+            watchdog_on: watchdog_factor().is_some(),
+            live_jobs: Mutex::new(Vec::new()),
         });
         let rt = Runtime {
             shared: shared.clone(),
@@ -572,6 +745,7 @@ impl Runtime {
             spawned: AtomicU64::new(0),
             next_seq: AtomicU64::new(0),
             prewarm_mark: Mutex::new(0),
+            watchdog: Mutex::new(None),
         };
         {
             let mut ws = rt.workers.lock().unwrap();
@@ -586,6 +760,18 @@ impl Runtime {
                         .expect("spawn runtime worker"),
                 );
             }
+        }
+        if let Some(factor) = watchdog_factor() {
+            // Not a worker: excluded from the spawn telemetry so the
+            // `threads_spawned == nworkers` invariant (and the lifecycle
+            // tests that assert it) holds with the watchdog enabled.
+            let sh = shared.clone();
+            *rt.watchdog.lock().unwrap() = Some(
+                std::thread::Builder::new()
+                    .name("exa-watchdog".into())
+                    .spawn(move || watchdog_loop(sh, factor))
+                    .expect("spawn runtime watchdog"),
+            );
         }
         rt
     }
@@ -740,11 +926,20 @@ impl Runtime {
             state: Mutex::new(JobState {
                 done: n == 0,
                 wall: Duration::ZERO,
-                panic: None,
+                error: None,
             }),
             done_cv: Condvar::new(),
             t0: Instant::now(),
+            last_progress_ms: AtomicU64::new(0),
+            fault_base: (faults::faults_injected(), faults::tasks_retried()),
         });
+        if self.shared.watchdog_on {
+            self.shared
+                .live_jobs
+                .lock()
+                .unwrap()
+                .push(Arc::downgrade(&job));
+        }
         // Seed the ready set.  The slot choice only spreads lws/random
         // seeds across workers; released tasks later use the releasing
         // worker's slot.
@@ -859,6 +1054,9 @@ impl Runtime {
         for h in handles {
             let _ = h.join();
         }
+        if let Some(h) = self.watchdog.lock().unwrap().take() {
+            let _ = h.join();
+        }
     }
 }
 
@@ -899,11 +1097,28 @@ impl JobHandle {
     /// behaviour the old scoped pool had via `join().unwrap()`.
     pub fn wait(mut self) -> Profile {
         self.consumed = true;
-        let (profile, panic) = self.wait_ref();
-        if let Some(msg) = panic {
-            panic!("runtime job task panicked: {msg}");
+        let (profile, error) = self.wait_ref();
+        match error {
+            // Message shape kept from the pre-taxonomy runtime: callers
+            // (and the panic-propagation test) downcast the String and
+            // look for the original task message inside it.
+            Some(TaskError::Panic(msg)) => panic!("runtime job task panicked: {msg}"),
+            Some(e) => panic!("runtime job task failed: {e}"),
+            None => profile,
         }
-        profile
+    }
+
+    /// Like [`JobHandle::wait`] but reports the job's first
+    /// [`TaskError`] as a value instead of re-raising it — the entry
+    /// point for recovery layers (coordinator whole-job retry, chaos
+    /// tests) that must survive injected faults.
+    pub fn wait_result(mut self) -> Result<Profile, TaskError> {
+        self.consumed = true;
+        let (profile, error) = self.wait_ref();
+        match error {
+            Some(e) => Err(e),
+            None => Ok(profile),
+        }
     }
 
     /// Non-blocking completion probe.
@@ -937,14 +1152,23 @@ impl JobHandle {
         self.job.skipped.load(Ordering::Relaxed)
     }
 
-    fn wait_ref(&self) -> (Profile, Option<String>) {
-        let (wall, panic) = {
+    fn wait_ref(&self) -> (Profile, Option<TaskError>) {
+        let (wall, mut error) = {
             let mut st = self.job.state.lock().unwrap();
             while !st.done {
                 st = self.job.done_cv.wait(st).unwrap();
             }
-            (st.wall, st.panic.take())
+            (st.wall, st.error.take())
         };
+        if error.is_none() && self.job.cancel.timed_out() {
+            // Watchdog (or a deadline holder) converted the hang into a
+            // cancellation: surface it as a typed timeout, not a silent
+            // partially-skipped profile.
+            error = Some(TaskError::Timeout(format!(
+                "job stalled; cancelled by watchdog after {:.1}s",
+                wall.as_secs_f64()
+            )));
+        }
         let mut p = Profile::new(self.nworkers);
         p.worker_classes = (*self.worker_classes).clone();
         for slot in &self.job.records {
@@ -954,7 +1178,12 @@ impl JobHandle {
         }
         p.wall = wall;
         p.tasks_skipped = self.job.skipped.load(Ordering::Relaxed);
-        (p, panic)
+        // Process-global counter deltas since submission: best-effort
+        // under concurrent jobs (a neighbour's faults can leak in), but
+        // exact in the single-job tests that assert on them.
+        p.faults_injected = faults::faults_injected().saturating_sub(self.job.fault_base.0);
+        p.tasks_retried = faults::tasks_retried().saturating_sub(self.job.fault_base.1);
+        (p, error)
     }
 }
 
@@ -1398,5 +1627,88 @@ mod tests {
         assert_eq!(slow_runs, 1, "slow class warms on its own worker only");
         assert_eq!(cpu_runs, 2, "cpu class warms against its own count");
         rt.shutdown();
+    }
+
+    #[test]
+    fn wait_result_reports_task_panic_as_typed_error() {
+        let rt = Runtime::new(2, Policy::Eager);
+        let mut g = TaskGraph::new();
+        let h = g.register();
+        g.submit(TaskKind::OTHER, &[(h, Access::RW)], 0, || {
+            panic!("typed boom")
+        });
+        match rt.submit(g).wait_result() {
+            Err(TaskError::Panic(msg)) => assert!(msg.contains("typed boom"), "{msg}"),
+            other => panic!("expected Panic error, got {other:?}"),
+        }
+        // The runtime survives: a healthy job still completes cleanly.
+        let counter = Arc::new(AtomicUsize::new(0));
+        let prof = rt.submit(counting_graph(5, &counter)).wait_result().unwrap();
+        assert_eq!(prof.total_tasks(), 5);
+        assert_eq!(counter.load(Ordering::SeqCst), 5);
+        rt.shutdown();
+    }
+
+    #[test]
+    fn cancel_with_timeout_marks_job_timed_out() {
+        let token = CancelToken::new();
+        assert!(!token.is_cancelled() && !token.timed_out());
+        token.cancel_with_timeout();
+        assert!(token.is_cancelled() && token.timed_out());
+        // Plain cancel never reports a timeout.
+        let plain = CancelToken::new();
+        plain.cancel();
+        assert!(plain.is_cancelled() && !plain.timed_out());
+    }
+
+    #[test]
+    fn watchdog_converts_stalled_job_into_timeout() {
+        let _guard = crate::scheduler::faults::fault_test_lock();
+        set_watchdog_override(Some(2.0));
+        // Two workers: one pinned in a stall task (simulating a hang),
+        // one free — so the watchdog's cancel can only be what stops
+        // the queued successors, not worker starvation.
+        let rt = Runtime::new(2, Policy::Eager);
+        let gate = Arc::new(AtomicUsize::new(0));
+        let mut g = TaskGraph::new();
+        let h = g.register();
+        {
+            let gate = gate.clone();
+            g.submit(TaskKind::OTHER, &[(h, Access::RW)], 0, move || {
+                // Hang until released, far longer than the stall floor.
+                while gate.load(Ordering::SeqCst) == 0 {
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+            });
+        }
+        // A successor that must be skipped once the watchdog fires.
+        let ran = Arc::new(AtomicUsize::new(0));
+        {
+            let ran = ran.clone();
+            g.submit(TaskKind::OTHER, &[(h, Access::RW)], 0, move || {
+                ran.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        let handle = rt.submit(g);
+        let token = handle.cancel_token().clone();
+        // The watchdog (floor 250ms, no cost samples) flags the job.
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while !token.timed_out() && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert!(token.timed_out(), "watchdog never fired");
+        gate.store(1, Ordering::SeqCst); // release the hung task
+        match handle.wait_result() {
+            Err(TaskError::Timeout(_)) => {}
+            other => panic!("expected Timeout, got {other:?}"),
+        }
+        assert_eq!(ran.load(Ordering::SeqCst), 0, "successor must be skipped");
+        // A fresh job on the same runtime completes: one hang degraded
+        // one job, not the process.
+        let counter = Arc::new(AtomicUsize::new(0));
+        rt.submit(counting_graph(4, &counter)).wait();
+        assert_eq!(counter.load(Ordering::SeqCst), 4);
+        rt.shutdown();
+        set_watchdog_override(None);
     }
 }

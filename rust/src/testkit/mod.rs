@@ -45,6 +45,27 @@ pub use crate::linalg::tile::{tile_prefetches, tile_spill_reads, tile_spill_writ
 /// `rust/tests/runtime_lifecycle.rs`).
 pub use crate::scheduler::runtime::worker_threads_spawned;
 
+/// Fault-injection harness surface for chaos tests: the seeded
+/// [`FaultPlan`] (install with [`set_fault_plan`], clear with `None`),
+/// process-global injection/recovery counters, and the per-process
+/// retry/watchdog/quarantine overrides.  The plan and the counters are
+/// process-global, so chaos tests must hold [`fault_test_lock`] for
+/// their whole armed section — otherwise a concurrent test binary
+/// thread would see injected faults it never asked for (see
+/// `rust/tests/chaos.rs`).
+pub use crate::scheduler::faults::{
+    fault_test_lock, faults_injected, injected_io_errors, injected_panics, injected_stalls,
+    set_fault_plan, set_task_retry_override, tasks_retried, FaultPlan,
+};
+
+/// Recovery-policy overrides re-exported beside the injector so a chaos
+/// test configures the whole failure model from one import: whole-job
+/// retry ([`crate::coordinator::set_job_retry_override`]), watchdog
+/// stall factor, and worker-class quarantine threshold.
+pub use crate::coordinator::set_job_retry_override;
+pub use crate::scheduler::placement::set_quarantine_override;
+pub use crate::scheduler::runtime::set_watchdog_override;
+
 /// Nearest-rank percentile of an **ascending-sorted** slice, `p` in
 /// [0, 1].  Shared by the `serve` subcommand and the serving bench so
 /// their latency quantiles cannot drift apart.

@@ -296,6 +296,58 @@ fn prefired_token_reports_typed_cancelled_and_caches_nothing() {
 }
 
 #[test]
+fn failed_mid_mle_job_evicts_partial_cache_state() {
+    use exageostat::scheduler::runtime::TaskError;
+    use exageostat::testkit::{
+        fault_test_lock, set_fault_plan, set_job_retry_override, set_task_retry_override,
+        FaultPlan,
+    };
+    // The fault plan and retry overrides are process-global.
+    let _serial = fault_test_lock();
+    let coord = Coordinator::new(hw(1, 32));
+    let sim = || {
+        exageostat::coordinator::parse_request("{\"type\":\"simulate\",\"n\":96,\"seed\":7}")
+            .unwrap()
+    };
+    // Warm the dataset cache fault-free and prove it is warm: the MLE
+    // below shares this request's DataSpec key.
+    coord.run(sim()).unwrap();
+    assert!(coord.run(sim()).unwrap().data_cache_hit, "warm-up failed");
+    // Every task draw panics and no retry budget exists anywhere, so the
+    // MLE dies mid-flight, on its first session-build task.
+    set_task_retry_override(Some(0));
+    set_job_retry_override(Some(0));
+    set_fault_plan(Some(FaultPlan {
+        panic_rate: 1.0,
+        ..FaultPlan::default()
+    }));
+    let err = coord.run(mle_request(96, 7, 5)).unwrap_err();
+    set_fault_plan(None);
+    set_task_retry_override(None);
+    set_job_retry_override(None);
+    assert!(
+        err.chain()
+            .any(|c| matches!(c.downcast_ref::<TaskError>(), Some(TaskError::Panic(_)))),
+        "expected a typed task panic, got: {err:#}"
+    );
+    let st = coord.stats();
+    assert_eq!(st.errors, 1, "{st:?}");
+    // The failure must have evicted the request's cached state — the
+    // previously warm dataset entry included — so a disarmed rerun
+    // rebuilds everything from scratch (no cache hits) and succeeds.
+    let resp = coord.run(mle_request(96, 7, 5)).unwrap();
+    assert!(
+        !resp.data_cache_hit,
+        "failed job left its dataset in the cache"
+    );
+    assert!(
+        !resp.session_cache_hit,
+        "failed job left a session in the cache"
+    );
+    coord.shutdown();
+}
+
+#[test]
 fn band_too_large_rejected_by_wrapper_and_parse_route_still_works() {
     let exa = ExaGeoStat::init(hw(1, 32));
     let data = exa

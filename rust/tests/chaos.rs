@@ -1,0 +1,285 @@
+//! ISSUE 10 acceptance: chaos suite — the serving stack under seeded
+//! fault injection (DESIGN.md §2j).
+//!
+//! The failure-model contract under test:
+//!
+//! * **recovery is invisible** — with a fault plan armed and retry
+//!   budgets available, every request that completes is **bit-identical**
+//!   to its fault-free run (injection fires at task entry, so a retried
+//!   task re-executes from untouched inputs);
+//! * **exhaustion is typed** — when budgets run out the caller gets a
+//!   typed `TaskError` through the `anyhow` chain, never a hang or a
+//!   poisoned runtime;
+//! * **the serve loop survives** — injected faults fail individual
+//!   requests at worst; the stream keeps admitting and every submitted
+//!   request is accounted for exactly once;
+//! * **deadlines fire as `TimedOut`** — a request past its `deadline_ms`
+//!   reaps as `Completion::TimedOut`, distinct from user cancellation;
+//! * **counters prove it happened** — the injection/retry counters are
+//!   nonzero after an armed run (a chaos test that injected nothing
+//!   tests nothing).
+//!
+//! Every test holds `fault_test_lock` across its armed window: the
+//! plan, the retry overrides and the counters are process-global, so a
+//! concurrent disarmed test must never observe someone else's faults.
+
+use exageostat::api::Hardware;
+use exageostat::coordinator::{
+    parse_request, serve_stream, Client, Completion, Coordinator, Dispatch, Outcome, Request,
+    ServeOptions, ShardedCoordinator,
+};
+use exageostat::scheduler::pool::Policy;
+use exageostat::scheduler::runtime::{CancelToken, TaskError};
+use exageostat::testkit::{
+    fault_test_lock, faults_injected, set_fault_plan, set_job_retry_override,
+    set_task_retry_override, tasks_retried, FaultPlan,
+};
+use std::sync::Arc;
+
+fn hw(ncores: usize, ts: usize) -> Hardware {
+    Hardware {
+        ncores,
+        ts,
+        policy: Policy::Lws,
+        ..Hardware::default()
+    }
+}
+
+fn mle_req(variant: &str, n: usize, iters: usize) -> Request {
+    let extra = match variant {
+        "dst" | "mp" => ",\"band\":1".to_string(),
+        "tlr" => ",\"tlr_tol\":1e-7".to_string(),
+        _ => String::new(),
+    };
+    parse_request(&format!(
+        "{{\"type\":\"mle\",\"variant\":\"{variant}\",\"n\":{n},\"seed\":11,\
+         \"max_iters\":{iters},\"clb\":[0.01,0.01,0.01],\"tol\":1e-6{extra}}}"
+    ))
+    .unwrap()
+}
+
+fn mle_bits(resp: &Outcome) -> (Vec<u64>, u64) {
+    match resp {
+        Outcome::Mle(r) => (
+            r.theta.iter().map(|t| t.to_bits()).collect(),
+            r.loglik.to_bits(),
+        ),
+        other => panic!("expected an MLE outcome, got {other:?}"),
+    }
+}
+
+/// Arm a moderately hostile plan with generous retry budgets: per-task
+/// failure needs `panic_rate^(retries+1)` consecutive draws, so the
+/// probability any job exhausts its budget is negligible while the
+/// expected injection count over an MLE's hundreds of task draws is
+/// large.
+fn arm_recoverable(seed: u64) {
+    set_task_retry_override(Some(4));
+    set_job_retry_override(Some(2));
+    set_fault_plan(Some(FaultPlan {
+        panic_rate: 0.05,
+        io_rate: 0.05,
+        stall_rate: 0.01,
+        stall_ms: 1,
+        seed,
+    }));
+}
+
+fn disarm() {
+    set_fault_plan(None);
+    set_task_retry_override(None);
+    set_job_retry_override(None);
+}
+
+#[test]
+fn recovered_requests_are_bit_identical_across_variants() {
+    let _serial = fault_test_lock();
+    disarm(); // baselines must be clean even if a prior armed test panicked
+
+    // Fault-free baselines, one fresh coordinator per variant so cache
+    // state cannot differ between the two runs.
+    let variants = ["exact", "dst", "tlr", "mp"];
+    let baseline: Vec<(Vec<u64>, u64)> = variants
+        .iter()
+        .map(|v| {
+            let coord = Coordinator::new(hw(2, 32));
+            let resp = coord.run(mle_req(v, 96, 6)).unwrap();
+            coord.shutdown();
+            mle_bits(&resp.outcome)
+        })
+        .collect();
+
+    let f0 = faults_injected();
+    arm_recoverable(42);
+    for (v, base) in variants.iter().zip(&baseline) {
+        let coord = Coordinator::new(hw(2, 32));
+        let resp = coord
+            .run(mle_req(v, 96, 6))
+            .unwrap_or_else(|e| panic!("{v} under faults: {e:#}"));
+        coord.shutdown();
+        assert_eq!(
+            &mle_bits(&resp.outcome),
+            base,
+            "{v}: recovered run differs from fault-free"
+        );
+    }
+    // A tiny tile budget forces the spill executor + store I/O paths, so
+    // the `io_rate` sites (spill read/write, prefetch) actually draw.
+    {
+        let coord = Coordinator::with_mem_budget(hw(2, 32), 64 * 1024);
+        let resp = coord.run(mle_req("exact", 96, 6)).unwrap();
+        coord.shutdown();
+        assert_eq!(
+            &mle_bits(&resp.outcome),
+            &baseline[0],
+            "spilled recovered run differs from fault-free"
+        );
+    }
+    // Sharded route: the member coordinators share the process-global
+    // injector; recovery must hold through the routing layer too.
+    {
+        let sc = ShardedCoordinator::new(hw(2, 32), 2);
+        let resp = sc
+            .run_with_cancel(mle_req("exact", 96, 6), &CancelToken::new())
+            .unwrap();
+        sc.shutdown_dispatch();
+        assert_eq!(
+            &mle_bits(&resp.outcome),
+            &baseline[0],
+            "sharded recovered run differs from fault-free"
+        );
+    }
+    disarm();
+    assert!(
+        faults_injected() > f0,
+        "armed chaos run injected no faults — the suite tested nothing"
+    );
+}
+
+#[test]
+fn exhausted_budgets_surface_typed_panic_not_hang() {
+    let _serial = fault_test_lock();
+    set_task_retry_override(Some(0));
+    set_job_retry_override(Some(0));
+    set_fault_plan(Some(FaultPlan {
+        panic_rate: 1.0,
+        ..FaultPlan::default()
+    }));
+    let coord = Coordinator::new(hw(1, 32));
+    let err = coord.run(mle_req("exact", 64, 4)).unwrap_err();
+    assert!(
+        err.chain().any(|c| matches!(
+            c.downcast_ref::<TaskError>(),
+            Some(TaskError::Panic(m)) if m.contains("injected fault")
+        )),
+        "expected TaskError::Panic in the chain, got: {err:#}"
+    );
+    let st = coord.stats();
+    assert_eq!(st.errors, 1, "{st:?}");
+    assert_eq!(st.cancelled, 0, "panic miscounted as cancellation: {st:?}");
+    assert!(st.faults_injected > 0, "{st:?}");
+    coord.shutdown();
+    disarm();
+}
+
+#[test]
+fn whole_job_retry_recovers_after_task_budget_exhaustion() {
+    let _serial = fault_test_lock();
+    // No task-level retry at all: with a 15% panic rate a short simulate
+    // job (a handful of task draws) fails often, so recovery can only
+    // come from the coordinator's whole-job retry loop — fresh draws and
+    // freshly evicted caches on every attempt.  Small jobs keep each
+    // attempt cheap; 50 attempts make overall failure astronomically
+    // unlikely while the first-attempt-always-clean case (which would
+    // leave `job_retries` at zero) is vanishing across ten jobs.
+    set_task_retry_override(Some(0));
+    set_job_retry_override(Some(50));
+    set_fault_plan(Some(FaultPlan {
+        panic_rate: 0.15,
+        ..FaultPlan::default()
+    }));
+    let r0 = tasks_retried();
+    let coord = Coordinator::new(hw(1, 32));
+    for seed in 0..10u64 {
+        let req = parse_request(&format!(
+            "{{\"type\":\"simulate\",\"n\":64,\"seed\":{seed}}}"
+        ))
+        .unwrap();
+        let resp = coord.run(req).unwrap();
+        assert!(matches!(resp.outcome, Outcome::Simulated { n: 64 }));
+    }
+    let st = coord.stats();
+    coord.shutdown();
+    disarm();
+    assert_eq!(st.errors, 0, "all jobs must recover via job retry: {st:?}");
+    assert_eq!(tasks_retried(), r0, "task retries were disabled");
+    assert!(
+        st.job_retries > 0,
+        "ten faulted jobs with no task retries should have needed at \
+         least one whole-job retry: {st:?}"
+    );
+}
+
+#[test]
+fn serve_stream_survives_chaos_and_accounts_every_request() {
+    let _serial = fault_test_lock();
+    arm_recoverable(7);
+    let coord = Arc::new(Coordinator::new(hw(2, 32)));
+    let client = Client::new(coord.clone(), 2);
+    let mut lines = String::from("# chaos workload\n\n");
+    for i in 0..8 {
+        lines.push_str(&match i % 3 {
+            0 => format!("{{\"type\":\"mle\",\"n\":80,\"seed\":{i},\"max_iters\":4}}\n"),
+            1 => format!("{{\"type\":\"simulate\",\"n\":80,\"seed\":{i}}}\n"),
+            _ => format!("{{\"type\":\"predict\",\"n\":80,\"seed\":{i},\"grid\":4}}\n"),
+        });
+    }
+    lines.push_str("not json\n");
+    let mut reader = std::io::BufReader::new(lines.as_bytes());
+    let opts = ServeOptions {
+        window: 2,
+        depth_limit: None,
+        deadline_ms: None,
+    };
+    let mut reaped = 0usize;
+    let summary = serve_stream(&client, &mut reader, &opts, |_, _| reaped += 1)
+        .expect("the serve loop itself must survive injected faults");
+    disarm();
+    assert_eq!(summary.submitted, 8, "{summary:?}");
+    assert_eq!(summary.parse_errors, 1, "{summary:?}");
+    assert_eq!(reaped, 8, "every admitted request reaps exactly once");
+    assert_eq!(
+        summary.ok + summary.failed + summary.cancelled + summary.timed_out,
+        8,
+        "unaccounted completions: {summary:?}"
+    );
+    assert!(
+        summary.ok >= 1,
+        "retry budgets should recover at least some requests: {summary:?}"
+    );
+    client.shutdown();
+    coord.shutdown();
+}
+
+#[test]
+fn expired_deadline_reaps_as_timed_out() {
+    let _serial = fault_test_lock();
+    disarm(); // a timeout test must not depend on injected stalls
+    let coord = Arc::new(Coordinator::new(hw(1, 32)));
+    let client = Client::new(coord.clone(), 1);
+    let mut req = mle_req("exact", 300, 60);
+    req.deadline_ms = Some(5);
+    let done = client.submit(req).wait();
+    assert!(
+        matches!(done, Completion::TimedOut),
+        "a 5 ms deadline on a multi-second MLE must reap TimedOut, got {done:?}"
+    );
+    // A deadline miss is a timeout, not a failure and not a cancel.
+    let ok = client.submit(mle_req("exact", 64, 3)).wait();
+    assert!(
+        matches!(ok, Completion::Done(_)),
+        "the runtime must stay serviceable after a timeout, got {ok:?}"
+    );
+    client.shutdown();
+    coord.shutdown();
+}

@@ -198,6 +198,7 @@ fn coordinator_serves_concurrent_clients_with_caching() {
         data: data.clone().into(),
         kind: RequestKind::Simulate,
         priority: 0,
+        deadline_ms: None,
     };
     let r0 = coord.run(sim).unwrap();
     assert!(matches!(r0.outcome, Outcome::Simulated { n: 90 }));
@@ -209,11 +210,13 @@ fn coordinator_serves_concurrent_clients_with_caching() {
             opt: MleOptions::new(vec![0.01; 3], vec![5.0; 3], 1e-3, 12),
         },
         priority,
+        deadline_ms: None,
     };
     let predict = Request {
         data: data.clone().into(),
         kind: RequestKind::Predict { grid: 5 },
         priority: 2,
+        deadline_ms: None,
     };
     let reqs = vec![mle(0), mle(1), predict];
     let responses = Mutex::new(Vec::new());

@@ -192,6 +192,7 @@ fn sharded_coordinator_mle_matches_single_coordinator() {
             opt: MleOptions::new(vec![0.01; 3], vec![5.0; 3], 1e-3, 3),
         },
         priority: 0,
+        deadline_ms: None,
     };
 
     let single = Coordinator::new(hw.clone());
